@@ -1,0 +1,28 @@
+//! Design explorer: runs the full Pipe-it DSE for all five benchmark CNNs
+//! and prints the paper's Tables IV, V and VI plus the design-space sizes.
+//!
+//!   cargo run --release --example design_explorer [-- --platform configs/x.json]
+//!
+//! Also demonstrates platform retargeting: pass any configs/*.json to see
+//! how the chosen pipelines change on a different big.LITTLE design.
+
+use pipeit::config::Config;
+use pipeit::reports::Reporter;
+use pipeit::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[]);
+    let cfg = Config::load_or_default(args.get("platform"))?;
+    println!(
+        "platform: {} ({}B + {}s)\n",
+        cfg.platform.name, cfg.platform.big.cores, cfg.platform.small.cores
+    );
+
+    let rep = Reporter::new(cfg);
+    rep.design_space().print();
+    rep.table4().print();
+    rep.table5().print();
+    rep.table6().print();
+    rep.ablation().print();
+    Ok(())
+}

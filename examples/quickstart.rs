@@ -1,0 +1,47 @@
+//! Quickstart: the Pipe-it API in ~30 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Fits the layer-level performance model, explores the pipeline design
+//! space for ResNet50 on the (simulated) HiKey 970, and cross-checks the
+//! chosen design point with the discrete-event pipeline simulator.
+
+use pipeit::config::Config;
+use pipeit::cnn::zoo;
+use pipeit::dse;
+use pipeit::perfmodel::{PerfModel, TimeMatrix};
+use pipeit::simulator::pipeline_sim;
+
+fn main() {
+    let cfg = Config::default(); // HiKey 970: 4x A73 + 4x A53
+    let net = zoo::resnet50();
+
+    // 1. Fit the paper's Eq. 5-8 performance predictor from
+    //    micro-benchmarks run on the (simulated) board.
+    let model = PerfModel::fit(&cfg.platform);
+
+    // 2. Build the time matrix T (54 layers x 8 stage configs) and explore
+    //    the design space (millions of points, milliseconds of search).
+    let tm = TimeMatrix::predicted(&cfg.platform, &model, &net);
+    let point = dse::explore(&tm, cfg.platform.big.cores, cfg.platform.small.cores);
+    println!("pipeline   : {}", point.pipeline);
+    println!("allocation : {}", point.allocation.display_1based());
+    println!("predicted  : {:.2} imgs/s (Eq. 12)", point.throughput);
+
+    // 3. Cross-check with the discrete-event simulator over a 500-image
+    //    stream (includes pipeline fill/drain).
+    let times = dse::point_stage_times(&tm, &point);
+    let sim = pipeline_sim::simulate(&times, 500, 2);
+    println!(
+        "simulated  : {:.2} imgs/s (bottleneck stage {})",
+        sim.throughput, sim.bottleneck
+    );
+
+    // 4. Compare with the best the default strategy can do (Big cluster).
+    let b4 = tm.config_index(pipeit::simulator::CoreType::Big, 4).unwrap();
+    let baseline = 1.0 / tm.range(0, tm.num_layers(), b4);
+    println!(
+        "baseline B4: {baseline:.2} imgs/s  (Pipe-it gain {:+.0}%)",
+        100.0 * (sim.throughput / baseline - 1.0)
+    );
+}

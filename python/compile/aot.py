@@ -1,0 +1,175 @@
+"""AOT bridge: lower each major layer (and the whole net) to HLO *text*.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per network, under ``artifacts/<net>/``:
+
+    layer_NN_b{B}.hlo.txt   one module per major layer per batch size
+    full_b{B}.hlo.txt       whole network as one module (kernel-level baseline)
+    manifest.json           layer order, shapes, GEMM dims, file map
+
+Weights are seeded-random and folded into the modules as constants: the
+paper's metric is throughput, which is weight-value independent (DESIGN.md
+§1). Python runs only at ``make artifacts``; the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+BATCH_SIZES = (1, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn: Callable, in_shape: tuple[int, ...]) -> str:
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def _batched(fn: Callable, batch: int) -> Callable:
+    if batch == 1:
+        return fn
+    return jax.vmap(fn)
+
+
+def export_network(net: M.NetworkSpec, out_dir: pathlib.Path, seed: int = 0) -> dict:
+    """Write all HLO modules + manifest for one network; returns the manifest."""
+    net_dir = out_dir / net.name
+    net_dir.mkdir(parents=True, exist_ok=True)
+    params = M.init_network_params(net, seed=seed)
+    shapes = net.shapes()
+
+    layers_meta = []
+    for idx, (spec, p) in enumerate(zip(net.layers, params)):
+        in_shape, out_shape = shapes[idx]
+
+        def layer_fn(x, p=p, spec=spec):
+            return (M.apply_layer(x, p, spec),)
+
+        hlo_files: dict[str, str] = {}
+        for b in BATCH_SIZES:
+            fname = f"layer_{idx:02d}_b{b}.hlo.txt"
+            full_in = in_shape if b == 1 else (b, *in_shape)
+            text = lower_fn(_batched(layer_fn, b), full_in)
+            (net_dir / fname).write_text(text)
+            hlo_files[str(b)] = fname
+
+        n, k, m = (
+            spec.gemm_dims(in_shape[0], in_shape[1])
+            if spec.kind == "conv"
+            else spec.gemm_dims(0, 0)
+        )
+        layers_meta.append(
+            {
+                "index": idx,
+                "name": spec.name,
+                "kind": spec.kind,
+                "input_shape": list(in_shape),
+                "output_shape": list(out_shape),
+                "hlo": hlo_files,
+                "gemm": {"n": n, "k": k, "m": m},
+                "macs": n * k * m,
+                "params_bytes": 4 * (p["w"].size + p["b"].size),
+            }
+        )
+
+    def full_fn(x):
+        return (M.network_fn(net, params)(x),)
+
+    full_files: dict[str, str] = {}
+    in_shape = (net.input_hw[0], net.input_hw[1], net.input_c)
+    for b in BATCH_SIZES:
+        fname = f"full_b{b}.hlo.txt"
+        full_in = in_shape if b == 1 else (b, *in_shape)
+        (net_dir / fname).write_text(lower_fn(_batched(full_fn, b), full_in))
+        full_files[str(b)] = fname
+
+    # Stage-granular segment modules: one fused module per contiguous layer
+    # range [lo, hi). A pipeline stage running a range executes ONE module,
+    # recovering the cross-layer XLA fusion that per-layer modules lose
+    # (~2x on the CPU host — EXPERIMENTS.md §Perf L2). Quadratic in W but W
+    # is small for the exported nets, and lowering happens once.
+    segments_meta: dict[str, dict[str, str]] = {}
+    for lo in range(len(net.layers)):
+        for hi in range(lo + 2, len(net.layers) + 1):
+            if lo == 0 and hi == len(net.layers):
+                continue  # that's the full module
+
+            def seg_fn(x, lo=lo, hi=hi):
+                for p, spec in zip(params[lo:hi], net.layers[lo:hi]):
+                    x = M.apply_layer(x, p, spec)
+                return (x,)
+
+            seg_in = shapes[lo][0]
+            files: dict[str, str] = {}
+            for b in BATCH_SIZES:
+                fname = f"segment_{lo:02d}_{hi:02d}_b{b}.hlo.txt"
+                full_in = seg_in if b == 1 else (b, *seg_in)
+                (net_dir / fname).write_text(lower_fn(_batched(seg_fn, b), full_in))
+                files[str(b)] = fname
+            segments_meta[f"{lo}-{hi}"] = files
+
+    manifest = {
+        "name": net.name,
+        "input_shape": list(in_shape),
+        "output_shape": list(shapes[-1][1]),
+        "batch_sizes": list(BATCH_SIZES),
+        "seed": seed,
+        "layers": layers_meta,
+        "full": full_files,
+        "segments": segments_meta,
+    }
+    (net_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def _source_fingerprint() -> str:
+    """Hash of the compile-path sources, used for the artifacts staleness stamp."""
+    root = pathlib.Path(__file__).resolve().parent
+    h = hashlib.sha256()
+    for f in sorted(root.rglob("*.py")):
+        h.update(f.read_bytes())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--net", action="append", choices=sorted(M.NETWORKS),
+                    help="network(s) to export; default: all")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    nets = args.net or sorted(M.NETWORKS)
+    for name in nets:
+        manifest = export_network(M.NETWORKS[name], out_dir, seed=args.seed)
+        n_files = len(manifest["layers"]) * len(BATCH_SIZES) + len(BATCH_SIZES)
+        print(f"{name}: {len(manifest['layers'])} layers, {n_files} HLO modules -> {out_dir / name}")
+    (out_dir / ".stamp").write_text(_source_fingerprint())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""L2 performance analysis: op-census of the AOT-lowered HLO modules
+(EXPERIMENTS §Perf). Verifies the lowered graphs are lean: no stray
+transposes/copies, fusion where XLA can fuse, and quantifies the per-layer
+module overhead vs the whole-network module (what the kernel-level baseline
+gets from cross-layer fusion).
+
+Usage:  cd python && python -m compile.hlo_stats [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+from collections import Counter
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},\s/]*?\s*(\w+)\(")
+
+
+def op_census(text: str) -> Counter:
+    ops: Counter = Counter()
+    for line in text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def module_stats(path: pathlib.Path) -> dict:
+    ops = op_census(path.read_text())
+    total = sum(ops.values())
+    return {
+        "total_ops": total,
+        "dot": ops.get("dot", 0),
+        "fusion": ops.get("fusion", 0),
+        "transpose": ops.get("transpose", 0),
+        "copy": ops.get("copy", 0),
+        "gather": ops.get("gather", 0),
+        "constant": ops.get("constant", 0),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    root = pathlib.Path(args.artifacts)
+
+    for net_dir in sorted(d for d in root.iterdir() if d.is_dir()):
+        manifest = json.loads((net_dir / "manifest.json").read_text())
+        print(f"== {manifest['name']} ==")
+        layer_total = 0
+        for layer in manifest["layers"]:
+            p = net_dir / layer["hlo"]["1"]
+            s = module_stats(p)
+            layer_total += s["total_ops"]
+            print(
+                f"  layer {layer['index']:>2} {layer['name']:<8} "
+                f"ops={s['total_ops']:>4} dot={s['dot']} gather={s['gather']} "
+                f"transpose={s['transpose']} copy={s['copy']}"
+            )
+        full = module_stats(net_dir / manifest["full"]["1"])
+        print(
+            f"  full-net module: ops={full['total_ops']} "
+            f"(per-layer sum {layer_total}; "
+            f"delta {layer_total - full['total_ops']:+} = "
+            f"cross-layer fusion headroom lost by layer splitting)"
+        )
+        print()
+
+
+if __name__ == "__main__":
+    main()

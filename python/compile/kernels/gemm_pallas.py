@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: tiled GEMM — the convolution hot-spot (paper §V-A).
+
+ARM-CL implements convolution as im2col + tiled GEMM, splitting the image
+matrix's N rows into ``n_iter = N / ts`` chunks dispatched to a thread pool.
+This kernel re-expresses that schedule in the TPU programming model (see
+DESIGN.md §Hardware-Adaptation):
+
+  * ARM-CL row-chunk / thread-pool iteration  ->  Pallas grid axis 0 (N / bn)
+  * NEON 128-bit SIMD inner product           ->  MXU ``jnp.dot`` on VMEM tiles
+  * L2-sized tile ``ts``                      ->  BlockSpec (bn, bk, bm) chosen
+                                                  for VMEM residency
+
+The grid is (N/bn, M/bm, K/bk); the (bn, bm) f32 accumulator tile stays
+resident in VMEM while K-slabs stream HBM->VMEM, i.e. a classic systolic
+matmul schedule. ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is both the correctness and the AOT
+path (the lowered HLO is plain XLA ops the rust runtime executes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape. 64x64 f32 tiles: x(64x64) + y(64x64) + acc(64x64)
+# = 48 KiB VMEM — far under the ~16 MiB/core budget, and a multiple of the
+# 8x128 f32 native VPU tile in both sunk dims. See EXPERIMENTS.md §Perf for
+# the sweep that selected it.
+DEFAULT_BN = 64
+DEFAULT_BM = 64
+DEFAULT_BK = 64
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bn, bm) output tile; grid axis 2 streams K-slabs and accumulates."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_axis(a: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Tiled Pallas GEMM: (N,K) @ (K,M) -> (N,M) f32.
+
+    Inputs may be f32 or bf16; accumulation is always f32 (MXU-style).
+    Arbitrary N/K/M are supported by zero-padding up to the block multiple and
+    slicing the result back (zero padding is exact for matmul).
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    n, k = x.shape
+    k2, m = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    bn = min(bn, max(8, n))
+    bm = min(bm, max(8, m))
+    bk = min(bk, max(8, k))
+
+    xp = _pad_axis(_pad_axis(x, 0, bn), 1, bk)
+    yp = _pad_axis(_pad_axis(y, 0, bk), 1, bm)
+    np_, kp = xp.shape
+    mp = yp.shape[1]
+
+    grid = (np_ // bn, mp // bm, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:n, :m]
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, relu: bool):
+    v = x_ref[...] + b_ref[...]
+    if relu:
+        v = jnp.maximum(v, 0.0)
+    o_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def bias_act(x: jax.Array, b: jax.Array, *, relu: bool = True) -> jax.Array:
+    """Fused bias-add (+ optional ReLU) epilogue over an (N, M) GEMM result.
+
+    The bias (M,) broadcasts over rows; kept as a separate tiny Pallas kernel
+    so the epilogue is exercised through the same lowering path as the GEMM.
+    """
+    n, m = x.shape
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, relu=relu),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, b[None, :])

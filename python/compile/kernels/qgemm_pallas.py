@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: QASYMM8 quantized GEMM (paper §VII-D, Fig. 13).
+
+ARM-CL's QASYMM8 path computes the convolution GEMM in 8-bit asymmetric
+integers: real = scale * (q - zero_point). The integer core is
+
+    acc[n,m] = sum_k xq[n,k] * yq[k,m]          (int32 accumulation)
+
+and the affine correction applied afterwards is
+
+    real[n,m] = sx*sy * ( acc - yz*rowsum(xq) - xz*colsum(yq) + K*xz*yz )
+
+The paper's observation (after [26]) is that the de/re-quantization epilogue
+can eat the integer-core speedup — our Rust quantization cost model
+(baselines::quant) mirrors exactly this kernel/epilogue split.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        y_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_axis(a: jax.Array, axis: int, multiple: int) -> jax.Array:
+    rem = (-a.shape[axis]) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("x_zero", "y_zero", "bn", "bm", "bk")
+)
+def qmatmul(
+    xq: jax.Array,
+    yq: jax.Array,
+    *,
+    x_scale: float,
+    x_zero: int,
+    y_scale: float,
+    y_zero: int,
+    bn: int = 64,
+    bm: int = 64,
+    bk: int = 64,
+) -> jax.Array:
+    """Quantized GEMM: uint8 (N,K) @ uint8 (K,M) -> dequantized f32 (N,M).
+
+    Zero padding is exact here because padded rows/columns contribute
+    ``0 * yq`` to the int32 accumulator and the correction sums are computed
+    on the *unpadded* operands.
+    """
+    n, k = xq.shape
+    k2, m = yq.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {xq.shape} @ {yq.shape}")
+    bn = min(bn, max(8, n))
+    bm = min(bm, max(8, m))
+    bk = min(bk, max(8, k))
+
+    xp = _pad_axis(_pad_axis(xq, 0, bn), 1, bk)
+    yp = _pad_axis(_pad_axis(yq, 0, bk), 1, bm)
+    np_, kp = xp.shape
+    mp = yp.shape[1]
+
+    acc = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=(np_ // bn, mp // bm, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.int32),
+        interpret=True,
+    )(xp, yp)[:n, :m]
+
+    # Affine zero-point correction (the "de-quantization epilogue").
+    # Padded entries are zero, not zero_point, so sums use unpadded operands.
+    row_sum = jnp.sum(xq.astype(jnp.int32), axis=1, keepdims=True)  # (N,1)
+    col_sum = jnp.sum(yq.astype(jnp.int32), axis=0, keepdims=True)  # (1,M)
+    corrected = acc - y_zero * row_sum - x_zero * col_sum + k * x_zero * y_zero
+    return (x_scale * y_scale) * corrected.astype(jnp.float32)
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, float, int]:
+    """Asymmetric uint8 quantization of an f32 array (QASYMM8 convention)."""
+    lo = jnp.minimum(jnp.min(x), 0.0)
+    hi = jnp.maximum(jnp.max(x), 0.0)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-8)
+    zero = jnp.clip(jnp.round(-lo / scale), 0, 255).astype(jnp.int32)
+    q = jnp.clip(jnp.round(x / scale) + zero, 0, 255).astype(jnp.uint8)
+    return q, float(scale), int(zero)

@@ -1,0 +1,111 @@
+"""Pure-jnp reference oracles for the Pallas kernels (build-time only).
+
+These are the ground truth the pytest suite checks the Pallas kernels and the
+im2col+GEMM convolution path against. They intentionally use a *different*
+implementation strategy (XLA's native convolution / plain ``jnp.dot``) so that a
+bug in the kernel path cannot be masked by sharing code with the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference GEMM: plain jnp.dot with f32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """Reference NHWC convolution via XLA's native conv.
+
+    x: (H, W, Cin)  w: (Fh, Fw, Cin, Cout)  ->  (Oh, Ow, Cout)
+    Output dims follow the paper's Eq. (3):
+        O = floor((I - F + 2*Pad) / S) + 1
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0]
+
+
+def ref_depthwise_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """Reference depthwise convolution. x: (H,W,C)  w: (Fh,Fw,C) -> (Oh,Ow,C)."""
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w[..., None].astype(jnp.float32),  # (Fh,Fw,C,1) HWIO with groups
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out[0]
+
+
+def ref_im2col(x: jax.Array, fh: int, fw: int, *, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Reference im2col: (H,W,C) -> (Oh*Ow, Fh*Fw*C) image matrix (paper Fig. 10).
+
+    Row r corresponds to output pixel (r // Ow, r % Ow); column layout is
+    (fh, fw, c) row-major, matching a (Fh,Fw,Cin,Cout) filter reshaped to
+    (Fh*Fw*Cin, Cout).
+    """
+    h, w_, c = x.shape
+    xp = jnp.pad(x.astype(jnp.float32), ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h - fh + 2 * pad) // stride + 1
+    ow = (w_ - fw + 2 * pad) // stride + 1
+    rows = []
+    for i in range(oh):
+        for j in range(ow):
+            patch = jax.lax.dynamic_slice(xp, (i * stride, j * stride, 0), (fh, fw, c))
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows)
+
+
+def ref_maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max pool, stride 2. (H,W,C) -> (H/2,W/2,C)."""
+    h, w, c = x.shape
+    return jnp.max(x.reshape(h // 2, 2, w // 2, 2, c), axis=(1, 3))
+
+
+def ref_global_avgpool(x: jax.Array) -> jax.Array:
+    """(H,W,C) -> (C,)."""
+    return jnp.mean(x, axis=(0, 1))
+
+
+def ref_quant_matmul(
+    xq: jax.Array,
+    yq: jax.Array,
+    *,
+    x_scale: float,
+    x_zero: int,
+    y_scale: float,
+    y_zero: int,
+) -> jax.Array:
+    """Reference QASYMM8-style GEMM: dequantize to f32 then jnp.dot.
+
+    xq: (N,K) uint8, yq: (K,M) uint8. real = scale * (q - zero_point).
+    """
+    xf = (xq.astype(jnp.float32) - x_zero) * x_scale
+    yf = (yq.astype(jnp.float32) - y_zero) * y_scale
+    return jnp.dot(xf, yf, preferred_element_type=jnp.float32)

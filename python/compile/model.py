@@ -1,0 +1,189 @@
+"""L2: CNN forward pass in JAX, convolutions via the L1 Pallas GEMM kernel.
+
+Mirrors the ARM-CL structure the paper models: each *major layer* (conv or
+fully-connected node, Table I) is im2col + GEMM (+ bias/ReLU epilogue and any
+trailing pool, which the paper folds into the preceding major layer). Each
+major layer is lowered to its own HLO module by ``aot.py`` so the Rust
+coordinator can place layers on pipeline stages independently (layer-level
+splitting); the whole network is additionally lowered as one module for the
+kernel-level baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gemm_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One major layer (ARM-CL node) descriptor — the paper's Fig. 10 view."""
+
+    name: str
+    kind: str  # "conv" | "fc"
+    fh: int = 1
+    fw: int = 1
+    cin: int = 1
+    cout: int = 1
+    stride: int = 1
+    pad: int = 0
+    relu: bool = True
+    pool: str | None = None  # None | "max2" (2x2/s2 max) | "gap" (global avg)
+
+    def out_hw(self, ih: int, iw: int) -> tuple[int, int]:
+        """Paper Eq. (3): O = floor((I - F + 2*Pad)/S) + 1 (then pool)."""
+        oh = (ih - self.fh + 2 * self.pad) // self.stride + 1
+        ow = (iw - self.fw + 2 * self.pad) // self.stride + 1
+        if self.pool == "max2":
+            oh, ow = oh // 2, ow // 2
+        return oh, ow
+
+    def gemm_dims(self, ih: int, iw: int) -> tuple[int, int, int]:
+        """Paper Eq. (4): N = Ow*Oh, K = Fw*Fh*Fd, M = Ofm (pre-pool dims)."""
+        if self.kind == "fc":
+            return 1, self.cin, self.cout
+        oh = (ih - self.fh + 2 * self.pad) // self.stride + 1
+        ow = (iw - self.fw + 2 * self.pad) // self.stride + 1
+        return oh * ow, self.fh * self.fw * self.cin, self.cout
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    name: str
+    input_hw: tuple[int, int]
+    input_c: int
+    layers: tuple[LayerSpec, ...]
+
+    def shapes(self) -> list[tuple[tuple[int, ...], tuple[int, ...]]]:
+        """(input_shape, output_shape) per layer, threading Eq. (3) through."""
+        out: list[tuple[tuple[int, ...], tuple[int, ...]]] = []
+        h, w = self.input_hw
+        c = self.input_c
+        shape: tuple[int, ...] = (h, w, c)
+        for l in self.layers:
+            in_shape = shape
+            if l.kind == "fc":
+                shape = (l.cout,)
+            else:
+                oh, ow = l.out_hw(in_shape[0], in_shape[1])
+                shape = (l.cout,) if l.pool == "gap" else (oh, ow, l.cout)
+            out.append((in_shape, shape))
+        return out
+
+
+def im2col(x: jax.Array, fh: int, fw: int, *, stride: int, pad: int) -> jax.Array:
+    """Vectorized im2col: (H,W,C) -> (Oh*Ow, Fh*Fw*C), ARM-CL's Im2Col kernel.
+
+    Column layout is (fh, fw, c) row-major, matching ``ref.ref_im2col`` and a
+    (Fh,Fw,Cin,Cout) filter reshaped to (Fh*Fw*Cin, Cout).
+    """
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h - fh + 2 * pad) // stride + 1
+    ow = (w - fw + 2 * pad) // stride + 1
+    i0 = jnp.arange(oh) * stride
+    j0 = jnp.arange(ow) * stride
+    di = jnp.arange(fh)
+    dj = jnp.arange(fw)
+    # (oh, ow, fh, fw, c) gather, then flatten patches to rows.
+    patches = xp[
+        (i0[:, None, None, None] + di[None, None, :, None])[..., None],
+        (j0[None, :, None, None] + dj[None, None, None, :])[..., None],
+        jnp.arange(c)[None, None, None, None, :],
+    ]
+    return patches.reshape(oh * ow, fh * fw * c)
+
+
+def init_layer_params(key: jax.Array, spec: LayerSpec) -> dict[str, jax.Array]:
+    """He-init weights + zero bias. Weight layout: (Fh*Fw*Cin, Cout) GEMM-ready."""
+    k = spec.fh * spec.fw * spec.cin
+    scale = jnp.sqrt(2.0 / k)
+    w = scale * jax.random.normal(key, (k, spec.cout), dtype=jnp.float32)
+    b = jnp.zeros((spec.cout,), dtype=jnp.float32)
+    return {"w": w, "b": b}
+
+
+def init_network_params(net: NetworkSpec, seed: int = 0) -> list[dict[str, jax.Array]]:
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(net.layers))
+    return [init_layer_params(k, l) for k, l in zip(keys, net.layers)]
+
+
+def apply_layer(
+    x: jax.Array, params: dict[str, jax.Array], spec: LayerSpec
+) -> jax.Array:
+    """One major layer: im2col -> Pallas GEMM -> bias/ReLU -> optional pool."""
+    if spec.kind == "fc":
+        y = gemm_pallas.matmul(x.reshape(1, -1), params["w"])
+        y = gemm_pallas.bias_act(y, params["b"], relu=spec.relu)
+        return y.reshape(-1)
+
+    h, w, _ = x.shape
+    cols = im2col(x, spec.fh, spec.fw, stride=spec.stride, pad=spec.pad)
+    y = gemm_pallas.matmul(cols, params["w"])  # (Oh*Ow, Cout)
+    y = gemm_pallas.bias_act(y, params["b"], relu=spec.relu)
+    oh = (h - spec.fh + 2 * spec.pad) // spec.stride + 1
+    ow = (w - spec.fw + 2 * spec.pad) // spec.stride + 1
+    y = y.reshape(oh, ow, spec.cout)
+    if spec.pool == "max2":
+        y = jnp.max(y.reshape(oh // 2, 2, ow // 2, 2, spec.cout), axis=(1, 3))
+    elif spec.pool == "gap":
+        y = jnp.mean(y, axis=(0, 1))
+    return y
+
+
+def network_fn(
+    net: NetworkSpec, params: list[dict[str, jax.Array]]
+) -> Callable[[jax.Array], jax.Array]:
+    """Whole-network forward pass (kernel-level baseline path)."""
+
+    def fwd(x: jax.Array) -> jax.Array:
+        for p, spec in zip(params, net.layers):
+            x = apply_layer(x, p, spec)
+        return x
+
+    return fwd
+
+
+# --------------------------------------------------------------------------
+# Network zoo. PipeNet-Micro is the fast-test net; PipeNet-Tiny is the
+# end-to-end serving model (a scaled-down VGG/MobileNet-style stack whose
+# front-heavy per-layer cost profile mirrors the paper's Fig. 7).
+# --------------------------------------------------------------------------
+
+PIPENET_MICRO = NetworkSpec(
+    name="pipenet_micro",
+    input_hw=(16, 16),
+    input_c=3,
+    layers=(
+        LayerSpec("conv1", "conv", 3, 3, 3, 8, 1, 1),
+        LayerSpec("conv2", "conv", 3, 3, 8, 8, 1, 1, pool="max2"),
+        LayerSpec("conv3", "conv", 3, 3, 8, 16, 1, 1, pool="gap"),
+        LayerSpec("fc", "fc", cin=16, cout=10, relu=False),
+    ),
+)
+
+PIPENET_TINY = NetworkSpec(
+    name="pipenet_tiny",
+    input_hw=(32, 32),
+    input_c=3,
+    layers=(
+        LayerSpec("conv1", "conv", 3, 3, 3, 16, 1, 1),
+        LayerSpec("conv2", "conv", 3, 3, 16, 16, 1, 1, pool="max2"),
+        LayerSpec("conv3", "conv", 3, 3, 16, 32, 1, 1),
+        LayerSpec("conv4", "conv", 3, 3, 32, 32, 1, 1, pool="max2"),
+        LayerSpec("conv5", "conv", 3, 3, 32, 64, 1, 1),
+        LayerSpec("conv6", "conv", 3, 3, 64, 64, 1, 1),
+        LayerSpec("conv7", "conv", 3, 3, 64, 96, 2, 1),
+        LayerSpec("conv8", "conv", 1, 1, 96, 128, 1, 0, pool="gap"),
+        LayerSpec("fc", "fc", cin=128, cout=10, relu=False),
+    ),
+)
+
+NETWORKS: dict[str, NetworkSpec] = {
+    n.name: n for n in (PIPENET_MICRO, PIPENET_TINY)
+}

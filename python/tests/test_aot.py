@@ -1,0 +1,82 @@
+"""AOT export: manifest schema, HLO text well-formedness, shape consistency."""
+
+import json
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_network(M.PIPENET_MICRO, out, seed=0)
+    return out / M.PIPENET_MICRO.name, manifest
+
+
+def test_manifest_written_and_loadable(exported):
+    net_dir, manifest = exported
+    on_disk = json.loads((net_dir / "manifest.json").read_text())
+    assert on_disk == manifest
+
+
+def test_manifest_schema(exported):
+    _, m = exported
+    assert m["name"] == "pipenet_micro"
+    assert m["input_shape"] == [16, 16, 3]
+    assert m["batch_sizes"] == [1, 4]
+    assert len(m["layers"]) == len(M.PIPENET_MICRO.layers)
+    for i, layer in enumerate(m["layers"]):
+        assert layer["index"] == i
+        assert set(layer["hlo"]) == {"1", "4"}
+        assert layer["gemm"]["n"] >= 1 and layer["macs"] > 0
+
+
+def test_layer_shapes_chain(exported):
+    _, m = exported
+    layers = m["layers"]
+    for a, b in zip(layers, layers[1:]):
+        assert a["output_shape"] == b["input_shape"]
+    assert layers[0]["input_shape"] == m["input_shape"]
+    assert layers[-1]["output_shape"] == m["output_shape"]
+
+
+def test_hlo_files_exist_and_are_hlo_text(exported):
+    net_dir, m = exported
+    files = [f for l in m["layers"] for f in l["hlo"].values()]
+    files += list(m["full"].values())
+    for f in files:
+        text = (net_dir / f).read_text()
+        assert "ENTRY" in text and "HloModule" in text
+        # return_tuple=True: root must be a tuple for rust's to_tuple1().
+        assert "tuple(" in text
+
+
+def test_hlo_batch4_has_batched_input(exported):
+    net_dir, m = exported
+    text = (net_dir / m["layers"][0]["hlo"]["4"]).read_text()
+    assert "f32[4,16,16,3]" in text
+
+
+def test_stamp_fingerprint_stable():
+    a = aot._source_fingerprint()
+    b = aot._source_fingerprint()
+    assert a == b and len(a) == 64
+
+
+def test_segments_exported_and_consistent(exported):
+    net_dir, m = exported
+    w = len(m["layers"])
+    # All contiguous ranges except single layers and the full net.
+    want = {(lo, hi) for lo in range(w) for hi in range(lo + 2, w + 1)} - {(0, w)}
+    got = {tuple(map(int, k.split("-"))) for k in m["segments"]}
+    assert got == want
+    for key, files in m["segments"].items():
+        assert set(files) == {"1", "4"}
+        for f in files.values():
+            text = (net_dir / f).read_text()
+            assert "ENTRY" in text and "tuple(" in text

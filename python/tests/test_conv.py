@@ -1,0 +1,101 @@
+"""L2 conv path (im2col + Pallas GEMM) vs XLA-native convolution oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _conv_params(spec, seed=0):
+    p = M.init_layer_params(jax.random.PRNGKey(seed), spec)
+    return p
+
+
+def _apply_ref(x, p, spec):
+    w4 = p["w"].reshape(spec.fh, spec.fw, spec.cin, spec.cout)
+    y = ref.ref_conv2d(x, w4, stride=spec.stride, pad=spec.pad) + p["b"]
+    if spec.relu:
+        y = jnp.maximum(y, 0.0)
+    if spec.pool == "max2":
+        y = ref.ref_maxpool2(y)
+    elif spec.pool == "gap":
+        y = ref.ref_global_avgpool(y)
+    return y
+
+
+@pytest.mark.parametrize(
+    "h,fh,cin,cout,stride,pad",
+    [
+        (16, 3, 3, 8, 1, 1),
+        (16, 3, 8, 16, 2, 1),
+        (14, 1, 16, 32, 1, 0),
+        (12, 5, 4, 6, 1, 2),
+        (11, 3, 5, 7, 2, 0),
+    ],
+)
+def test_conv_layer_vs_native(h, fh, cin, cout, stride, pad):
+    spec = M.LayerSpec("c", "conv", fh, fh, cin, cout, stride, pad)
+    x = jax.random.normal(jax.random.PRNGKey(1), (h, h, cin))
+    p = _conv_params(spec)
+    np.testing.assert_allclose(
+        M.apply_layer(x, p, spec), _apply_ref(x, p, spec), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("pool", ["max2", "gap"])
+def test_conv_layer_pools(pool):
+    spec = M.LayerSpec("c", "conv", 3, 3, 4, 8, 1, 1, pool=pool)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 8, 4))
+    p = _conv_params(spec)
+    np.testing.assert_allclose(
+        M.apply_layer(x, p, spec), _apply_ref(x, p, spec), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv_layer_no_relu_preserves_negatives():
+    spec = M.LayerSpec("c", "conv", 3, 3, 2, 4, 1, 1, relu=False)
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, 6, 2))
+    p = _conv_params(spec)
+    out = M.apply_layer(x, p, spec)
+    np.testing.assert_allclose(out, _apply_ref(x, p, spec), rtol=1e-4, atol=1e-4)
+    assert float(jnp.min(out)) < 0.0  # ReLU genuinely off
+
+
+def test_im2col_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(4), (9, 9, 3))
+    got = M.im2col(x, 3, 3, stride=2, pad=1)
+    want = ref.ref_im2col(x, 3, 3, stride=2, pad=1)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.integers(5, 20),
+    fh=st.sampled_from([1, 3, 5]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 500),
+)
+def test_conv_hypothesis(h, fh, cin, cout, stride, seed):
+    pad = fh // 2
+    spec = M.LayerSpec("c", "conv", fh, fh, cin, cout, stride, pad)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (h, h, cin))
+    p = _conv_params(spec, seed)
+    np.testing.assert_allclose(
+        M.apply_layer(x, p, spec), _apply_ref(x, p, spec), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_fc_layer():
+    spec = M.LayerSpec("fc", "fc", cin=32, cout=10, relu=False)
+    x = jax.random.normal(jax.random.PRNGKey(5), (32,))
+    p = _conv_params(spec)
+    want = x @ p["w"] + p["b"]
+    np.testing.assert_allclose(M.apply_layer(x, p, spec), want, rtol=1e-4, atol=1e-5)

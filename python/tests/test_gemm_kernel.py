@@ -1,0 +1,96 @@
+"""L1 correctness: Pallas tiled GEMM vs the pure-jnp oracle.
+
+This is the core kernel-correctness signal: hypothesis sweeps shapes and
+dtypes (including non-block-multiple dims that exercise the padding path) and
+asserts allclose against ``ref.ref_matmul``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm_pallas, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("n,k,m", [(8, 8, 8), (64, 64, 64), (128, 64, 32)])
+def test_matmul_block_multiples(n, k, m):
+    x, y = _rand((n, k), jnp.float32, 0), _rand((k, m), jnp.float32, 1)
+    np.testing.assert_allclose(
+        gemm_pallas.matmul(x, y), ref.ref_matmul(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize(
+    "n,k,m",
+    [(1, 27, 16), (100, 144, 32), (196, 1152, 96), (7, 3, 5), (65, 129, 33)],
+)
+def test_matmul_ragged_shapes(n, k, m):
+    """Non-multiples of the block shape exercise the pad-and-slice path."""
+    x, y = _rand((n, k), jnp.float32, 2), _rand((k, m), jnp.float32, 3)
+    # Tolerance scales with K: blocked accumulation reorders f32 sums.
+    tol = 1e-5 * max(1.0, k / 10.0)
+    np.testing.assert_allclose(
+        gemm_pallas.matmul(x, y), ref.ref_matmul(x, y), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_bf16_inputs_f32_accum():
+    x, y = _rand((32, 48), jnp.bfloat16, 4), _rand((48, 24), jnp.bfloat16, 5)
+    out = gemm_pallas.matmul(x, y)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, ref.ref_matmul(x, y), rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_custom_blocks_match_default():
+    x, y = _rand((96, 80), jnp.float32, 6), _rand((80, 72), jnp.float32, 7)
+    a = gemm_pallas.matmul(x, y, bn=32, bm=16, bk=8)
+    b = gemm_pallas.matmul(x, y)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = _rand((4, 5), jnp.float32, 0)
+    y = _rand((6, 4), jnp.float32, 1)
+    with pytest.raises((ValueError, TypeError)):
+        gemm_pallas.matmul(x, y)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 96),
+    k=st.integers(1, 96),
+    m=st.integers(1, 96),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis_sweep(n, k, m, dtype, seed):
+    dt = jnp.float32 if dtype == "float32" else jnp.bfloat16
+    x, y = _rand((n, k), dt, seed), _rand((k, m), dt, seed + 1)
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(
+        gemm_pallas.matmul(x, y), ref.ref_matmul(x, y), rtol=tol, atol=tol
+    )
+
+
+def test_bias_act_relu():
+    x = _rand((16, 8), jnp.float32, 8)
+    b = _rand((8,), jnp.float32, 9)
+    out = gemm_pallas.bias_act(x, b, relu=True)
+    np.testing.assert_allclose(out, jnp.maximum(x + b[None, :], 0.0), rtol=1e-6)
+    assert float(jnp.min(out)) >= 0.0
+
+
+def test_bias_act_linear():
+    x = _rand((5, 11), jnp.float32, 10)
+    b = _rand((11,), jnp.float32, 11)
+    out = gemm_pallas.bias_act(x, b, relu=False)
+    np.testing.assert_allclose(out, x + b[None, :], rtol=1e-6)

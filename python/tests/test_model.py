@@ -1,0 +1,65 @@
+"""Network-level shape threading and forward-pass sanity for the zoo nets."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", sorted(M.NETWORKS))
+def test_shape_threading_consistent(name):
+    net = M.NETWORKS[name]
+    shapes = net.shapes()
+    assert len(shapes) == len(net.layers)
+    # Consecutive layers must connect.
+    for (i_in, i_out), (j_in, _) in zip(shapes, shapes[1:]):
+        assert i_out == j_in
+    assert shapes[0][0] == (net.input_hw[0], net.input_hw[1], net.input_c)
+
+
+@pytest.mark.parametrize("name", sorted(M.NETWORKS))
+def test_forward_matches_declared_shapes(name):
+    net = M.NETWORKS[name]
+    params = M.init_network_params(net, seed=0)
+    shapes = net.shapes()
+    x = jax.random.normal(
+        jax.random.PRNGKey(7), (net.input_hw[0], net.input_hw[1], net.input_c)
+    )
+    for p, spec, (in_shape, out_shape) in zip(params, net.layers, shapes):
+        assert x.shape == in_shape
+        x = M.apply_layer(x, p, spec)
+        assert x.shape == out_shape
+    assert jnp.all(jnp.isfinite(x))
+
+
+def test_full_network_fn_equals_layerwise():
+    """Whole-net module (kernel-level baseline) == per-layer chain (pipeline)."""
+    net = M.PIPENET_MICRO
+    params = M.init_network_params(net, seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(8), (16, 16, 3))
+    full = M.network_fn(net, params)(x)
+    y = x
+    for p, spec in zip(params, net.layers):
+        y = M.apply_layer(y, p, spec)
+    np.testing.assert_allclose(full, y, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_dims_match_paper_eq4():
+    # conv1 of pipenet_tiny: 32x32x3, 3x3 pad1 s1 -> N=1024, K=27, M=16
+    spec = M.PIPENET_TINY.layers[0]
+    assert spec.gemm_dims(32, 32) == (32 * 32, 3 * 3 * 3, 16)
+    # strided conv7: 8x8 input, 3x3 pad1 s2 -> O=4 -> N=16, K=576, M=96
+    spec7 = M.PIPENET_TINY.layers[6]
+    assert spec7.gemm_dims(8, 8) == (16, 3 * 3 * 64, 96)
+
+
+def test_params_are_deterministic_by_seed():
+    a = M.init_network_params(M.PIPENET_MICRO, seed=0)
+    b = M.init_network_params(M.PIPENET_MICRO, seed=0)
+    c = M.init_network_params(M.PIPENET_MICRO, seed=1)
+    np.testing.assert_array_equal(a[0]["w"], b[0]["w"])
+    assert not np.array_equal(a[0]["w"], c[0]["w"])

@@ -1,0 +1,66 @@
+"""QASYMM8 quantized GEMM kernel vs dequantize-then-dot oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qgemm_pallas, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quantized_pair(n, k, m, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (n, k), minval=-3.0, maxval=5.0)
+    y = jax.random.uniform(ky, (k, m), minval=-1.0, maxval=2.0)
+    xq, xs, xz = qgemm_pallas.quantize(x)
+    yq, ys, yz = qgemm_pallas.quantize(y)
+    return (xq, xs, xz), (yq, ys, yz)
+
+
+@pytest.mark.parametrize("n,k,m", [(8, 16, 8), (33, 70, 9), (64, 64, 64)])
+def test_qmatmul_matches_dequant_oracle(n, k, m):
+    (xq, xs, xz), (yq, ys, yz) = _quantized_pair(n, k, m, seed=0)
+    got = qgemm_pallas.qmatmul(
+        xq, yq, x_scale=xs, x_zero=xz, y_scale=ys, y_zero=yz
+    )
+    want = ref.ref_quant_matmul(
+        xq, yq, x_scale=xs, x_zero=xz, y_scale=ys, y_zero=yz
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_integer_core_is_exact():
+    """The int32 core must be bit-exact: compare at scale=1, zero=0."""
+    xq = jnp.arange(24, dtype=jnp.uint8).reshape(4, 6)
+    yq = (jnp.arange(30, dtype=jnp.uint8) % 7).reshape(6, 5)
+    got = qgemm_pallas.qmatmul(xq, yq, x_scale=1.0, x_zero=0, y_scale=1.0, y_zero=0)
+    want = xq.astype(jnp.int32) @ yq.astype(jnp.int32)
+    np.testing.assert_array_equal(got, want.astype(jnp.float32))
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(3), (50, 50)) * 4.0
+    q, s, z = qgemm_pallas.quantize(x)
+    deq = (q.astype(jnp.float32) - z) * s
+    assert float(jnp.max(jnp.abs(deq - x))) <= s * 0.5 + 1e-6
+
+
+def test_quantize_covers_zero():
+    """QASYMM8 requires exact-zero representability."""
+    x = jax.random.uniform(jax.random.PRNGKey(4), (10, 10), minval=0.5, maxval=2.0)
+    q, s, z = qgemm_pallas.quantize(x)
+    assert 0 <= z <= 255
+    np.testing.assert_allclose((z - z) * s, 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 48), k=st.integers(1, 48), m=st.integers(1, 48),
+       seed=st.integers(0, 1000))
+def test_qmatmul_hypothesis(n, k, m, seed):
+    (xq, xs, xz), (yq, ys, yz) = _quantized_pair(n, k, m, seed)
+    got = qgemm_pallas.qmatmul(xq, yq, x_scale=xs, x_zero=xz, y_scale=ys, y_zero=yz)
+    want = ref.ref_quant_matmul(xq, yq, x_scale=xs, x_zero=xz, y_scale=ys, y_zero=yz)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

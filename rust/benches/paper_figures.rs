@@ -1,0 +1,64 @@
+//! `cargo bench --bench paper_figures` — regenerates every FIGURE series of
+//! the paper's evaluation (3, 4, 5, 6, 7, 8, 9, 11, 13, 14), printing the
+//! same rows/series the paper plots, and times the generating sweeps.
+
+use pipeit::config::Config;
+use pipeit::reports::Reporter;
+use pipeit::util::bench::{black_box, Bencher};
+use pipeit::{baselines, cnn::zoo};
+
+fn main() {
+    let rep = Reporter::new(Config::default());
+
+    println!("================ PAPER FIGURES (reproduced) ================\n");
+    rep.fig3().print();
+    println!("paper Fig. 3 shape: rises to 4B, collapses at 4B+1s, partial recovery never above 4B\n");
+
+    rep.fig4().print();
+    println!("paper Fig. 4: ARM-CL ~ NCNN >> TVM (no NEON); GoogLeNet absent for TVM\n");
+
+    rep.fig5().print();
+    println!("paper Fig. 5: no split ratio significantly beats Big-only (best ~= r=1.0)\n");
+
+    rep.fig6().print();
+    println!("paper Fig. 6: conv dominates everywhere except AlexNet (FC-heavy)\n");
+
+    rep.fig7().print();
+    println!("paper Fig. 7: conv time generally decreases with depth\n");
+
+    rep.fig8().print();
+    println!("paper Fig. 8: optimal two-stage split ratio 0.60 (GoogLeNet) .. 0.90 (AlexNet)\n");
+
+    rep.fig9().print();
+    println!("paper Fig. 9: ResNet50 B4-s2-s2 peak 5.6 imgs/s at split (33,45), ratio (0.61,0.22,0.17), +7% over two-stage\n");
+
+    rep.fig11().print();
+    println!("paper Fig. 11: concave speedups (diminishing returns per added core)\n");
+
+    rep.fig13().print();
+    println!("paper Fig. 13: v18.05 quant: conv -14%, overall flat; v18.11: F32 -20%, quant conv -24%, overall -19%; Pipe-it** reaches 31 imgs/s\n");
+
+    rep.fig14().print();
+    println!("paper Fig. 14: Pipe-it best-in-class for MobileNet; Pipe-it** = 31 imgs/s\n");
+
+    println!("================ timing the sweeps ================\n");
+    let cfg = Config::default();
+    let nets = zoo::all_networks();
+    let mut b = Bencher::default();
+    b.bench("fig3_core_sweep_all_nets", || {
+        for net in &nets {
+            black_box(baselines::core_sweep(&cfg.platform, net));
+        }
+    });
+    b.bench("fig5_ratio_sweep_all_nets", || {
+        for net in &nets {
+            black_box(baselines::ratio_sweep(&cfg.platform, net, 20));
+        }
+    });
+    b.bench("fig8_two_stage_sweeps", || {
+        black_box(rep.fig8());
+    });
+    b.bench("fig9_resnet_surface", || {
+        black_box(rep.fig9());
+    });
+}

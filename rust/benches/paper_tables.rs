@@ -1,0 +1,51 @@
+//! `cargo bench --bench paper_tables` — regenerates every TABLE of the
+//! paper's evaluation (I, III, IV, V, VI, VII + §IV-B design-space sizes +
+//! §VII-E DeepX), printing paper-vs-ours, and times the generating code
+//! paths with the in-tree bench harness.
+
+use pipeit::config::Config;
+use pipeit::reports::Reporter;
+use pipeit::util::bench::{black_box, Bencher};
+
+fn main() {
+    let rep = Reporter::new(Config::default());
+
+    println!("================ PAPER TABLES (reproduced) ================\n");
+    rep.table1().print();
+    println!("paper Table I major nodes: alexnet 11, googlenet 58, mobilenet 28, resnet50 54, squeezenet 26\n");
+
+    rep.design_space().print();
+    println!("paper §IV-B: 64 pipelines on 4+4; MobileNet \"5,379,616\" (matches the C(W,p-1) variant)\n");
+
+    rep.table3().print();
+    println!("paper Table III averages: 13.2% (Big), 11.4% (Small)\n");
+
+    rep.table4().print();
+    println!("paper Table IV: AlexNet 8.1/1.5/8.9 (+9.8%), GoogLeNet 7.8/3.3/11.8 (+45.5%), MobileNet 17.4/6.6/24.0 (+35.5%), ResNet50 3.1/1.5/5.5 (+67.5%), SqueezeNet 15.6/6.9/21.4 (+37.5%); avg +39.2%\n");
+
+    rep.table5().print();
+    println!("paper Table V: AlexNet B4-s4 [1,9]-[10,11]; GoogLeNet B4-s2-s1-s1; MobileNet B2-B2-s3-s1; ResNet50 B4-s2-s2 [1,35]-[36,44]-[45,54]; SqueezeNet B4-s4\n");
+
+    rep.table6().print();
+    println!("paper Table VI: measured-time configs (AlexNet B4-s4 [1,9]-[10,11], ResNet50 B2-B2-s3-s1, ...)\n");
+
+    rep.table7().print();
+    println!("paper Table VII: Big 3.8-4.9 W, Small 0.7-1.3 W, Pipe-it 5.1-6.9 W; Pipe-it efficiency ~= Big-cluster level\n");
+
+    rep.deepx().print();
+    println!("paper §VII-E: DeepX 2.2 imgs/J @ 2 imgs/s vs Pipe-it 1.8 imgs/J @ 8.9 imgs/s\n");
+
+    rep.ablation().print();
+
+    println!("================ timing the generators ================\n");
+    let mut b = Bencher::default();
+    b.bench("table4_full_dse_all_nets", || {
+        black_box(rep.table4_rows());
+    });
+    b.bench("table3_prediction_error", || {
+        black_box(rep.table3());
+    });
+    b.bench("table7_power_model", || {
+        black_box(rep.table7());
+    });
+}

@@ -1,0 +1,183 @@
+//! Kernel-level splitting baselines (paper §III-A, Figures 3 & 5).
+//!
+//! The default ARM-CL strategy: one image at a time, every kernel split
+//! across all engaged cores — intra-cluster first, then Heterogeneous
+//! Multi-Processing (HMP) across clusters, which is where throughput
+//! collapses (CCI conflict misses).
+
+use crate::cnn::network::Network;
+use crate::simulator::gemm;
+use crate::simulator::platform::{CoreType, Platform};
+
+/// One point of the Fig. 3 series.
+#[derive(Debug, Clone)]
+pub struct CoreSweepPoint {
+    pub label: String,
+    pub big: usize,
+    pub small: usize,
+    pub throughput: f64,
+}
+
+/// Fig. 3: throughput as cores are added — 1B..4B, then 4B+1s..4B+4s.
+pub fn core_sweep(platform: &Platform, net: &Network) -> Vec<CoreSweepPoint> {
+    let mut out = Vec::new();
+    for b in 1..=platform.big.cores {
+        let t = gemm::network_time(platform, &net.layers, CoreType::Big, b);
+        out.push(CoreSweepPoint {
+            label: format!("{b}B"),
+            big: b,
+            small: 0,
+            throughput: 1.0 / t,
+        });
+    }
+    for s in 1..=platform.small.cores {
+        let t = gemm::network_time_hmp(platform, &net.layers, platform.big.cores, s);
+        out.push(CoreSweepPoint {
+            label: format!("{}B{}s", platform.big.cores, s),
+            big: platform.big.cores,
+            small: s,
+            throughput: 1.0 / t,
+        });
+    }
+    out
+}
+
+/// Fig. 5: exhaustive disproportionate Big/Small workload-ratio sweep,
+/// throughput normalized to Big-cluster-only execution.
+pub fn ratio_sweep(platform: &Platform, net: &Network, steps: usize) -> Vec<(f64, f64)> {
+    let t_big = gemm::network_time(platform, &net.layers, CoreType::Big, platform.big.cores);
+    (0..=steps)
+        .map(|i| {
+            let r = i as f64 / steps as f64;
+            let t: f64 = net
+                .layers
+                .iter()
+                .map(|l| {
+                    gemm::layer_time_hmp_ratio(
+                        platform,
+                        l,
+                        platform.big.cores,
+                        platform.small.cores,
+                        r,
+                    )
+                })
+                .sum();
+            (r, t_big / t)
+        })
+        .collect()
+}
+
+/// Fig. 6: fraction of total forward-pass time spent in convolutional
+/// (non-FC) layers, on the Big cluster.
+pub fn conv_time_share(platform: &Platform, net: &Network) -> f64 {
+    use crate::cnn::layer::LayerKind;
+    let h = platform.big.cores;
+    let total: f64 = gemm::network_time(platform, &net.layers, CoreType::Big, h);
+    let conv: f64 = net
+        .layers
+        .iter()
+        .filter(|l| l.kind != LayerKind::Fc)
+        .map(|l| gemm::layer_time(platform, l, CoreType::Big, h))
+        .sum();
+    conv / total
+}
+
+/// Fig. 7: per-layer share of total convolution time (Big cluster, all
+/// cores), in layer order.
+pub fn layer_time_distribution(platform: &Platform, net: &Network) -> Vec<f64> {
+    let h = platform.big.cores;
+    let times: Vec<f64> = net
+        .layers
+        .iter()
+        .map(|l| gemm::layer_time(platform, l, CoreType::Big, h))
+        .collect();
+    let total: f64 = times.iter().sum();
+    times.into_iter().map(|t| t / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+
+    #[test]
+    fn fig3_shape_rise_drop_recover() {
+        let p = Platform::hikey970();
+        for net in zoo::all_networks() {
+            let sweep = core_sweep(&p, &net);
+            assert_eq!(sweep.len(), 8);
+            // Rising through Big cores.
+            for w in sweep[..4].windows(2) {
+                assert!(w[1].throughput > w[0].throughput, "{}", net.name);
+            }
+            // Sharp drop at 4B+1s.
+            assert!(sweep[4].throughput < sweep[3].throughput, "{}", net.name);
+            // Recovery with more Small cores but never beating 4B.
+            assert!(sweep[7].throughput > sweep[4].throughput, "{}", net.name);
+            assert!(sweep[7].throughput <= sweep[3].throughput * 1.01, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn fig5_big_only_is_best() {
+        let p = Platform::hikey970();
+        for net in zoo::all_networks() {
+            let sweep = ratio_sweep(&p, &net, 20);
+            let best = sweep.iter().map(|(_, tp)| *tp).fold(f64::NEG_INFINITY, f64::max);
+            let at_one = sweep.last().unwrap().1;
+            assert!((at_one - 1.0).abs() < 1e-9);
+            assert!(best <= 1.03, "{}: ratio sweep best {best:.3} beats Big-only", net.name);
+        }
+    }
+
+    #[test]
+    fn fig6_conv_dominates_except_alexnet() {
+        let p = Platform::hikey970();
+        let share_alex = conv_time_share(&p, &zoo::alexnet());
+        assert!(share_alex < 0.65, "AlexNet conv share {share_alex:.2} should be lowest");
+        for name in ["googlenet", "mobilenet", "resnet50", "squeezenet"] {
+            let share = conv_time_share(&p, &zoo::by_name(name).unwrap());
+            assert!(share > 0.85, "{name}: conv share {share:.2}");
+            assert!(share > share_alex);
+        }
+    }
+
+    #[test]
+    fn fig7_front_heavier_than_back() {
+        // Fig. 7 plots *convolutional* layer time over depth: generally
+        // decreasing. Compare first vs last third of conv (non-FC) layers;
+        // MobileNet is intentionally compute-uniform by design, so it only
+        // gets a no-strong-inversion check.
+        use crate::cnn::layer::LayerKind;
+        let p = Platform::hikey970();
+        for net in zoo::all_networks() {
+            let dist = layer_time_distribution(&p, &net);
+            assert!((dist.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            let conv: Vec<f64> = net
+                .layers
+                .iter()
+                .zip(&dist)
+                .filter(|(l, _)| l.kind != LayerKind::Fc)
+                .map(|(_, d)| *d)
+                .collect();
+            let w = conv.len();
+            let front: f64 = conv[..w / 3].iter().sum();
+            let back: f64 = conv[w - w / 3..].iter().sum();
+            // MobileNet and ResNet50 are compute-uniform over depth by
+            // design (channel doubling offsets spatial halving), so they
+            // only get a no-strong-inversion check.
+            let slack = match net.name.as_str() {
+                "mobilenet" => 0.7,
+                // fire8/9 (512-ch at 26x26) and conv10 are genuinely heavy
+                // in SqueezeNet v1.0's arithmetic.
+                "resnet50" | "squeezenet" => 0.8,
+                _ => 1.0,
+            };
+            assert!(
+                front > back * slack,
+                "{}: front third {front:.2} vs back third {back:.2}",
+                net.name
+            );
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Baselines the paper compares against: the default kernel-level split
+//! (incl. cross-cluster HMP), published framework comparators, and the
+//! QASYMM8 quantization cost model.
+
+pub mod frameworks;
+pub mod kernel_level;
+pub mod quant;
+
+pub use frameworks::{deepx_alexnet, fig14_series, fig4_row, Framework};
+pub use kernel_level::{
+    conv_time_share, core_sweep, layer_time_distribution, ratio_sweep, CoreSweepPoint,
+};
+pub use quant::{fig13_points, pipeit_latency, ArmClVersion, QuantPoint};

@@ -1,0 +1,219 @@
+//! Major-layer descriptors — the paper's Fig. 10 / Table II view of a CNN.
+//!
+//! A *major layer* is a weighted ARM-CL node: convolutional, depthwise
+//! convolutional, or fully-connected. Non-weighted kernels (pool, ReLU,
+//! concat, norm) are folded into the preceding major layer, exactly as the
+//! paper does ("all kernels from the non-convolutional layers are considered
+//! part of the previous convolutional layers").
+
+/// Kind of weighted node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Conv,
+    /// Depthwise convolution (MobileNet): one filter per input channel.
+    DwConv,
+    Fc,
+}
+
+/// GEMM dimensions of the lowered convolution (paper Eq. 4):
+/// image matrix `[N x K]` times filter matrix `[K x M]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmDims {
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+impl GemmDims {
+    /// Total multiply-accumulate operations (paper: "total arithmetic
+    /// operations is N*K*M").
+    pub fn macs(&self) -> usize {
+        self.n * self.k * self.m
+    }
+}
+
+/// One major layer with its static descriptors (paper Table II parameters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input tensor dims {Iw, Ih, Id}; for FC, `ih = iw = 1`, `cin` = inputs.
+    pub ih: usize,
+    pub iw: usize,
+    pub cin: usize,
+    /// Filter dims {Fw, Fh}; `cout` = Ofm.
+    pub fh: usize,
+    pub fw: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        ih: usize,
+        iw: usize,
+        cin: usize,
+        fh: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            ih,
+            iw,
+            cin,
+            fh,
+            fw: fh,
+            cout,
+            stride,
+            pad,
+        }
+    }
+
+    pub fn dw_conv(
+        name: &str,
+        ih: usize,
+        iw: usize,
+        c: usize,
+        fh: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::DwConv,
+            ih,
+            iw,
+            cin: c,
+            fh,
+            fw: fh,
+            cout: c,
+            stride,
+            pad,
+        }
+    }
+
+    pub fn fc(name: &str, cin: usize, cout: usize) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            ih: 1,
+            iw: 1,
+            cin,
+            fh: 1,
+            fw: 1,
+            cout,
+            stride: 1,
+            pad: 0,
+        }
+    }
+
+    /// Output spatial dims, paper Eq. (3): `O = floor((I - F + 2*Pad)/S) + 1`.
+    pub fn out_hw(&self) -> (usize, usize) {
+        if self.kind == LayerKind::Fc {
+            return (1, 1);
+        }
+        let oh = (self.ih + 2 * self.pad - self.fh) / self.stride + 1;
+        let ow = (self.iw + 2 * self.pad - self.fw) / self.stride + 1;
+        (oh, ow)
+    }
+
+    /// GEMM dims, paper Eq. (4): `N = Ow*Oh, K = Fw*Fh*Fd, M = Ofm`.
+    ///
+    /// Depthwise convolutions execute one small per-channel GEMM; mapping
+    /// them to `(N=Oh*Ow, K=Fh*Fw, M=C)` preserves both the MAC count
+    /// (`N*K*M = Oh*Ow*Fh*Fw*C`) and the operand-size terms the performance
+    /// model uses.
+    pub fn gemm(&self) -> GemmDims {
+        let (oh, ow) = self.out_hw();
+        match self.kind {
+            LayerKind::Conv => GemmDims {
+                n: oh * ow,
+                k: self.fh * self.fw * self.cin,
+                m: self.cout,
+            },
+            LayerKind::DwConv => GemmDims { n: oh * ow, k: self.fh * self.fw, m: self.cout },
+            LayerKind::Fc => GemmDims { n: 1, k: self.cin, m: self.cout },
+        }
+    }
+
+    /// Weight bytes (f32), used by the cache model.
+    pub fn weight_bytes(&self) -> usize {
+        4 * match self.kind {
+            LayerKind::Conv => self.fh * self.fw * self.cin * self.cout + self.cout,
+            LayerKind::DwConv => self.fh * self.fw * self.cout + self.cout,
+            LayerKind::Fc => self.cin * self.cout + self.cout,
+        }
+    }
+
+    pub fn input_bytes(&self) -> usize {
+        4 * self.ih * self.iw * self.cin
+    }
+
+    pub fn output_bytes(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        4 * oh * ow * self.cout
+    }
+
+    /// Working set of the lowered GEMM: image matrix + filter matrix +
+    /// result matrix, in bytes (drives the L2-capacity term of the cost
+    /// model).
+    pub fn gemm_bytes(&self) -> usize {
+        let g = self.gemm();
+        4 * (g.n * g.k + g.k * g.m + g.n * g.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_output_dims() {
+        // AlexNet conv1: 227x227, 11x11, s4, pad0 -> 55x55.
+        let l = Layer::conv("c1", 227, 227, 3, 11, 96, 4, 0);
+        assert_eq!(l.out_hw(), (55, 55));
+        // 3x3 pad1 s1 preserves dims.
+        let l = Layer::conv("c", 56, 56, 64, 3, 64, 1, 1);
+        assert_eq!(l.out_hw(), (56, 56));
+        // floor behaviour: 7x7 s2 pad3 on 224 -> 112.
+        let l = Layer::conv("c", 224, 224, 3, 7, 64, 2, 3);
+        assert_eq!(l.out_hw(), (112, 112));
+    }
+
+    #[test]
+    fn eq4_gemm_dims() {
+        let l = Layer::conv("c1", 227, 227, 3, 11, 96, 4, 0);
+        let g = l.gemm();
+        assert_eq!(g, GemmDims { n: 55 * 55, k: 11 * 11 * 3, m: 96 });
+        assert_eq!(g.macs(), 55 * 55 * 363 * 96);
+    }
+
+    #[test]
+    fn depthwise_macs_preserved() {
+        let l = Layer::dw_conv("dw", 112, 112, 32, 3, 1, 1);
+        let g = l.gemm();
+        assert_eq!(g.macs(), 112 * 112 * 9 * 32);
+    }
+
+    #[test]
+    fn fc_dims() {
+        let l = Layer::fc("fc6", 9216, 4096);
+        assert_eq!(l.gemm(), GemmDims { n: 1, k: 9216, m: 4096 });
+        assert_eq!(l.weight_bytes(), 4 * (9216 * 4096 + 4096));
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let l = Layer::conv("c", 56, 56, 64, 3, 64, 1, 1);
+        assert_eq!(l.input_bytes(), 4 * 56 * 56 * 64);
+        assert_eq!(l.output_bytes(), 4 * 56 * 56 * 64);
+        assert_eq!(l.weight_bytes(), 4 * (3 * 3 * 64 * 64 + 64));
+        let g = l.gemm();
+        assert_eq!(l.gemm_bytes(), 4 * (g.n * g.k + g.k * g.m + g.n * g.m));
+    }
+}

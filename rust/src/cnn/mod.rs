@@ -1,0 +1,10 @@
+//! CNN descriptor substrate: major-layer descriptors (paper Table II /
+//! Fig. 10), the network container/builder, and the five benchmark networks
+//! of Table I.
+
+pub mod layer;
+pub mod network;
+pub mod zoo;
+
+pub use layer::{GemmDims, Layer, LayerKind};
+pub use network::{NetBuilder, Network};

@@ -1,0 +1,154 @@
+//! Network container + a builder that threads spatial dims through the
+//! stack (pools and other non-weighted ops adjust dims but create no major
+//! layer, matching the paper's node accounting).
+
+use super::layer::{Layer, LayerKind};
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.gemm().macs()).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn conv_layer_count(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.kind != LayerKind::Fc)
+            .count()
+    }
+}
+
+/// Builder that tracks the current activation dims (h, w, c).
+pub struct NetBuilder {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    layers: Vec<Layer>,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> NetBuilder {
+        NetBuilder { name: name.to_string(), h, w, c, layers: Vec::new() }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    /// Standard convolution; updates the tracked dims.
+    pub fn conv(mut self, name: &str, f: usize, cout: usize, s: usize, p: usize) -> Self {
+        let l = Layer::conv(name, self.h, self.w, self.c, f, cout, s, p);
+        let (oh, ow) = l.out_hw();
+        self.h = oh;
+        self.w = ow;
+        self.c = cout;
+        self.layers.push(l);
+        self
+    }
+
+    /// Convolution on an explicit input-channel count (grouped-conv nodes,
+    /// e.g. AlexNet conv2/4/5 where each node sees half the channels) that
+    /// does NOT advance the tracked dims; combine with `set_c` afterwards.
+    pub fn conv_node(mut self, name: &str, cin: usize, f: usize, cout: usize, s: usize, p: usize) -> Self {
+        let l = Layer::conv(name, self.h, self.w, cin, f, cout, s, p);
+        self.layers.push(l);
+        self
+    }
+
+    /// Depthwise convolution.
+    pub fn dw(mut self, name: &str, f: usize, s: usize, p: usize) -> Self {
+        let l = Layer::dw_conv(name, self.h, self.w, self.c, f, s, p);
+        let (oh, ow) = l.out_hw();
+        self.h = oh;
+        self.w = ow;
+        self.layers.push(l);
+        self
+    }
+
+    /// Non-weighted pool: adjusts dims only (folded into the previous major
+    /// layer for timing, per the paper).
+    pub fn pool(mut self, f: usize, s: usize, p: usize) -> Self {
+        self.h = (self.h + 2 * p - f) / s + 1;
+        self.w = (self.w + 2 * p - f) / s + 1;
+        self
+    }
+
+    pub fn global_pool(mut self) -> Self {
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    /// Advance dims after a channel-concat (inception / fire / grouped conv).
+    pub fn set_dims(mut self, h: usize, w: usize, c: usize) -> Self {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self
+    }
+
+    pub fn set_c(mut self, c: usize) -> Self {
+        self.c = c;
+        self
+    }
+
+    pub fn fc(mut self, name: &str, cout: usize) -> Self {
+        let cin = self.h * self.w * self.c;
+        self.layers.push(Layer::fc(name, cin, cout));
+        self.h = 1;
+        self.w = 1;
+        self.c = cout;
+        self
+    }
+
+    pub fn build(self) -> Network {
+        Network { name: self.name, layers: self.layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_threads_dims() {
+        let net = NetBuilder::new("t", 32, 32, 3)
+            .conv("c1", 3, 16, 1, 1)
+            .pool(2, 2, 0)
+            .conv("c2", 3, 32, 1, 1)
+            .global_pool()
+            .fc("fc", 10)
+            .build();
+        assert_eq!(net.num_layers(), 3);
+        assert_eq!(net.layers[1].ih, 16);
+        assert_eq!(net.layers[2].cin, 32);
+        assert_eq!(net.conv_layer_count(), 2);
+    }
+
+    #[test]
+    fn conv_node_does_not_advance() {
+        let net = NetBuilder::new("t", 27, 27, 96)
+            .conv_node("c2a", 48, 5, 128, 1, 2)
+            .conv_node("c2b", 48, 5, 128, 1, 2)
+            .set_c(256)
+            .conv("c3", 3, 384, 1, 1)
+            .build();
+        assert_eq!(net.layers[0].cin, 48);
+        assert_eq!(net.layers[2].cin, 256);
+        assert_eq!(net.layers[2].ih, 27);
+    }
+}

@@ -1,0 +1,151 @@
+//! Config system: platform and power-model descriptions loaded from JSON
+//! files (see `configs/`), with the HiKey 970 defaults built in. Every CLI
+//! subcommand accepts `--platform <file>` to retarget the whole framework
+//! (simulator, predictor, DSE) at a different big.LITTLE configuration.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::simulator::platform::{ClusterSpec, CoreType, Platform};
+use crate::simulator::power::PowerModel;
+use crate::util::json::Json;
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub platform: Platform,
+    pub power: PowerModel,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { platform: Platform::hikey970(), power: PowerModel::default() }
+    }
+}
+
+fn f64_or(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+fn usize_or(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).and_then(Json::as_usize).unwrap_or(default)
+}
+
+fn cluster_from(j: &Json, base: &ClusterSpec) -> ClusterSpec {
+    ClusterSpec {
+        core_type: base.core_type,
+        cores: usize_or(j, "cores", base.cores),
+        freq_ghz: f64_or(j, "freq_ghz", base.freq_ghz),
+        l2_bytes: usize_or(j, "l2_kb", base.l2_bytes / 1024) * 1024,
+        mac_ns: f64_or(j, "mac_ns", base.mac_ns),
+        mem_ns_per_byte: f64_or(j, "mem_ns_per_byte", base.mem_ns_per_byte),
+        spill_ns_per_byte: f64_or(j, "spill_ns_per_byte", base.spill_ns_per_byte),
+        dispatch_us: f64_or(j, "dispatch_us", base.dispatch_us),
+        sync_us: f64_or(j, "sync_us", base.sync_us),
+        contention: f64_or(j, "contention", base.contention),
+    }
+}
+
+impl Config {
+    /// Load from a JSON file; unspecified fields inherit HiKey 970
+    /// defaults, so config files only state what differs.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let base = Config::default();
+
+        let mut platform = base.platform.clone();
+        if let Some(name) = j.get("name").and_then(Json::as_str) {
+            platform.name = name.to_string();
+        }
+        if let Some(big) = j.get("big") {
+            platform.big = cluster_from(big, &base.platform.big);
+        }
+        if let Some(small) = j.get("small") {
+            platform.small = cluster_from(small, &base.platform.small);
+        }
+        platform.cci_factor = f64_or(&j, "cci_factor", base.platform.cci_factor);
+        platform.cci_fixed_us = f64_or(&j, "cci_fixed_us", base.platform.cci_fixed_us);
+        platform.tile_rows = usize_or(&j, "tile_rows", base.platform.tile_rows);
+        platform.ruggedness = f64_or(&j, "ruggedness", base.platform.ruggedness);
+        anyhow::ensure!(
+            platform.big.cores >= 1 && platform.small.cores >= 1,
+            "both clusters need at least one core"
+        );
+        anyhow::ensure!(platform.big.core_type == CoreType::Big);
+
+        let mut power = base.power.clone();
+        if let Some(pj) = j.get("power") {
+            power.big_core_w = f64_or(pj, "big_core_w", power.big_core_w);
+            power.small_core_w = f64_or(pj, "small_core_w", power.small_core_w);
+            power.big_static_w = f64_or(pj, "big_static_w", power.big_static_w);
+            power.small_static_w = f64_or(pj, "small_static_w", power.small_static_w);
+            power.mem_w = f64_or(pj, "mem_w", power.mem_w);
+            power.cci_w = f64_or(pj, "cci_w", power.cci_w);
+        }
+
+        Ok(Config { platform, power })
+    }
+
+    /// Load from an optional path, defaulting to HiKey 970.
+    pub fn load_or_default(path: Option<&str>) -> Result<Config> {
+        match path {
+            Some(p) => Config::load(Path::new(p)),
+            None => Ok(Config::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_hikey() {
+        let c = Config::default();
+        assert_eq!(c.platform.name, "hikey970");
+        assert_eq!(c.platform.total_cores(), 8);
+    }
+
+    #[test]
+    fn partial_override() {
+        let dir = std::env::temp_dir().join("pipeit_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("plat.json");
+        std::fs::write(
+            &p,
+            r#"{"name": "exynos-like", "big": {"cores": 2, "freq_ghz": 2.0},
+                "small": {"cores": 6}, "cci_factor": 0.4,
+                "power": {"big_core_w": 1.2}}"#,
+        )
+        .unwrap();
+        let c = Config::load(&p).unwrap();
+        assert_eq!(c.platform.name, "exynos-like");
+        assert_eq!(c.platform.big.cores, 2);
+        assert_eq!(c.platform.small.cores, 6);
+        // Inherited defaults survive.
+        assert_eq!(c.platform.small.l2_bytes, 1024 * 1024);
+        assert!((c.platform.cci_factor - 0.4).abs() < 1e-12);
+        assert!((c.power.big_core_w - 1.2).abs() < 1e-12);
+        assert!((c.power.mem_w - PowerModel::default().mem_w).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_zero_core_cluster() {
+        let dir = std::env::temp_dir().join("pipeit_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"big": {"cores": 0}}"#).unwrap();
+        assert!(Config::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Config::load(Path::new("/nonexistent/x.json")).is_err());
+        assert!(Config::load_or_default(None).is_ok());
+    }
+}

@@ -1,0 +1,117 @@
+//! Dynamic batcher: groups a stream of images into jobs whose batch size
+//! matches an AOT-exported executable (HLO shapes are static, so only the
+//! exported batch sizes are admissible).
+
+use std::collections::VecDeque;
+
+use crate::runtime::tensor::Tensor;
+
+/// A batch of images travelling through the pipeline as one unit.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Sequence number of the first image in the batch.
+    pub seq: usize,
+    pub tensors: Vec<Tensor>,
+}
+
+/// Greedy batcher over an image iterator: emits the largest exported batch
+/// size the remaining stream can fill exactly, falling back to smaller
+/// exported sizes (ultimately batch-1) at the stream tail. `sizes` must
+/// contain 1.
+pub struct Batcher<I: Iterator<Item = Tensor>> {
+    inner: I,
+    /// Exported batch sizes, descending.
+    sizes: Vec<usize>,
+    pending: VecDeque<Tensor>,
+    next_seq: usize,
+    exhausted: bool,
+}
+
+impl<I: Iterator<Item = Tensor>> Batcher<I> {
+    pub fn new(inner: I, mut sizes: Vec<usize>) -> Batcher<I> {
+        assert!(sizes.contains(&1), "batch sizes must include 1");
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        Batcher { inner, sizes, pending: VecDeque::new(), next_seq: 0, exhausted: false }
+    }
+
+    fn refill(&mut self, want: usize) {
+        while !self.exhausted && self.pending.len() < want {
+            match self.inner.next() {
+                Some(t) => self.pending.push_back(t),
+                None => self.exhausted = true,
+            }
+        }
+    }
+}
+
+impl<I: Iterator<Item = Tensor>> Iterator for Batcher<I> {
+    type Item = Job;
+
+    fn next(&mut self) -> Option<Job> {
+        let max = self.sizes[0];
+        self.refill(max);
+        if self.pending.is_empty() {
+            return None;
+        }
+        // Largest exported size we can fill exactly.
+        let take = *self
+            .sizes
+            .iter()
+            .find(|&&s| s <= self.pending.len())
+            .expect("sizes contains 1");
+        let tensors: Vec<Tensor> = self.pending.drain(..take).collect();
+        let job = Job { seq: self.next_seq, tensors };
+        self.next_seq += take;
+        Some(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn imgs(n: usize) -> Vec<Tensor> {
+        (0..n).map(|i| Tensor::new(vec![2], vec![i as f32, 0.0])).collect()
+    }
+
+    #[test]
+    fn batches_greedily_with_singleton_tail() {
+        let jobs: Vec<Job> = Batcher::new(imgs(10).into_iter(), vec![1, 4]).collect();
+        let sizes: Vec<usize> = jobs.iter().map(|j| j.tensors.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 1, 1]);
+        assert_eq!(jobs[0].seq, 0);
+        assert_eq!(jobs[1].seq, 4);
+        assert_eq!(jobs[2].seq, 8);
+        assert_eq!(jobs[3].seq, 9);
+    }
+
+    #[test]
+    fn batch1_only() {
+        let jobs: Vec<Job> = Batcher::new(imgs(3).into_iter(), vec![1]).collect();
+        assert_eq!(jobs.len(), 3);
+        assert!(jobs.iter().all(|j| j.tensors.len() == 1));
+    }
+
+    #[test]
+    fn intermediate_sizes_used_at_tail() {
+        let jobs: Vec<Job> = Batcher::new(imgs(7).into_iter(), vec![1, 2, 4]).collect();
+        let sizes: Vec<usize> = jobs.iter().map(|j| j.tensors.len()).collect();
+        assert_eq!(sizes, vec![4, 2, 1]);
+    }
+
+    #[test]
+    fn preserves_image_order() {
+        let jobs: Vec<Job> = Batcher::new(imgs(9).into_iter(), vec![1, 4]).collect();
+        let flat: Vec<f32> = jobs
+            .iter()
+            .flat_map(|j| j.tensors.iter().map(|t| t.data[0]))
+            .collect();
+        assert_eq!(flat, (0..9).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_stream_yields_nothing() {
+        let jobs: Vec<Job> = Batcher::new(imgs(0).into_iter(), vec![1, 4]).collect();
+        assert!(jobs.is_empty());
+    }
+}

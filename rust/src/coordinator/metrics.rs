@@ -1,0 +1,103 @@
+//! Run metrics: throughput, per-image latency distribution, per-stage
+//! utilization — what the paper reports per experiment (§VII).
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// Per-stage accounting, filled by the stage worker thread.
+#[derive(Debug, Clone, Default)]
+pub struct StageMetrics {
+    pub name: String,
+    pub items: usize,
+    pub busy: Duration,
+    /// Time spent blocked on the input queue (starvation).
+    pub idle_in: Duration,
+    /// Time spent blocked pushing downstream (backpressure).
+    pub blocked_out: Duration,
+}
+
+impl StageMetrics {
+    pub fn utilization(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.busy.as_secs_f64() / wall.as_secs_f64()
+    }
+}
+
+/// Whole-run report.
+#[derive(Debug)]
+pub struct RunReport {
+    pub images: usize,
+    pub wall: Duration,
+    pub latencies: Summary,
+    pub stages: Vec<StageMetrics>,
+}
+
+impl RunReport {
+    pub fn throughput(&self) -> f64 {
+        self.images as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "images={} wall={:.3}s throughput={:.2} imgs/s\n",
+            self.images,
+            self.wall.as_secs_f64(),
+            self.throughput()
+        ));
+        s.push_str(&format!(
+            "latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n",
+            self.latencies.p50() * 1e3,
+            self.latencies.p95() * 1e3,
+            self.latencies.p99() * 1e3,
+        ));
+        for st in &self.stages {
+            s.push_str(&format!(
+                "  stage {:<14} items={:<6} busy={:>8.3}s util={:>5.1}% starve={:>7.3}s backpress={:>7.3}s\n",
+                st.name,
+                st.items,
+                st.busy.as_secs_f64(),
+                100.0 * st.utilization(self.wall),
+                st.idle_in.as_secs_f64(),
+                st.blocked_out.as_secs_f64(),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let m = StageMetrics {
+            name: "s0".into(),
+            items: 10,
+            busy: Duration::from_millis(500),
+            ..Default::default()
+        };
+        assert!((m.utilization(Duration::from_secs(1)) - 0.5).abs() < 1e-9);
+        assert_eq!(m.utilization(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut lat = Summary::new();
+        lat.record(0.010);
+        lat.record(0.020);
+        let r = RunReport {
+            images: 2,
+            wall: Duration::from_secs(1),
+            latencies: lat,
+            stages: vec![StageMetrics { name: "stage0".into(), items: 2, ..Default::default() }],
+        };
+        let s = r.render();
+        assert!(s.contains("throughput=2.00"));
+        assert!(s.contains("stage0"));
+    }
+}

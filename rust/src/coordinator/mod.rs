@@ -1,0 +1,21 @@
+//! The Pipe-it L3 coordinator: bounded inter-stage queues, the real
+//! multi-threaded pipeline executor, dynamic batcher, image-stream source,
+//! metrics, and the PJRT serving glue. The *simulated* pipeline (for the
+//! paper's experiments) lives in `simulator::pipeline_sim`; this module is
+//! the wall-clock twin used by the end-to-end serving example.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod queue;
+pub mod server;
+pub mod stream;
+
+pub use batcher::{Batcher, Job};
+pub use metrics::{RunReport, StageMetrics};
+pub use pipeline::{run_pipeline, run_serial, StageFactory, StageSpec};
+pub use server::{
+    balance_by_times, profile_layer_times, serve_layerwise_serial, serve_pipelined,
+    serve_serial,
+};
+pub use stream::{Image, ImageStream};

@@ -1,0 +1,236 @@
+//! The real (wall-clock) pipeline executor: one OS thread per stage,
+//! bounded queues between stages, graceful drain, full metrics.
+//!
+//! Stage functions are built *inside* their thread from a `Send` factory:
+//! the PJRT client (`xla::PjRtClient`) is `Rc`-based and must never cross
+//! threads, so each stage owns a private client + compiled executables
+//! (DESIGN.md §1). On the paper's board this corresponds to pinning each
+//! stage's ARM-CL thread pool to its cluster cores.
+
+use std::thread;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+use super::metrics::{RunReport, StageMetrics};
+use super::queue::{bounded, Receiver};
+
+/// Factory that constructs the per-thread stage function.
+pub type StageFactory<T> = Box<dyn FnOnce() -> Box<dyn FnMut(T) -> T> + Send>;
+
+/// One pipeline stage: display name + function factory.
+pub struct StageSpec<T> {
+    pub name: String,
+    pub factory: StageFactory<T>,
+}
+
+impl<T> StageSpec<T> {
+    pub fn new(name: &str, factory: StageFactory<T>) -> StageSpec<T> {
+        StageSpec { name: name.to_string(), factory }
+    }
+}
+
+struct Tagged<T> {
+    item: T,
+    admitted: Instant,
+}
+
+/// Run `source` items through the stages; returns the processed items (in
+/// order) and the run report. `queue_cap` bounds every inter-stage buffer
+/// (backpressure).
+pub fn run_pipeline<T, I>(
+    stages: Vec<StageSpec<T>>,
+    queue_cap: usize,
+    source: I,
+) -> (Vec<T>, RunReport)
+where
+    T: Send + 'static,
+    I: IntoIterator<Item = T>,
+{
+    assert!(!stages.is_empty());
+    let n = stages.len();
+
+    // Readiness barrier: stage setup (PJRT client creation + executable
+    // compilation) happens inside each thread; the clock starts and the
+    // source begins feeding only once every stage is ready, so reported
+    // throughput/latency are steady-state, not compile-time.
+    let ready = std::sync::Arc::new(std::sync::Barrier::new(n + 1));
+
+    // Queues: source -> s0 -> s1 -> ... -> sink.
+    let (src_tx, mut prev_rx) = bounded::<Tagged<T>>(queue_cap);
+    let mut handles = Vec::with_capacity(n);
+    let mut sink_rx: Option<Receiver<Tagged<T>>> = None;
+
+    for (i, stage) in stages.into_iter().enumerate() {
+        let (tx, rx_next) = bounded::<Tagged<T>>(queue_cap);
+        let rx_in: Receiver<Tagged<T>> = prev_rx;
+        let is_last = i == n - 1;
+        let ready = ready.clone();
+        let handle = thread::spawn(move || -> StageMetrics {
+            let mut f = (stage.factory)();
+            ready.wait();
+            let mut m = StageMetrics { name: stage.name, ..Default::default() };
+            loop {
+                let t0 = Instant::now();
+                let Some(tagged) = rx_in.recv() else { break };
+                m.idle_in += t0.elapsed();
+
+                let t1 = Instant::now();
+                let out = f(tagged.item);
+                m.busy += t1.elapsed();
+                m.items += 1;
+
+                let t2 = Instant::now();
+                if tx.send(Tagged { item: out, admitted: tagged.admitted }).is_err() {
+                    break; // downstream closed (abort)
+                }
+                m.blocked_out += t2.elapsed();
+            }
+            tx.close();
+            m
+        });
+        handles.push(handle);
+        if is_last {
+            sink_rx = Some(rx_next.clone());
+        }
+        prev_rx = rx_next;
+    }
+    let sink_rx = sink_rx.expect("at least one stage");
+    drop(prev_rx);
+
+    // Sink thread collects results + latencies.
+    let collector = thread::spawn(move || {
+        let mut out = Vec::new();
+        let mut lat = Summary::new();
+        while let Some(t) = sink_rx.recv() {
+            lat.record(t.admitted.elapsed().as_secs_f64());
+            out.push(t.item);
+        }
+        (out, lat)
+    });
+
+    // Wait for every stage to finish setup, then start the clock and feed.
+    ready.wait();
+    let start = Instant::now();
+    for item in source {
+        if src_tx.send(Tagged { item, admitted: Instant::now() }).is_err() {
+            break;
+        }
+    }
+    src_tx.close();
+
+    let stages_metrics: Vec<StageMetrics> =
+        handles.into_iter().map(|h| h.join().expect("stage panicked")).collect();
+    let (items, latencies) = collector.join().expect("collector panicked");
+    let wall = start.elapsed();
+
+    let report = RunReport { images: items.len(), wall, latencies, stages: stages_metrics };
+    (items, report)
+}
+
+/// Serial baseline: the same stage functions composed in one thread (the
+/// kernel-level analogue — one image at a time through the whole network).
+pub fn run_serial<T, I>(stages: Vec<StageSpec<T>>, source: I) -> (Vec<T>, RunReport)
+where
+    T: Send + 'static,
+    I: IntoIterator<Item = T>,
+{
+    let names: Vec<String> = stages.iter().map(|s| s.name.clone()).collect();
+    let mut fns: Vec<Box<dyn FnMut(T) -> T>> =
+        stages.into_iter().map(|s| (s.factory)()).collect();
+    let start = Instant::now();
+    let mut out = Vec::new();
+    let mut lat = Summary::new();
+    let mut busy = vec![std::time::Duration::ZERO; fns.len()];
+    for item in source {
+        let t0 = Instant::now();
+        let mut x = item;
+        for (f, b) in fns.iter_mut().zip(busy.iter_mut()) {
+            let t = Instant::now();
+            x = f(x);
+            *b += t.elapsed();
+        }
+        lat.record(t0.elapsed().as_secs_f64());
+        out.push(x);
+    }
+    let wall = start.elapsed();
+    let stages = names
+        .into_iter()
+        .zip(busy)
+        .map(|(name, b)| StageMetrics { name, items: out.len(), busy: b, ..Default::default() })
+        .collect();
+    let report = RunReport { images: out.len(), wall, latencies: lat, stages };
+    (out, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sleep_stage(name: &str, ms: u64) -> StageSpec<u64> {
+        StageSpec::new(
+            name,
+            Box::new(move || {
+                Box::new(move |x: u64| {
+                    thread::sleep(Duration::from_millis(ms));
+                    x + 1
+                })
+            }),
+        )
+    }
+
+    #[test]
+    fn preserves_order_and_applies_stages() {
+        let stages = vec![sleep_stage("a", 1), sleep_stage("b", 1)];
+        let (out, report) = run_pipeline(stages, 2, 0..20u64);
+        assert_eq!(out, (2..22u64).collect::<Vec<_>>());
+        assert_eq!(report.images, 20);
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.stages[0].items, 20);
+    }
+
+    #[test]
+    fn pipeline_overlaps_stages() {
+        // Two 5 ms stages, 30 items: serial = ~300 ms, pipelined ~= 155 ms.
+        let mk = || vec![sleep_stage("a", 5), sleep_stage("b", 5)];
+        let (_, piped) = run_pipeline(mk(), 2, 0..30u64);
+        let (_, serial) = run_serial(mk(), 0..30u64);
+        assert!(
+            piped.wall.as_secs_f64() < 0.75 * serial.wall.as_secs_f64(),
+            "piped={:?} serial={:?}",
+            piped.wall,
+            serial.wall
+        );
+    }
+
+    #[test]
+    fn bottleneck_stage_has_highest_utilization() {
+        let stages = vec![sleep_stage("fast", 1), sleep_stage("slow", 6)];
+        let (_, report) = run_pipeline(stages, 2, 0..25u64);
+        let u0 = report.stages[0].utilization(report.wall);
+        let u1 = report.stages[1].utilization(report.wall);
+        assert!(u1 > u0, "u0={u0} u1={u1}");
+    }
+
+    #[test]
+    fn latency_at_least_service_time() {
+        let stages = vec![sleep_stage("a", 2), sleep_stage("b", 2)];
+        let (_, report) = run_pipeline(stages, 2, 0..10u64);
+        assert!(report.latencies.p50() >= 0.004);
+    }
+
+    #[test]
+    fn single_stage_works() {
+        let (out, report) = run_pipeline(vec![sleep_stage("only", 0)], 1, 0..5u64);
+        assert_eq!(out.len(), 5);
+        assert_eq!(report.stages.len(), 1);
+    }
+
+    #[test]
+    fn empty_source_is_clean() {
+        let (out, report) = run_pipeline(vec![sleep_stage("a", 1)], 1, Vec::<u64>::new());
+        assert!(out.is_empty());
+        assert_eq!(report.images, 0);
+    }
+}

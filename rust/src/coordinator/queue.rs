@@ -1,0 +1,242 @@
+//! Bounded blocking queue — the inter-stage buffer of the real pipeline.
+//!
+//! Built on `Mutex<VecDeque>` + two `Condvar`s (the offline vendor set has
+//! no crossbeam-channel). Provides close semantics for graceful drain and a
+//! depth gauge for backpressure introspection.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Sending half (clonable; the queue is MPMC).
+pub struct Sender<T>(Arc<Inner<T>>);
+
+/// Receiving half (clonable).
+pub struct Receiver<T>(Arc<Inner<T>>);
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver(self.0.clone())
+    }
+}
+
+/// Create a bounded queue with capacity `cap` (>= 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1);
+    let inner = Arc::new(Inner {
+        q: Mutex::new(State { items: VecDeque::with_capacity(cap), closed: false }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        cap,
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+/// Error returned when sending into a closed queue.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+impl<T> Sender<T> {
+    /// Blocking send; applies backpressure when the buffer is full.
+    /// Returns the item back if the queue was closed.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError(item));
+            }
+            if st.items.len() < self.0.cap {
+                st.items.push_back(item);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: receivers drain remaining items then see `None`.
+    pub fn close(&self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.closed = true;
+        self.0.not_empty.notify_all();
+        self.0.not_full.notify_all();
+    }
+
+    /// Current depth (diagnostic).
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` when the queue is closed AND drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.0.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.q.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.0.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain up to `max` immediately-available items after a first blocking
+    /// receive — the dynamic batcher's collection primitive.
+    pub fn recv_batch(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        match self.recv() {
+            None => return out,
+            Some(x) => out.push(x),
+        }
+        while out.len() < max {
+            match self.try_recv() {
+                Some(x) => out.push(x),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        tx.close();
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_consumed() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until rx.recv
+            tx.close();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn close_unblocks_receiver() {
+        let (tx, rx) = bounded::<i32>(2);
+        let t = thread::spawn(move || rx.recv());
+        thread::sleep(Duration::from_millis(20));
+        tx.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn send_after_close_returns_item() {
+        let (tx, _rx) = bounded(2);
+        tx.close();
+        assert_eq!(tx.send(42), Err(SendError(42)));
+    }
+
+    #[test]
+    fn recv_batch_groups_available() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let batch = rx.recv_batch(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let rest = rx.recv_batch(4);
+        assert_eq!(rest, vec![4]);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(4);
+        let mut senders = Vec::new();
+        for s in 0..3 {
+            let tx = tx.clone();
+            senders.push(thread::spawn(move || {
+                for i in 0..100 {
+                    tx.send(s * 100 + i).unwrap();
+                }
+            }));
+        }
+        let mut receivers = Vec::new();
+        for _ in 0..2 {
+            let rx = rx.clone();
+            receivers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(x) = rx.recv() {
+                    got.push(x);
+                }
+                got
+            }));
+        }
+        for s in senders {
+            s.join().unwrap();
+        }
+        tx.close();
+        let mut all: Vec<i32> = receivers
+            .into_iter()
+            .flat_map(|r| r.join().unwrap())
+            .collect();
+        all.sort();
+        let want: Vec<i32> = (0..3).flat_map(|s| (0..100).map(move |i| s * 100 + i)).collect();
+        assert_eq!(all, want);
+    }
+}

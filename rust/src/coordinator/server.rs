@@ -1,0 +1,152 @@
+//! Serving glue: manifest + pipeline allocation -> real multi-threaded
+//! pipeline over PJRT (the end-to-end path proving all three layers
+//! compose: Pallas kernels -> JAX layers -> HLO artifacts -> Rust stages).
+
+use anyhow::Result;
+
+use crate::dse::Allocation;
+use crate::runtime::executor::StageRunnerSpec;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::Tensor;
+
+use super::batcher::{Batcher, Job};
+use super::metrics::RunReport;
+use super::pipeline::{run_pipeline, run_serial, StageSpec};
+use super::stream::ImageStream;
+
+/// Build the per-stage factories for a layer allocation. Each factory,
+/// executed inside its stage thread, creates a private PJRT client and
+/// compiles the stage's layer modules (batch-1 + any exported batch sizes).
+fn stage_specs(
+    manifest: &Manifest,
+    alloc: &Allocation,
+    batch_sizes: &[usize],
+) -> Result<Vec<StageSpec<Job>>> {
+    let mut specs = Vec::new();
+    for (i, &(lo, hi)) in alloc.ranges.iter().enumerate() {
+        if lo >= hi {
+            continue;
+        }
+        let runner_spec = StageRunnerSpec::from_manifest(manifest, lo, hi, batch_sizes)?;
+        let name = format!("stage{}[{}..{}]", i, lo + 1, hi);
+        specs.push(StageSpec::new(
+            &name,
+            Box::new(move || {
+                let runner = runner_spec.build().expect("stage runner build");
+                Box::new(move |mut job: Job| {
+                    let tensors = std::mem::take(&mut job.tensors);
+                    job.tensors = runner.run_batch_owned(tensors).expect("stage exec");
+                    job
+                })
+            }),
+        ));
+    }
+    Ok(specs)
+}
+
+/// Serve `images` synthetic images through the pipelined configuration.
+/// Returns the run report (throughput, latency, per-stage utilization).
+pub fn serve_pipelined(
+    manifest: &Manifest,
+    alloc: &Allocation,
+    images: usize,
+    batch: usize,
+    queue_cap: usize,
+    seed: u64,
+) -> Result<(Vec<Job>, RunReport)> {
+    let batch_sizes: Vec<usize> = if batch > 1 { vec![1, batch] } else { vec![1] };
+    let specs = stage_specs(manifest, alloc, &batch_sizes)?;
+    let stream = ImageStream::new(&manifest.input_shape, images, seed)
+        .map(|im| Tensor::new(im.shape, im.data));
+    let jobs = Batcher::new(stream, batch_sizes);
+    Ok(run_pipeline(specs, queue_cap, jobs))
+}
+
+/// Serve through the whole-network single module on one thread — the
+/// kernel-level baseline analogue.
+pub fn serve_serial(
+    manifest: &Manifest,
+    images: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<(Vec<Job>, RunReport)> {
+    let batch_sizes: Vec<usize> = if batch > 1 { vec![1, batch] } else { vec![1] };
+    let runner_spec = StageRunnerSpec::full_network(manifest, &batch_sizes)?;
+    let spec = StageSpec::new(
+        "full-net",
+        Box::new(move || {
+            let runner = runner_spec.build().expect("full-net runner build");
+            Box::new(move |mut job: Job| {
+                let tensors = std::mem::take(&mut job.tensors);
+                job.tensors = runner.run_batch_owned(tensors).expect("full-net exec");
+                job
+            })
+        }),
+    );
+    let stream = ImageStream::new(&manifest.input_shape, images, seed)
+        .map(|im| Tensor::new(im.shape, im.data));
+    let jobs = Batcher::new(stream, batch_sizes);
+    Ok(run_serial(vec![spec], jobs))
+}
+
+/// Serve per-layer modules chained on one thread — used to verify that the
+/// per-layer chain is numerically identical to the full-network module.
+pub fn serve_layerwise_serial(
+    manifest: &Manifest,
+    images: usize,
+    seed: u64,
+) -> Result<(Vec<Job>, RunReport)> {
+    let alloc = Allocation { ranges: vec![(0, manifest.num_layers())] };
+    let specs = stage_specs(manifest, &alloc, &[1])?;
+    let stream = ImageStream::new(&manifest.input_shape, images, seed)
+        .map(|im| Tensor::new(im.shape, im.data));
+    let jobs = Batcher::new(stream, vec![1]);
+    Ok(run_serial(specs, jobs))
+}
+
+/// Profile per-layer execution times on this host by running `samples`
+/// images through a serial chain with one stage per layer and reading each
+/// stage's busy time. This is the launcher's analogue of the paper's
+/// "measured layer timings" (Table VI) for the real PJRT substrate.
+pub fn profile_layer_times(manifest: &Manifest, samples: usize, seed: u64) -> Result<Vec<f64>> {
+    let w = manifest.num_layers();
+    let alloc = Allocation { ranges: (0..w).map(|i| (i, i + 1)).collect() };
+    let specs = stage_specs(manifest, &alloc, &[1])?;
+    let stream = ImageStream::new(&manifest.input_shape, samples, seed)
+        .map(|im| Tensor::new(im.shape, im.data));
+    let jobs = Batcher::new(stream, vec![1]);
+    let (_, report) = run_serial(specs, jobs);
+    Ok(report
+        .stages
+        .iter()
+        .map(|s| s.busy.as_secs_f64() / s.items.max(1) as f64)
+        .collect())
+}
+
+/// Balance `times` (seconds per layer) into `k` contiguous stages — greedy
+/// front-fill against the ideal per-stage share (profile-guided launcher).
+pub fn balance_by_times(times: &[f64], k: usize) -> Allocation {
+    let w = times.len();
+    let k = k.clamp(1, w.max(1));
+    let total: f64 = times.iter().sum();
+    let target = total / k as f64;
+    let mut ranges = Vec::with_capacity(k);
+    let mut lo = 0;
+    let mut acc = 0.0;
+    for (i, t) in times.iter().enumerate() {
+        acc += t;
+        let stages_left = k - ranges.len();
+        let layers_left = w - i - 1;
+        if (acc >= target && stages_left > 1 && layers_left >= stages_left - 1)
+            || layers_left + 1 == stages_left
+        {
+            ranges.push((lo, i + 1));
+            lo = i + 1;
+            acc = 0.0;
+        }
+    }
+    if lo < w {
+        ranges.push((lo, w));
+    }
+    Allocation { ranges }
+}

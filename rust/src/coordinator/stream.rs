@@ -1,0 +1,75 @@
+//! Synthetic image-stream source (substitute for the paper's 50-image video
+//! stream — DESIGN.md §1: throughput is content-agnostic).
+
+use crate::util::rng::Rng;
+
+/// A single image tensor (HWC f32) with a stream sequence number.
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub seq: usize,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Deterministic stream of `count` random images of the given shape.
+pub struct ImageStream {
+    rng: Rng,
+    shape: Vec<usize>,
+    next: usize,
+    count: usize,
+}
+
+impl ImageStream {
+    pub fn new(shape: &[usize], count: usize, seed: u64) -> ImageStream {
+        ImageStream { rng: Rng::new(seed), shape: shape.to_vec(), next: 0, count }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl Iterator for ImageStream {
+    type Item = Image;
+
+    fn next(&mut self) -> Option<Image> {
+        if self.next >= self.count {
+            return None;
+        }
+        let seq = self.next;
+        self.next += 1;
+        let n = self.elems();
+        Some(Image { seq, shape: self.shape.clone(), data: self.rng.f32_vec(n, 0.0, 1.0) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yields_count_images_with_shape() {
+        let s = ImageStream::new(&[16, 16, 3], 5, 42);
+        let imgs: Vec<Image> = s.collect();
+        assert_eq!(imgs.len(), 5);
+        assert!(imgs.iter().enumerate().all(|(i, im)| im.seq == i));
+        assert!(imgs.iter().all(|im| im.data.len() == 16 * 16 * 3));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a: Vec<Image> = ImageStream::new(&[4, 4, 1], 3, 7).collect();
+        let b: Vec<Image> = ImageStream::new(&[4, 4, 1], 3, 7).collect();
+        assert_eq!(a[2].data, b[2].data);
+        let c: Vec<Image> = ImageStream::new(&[4, 4, 1], 3, 8).collect();
+        assert_ne!(a[0].data, c[0].data);
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let s = ImageStream::new(&[8, 8, 3], 2, 1);
+        for im in s {
+            assert!(im.data.iter().all(|v| (0.0..1.0).contains(v)));
+        }
+    }
+}

@@ -1,0 +1,531 @@
+//! The Pipe-it design-space exploration (paper §VI, Algorithms 1–3).
+//!
+//! * `find_split` (Alg. 1) balances a contiguous workload between two
+//!   adjacent stages by flowing layers from the faster front stage to the
+//!   slower back stage while the front remains the bottleneck.
+//! * `work_flow` (Alg. 2) sweeps `find_split` over all adjacent pairs until
+//!   the allocation stabilizes ("workload as water flowing down").
+//! * `merge_stage` (Alg. 3) starts from the all-single-core pipeline and
+//!   greedily merges adjacent same-type stages while the Eq. 14 test says
+//!   the merged stage beats the bottleneck of the pair, re-running
+//!   `work_flow` after every merge.
+
+use crate::perfmodel::TimeMatrix;
+use crate::simulator::platform::CoreType;
+
+use super::config::{pipeline_throughput, stage_times, Allocation, PipelineConfig, StageConfig};
+
+/// Result of a design-space exploration.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub pipeline: PipelineConfig,
+    pub allocation: Allocation,
+    /// Predicted throughput (Eq. 12) under the time matrix used to search.
+    pub throughput: f64,
+}
+
+/// Algorithm 1: split the contiguous layer range `[lo, hi)` between two
+/// adjacent stages with time-matrix config indices `ci` (front) and `cj`
+/// (back). Returns the split point `k`: front gets `[lo, k)`, back `[k, hi)`.
+///
+/// Layers flow from the back of the front stage while the front remains the
+/// bottleneck after the move (`T_i - T_lj > T_j + T_lj`).
+pub fn find_split(tm: &TimeMatrix, lo: usize, hi: usize, ci: usize, cj: usize) -> usize {
+    let mut k = hi; // front owns everything (L_i = L_wl, L_{i+1} = ∅)
+    let mut t_front = tm.range(lo, hi, ci);
+    let mut t_back = 0.0;
+    while k > lo {
+        let l = k - 1; // last layer currently on the front stage
+        let t_new_front = t_front - tm.layer(l, ci);
+        let t_new_back = t_back + tm.layer(l, cj);
+        // Move while it reduces the pair's bottleneck. This is the paper's
+        // "front remains bottleneck" rule plus acceptance of the final
+        // boundary move when the flipped bottleneck is still lower — a
+        // strict improvement over the literal Alg. 1 exit condition.
+        if t_new_front.max(t_new_back) < t_front.max(t_back) {
+            t_front = t_new_front;
+            t_back = t_new_back;
+            k = l;
+        } else {
+            break; // further flow would just grow the new bottleneck
+        }
+    }
+    k
+}
+
+/// Algorithm 2: allocate `w` layers over the pipeline by iterating
+/// `find_split` over adjacent stage pairs until stable.
+pub fn work_flow(tm: &TimeMatrix, pipeline: &PipelineConfig, w: usize) -> Allocation {
+    let p = pipeline.num_stages();
+    let cfg_idx: Vec<usize> = pipeline
+        .stages
+        .iter()
+        .map(|s| {
+            tm.config_index(s.core, s.count)
+                .unwrap_or_else(|| panic!("stage {s} missing from time matrix"))
+        })
+        .collect();
+
+    let mut alloc = Allocation::all_on_first(p, w);
+    // First stage starts at 0; fix up the "empty" tail ranges to be
+    // contiguous at w (all_on_first already guarantees this).
+    let mut prev = Allocation { ranges: Vec::new() };
+    let mut guard = 0;
+    while alloc != prev {
+        prev = alloc.clone();
+        for i in 0..p.saturating_sub(1) {
+            let (lo, _) = alloc.ranges[i];
+            let (_, hi) = alloc.ranges[i + 1];
+            let k = find_split(tm, lo, hi, cfg_idx[i], cfg_idx[i + 1]);
+            alloc.ranges[i] = (lo, k);
+            alloc.ranges[i + 1] = (k, hi);
+        }
+        guard += 1;
+        assert!(guard < 10_000, "work_flow failed to converge");
+    }
+    debug_assert!(alloc.is_partition(w));
+    alloc
+}
+
+/// Eq. 14 merge test: does the merged stage `P_i'` process `L_i ∪ L_{i+1}`
+/// faster than the slower of the two current stages?
+fn merge_helpful(
+    tm: &TimeMatrix,
+    merged: StageConfig,
+    a: (StageConfig, (usize, usize)),
+    b: (StageConfig, (usize, usize)),
+) -> bool {
+    let ci_merged = match tm.config_index(merged.core, merged.count) {
+        Some(i) => i,
+        None => return false, // would exceed the cluster size
+    };
+    let (sa, (lo_a, hi_a)) = a;
+    let (sb, (lo_b, hi_b)) = b;
+    let ca = tm.config_index(sa.core, sa.count).unwrap();
+    let cb = tm.config_index(sb.core, sb.count).unwrap();
+    let t_merged = tm.range(lo_a, hi_a, ci_merged) + tm.range(lo_b, hi_b, ci_merged);
+    let t_max = tm.range(lo_a, hi_a, ca).max(tm.range(lo_b, hi_b, cb));
+    t_merged < t_max
+}
+
+/// Order stages by compute capability (Eq. 11): ascending mean layer time,
+/// so the most capable stage leads and workload flows one way.
+fn sort_by_capability(tm: &TimeMatrix, stages: &mut [StageConfig]) {
+    let means = tm.mean_per_config();
+    stages.sort_by(|a, b| {
+        let ta = means[tm.config_index(a.core, a.count).unwrap()];
+        let tb = means[tm.config_index(b.core, b.count).unwrap()];
+        ta.total_cmp(&tb)
+    });
+}
+
+/// Initial pipeline: one single-core stage per core, capability-ordered.
+fn initial_pipeline(tm: &TimeMatrix, hb: usize, hs: usize) -> PipelineConfig {
+    let mut stages: Vec<StageConfig> = Vec::new();
+    for _ in 0..hb {
+        stages.push(StageConfig::new(CoreType::Big, 1));
+    }
+    for _ in 0..hs {
+        stages.push(StageConfig::new(CoreType::Small, 1));
+    }
+    sort_by_capability(tm, &mut stages);
+    PipelineConfig::new(stages)
+}
+
+/// Finalize a DSE point: drop idle stages (the paper reports only populated
+/// stages, e.g. AlexNet's B4-s4 rather than B4-s4-...-∅) and close the
+/// partition.
+fn finalize(tm: &TimeMatrix, pipeline: PipelineConfig, alloc: Allocation) -> DsePoint {
+    let w = tm.num_layers();
+    let keep: Vec<usize> = (0..pipeline.num_stages())
+        .filter(|&i| alloc.ranges[i].0 < alloc.ranges[i].1)
+        .collect();
+    let pipeline = PipelineConfig::new(keep.iter().map(|&i| pipeline.stages[i]).collect());
+    let mut ranges: Vec<(usize, usize)> = keep.iter().map(|&i| alloc.ranges[i]).collect();
+    let mut next = 0;
+    for r in &mut ranges {
+        r.0 = next;
+        next = r.1.max(next);
+        r.1 = next;
+    }
+    if let Some(last) = ranges.last_mut() {
+        last.1 = w;
+    }
+    let alloc = Allocation { ranges };
+    debug_assert!(alloc.is_partition(w));
+    let throughput = pipeline_throughput(tm, &pipeline, &alloc);
+    DsePoint { pipeline, allocation: alloc, throughput }
+}
+
+/// Algorithm 3 (Pipe-it default): greedy stage merging driven by the
+/// *global* objective. Starting from the all-single-core pipeline, evaluate
+/// every adjacent same-type merge by re-running `work_flow` and comparing
+/// Eq. 12 throughput; apply the best improving merge; stop when none
+/// improves. This subsumes the paper's Eq. 14 local test (kept as
+/// [`merge_stage_eq14`] for the ablation bench): Eq. 14 implies a global
+/// improvement whenever the merged pair contains the bottleneck, but misses
+/// merges whose payoff appears only after reallocation.
+pub fn merge_stage(tm: &TimeMatrix, hb: usize, hs: usize) -> DsePoint {
+    let w = tm.num_layers();
+    let mut pipeline = initial_pipeline(tm, hb, hs);
+    let mut alloc = work_flow(tm, &pipeline, w);
+    let mut tp = pipeline_throughput(tm, &pipeline, &alloc);
+
+    loop {
+        let mut best: Option<(f64, PipelineConfig, Allocation)> = None;
+        for i in 0..pipeline.num_stages() - 1 {
+            let (sa, sb) = (pipeline.stages[i], pipeline.stages[i + 1]);
+            if sa.core != sb.core {
+                continue;
+            }
+            let merged = StageConfig::new(sa.core, sa.count + sb.count);
+            if tm.config_index(merged.core, merged.count).is_none() {
+                continue; // exceeds cluster size
+            }
+            let mut stages = pipeline.stages.clone();
+            stages[i] = merged;
+            stages.remove(i + 1);
+            sort_by_capability(tm, &mut stages);
+            let cand = PipelineConfig::new(stages);
+            let cand_alloc = work_flow(tm, &cand, w);
+            let cand_tp = pipeline_throughput(tm, &cand, &cand_alloc);
+            if cand_tp > tp && best.as_ref().map_or(true, |(b, _, _)| cand_tp > *b) {
+                best = Some((cand_tp, cand, cand_alloc));
+            }
+        }
+        match best {
+            Some((btp, bp, ba)) => {
+                tp = btp;
+                pipeline = bp;
+                alloc = ba;
+            }
+            None => break,
+        }
+    }
+
+    finalize(tm, pipeline, alloc)
+}
+
+/// Algorithm 3 as printed in the paper: Eq. 14 local merge test, Big
+/// cluster first then Small, retry the same position after a successful
+/// merge, advance on failure. Kept for the ablation bench.
+pub fn merge_stage_eq14(tm: &TimeMatrix, hb: usize, hs: usize) -> DsePoint {
+    let w = tm.num_layers();
+    let mut pipeline = initial_pipeline(tm, hb, hs);
+    let mut alloc = work_flow(tm, &pipeline, w);
+
+    for cluster in [CoreType::Big, CoreType::Small] {
+        let mut i = match pipeline.stages.iter().position(|s| s.core == cluster) {
+            Some(i) => i,
+            None => continue,
+        };
+        loop {
+            if i + 1 >= pipeline.num_stages() {
+                break;
+            }
+            let (sa, sb) = (pipeline.stages[i], pipeline.stages[i + 1]);
+            if sa.core != cluster || sb.core != cluster {
+                break;
+            }
+            let merged = StageConfig::new(cluster, sa.count + sb.count);
+            if tm.config_index(merged.core, merged.count).is_some()
+                && merge_helpful(
+                    tm,
+                    merged,
+                    (sa, alloc.ranges[i]),
+                    (sb, alloc.ranges[i + 1]),
+                )
+            {
+                let mut stages = pipeline.stages.clone();
+                stages[i] = merged;
+                stages.remove(i + 1);
+                sort_by_capability(tm, &mut stages);
+                pipeline = PipelineConfig::new(stages);
+                alloc = work_flow(tm, &pipeline, w);
+                i = pipeline
+                    .stages
+                    .iter()
+                    .position(|s| *s == merged)
+                    .unwrap_or(i)
+                    .min(pipeline.num_stages().saturating_sub(2));
+            } else {
+                // Concavity (Fig. 11): a more capable merge of the same
+                // stages would not help either — advance.
+                i += 1;
+            }
+        }
+    }
+
+    finalize(tm, pipeline, alloc)
+}
+
+/// Convenience: stage times of a DSE point (for reports and the simulator).
+pub fn point_stage_times(tm: &TimeMatrix, pt: &DsePoint) -> Vec<f64> {
+    stage_times(tm, &pt.pipeline, &pt.allocation)
+}
+
+/// Positive-integer compositions of `n` into `parts` parts (ordered).
+/// There are `C(n-1, parts-1)` of them — exactly the per-cluster factor in
+/// the paper's Eq. 1.
+fn compositions(n: usize, parts: usize) -> Vec<Vec<usize>> {
+    fn rec(n: usize, parts: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if parts == 1 {
+            cur.push(n);
+            out.push(cur.clone());
+            cur.pop();
+            return;
+        }
+        for first in 1..=n - (parts - 1) {
+            cur.push(first);
+            rec(n - first, parts - 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    if parts >= 1 && n >= parts {
+        rec(n, parts, &mut Vec::new(), &mut out);
+    }
+    out
+}
+
+/// All valid pipeline configurations on an `(hb + hs)` platform (the
+/// paper's Eq. 1 space — 64 pipelines for 4+4), each capability-ordered.
+pub fn all_pipelines(tm: &TimeMatrix, hb: usize, hs: usize) -> Vec<PipelineConfig> {
+    let mut out = Vec::new();
+    for pb in 1..=hb {
+        for ps in 1..=hs {
+            for big in compositions(hb, pb) {
+                for small in compositions(hs, ps) {
+                    let mut stages: Vec<StageConfig> = big
+                        .iter()
+                        .map(|&c| StageConfig::new(CoreType::Big, c))
+                        .chain(small.iter().map(|&c| StageConfig::new(CoreType::Small, c)))
+                        .collect();
+                    sort_by_capability(tm, &mut stages);
+                    out.push(PipelineConfig::new(stages));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pipe-it's default search: enumerate the Eq. 1 pipeline space (64 configs
+/// on the 4+4 prototype — the *allocation* space is what explodes, and
+/// `work_flow` collapses it), allocate each with `work_flow`, keep the
+/// best. Strictly dominates greedy merging and is still sub-millisecond;
+/// `merge_stage`/`merge_stage_eq14` remain as the paper-faithful ablations.
+pub fn explore(tm: &TimeMatrix, hb: usize, hs: usize) -> DsePoint {
+    let w = tm.num_layers();
+    let mut best: Option<(f64, PipelineConfig, Allocation)> = None;
+    for p in all_pipelines(tm, hb, hs) {
+        let a = work_flow(tm, &p, w);
+        let tp = pipeline_throughput(tm, &p, &a);
+        if best.as_ref().map_or(true, |(b, _, _)| tp > *b) {
+            best = Some((tp, p, a));
+        }
+    }
+    let (_, p, a) = best.expect("nonempty pipeline space");
+    finalize(tm, p, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::perfmodel::{PerfModel, TimeMatrix};
+    use crate::simulator::platform::Platform;
+    use crate::util::proptest::check;
+    use once_cell::sync::Lazy;
+
+    static SETUP: Lazy<(Platform, PerfModel)> = Lazy::new(|| {
+        let p = Platform::hikey970();
+        let m = PerfModel::fit(&p);
+        (p, m)
+    });
+
+    fn measured(net: &str) -> TimeMatrix {
+        let (p, _) = &*SETUP;
+        TimeMatrix::measured(p, &zoo::by_name(net).unwrap())
+    }
+
+    #[test]
+    fn find_split_balances_two_identical_stages() {
+        let tm = measured("squeezenet");
+        let ci = tm.config_index(CoreType::Big, 2).unwrap();
+        let k = find_split(&tm, 0, tm.num_layers(), ci, ci);
+        // Identical configs: the split should land near the middle of the
+        // cumulative-time curve — both sides within 2x of each other.
+        let front = tm.range(0, k, ci);
+        let back = tm.range(k, tm.num_layers(), ci);
+        assert!(k > 0 && k < tm.num_layers());
+        assert!(front < 2.0 * back && back < 2.0 * front, "front={front} back={back}");
+    }
+
+    #[test]
+    fn find_split_front_remains_at_least_as_loaded() {
+        // With a faster front stage, the front keeps the bigger share.
+        let tm = measured("resnet50");
+        let b4 = tm.config_index(CoreType::Big, 4).unwrap();
+        let s4 = tm.config_index(CoreType::Small, 4).unwrap();
+        let k = find_split(&tm, 0, tm.num_layers(), b4, s4);
+        assert!(k > tm.num_layers() / 2, "B4 front should hold most layers, k={k}");
+    }
+
+    #[test]
+    fn work_flow_produces_valid_partition() {
+        let tm = measured("googlenet");
+        let p = PipelineConfig::parse("B4-s2-s1-s1").unwrap();
+        let a = work_flow(&tm, &p, tm.num_layers());
+        assert!(a.is_partition(tm.num_layers()));
+    }
+
+    #[test]
+    fn work_flow_beats_all_on_one_stage() {
+        let tm = measured("resnet50");
+        let p = PipelineConfig::parse("B4-s2-s2").unwrap();
+        let a = work_flow(&tm, &p, tm.num_layers());
+        let tp = pipeline_throughput(&tm, &p, &a);
+        let all_first = Allocation::all_on_first(3, tm.num_layers());
+        let tp0 = pipeline_throughput(&tm, &p, &all_first);
+        assert!(tp > tp0, "balanced {tp} should beat unbalanced {tp0}");
+    }
+
+    #[test]
+    fn explore_resnet50_shape() {
+        // Paper Table IV/VI: ResNet50 uses all 8 cores with a multi-stage
+        // pipeline; throughput must beat both homogeneous clusters.
+        let tm = measured("resnet50");
+        let pt = explore(&tm, 4, 4);
+        assert!(pt.allocation.is_partition(tm.num_layers()));
+        assert!(pt.pipeline.is_valid(4, 4));
+        assert!(pt.pipeline.num_stages() >= 2);
+        let b4 = tm.config_index(CoreType::Big, 4).unwrap();
+        let tp_b4 = 1.0 / tm.range(0, tm.num_layers(), b4);
+        assert!(
+            pt.throughput > tp_b4,
+            "pipe-it {:.2} must beat B4 {:.2}",
+            pt.throughput,
+            tp_b4
+        );
+    }
+
+    #[test]
+    fn explore_uses_both_clusters() {
+        for net in ["alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"] {
+            let tm = measured(net);
+            let pt = explore(&tm, 4, 4);
+            assert!(pt.pipeline.cores_used(CoreType::Big) >= 1, "{net}");
+            assert!(pt.pipeline.cores_used(CoreType::Small) >= 1, "{net}");
+        }
+    }
+
+    #[test]
+    fn all_pipelines_matches_eq1_count() {
+        let tm = measured("alexnet");
+        // 64 pipelines on the 4+4 prototype (§IV-B) — compositions include
+        // order, so the enumeration matches Eq. 1 exactly.
+        assert_eq!(all_pipelines(&tm, 4, 4).len(), 64);
+        for p in all_pipelines(&tm, 4, 4) {
+            assert!(p.is_valid(4, 4));
+        }
+    }
+
+    #[test]
+    fn explore_dominates_merge_variants() {
+        for net in ["alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"] {
+            let tm = measured(net);
+            let e = explore(&tm, 4, 4);
+            let m = merge_stage(&tm, 4, 4);
+            let m14 = merge_stage_eq14(&tm, 4, 4);
+            assert!(e.throughput >= m.throughput - 1e-9, "{net}: explore < merge");
+            assert!(e.throughput >= m14.throughput - 1e-9, "{net}: explore < eq14");
+        }
+    }
+
+    #[test]
+    fn explore_on_predicted_times_close_to_measured() {
+        // §VII-B: configurations from predicted timings give within a few
+        // percent of configurations from measured timings (paper: ~4%).
+        let (p, model) = &*SETUP;
+        for net in zoo::all_networks() {
+            let tm_meas = TimeMatrix::measured(p, &net);
+            let tm_pred = TimeMatrix::predicted(p, model, &net);
+            let pt_pred = explore(&tm_pred, 4, 4);
+            let pt_meas = explore(&tm_meas, 4, 4);
+            // Evaluate BOTH points under measured times (what the board
+            // would deliver).
+            let tp_of = |pt: &DsePoint| {
+                let a = work_flow(&tm_meas, &pt.pipeline, tm_meas.num_layers());
+                pipeline_throughput(&tm_meas, &pt.pipeline, &a)
+            };
+            let a = tp_of(&pt_pred);
+            let b = tp_of(&pt_meas);
+            assert!(
+                a > 0.80 * b,
+                "{}: predicted-config {a:.2} vs measured-config {b:.2}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn property_dse_output_always_valid() {
+        let (p, _) = &*SETUP;
+        let nets = zoo::all_networks();
+        check(30, |rng| {
+            let net = &nets[rng.index(nets.len())];
+            // Randomly perturbed platform keeps the DSE honest.
+            let mut plat = p.clone();
+            plat.ruggedness = rng.range_f64(0.0, 0.25);
+            plat.big.mac_ns = rng.range_f64(0.1, 0.5);
+            plat.small.mac_ns = plat.big.mac_ns * rng.range_f64(1.2, 4.0);
+            let tm = TimeMatrix::measured(&plat, net);
+            for pt in [explore(&tm, 4, 4), merge_stage(&tm, 4, 4), merge_stage_eq14(&tm, 4, 4)]
+            {
+                crate::prop_assert!(
+                    pt.allocation.is_partition(tm.num_layers()),
+                    "{}: allocation not a partition",
+                    net.name
+                );
+                crate::prop_assert!(pt.pipeline.is_valid(4, 4), "core budget violated");
+                crate::prop_assert!(
+                    pt.pipeline.num_stages() == pt.allocation.ranges.len(),
+                    "stage/range length mismatch"
+                );
+                crate::prop_assert!(
+                    pt.throughput.is_finite() && pt.throughput > 0.0,
+                    "bad tp"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_work_flow_never_leaves_front_underloaded() {
+        // One-way flow: for every adjacent pair, moving the boundary layer
+        // backward must not reduce the bottleneck (local optimality).
+        let tm = measured("mobilenet");
+        let p = PipelineConfig::parse("B2-B2-s3-s1").unwrap();
+        let a = work_flow(&tm, &p, tm.num_layers());
+        let times = stage_times(&tm, &p, &a);
+        let bottleneck = times.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        for i in 0..p.num_stages() - 1 {
+            let (lo, hi) = a.ranges[i];
+            if lo >= hi {
+                continue;
+            }
+            // Move last layer of stage i to i+1 and recompute.
+            let mut b = a.clone();
+            b.ranges[i].1 -= 1;
+            b.ranges[i + 1].0 -= 1;
+            let t2 = stage_times(&tm, &p, &b);
+            let new_bottleneck = t2.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            assert!(
+                new_bottleneck >= bottleneck - 1e-12,
+                "stage {i}: flowing one more layer would improve bottleneck"
+            );
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Pipeline configurations and layer allocations (paper Table II notation).
+//!
+//! A pipeline `P = {P_1..P_p}` is a sequence of homogeneous stage configs
+//! `(core_type, core_count)`; its layer allocation `L = {L_1..L_p}` assigns
+//! a contiguous, in-order range of major layers to each stage (the CNN is a
+//! chain, so allocations are always contiguous ranges).
+
+use std::fmt;
+
+use crate::perfmodel::TimeMatrix;
+use crate::simulator::platform::CoreType;
+
+/// One pipeline stage: `(core_type, core_count)` — e.g. `(B,3)`, written B3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageConfig {
+    pub core: CoreType,
+    pub count: usize,
+}
+
+impl StageConfig {
+    pub fn new(core: CoreType, count: usize) -> StageConfig {
+        StageConfig { core, count }
+    }
+}
+
+impl fmt::Display for StageConfig {
+    /// The paper's `B3` / `s4` shorthand.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.core.letter(), self.count)
+    }
+}
+
+/// A pipeline configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineConfig {
+    pub stages: Vec<StageConfig>,
+}
+
+impl PipelineConfig {
+    pub fn new(stages: Vec<StageConfig>) -> PipelineConfig {
+        PipelineConfig { stages }
+    }
+
+    /// Parse the paper's `B4-s2-s2` notation.
+    pub fn parse(s: &str) -> anyhow::Result<PipelineConfig> {
+        let mut stages = Vec::new();
+        for part in s.split('-') {
+            let mut chars = part.chars();
+            let c = chars
+                .next()
+                .and_then(CoreType::parse)
+                .ok_or_else(|| anyhow::anyhow!("bad stage {part:?} in {s:?}"))?;
+            let count: usize = chars
+                .as_str()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad core count in {part:?}"))?;
+            if count == 0 {
+                anyhow::bail!("stage with zero cores in {s:?}");
+            }
+            stages.push(StageConfig::new(c, count));
+        }
+        if stages.is_empty() {
+            anyhow::bail!("empty pipeline spec");
+        }
+        Ok(PipelineConfig::new(stages))
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn cores_used(&self, t: CoreType) -> usize {
+        self.stages.iter().filter(|s| s.core == t).map(|s| s.count).sum()
+    }
+
+    /// Validity on a platform with `hb` Big and `hs` Small cores: per-type
+    /// core budgets respected, every stage nonempty and homogeneous (by
+    /// construction of `StageConfig`).
+    pub fn is_valid(&self, hb: usize, hs: usize) -> bool {
+        !self.stages.is_empty()
+            && self.cores_used(CoreType::Big) <= hb
+            && self.cores_used(CoreType::Small) <= hs
+    }
+}
+
+impl fmt::Display for PipelineConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.stages.iter().map(|s| s.to_string()).collect();
+        write!(f, "{}", parts.join("-"))
+    }
+}
+
+/// Layer allocation: contiguous in-order ranges `[lo, hi)` per stage
+/// (`lo == hi` means the stage is idle, the paper's `L_i = ∅`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Allocation {
+    /// All `w` layers on stage 0, the rest empty (work_flow's initial state).
+    pub fn all_on_first(p: usize, w: usize) -> Allocation {
+        let mut ranges = vec![(w, w); p];
+        ranges[0] = (0, w);
+        Allocation { ranges }
+    }
+
+    /// Check the partition invariant: ranges are contiguous, ordered, and
+    /// cover exactly `[0, w)`.
+    pub fn is_partition(&self, w: usize) -> bool {
+        let mut next = 0;
+        for &(lo, hi) in &self.ranges {
+            if lo > hi || lo != next {
+                return false;
+            }
+            next = hi;
+        }
+        next == w
+    }
+
+    /// Count of non-empty stages.
+    pub fn active_stages(&self) -> usize {
+        self.ranges.iter().filter(|(lo, hi)| lo < hi).count()
+    }
+
+    /// The paper's `[a,b] - [c,d]` 1-based display (Table V/VI).
+    pub fn display_1based(&self) -> String {
+        self.ranges
+            .iter()
+            .filter(|(lo, hi)| lo < hi)
+            .map(|&(lo, hi)| format!("[{},{}]", lo + 1, hi))
+            .collect::<Vec<_>>()
+            .join(" - ")
+    }
+}
+
+/// Stage service times `T_{L_i}^{P_i}` (Eq. 10) for a pipeline + allocation
+/// under a time matrix.
+pub fn stage_times(tm: &TimeMatrix, p: &PipelineConfig, l: &Allocation) -> Vec<f64> {
+    assert_eq!(p.num_stages(), l.ranges.len());
+    p.stages
+        .iter()
+        .zip(&l.ranges)
+        .map(|(s, &(lo, hi))| {
+            let ci = tm
+                .config_index(s.core, s.count)
+                .unwrap_or_else(|| panic!("config {s} not in time matrix"));
+            tm.range(lo, hi, ci)
+        })
+        .collect()
+}
+
+/// Pipeline throughput (Eq. 12): `1 / max_i T_{L_i}^{P_i}`.
+pub fn pipeline_throughput(tm: &TimeMatrix, p: &PipelineConfig, l: &Allocation) -> f64 {
+    let times = stage_times(tm, p, l);
+    1.0 / times.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["B4-s4", "B4-s2-s2", "B2-B2-s3-s1", "B1-B1-B1-B1-s1-s1-s1-s1"] {
+            let p = PipelineConfig::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(PipelineConfig::parse("").is_err());
+        assert!(PipelineConfig::parse("X4").is_err());
+        assert!(PipelineConfig::parse("B0-s4").is_err());
+        assert!(PipelineConfig::parse("B4-s").is_err());
+    }
+
+    #[test]
+    fn validity_checks_core_budget() {
+        let p = PipelineConfig::parse("B4-s2-s2").unwrap();
+        assert!(p.is_valid(4, 4));
+        assert!(!p.is_valid(3, 4));
+        let p = PipelineConfig::parse("B2-B2-s3-s1").unwrap();
+        assert!(p.is_valid(4, 4));
+        assert_eq!(p.cores_used(CoreType::Big), 4);
+        assert_eq!(p.cores_used(CoreType::Small), 4);
+    }
+
+    #[test]
+    fn allocation_partition_invariant() {
+        let a = Allocation { ranges: vec![(0, 25), (25, 54)] };
+        assert!(a.is_partition(54));
+        assert!(!a.is_partition(55));
+        let gap = Allocation { ranges: vec![(0, 10), (11, 54)] };
+        assert!(!gap.is_partition(54));
+        let init = Allocation::all_on_first(8, 54);
+        assert!(init.is_partition(54));
+        assert_eq!(init.active_stages(), 1);
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        let a = Allocation { ranges: vec![(0, 35), (35, 44), (44, 54)] };
+        assert_eq!(a.display_1based(), "[1,35] - [36,44] - [45,54]");
+    }
+}

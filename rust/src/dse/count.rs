@@ -1,0 +1,120 @@
+//! Design-space size (paper §IV-B, Eq. 1–2).
+
+/// Binomial coefficient as u128 (overflow-safe for this domain).
+pub fn binom(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) as u128 / (i + 1) as u128;
+    }
+    acc
+}
+
+/// Eq. (1): number of distinct pipelines with exactly `p` stages on an
+/// `(hb + hs)`-core platform, stages homogeneous, Big stages before Small.
+pub fn pipelines_with_p_stages(hb: usize, hs: usize, p: usize) -> u128 {
+    if p < 2 {
+        return 0;
+    }
+    let lo = 1.max(p.saturating_sub(hs));
+    let hi = hb.min(p - 1);
+    let mut total = 0u128;
+    for pb in lo..=hi {
+        let ps = p - pb;
+        if ps < 1 || ps > hs {
+            continue;
+        }
+        total += binom(hb - 1, pb - 1) * binom(hs - 1, ps - 1);
+    }
+    total
+}
+
+/// Total number of pipelines over all stage counts (p = 2..=hb+hs).
+/// For the 4+4 prototype this is the paper's "64 possible pipelines".
+pub fn total_pipelines(hb: usize, hs: usize) -> u128 {
+    (2..=hb + hs).map(|p| pipelines_with_p_stages(hb, hs, p)).sum()
+}
+
+/// Eq. (2): total design points for a CNN with `w` major layers:
+/// `D_W = sum_p C(W-1, p-1) * C_p`.
+///
+/// Note: the paper quotes 5,379,616 for MobileNet (W = 28) on the 4+4
+/// platform; Eq. (2) as printed gives 4,272,048 — the paper's figure
+/// corresponds to `C(W, p-1)` (equivalently W = 29). Both are exposed; the
+/// Table/bench output reports the discrepancy.
+pub fn design_points(w: usize, hb: usize, hs: usize) -> u128 {
+    (2..=hb + hs)
+        .map(|p| binom(w - 1, p - 1) * pipelines_with_p_stages(hb, hs, p))
+        .sum()
+}
+
+/// The variant matching the paper's quoted MobileNet figure (split points
+/// drawn from `C(W, p-1)` — one allocation may be empty).
+pub fn design_points_paper_variant(w: usize, hb: usize, hs: usize) -> u128 {
+    (2..=hb + hs)
+        .map(|p| binom(w, p - 1) * pipelines_with_p_stages(hb, hs, p))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_basics() {
+        assert_eq!(binom(5, 0), 1);
+        assert_eq!(binom(5, 5), 1);
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(27, 7), 888_030);
+        assert_eq!(binom(3, 4), 0);
+    }
+
+    #[test]
+    fn eq1_prototype_counts() {
+        // Hand-computed for the 4+4 platform.
+        let c: Vec<u128> = (2..=8).map(|p| pipelines_with_p_stages(4, 4, p)).collect();
+        assert_eq!(c, vec![1, 6, 15, 20, 15, 6, 1]);
+    }
+
+    #[test]
+    fn paper_64_pipelines() {
+        // §IV-B: "there are in total 64 possible pipelines (with p=2 to 8)".
+        assert_eq!(total_pipelines(4, 4), 64);
+    }
+
+    #[test]
+    fn eq2_mobilenet_design_points() {
+        // Eq. (2) as printed, W = 28 conv layers:
+        assert_eq!(design_points(28, 4, 4), 4_272_048);
+        // The paper's quoted figure (see doc comment):
+        assert_eq!(design_points_paper_variant(28, 4, 4), 5_379_616);
+    }
+
+    #[test]
+    fn design_space_grows_with_layers() {
+        let mut prev = 0;
+        for w in [11, 26, 28, 54, 58] {
+            let d = design_points(w, 4, 4);
+            assert!(d > prev);
+            prev = d;
+        }
+        // ResNet50/GoogLeNet spaces are in the hundreds of millions —
+        // exhaustive search at ~10 s per point would indeed take
+        // "hundreds of days" (paper §VII-A).
+        assert!(design_points(54, 4, 4) > 100_000_000);
+    }
+
+    #[test]
+    fn asymmetric_platforms() {
+        // 2 big + 4 small: p ranges 2..=6.
+        let total = total_pipelines(2, 4);
+        let by_hand: u128 = (2..=6).map(|p| pipelines_with_p_stages(2, 4, p)).sum();
+        assert_eq!(total, by_hand);
+        assert!(total > 0);
+        // Degenerate single-cluster "platform" still well-defined.
+        assert_eq!(pipelines_with_p_stages(4, 0, 2), 0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Energy-aware design-space exploration — extension motivated by the
+//! paper's §VII-E DeepX comparison (DeepX minimizes energy under a latency
+//! budget; Pipe-it maximizes throughput). This module closes the loop:
+//! pick the pipeline that maximizes imgs/J subject to a throughput floor.
+
+use crate::perfmodel::TimeMatrix;
+use crate::simulator::platform::CoreType;
+use crate::simulator::power::{ClusterActivity, PowerModel};
+
+use super::algorithms::{all_pipelines, work_flow, DsePoint};
+use super::config::{pipeline_throughput, stage_times, Allocation, PipelineConfig};
+
+/// An energy-annotated design point.
+#[derive(Debug, Clone)]
+pub struct EnergyPoint {
+    pub point: DsePoint,
+    /// Average active power (W) from utilization-weighted busy cores.
+    pub power_w: f64,
+    /// imgs/J.
+    pub efficiency: f64,
+}
+
+/// Power of a pipeline + allocation under a time matrix: each stage is busy
+/// for `stage_time / bottleneck` of the steady-state cycle.
+pub fn pipeline_power(
+    tm: &TimeMatrix,
+    power: &PowerModel,
+    p: &PipelineConfig,
+    alloc: &Allocation,
+    mem_intensity: f64,
+) -> f64 {
+    let times = stage_times(tm, p, alloc);
+    let bottleneck = times.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let (mut busy_b, mut busy_s) = (0.0, 0.0);
+    for (stage, t) in p.stages.iter().zip(&times) {
+        let util = if bottleneck > 0.0 { t / bottleneck } else { 0.0 };
+        match stage.core {
+            CoreType::Big => busy_b += util * stage.count as f64,
+            CoreType::Small => busy_s += util * stage.count as f64,
+        }
+    }
+    power.active_power(
+        ClusterActivity {
+            busy_cores: busy_b,
+            powered: busy_b > 0.0,
+            mem_intensity,
+        },
+        ClusterActivity {
+            busy_cores: busy_s,
+            powered: busy_s > 0.0,
+            mem_intensity,
+        },
+    )
+}
+
+/// Energy-aware exploration: among all Eq. 1 pipelines (allocated by
+/// `work_flow`), return the one with the best imgs/J whose throughput is at
+/// least `min_throughput` (imgs/s). Returns `None` when no configuration
+/// meets the floor.
+pub fn explore_energy(
+    tm: &TimeMatrix,
+    power: &PowerModel,
+    hb: usize,
+    hs: usize,
+    min_throughput: f64,
+    mem_intensity: f64,
+) -> Option<EnergyPoint> {
+    let w = tm.num_layers();
+    let mut best: Option<EnergyPoint> = None;
+    for p in all_pipelines(tm, hb, hs) {
+        let alloc = work_flow(tm, &p, w);
+        let tp = pipeline_throughput(tm, &p, &alloc);
+        if tp < min_throughput {
+            continue;
+        }
+        let pw = pipeline_power(tm, power, &p, &alloc, mem_intensity);
+        let eff = tp / pw;
+        if best.as_ref().map_or(true, |b| eff > b.efficiency) {
+            best = Some(EnergyPoint {
+                point: DsePoint { pipeline: p, allocation: alloc, throughput: tp },
+                power_w: pw,
+                efficiency: eff,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::dse::explore;
+    use crate::perfmodel::TimeMatrix;
+    use crate::simulator::platform::Platform;
+
+    fn setup(net: &str) -> (TimeMatrix, PowerModel) {
+        let p = Platform::hikey970();
+        (
+            TimeMatrix::measured(&p, &zoo::by_name(net).unwrap()),
+            PowerModel::default(),
+        )
+    }
+
+    #[test]
+    fn unconstrained_energy_point_is_most_efficient() {
+        let (tm, pw) = setup("mobilenet");
+        let e = explore_energy(&tm, &pw, 4, 4, 0.0, 0.6).unwrap();
+        let t = explore(&tm, 4, 4);
+        let t_power = pipeline_power(&tm, &pw, &t.pipeline, &t.allocation, 0.6);
+        let t_eff = t.throughput / t_power;
+        assert!(
+            e.efficiency >= t_eff - 1e-9,
+            "energy point {:.3} must beat throughput point {:.3} imgs/J",
+            e.efficiency,
+            t_eff
+        );
+    }
+
+    #[test]
+    fn throughput_floor_is_respected() {
+        let (tm, pw) = setup("resnet50");
+        let t = explore(&tm, 4, 4);
+        let floor = 0.9 * t.throughput;
+        let e = explore_energy(&tm, &pw, 4, 4, floor, 0.6).unwrap();
+        assert!(e.point.throughput >= floor);
+        // Infeasible floor -> None.
+        assert!(explore_energy(&tm, &pw, 4, 4, t.throughput * 1.5, 0.6).is_none());
+    }
+
+    #[test]
+    fn efficiency_decreases_as_floor_tightens() {
+        let (tm, pw) = setup("squeezenet");
+        let t = explore(&tm, 4, 4);
+        let loose = explore_energy(&tm, &pw, 4, 4, 0.2 * t.throughput, 0.6).unwrap();
+        let tight = explore_energy(&tm, &pw, 4, 4, 0.98 * t.throughput, 0.6).unwrap();
+        assert!(loose.efficiency >= tight.efficiency - 1e-9);
+    }
+
+    #[test]
+    fn power_between_cluster_bounds() {
+        let (tm, pw) = setup("googlenet");
+        let e = explore_energy(&tm, &pw, 4, 4, 0.0, 0.6).unwrap();
+        assert!(e.power_w > 0.2, "implausibly low power");
+        let all_on = pw.active_power(
+            ClusterActivity { busy_cores: 4.0, powered: true, mem_intensity: 1.0 },
+            ClusterActivity { busy_cores: 4.0, powered: true, mem_intensity: 1.0 },
+        );
+        assert!(e.power_w <= all_on + 1e-9);
+    }
+}

@@ -1,0 +1,172 @@
+//! Exhaustive search over layer allocations for a *fixed* pipeline config —
+//! used to generate Fig. 8 (two-stage split sweep) and Fig. 9 (three-stage
+//! split surface), and to validate the heuristic on small design spaces.
+
+use crate::perfmodel::TimeMatrix;
+
+use super::config::{pipeline_throughput, Allocation, PipelineConfig};
+
+/// Fig. 8: throughput of a two-stage pipeline for every split point
+/// `X = 1..W-1`. Returns `(x, throughput)` pairs.
+pub fn two_stage_sweep(tm: &TimeMatrix, p: &PipelineConfig) -> Vec<(usize, f64)> {
+    assert_eq!(p.num_stages(), 2);
+    let w = tm.num_layers();
+    (1..w)
+        .map(|x| {
+            let a = Allocation { ranges: vec![(0, x), (x, w)] };
+            (x, pipeline_throughput(tm, p, &a))
+        })
+        .collect()
+}
+
+/// Fig. 9: throughput surface of a three-stage pipeline over split points
+/// `(x1, x2)` with `1 <= x1 < x2 < W`. Returns `(x1, x2, throughput)`.
+pub fn three_stage_surface(tm: &TimeMatrix, p: &PipelineConfig) -> Vec<(usize, usize, f64)> {
+    assert_eq!(p.num_stages(), 3);
+    let w = tm.num_layers();
+    let mut out = Vec::new();
+    for x1 in 1..w - 1 {
+        for x2 in x1 + 1..w {
+            let a = Allocation { ranges: vec![(0, x1), (x1, x2), (x2, w)] };
+            out.push((x1, x2, pipeline_throughput(tm, p, &a)));
+        }
+    }
+    out
+}
+
+/// Exhaustive best allocation for a fixed pipeline (all
+/// `C(W-1, p-1)` split-point combinations). Exponential in stages — only
+/// for validation and the figure benches.
+pub fn best_allocation(tm: &TimeMatrix, p: &PipelineConfig) -> (Allocation, f64) {
+    let w = tm.num_layers();
+    let stages = p.num_stages();
+    assert!(stages >= 1 && stages <= 5, "exhaustive search limited to <=5 stages");
+
+    let mut best: Option<(Allocation, f64)> = None;
+    let mut splits = vec![0usize; stages - 1];
+
+    fn rec(
+        tm: &TimeMatrix,
+        p: &PipelineConfig,
+        w: usize,
+        splits: &mut Vec<usize>,
+        depth: usize,
+        start: usize,
+        best: &mut Option<(Allocation, f64)>,
+    ) {
+        if depth == splits.len() {
+            let mut ranges = Vec::with_capacity(splits.len() + 1);
+            let mut lo = 0;
+            for &s in splits.iter() {
+                ranges.push((lo, s));
+                lo = s;
+            }
+            ranges.push((lo, w));
+            let a = Allocation { ranges };
+            let tp = pipeline_throughput(tm, p, &a);
+            if best.as_ref().map_or(true, |(_, b)| tp > *b) {
+                *best = Some((a, tp));
+            }
+            return;
+        }
+        for s in start..w - (splits.len() - depth - 1) {
+            splits[depth] = s;
+            rec(tm, p, w, splits, depth + 1, s + 1, best);
+        }
+    }
+
+    rec(tm, p, w, &mut splits, 0, 1, &mut best);
+    best.expect("nonempty design space")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::dse::algorithms::work_flow;
+    use crate::perfmodel::TimeMatrix;
+    use crate::simulator::platform::Platform;
+
+    fn tm(net: &str) -> TimeMatrix {
+        TimeMatrix::measured(&Platform::hikey970(), &zoo::by_name(net).unwrap())
+    }
+
+    #[test]
+    fn fig8_optimum_in_paper_band() {
+        // Paper: optimal two-stage split ratio X/W ranges 0.60-0.90.
+        for net in ["alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"] {
+            let t = tm(net);
+            let p = PipelineConfig::parse("B4-s4").unwrap();
+            let sweep = two_stage_sweep(&t, &p);
+            let (best_x, _) = sweep
+                .iter()
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(x, tp)| (*x, *tp))
+                .unwrap();
+            let ratio = best_x as f64 / t.num_layers() as f64;
+            assert!(
+                (0.5..0.95).contains(&ratio),
+                "{net}: optimal split ratio {ratio:.2} outside the paper band"
+            );
+        }
+    }
+
+    #[test]
+    fn fig9_three_stage_beats_two_stage_for_resnet() {
+        // Paper: ResNet50 three-stage (B4-s2-s2) gains ~7% over two-stage.
+        let t = tm("resnet50");
+        let p2 = PipelineConfig::parse("B4-s4").unwrap();
+        let p3 = PipelineConfig::parse("B4-s2-s2").unwrap();
+        let best2 = two_stage_sweep(&t, &p2)
+            .into_iter()
+            .map(|(_, tp)| tp)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let best3 = three_stage_surface(&t, &p3)
+            .into_iter()
+            .map(|(_, _, tp)| tp)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            best3 > best2 * 1.0,
+            "three-stage {best3:.3} should be at least two-stage {best2:.3}"
+        );
+    }
+
+    #[test]
+    fn work_flow_matches_exhaustive_on_two_stages() {
+        // The heuristic should land within 2% of the exhaustive optimum for
+        // the simple two-stage pipeline.
+        for net in ["alexnet", "squeezenet", "mobilenet"] {
+            let t = tm(net);
+            let p = PipelineConfig::parse("B4-s4").unwrap();
+            let a = work_flow(&t, &p, t.num_layers());
+            let tp_heur = pipeline_throughput(&t, &p, &a);
+            let (_, tp_best) = best_allocation(&t, &p);
+            assert!(
+                tp_heur >= 0.98 * tp_best,
+                "{net}: heuristic {tp_heur:.3} vs exhaustive {tp_best:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn work_flow_near_exhaustive_three_stages() {
+        let t = tm("resnet50");
+        let p = PipelineConfig::parse("B4-s2-s2").unwrap();
+        let a = work_flow(&t, &p, t.num_layers());
+        let tp_heur = pipeline_throughput(&t, &p, &a);
+        let (_, tp_best) = best_allocation(&t, &p);
+        assert!(
+            tp_heur >= 0.95 * tp_best,
+            "heuristic {tp_heur:.3} vs exhaustive {tp_best:.3}"
+        );
+    }
+
+    #[test]
+    fn surface_size() {
+        let t = tm("alexnet"); // W = 11
+        let p = PipelineConfig::parse("B4-s2-s2").unwrap();
+        let surface = three_stage_surface(&t, &p);
+        // C(10, 2) = 45 points.
+        assert_eq!(surface.len(), 45);
+    }
+}

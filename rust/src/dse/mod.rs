@@ -1,0 +1,19 @@
+//! Design-space exploration (paper §IV & §VI): pipeline configurations and
+//! allocations, design-space counting (Eq. 1–2), the Pipe-it heuristic
+//! (Algorithms 1–3) and the exhaustive baseline for small spaces.
+
+pub mod algorithms;
+pub mod config;
+pub mod count;
+pub mod energy;
+pub mod exhaustive;
+
+pub use algorithms::{
+    all_pipelines, explore, find_split, merge_stage, merge_stage_eq14, point_stage_times,
+    work_flow, DsePoint,
+};
+pub use config::{
+    pipeline_throughput, stage_times, Allocation, PipelineConfig, StageConfig,
+};
+pub use energy::{explore_energy, pipeline_power, EnergyPoint};
+pub use count::{binom, design_points, pipelines_with_p_stages, total_pipelines};

@@ -1,0 +1,29 @@
+//! # Pipe-it: high-throughput CNN inference on ARM big.LITTLE multi-cores
+//!
+//! Reproduction of Wang et al., *High-Throughput CNN Inference on Embedded
+//! ARM big.LITTLE Multi-Core Processors* (IEEE TCAD 2019) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the Pipe-it coordinator: per-layer performance
+//!   prediction ([`perfmodel`]), design-space exploration ([`dse`]), the
+//!   pipelined executor ([`coordinator`]), the big.LITTLE hardware substrate
+//!   ([`simulator`]), baselines ([`baselines`]), and a PJRT runtime
+//!   ([`runtime`]) that executes AOT-lowered per-layer HLO modules.
+//! * **L2 (python/compile/model.py)** — CNN forward pass in JAX, lowered
+//!   once to HLO text per major layer (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas tiled im2col+GEMM kernels.
+//!
+//! Python never runs on the request path: the Rust binary loads
+//! `artifacts/<net>/*.hlo.txt` and serves an image stream through a
+//! multi-threaded pipeline, one stage per homogeneous core group.
+
+pub mod baselines;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod perfmodel;
+pub mod reports;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

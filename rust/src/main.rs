@@ -1,0 +1,205 @@
+//! `pipeit` — Pipe-it CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   tables                         print every paper table/figure (paper-vs-ours)
+//!   explore   --net N [--predicted]  run the DSE, print config + allocation
+//!   predict   --net N              dump the layer x config time matrix
+//!   simulate  --net N --pipeline P [--images I] [--queue-cap C]
+//!   count     [--net N]            design-space sizes (Eq. 1-2)
+//!   serve     --artifacts DIR [--images I] [--batch B] [--stages K]
+//!                                  real PJRT serving over AOT artifacts
+//!
+//! All simulator-backed subcommands accept `--platform configs/<f>.json`.
+
+use anyhow::{Context, Result};
+
+use pipeit::cnn::zoo;
+use pipeit::config::Config;
+use pipeit::coordinator;
+use pipeit::dse;
+use pipeit::perfmodel::{PerfModel, TimeMatrix};
+use pipeit::reports::Reporter;
+use pipeit::runtime::Manifest;
+use pipeit::simulator::pipeline_sim;
+use pipeit::util::cli::Args;
+use pipeit::util::table::{f, Table};
+
+const USAGE: &str = "\
+pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
+
+USAGE: pipeit <tables|explore|predict|simulate|count|serve> [options]
+
+  tables     [--platform F]                 regenerate every paper table & figure
+  explore    --net N [--predicted] [--platform F]
+  predict    --net N [--platform F]         per-layer time matrix (ms)
+  simulate   --net N --pipeline B4-s2-s2 [--images 500] [--queue-cap 2]
+  count      [--net N]                      design-space sizes (Eq. 1-2)
+  serve      --artifacts artifacts/pipenet_tiny [--images 50] [--batch 1]
+             [--stages 3] [--queue-cap 2] [--serial] [--seed 7]
+
+networks: alexnet googlenet mobilenet resnet50 squeezenet";
+
+fn net_arg(args: &Args) -> Result<pipeit::cnn::Network> {
+    let name = args.get("net").context("--net is required")?;
+    zoo::by_name(name).with_context(|| format!("unknown network {name:?}"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["predicted", "serial", "measured"]);
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let cfg = Config::load_or_default(args.get("platform"))?;
+
+    match cmd {
+        "tables" => {
+            Reporter::new(cfg).print_all();
+        }
+        "explore" => {
+            let net = net_arg(&args)?;
+            let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
+            let tm = if args.has_flag("predicted") {
+                let model = PerfModel::fit(&cfg.platform);
+                TimeMatrix::predicted(&cfg.platform, &model, &net)
+            } else {
+                TimeMatrix::measured(&cfg.platform, &net)
+            };
+            let pt = dse::explore(&tm, hb, hs);
+            println!("network    : {}", net.name);
+            println!("pipeline   : {}", pt.pipeline);
+            println!("allocation : {}", pt.allocation.display_1based());
+            println!("throughput : {:.2} imgs/s (Eq. 12)", pt.throughput);
+            let times = dse::point_stage_times(&tm, &pt);
+            for (i, (s, t)) in pt.pipeline.stages.iter().zip(&times).enumerate() {
+                println!("  stage {i}: {s}  {:.1} ms", t * 1e3);
+            }
+        }
+        "predict" => {
+            let net = net_arg(&args)?;
+            let model = PerfModel::fit(&cfg.platform);
+            let tm = TimeMatrix::predicted(&cfg.platform, &model, &net);
+            let mut t = Table::new(
+                &format!("{} predicted layer times (ms)", net.name),
+                &["layer", "B1", "B2", "B3", "B4", "s1", "s2", "s3", "s4"],
+            );
+            for (j, name) in tm.layer_names.iter().enumerate() {
+                let mut row = vec![name.clone()];
+                for ci in 0..tm.configs.len() {
+                    row.push(f(tm.layer(j, ci) * 1e3, 2));
+                }
+                t.row(row);
+            }
+            t.print();
+        }
+        "simulate" => {
+            let net = net_arg(&args)?;
+            let spec = args.get("pipeline").context("--pipeline required (e.g. B4-s2-s2)")?;
+            let p = dse::PipelineConfig::parse(spec)?;
+            anyhow::ensure!(
+                p.is_valid(cfg.platform.big.cores, cfg.platform.small.cores),
+                "pipeline exceeds platform core budget"
+            );
+            let tm = TimeMatrix::measured(&cfg.platform, &net);
+            let alloc = dse::work_flow(&tm, &p, tm.num_layers());
+            let times = dse::stage_times(&tm, &p, &alloc);
+            let images = args.get_usize("images", 500)?;
+            let cap = args.get_usize("queue-cap", 2)?;
+            let sim = pipeline_sim::simulate(&times, images, cap);
+            println!("network    : {}", net.name);
+            println!("pipeline   : {p}");
+            println!("allocation : {}", alloc.display_1based());
+            println!(
+                "eq12 tp    : {:.2} imgs/s",
+                pipeline_sim::steady_state_throughput(&times)
+            );
+            println!(
+                "sim tp     : {:.2} imgs/s over {images} images (cap {cap})",
+                sim.throughput
+            );
+            println!("bottleneck : stage {}", sim.bottleneck);
+            for (i, u) in sim.utilization.iter().enumerate() {
+                println!("  stage {i} utilization {:.0}%", 100.0 * u);
+            }
+        }
+        "count" => {
+            let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
+            println!(
+                "pipelines on {}B+{}s: {}",
+                hb,
+                hs,
+                dse::count::total_pipelines(hb, hs)
+            );
+            let nets = match args.get("net") {
+                Some(_) => vec![net_arg(&args)?],
+                None => zoo::all_networks(),
+            };
+            for net in nets {
+                println!(
+                    "{:<11} W={:<3} design points = {}",
+                    net.name,
+                    net.num_layers(),
+                    dse::count::design_points(net.num_layers(), hb, hs)
+                );
+            }
+        }
+        "serve" => {
+            let dir = args.get("artifacts").context("--artifacts DIR required")?;
+            let manifest = Manifest::load(std::path::Path::new(dir))?;
+            let images = args.get_usize("images", 50)?;
+            let batch = args.get_usize("batch", 1)?;
+            let cap = args.get_usize("queue-cap", 2)?;
+            let stages = args.get_usize("stages", 3)?;
+            let seed = args.get_usize("seed", 7)? as u64;
+            if args.has_flag("serial") {
+                let (_, report) = coordinator::serve_serial(&manifest, images, batch, seed)?;
+                println!("serial (kernel-level analogue) on {}:", manifest.name);
+                print!("{}", report.render());
+            } else {
+                let alloc = balance_by_macs(&manifest, stages);
+                println!(
+                    "pipelined serving on {} with {} stages: {}",
+                    manifest.name,
+                    alloc.active_stages(),
+                    alloc.display_1based()
+                );
+                let (_, report) =
+                    coordinator::serve_pipelined(&manifest, &alloc, images, batch, cap, seed)?;
+                print!("{}", report.render());
+            }
+        }
+        other => {
+            println!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Balance manifest layers into `k` contiguous stages by MAC count (the
+/// host is a symmetric CPU, so MACs are the balancing proxy).
+fn balance_by_macs(manifest: &Manifest, k: usize) -> dse::Allocation {
+    let w = manifest.num_layers();
+    let k = k.clamp(1, w);
+    let total: usize = manifest.layers.iter().map(|l| l.macs).sum();
+    let target = total as f64 / k as f64;
+    let mut ranges = Vec::with_capacity(k);
+    let mut lo = 0;
+    let mut acc = 0.0;
+    for (i, l) in manifest.layers.iter().enumerate() {
+        acc += l.macs as f64;
+        let stages_left = k - ranges.len();
+        let layers_left = w - i - 1;
+        if (acc >= target && stages_left > 1 && layers_left >= stages_left - 1)
+            || layers_left + 1 == stages_left
+        {
+            ranges.push((lo, i + 1));
+            lo = i + 1;
+            acc = 0.0;
+        }
+    }
+    if lo < w {
+        ranges.push((lo, w));
+    }
+    dse::Allocation { ranges }
+}

@@ -1,0 +1,147 @@
+//! Micro-benchmark generator (paper §V-B).
+//!
+//! The paper measures representative convolutional layers over a grid of
+//! input/filter dimensions and fits the regression to those measurements:
+//!
+//!   Iw = Ih in {7, 14, 28, 56, 112}
+//!   Fw = Fh in {1, 3, 5, 7, 11}
+//!   Id = Fd in {32, 64, 92, 128, 192, 256}
+//!   Ofm     in {32, 64, 92, 128, 192, 256}
+//!
+//! On this substrate the "board" is `simulator::gemm`; `run_grid` takes the
+//! measurements the fit consumes.
+
+use crate::cnn::layer::Layer;
+use crate::simulator::platform::{CoreType, Platform};
+use crate::simulator::gemm;
+
+pub const IW: [usize; 5] = [7, 14, 28, 56, 112];
+pub const F: [usize; 5] = [1, 3, 5, 7, 11];
+pub const ID: [usize; 6] = [32, 64, 92, 128, 192, 256];
+pub const OFM: [usize; 6] = [32, 64, 92, 128, 192, 256];
+
+/// The §V-B grid of representative convolutional layers. Points whose
+/// filter exceeds the input (f > iw) are invalid and skipped. To bound the
+/// fit cost the depth axes are swept jointly, as the paper's grid implies
+/// (Id = Fd) — `stride = 1`, `pad = f/2` (SAME-style), square inputs.
+pub fn conv_grid() -> Vec<Layer> {
+    let mut out = Vec::new();
+    for &iw in &IW {
+        for &f in &F {
+            if f > iw {
+                continue;
+            }
+            for &id in &ID {
+                for &ofm in &OFM {
+                    out.push(Layer::conv(
+                        &format!("mb_{iw}x{iw}x{id}_f{f}_o{ofm}"),
+                        iw,
+                        iw,
+                        id,
+                        f,
+                        ofm,
+                        1,
+                        f / 2,
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fully-connected micro-benchmarks ("representative layers" in §V-B):
+/// GEMV-shaped N = 1 points covering the classifier-head sizes, without
+/// which the Eq. 5 fit extrapolates badly on AlexNet's 9216x4096 FC.
+pub fn fc_grid() -> Vec<Layer> {
+    let mut out = Vec::new();
+    for &cin in &[256usize, 1024, 2048, 4096, 6144, 9216] {
+        for &cout in &[256usize, 1000, 2048, 4096] {
+            out.push(Layer::fc(&format!("mbfc_{cin}x{cout}"), cin, cout));
+        }
+    }
+    out
+}
+
+/// Depthwise micro-benchmarks (MobileNet's DW nodes need their own fit —
+/// their per-channel mini-GEMMs behave nothing like dense GEMM).
+pub fn dw_grid() -> Vec<Layer> {
+    let mut out = Vec::new();
+    for &iw in &IW {
+        for &f in &[3usize, 5] {
+            if f > iw {
+                continue;
+            }
+            for &c in &ID {
+                out.push(Layer::dw_conv(
+                    &format!("mbdw_{iw}x{iw}x{c}_f{f}"),
+                    iw,
+                    iw,
+                    c,
+                    f,
+                    1,
+                    f / 2,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// A single measurement: layer descriptor + measured time on (core, h).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub layer: Layer,
+    pub core: CoreType,
+    pub cores: usize,
+    pub seconds: f64,
+}
+
+/// Run a grid on the simulated board for every core count of one cluster.
+pub fn run_grid(platform: &Platform, layers: &[Layer], core: CoreType) -> Vec<Measurement> {
+    let max_h = platform.cluster(core).cores;
+    let mut out = Vec::with_capacity(layers.len() * max_h);
+    for l in layers {
+        for h in 1..=max_h {
+            out.push(Measurement {
+                layer: l.clone(),
+                core,
+                cores: h,
+                seconds: gemm::layer_time(platform, l, core, h),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size_and_validity() {
+        let g = conv_grid();
+        // 7x7 input excludes f=11 => (5*5 - 1) * 36 = 864 points.
+        assert_eq!(g.len(), 864);
+        for l in &g {
+            assert!(l.fh <= l.ih);
+            let (oh, ow) = l.out_hw();
+            assert!(oh > 0 && ow > 0);
+        }
+    }
+
+    #[test]
+    fn dw_grid_nonempty() {
+        let g = dw_grid();
+        assert!(g.len() >= 50);
+    }
+
+    #[test]
+    fn measurements_cover_all_core_counts() {
+        let p = Platform::hikey970();
+        let small_grid = &conv_grid()[..10];
+        let m = run_grid(&p, small_grid, CoreType::Big);
+        assert_eq!(m.len(), 40);
+        assert!(m.iter().all(|x| x.seconds > 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Layer-level performance estimation (paper §V): micro-benchmark
+//! generation, the Eq. 5–8 regression predictor, and the time matrix `T`
+//! consumed by the design-space exploration.
+
+pub mod microbench;
+pub mod model;
+pub mod time_matrix;
+
+pub use model::{features, fit_core_model, CoreModel, KindClass, PerfModel};
+pub use time_matrix::TimeMatrix;

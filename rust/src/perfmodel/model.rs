@@ -1,0 +1,304 @@
+//! The paper's layer-level performance predictor (§V, Eq. 5–8).
+//!
+//! Single-core (Eq. 5): linear regression over the GEMM dims with
+//! interaction terms,
+//!
+//!   T = b1*N + b2*K + b3*M + b4*NK + b5*KM + b6*NM + b7*NMK + b8
+//!
+//! Multi-core (Eq. 6–8): ARM-CL deals `n_iter = N/ts` row chunks to `H`
+//! threads,
+//!
+//!   T_iter  = (T - a1)/n_iter + a2                     (6)
+//!   T_multi = max_t(T_iter * iter_t) + a3              (7)
+//!           = (T - a1)/H + a2 * N/(ts*H) + a3          (8, equal split)
+//!
+//! The alphas are fit per core type by OLS on multi-threaded micro-bench
+//! measurements; the betas per (core type, layer kind-class) on single-core
+//! measurements.
+
+use crate::cnn::layer::{GemmDims, Layer, LayerKind};
+use crate::simulator::platform::{CoreType, Platform};
+use crate::util::linalg::{self, Mat};
+
+use super::microbench::{self, Measurement};
+
+/// Kind-class of the regression: dense GEMM (conv + fc) vs depthwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KindClass {
+    Gemm,
+    Depthwise,
+}
+
+impl KindClass {
+    pub fn of(kind: LayerKind) -> KindClass {
+        match kind {
+            LayerKind::DwConv => KindClass::Depthwise,
+            LayerKind::Conv | LayerKind::Fc => KindClass::Gemm,
+        }
+    }
+}
+
+/// Eq. 5 feature vector for a GEMM shape.
+pub fn features(g: GemmDims) -> [f64; 8] {
+    let (n, k, m) = (g.n as f64, g.k as f64, g.m as f64);
+    [n, k, m, n * k, k * m, n * m, n * m * k, 1.0]
+}
+
+/// Fitted predictor for one core type.
+#[derive(Debug, Clone)]
+pub struct CoreModel {
+    pub core: CoreType,
+    /// Eq. 5 betas for dense GEMM layers.
+    pub beta_gemm: [f64; 8],
+    /// Eq. 5 betas for depthwise layers.
+    pub beta_dw: [f64; 8],
+    /// Eq. 6–8 alphas (a1, a2, a3).
+    pub alpha: [f64; 3],
+    /// ARM-CL row-tile size `ts` used for `n_iter`.
+    pub tile_rows: usize,
+}
+
+impl CoreModel {
+    fn beta(&self, kc: KindClass) -> &[f64; 8] {
+        match kc {
+            KindClass::Gemm => &self.beta_gemm,
+            KindClass::Depthwise => &self.beta_dw,
+        }
+    }
+
+    /// Eq. 5: single-core prediction (seconds).
+    pub fn predict_1core(&self, layer: &Layer) -> f64 {
+        let x = features(layer.gemm());
+        let b = self.beta(KindClass::of(layer.kind));
+        x.iter().zip(b).map(|(xi, bi)| xi * bi).sum::<f64>().max(1e-7)
+    }
+
+    /// Iteration count (paper: `n_iter = N / ts`; FC parallelizes along M).
+    pub fn n_iterations(&self, layer: &Layer) -> usize {
+        let g = layer.gemm();
+        let rows = if layer.kind == LayerKind::Fc { g.m } else { g.n };
+        rows.div_ceil(self.tile_rows).max(1)
+    }
+
+    /// Eq. 8: multi-core prediction (seconds) for `h` homogeneous cores.
+    pub fn predict(&self, layer: &Layer, h: usize) -> f64 {
+        let t1 = self.predict_1core(layer);
+        if h == 1 {
+            return t1;
+        }
+        let n_iter = self.n_iterations(layer) as f64;
+        let [a1, a2, a3] = self.alpha;
+        ((t1 - a1) / h as f64 + a2 * n_iter / h as f64 + a3).max(1e-7)
+    }
+}
+
+/// Fit Eq. 5 betas by weighted least squares against single-core
+/// measurements. Weights `1/T` minimize relative error — the micro-bench
+/// grid spans five orders of magnitude in layer time, and the paper's
+/// quality metric (Table III) is percentage error.
+fn fit_betas(ms: &[&Measurement]) -> Option<[f64; 8]> {
+    let rows: Vec<Vec<f64>> = ms
+        .iter()
+        .map(|m| features(m.layer.gemm()).to_vec())
+        .collect();
+    let y: Vec<f64> = ms.iter().map(|m| m.seconds).collect();
+    let w: Vec<f64> = y.iter().map(|t| 1.0 / t.max(1e-9)).collect();
+    let beta = linalg::wls(&Mat::from_rows(&rows), &y, &w)?;
+    let mut out = [0.0; 8];
+    out.copy_from_slice(&beta);
+    Some(out)
+}
+
+/// Fit Eq. 8 alphas by WLS: `y - T1/H = a1*(-1/H) + a2*(n_iter/H) + a3`,
+/// weighted `1/y` for relative-error minimization.
+fn fit_alphas(
+    ms: &[&Measurement],
+    predict_1core: impl Fn(&Layer) -> f64,
+    tile_rows: usize,
+) -> Option<[f64; 3]> {
+    let mut rows = Vec::new();
+    let mut ys = Vec::new();
+    let mut ws = Vec::new();
+    for m in ms {
+        if m.cores < 2 {
+            continue;
+        }
+        let h = m.cores as f64;
+        let t1 = predict_1core(&m.layer);
+        let g = m.layer.gemm();
+        let rows_dim = if m.layer.kind == LayerKind::Fc { g.m } else { g.n };
+        let n_iter = rows_dim.div_ceil(tile_rows).max(1) as f64;
+        rows.push(vec![-1.0 / h, n_iter / h, 1.0]);
+        ys.push(m.seconds - t1 / h);
+        ws.push(1.0 / m.seconds.max(1e-9));
+    }
+    let a = linalg::wls(&Mat::from_rows(&rows), &ys, &ws)?;
+    let mut out = [0.0; 3];
+    out.copy_from_slice(&a);
+    Some(out)
+}
+
+/// Fit the full predictor for one core type from micro-bench measurements
+/// taken on the (simulated) board.
+pub fn fit_core_model(platform: &Platform, core: CoreType) -> CoreModel {
+    let tile_rows = platform.tile_rows;
+
+    let mut conv_ms = microbench::run_grid(platform, &microbench::conv_grid(), core);
+    conv_ms.extend(microbench::run_grid(platform, &microbench::fc_grid(), core));
+    let dw_ms = microbench::run_grid(platform, &microbench::dw_grid(), core);
+
+    let conv_1: Vec<&Measurement> = conv_ms.iter().filter(|m| m.cores == 1).collect();
+    let dw_1: Vec<&Measurement> = dw_ms.iter().filter(|m| m.cores == 1).collect();
+    let beta_gemm = fit_betas(&conv_1).expect("conv beta fit");
+    let beta_dw = fit_betas(&dw_1).expect("dw beta fit");
+
+    // Alphas are fit on the dense-GEMM multi-core measurements, using the
+    // Eq. 5 prediction as T (the paper derives Eq. 6 from the Eq. 5 T).
+    let predict1 = |l: &Layer| {
+        let x = features(l.gemm());
+        let b = match KindClass::of(l.kind) {
+            KindClass::Gemm => &beta_gemm,
+            KindClass::Depthwise => &beta_dw,
+        };
+        x.iter().zip(b).map(|(xi, bi)| xi * bi).sum::<f64>().max(1e-7)
+    };
+    let all_multi: Vec<&Measurement> =
+        conv_ms.iter().chain(dw_ms.iter()).filter(|m| m.cores >= 2).collect();
+    let alpha = fit_alphas(&all_multi, predict1, tile_rows).expect("alpha fit");
+
+    CoreModel { core, beta_gemm, beta_dw, alpha, tile_rows }
+}
+
+/// The paper's full predictor: one fitted model per core type.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub big: CoreModel,
+    pub small: CoreModel,
+}
+
+impl PerfModel {
+    /// Fit both core types from micro-benchmarks on the given platform.
+    pub fn fit(platform: &Platform) -> PerfModel {
+        PerfModel {
+            big: fit_core_model(platform, CoreType::Big),
+            small: fit_core_model(platform, CoreType::Small),
+        }
+    }
+
+    pub fn core(&self, t: CoreType) -> &CoreModel {
+        match t {
+            CoreType::Big => &self.big,
+            CoreType::Small => &self.small,
+        }
+    }
+
+    /// Predicted time of one layer on a (core type, count) stage config.
+    pub fn layer_time(&self, layer: &Layer, core: CoreType, h: usize) -> f64 {
+        self.core(core).predict(layer, h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::simulator::gemm;
+    use crate::util::stats;
+    use once_cell::sync::Lazy;
+
+    static MODEL: Lazy<(Platform, PerfModel)> = Lazy::new(|| {
+        let p = Platform::hikey970();
+        let m = PerfModel::fit(&p);
+        (p, m)
+    });
+
+    #[test]
+    fn features_shape() {
+        let f = features(GemmDims { n: 2, k: 3, m: 5 });
+        assert_eq!(f, [2.0, 3.0, 5.0, 6.0, 15.0, 10.0, 30.0, 1.0]);
+    }
+
+    #[test]
+    fn predictions_positive_and_ordered() {
+        let (_, model) = &*MODEL;
+        let l = Layer::conv("c", 56, 56, 64, 3, 64, 1, 1);
+        for core in [CoreType::Big, CoreType::Small] {
+            let mut prev = f64::INFINITY;
+            for h in 1..=4 {
+                let t = model.layer_time(&l, core, h);
+                assert!(t > 0.0);
+                assert!(t < prev, "{core:?} h={h}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn single_core_fit_quality_on_grid() {
+        // In-sample MAPE of the Eq. 5 fit should be within the ruggedness
+        // the linear form cannot express (~10%) plus model-form error.
+        let (p, model) = &*MODEL;
+        let grid = microbench::conv_grid();
+        let (mut pred, mut truth) = (Vec::new(), Vec::new());
+        for l in &grid {
+            pred.push(model.big.predict_1core(l));
+            truth.push(gemm::layer_time_1core(p, l, CoreType::Big));
+        }
+        let err = stats::mape(&pred, &truth);
+        assert!(err < 25.0, "in-sample MAPE {err:.1}%");
+    }
+
+    /// Table III: per-config MAPE over the five CNNs' layers, for every
+    /// homogeneous core allocation, should land in the paper's band
+    /// (averages 13.2% Big / 11.4% Small; per-net up to ~21%).
+    #[test]
+    fn table3_prediction_error_band() {
+        let (p, model) = &*MODEL;
+        let mut big_errs = Vec::new();
+        let mut small_errs = Vec::new();
+        for net in zoo::all_networks() {
+            for core in [CoreType::Big, CoreType::Small] {
+                for h in 1..=4 {
+                    let (mut pred, mut truth) = (Vec::new(), Vec::new());
+                    for l in &net.layers {
+                        pred.push(model.layer_time(l, core, h));
+                        truth.push(gemm::layer_time(p, l, core, h));
+                    }
+                    let err = stats::mape(&pred, &truth);
+                    assert!(
+                        err < 45.0,
+                        "{} {core:?}{h}: MAPE {err:.1}% is way off",
+                        net.name
+                    );
+                    match core {
+                        CoreType::Big => big_errs.push(err),
+                        CoreType::Small => small_errs.push(err),
+                    }
+                }
+            }
+        }
+        let big_avg = stats::mean(&big_errs);
+        let small_avg = stats::mean(&small_errs);
+        assert!(
+            (4.0..22.0).contains(&big_avg),
+            "Big avg MAPE {big_avg:.1}% outside plausible band"
+        );
+        assert!(
+            (4.0..22.0).contains(&small_avg),
+            "Small avg MAPE {small_avg:.1}% outside plausible band"
+        );
+    }
+
+    #[test]
+    fn relative_ordering_preserved_for_dse() {
+        // §VII-B: what matters is that the predictor preserves the
+        // relations between configs. Check Big-4 is predicted fastest and
+        // Small-1 slowest for every ResNet50 layer.
+        let (_, model) = &*MODEL;
+        for l in &zoo::resnet50().layers {
+            let b4 = model.layer_time(l, CoreType::Big, 4);
+            let s1 = model.layer_time(l, CoreType::Small, 1);
+            assert!(b4 < s1, "layer {}", l.name);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! The paper's time matrix `T` (§VI-A): execution time of every layer on
+//! every possible homogeneous stage configuration. Built either from the
+//! fitted predictor (Tables IV/V "predicted") or from board measurements —
+//! here the simulator ground truth (Table VI "measured").
+
+use crate::cnn::network::Network;
+use crate::simulator::gemm;
+use crate::simulator::platform::{CoreType, Platform};
+
+use super::model::PerfModel;
+
+/// `T[layer][config]` in seconds; configs are the platform's
+/// `(core_type, count)` stage configurations in `Platform::stage_configs`
+/// order.
+#[derive(Debug, Clone)]
+pub struct TimeMatrix {
+    pub net_name: String,
+    pub layer_names: Vec<String>,
+    pub configs: Vec<(CoreType, usize)>,
+    t: Vec<Vec<f64>>,
+}
+
+impl TimeMatrix {
+    /// Build from the fitted performance predictor.
+    pub fn predicted(platform: &Platform, model: &PerfModel, net: &Network) -> TimeMatrix {
+        Self::build(platform, net, |l, core, h| model.layer_time(l, core, h))
+    }
+
+    /// Build from simulated board measurements.
+    pub fn measured(platform: &Platform, net: &Network) -> TimeMatrix {
+        Self::build(platform, net, |l, core, h| gemm::layer_time(platform, l, core, h))
+    }
+
+    fn build(
+        platform: &Platform,
+        net: &Network,
+        f: impl Fn(&crate::cnn::layer::Layer, CoreType, usize) -> f64,
+    ) -> TimeMatrix {
+        let configs = platform.stage_configs();
+        let t = net
+            .layers
+            .iter()
+            .map(|l| configs.iter().map(|(c, h)| f(l, *c, *h)).collect())
+            .collect();
+        TimeMatrix {
+            net_name: net.name.clone(),
+            layer_names: net.layers.iter().map(|l| l.name.clone()).collect(),
+            configs,
+            t,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn config_index(&self, core: CoreType, h: usize) -> Option<usize> {
+        self.configs.iter().position(|&(c, n)| c == core && n == h)
+    }
+
+    /// `T_{l_j}^{P_i}`: time of layer `j` on config index `ci`.
+    pub fn layer(&self, j: usize, ci: usize) -> f64 {
+        self.t[j][ci]
+    }
+
+    /// `T_{L_i}^{P_i}` (Eq. 10): summed time of the contiguous layer range
+    /// `[lo, hi)` on config index `ci`.
+    pub fn range(&self, lo: usize, hi: usize, ci: usize) -> f64 {
+        (lo..hi).map(|j| self.t[j][ci]).sum()
+    }
+
+    /// Mean layer time per config — the Eq. 11 capability metric.
+    pub fn mean_per_config(&self) -> Vec<f64> {
+        (0..self.configs.len())
+            .map(|ci| self.range(0, self.num_layers(), ci) / self.num_layers() as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use once_cell::sync::Lazy;
+
+    static SETUP: Lazy<(Platform, PerfModel)> = Lazy::new(|| {
+        let p = Platform::hikey970();
+        let m = PerfModel::fit(&p);
+        (p, m)
+    });
+
+    #[test]
+    fn dimensions() {
+        let (p, m) = &*SETUP;
+        let net = zoo::squeezenet();
+        let tm = TimeMatrix::predicted(p, m, &net);
+        assert_eq!(tm.num_layers(), 26);
+        assert_eq!(tm.configs.len(), 8);
+        assert_eq!(tm.config_index(CoreType::Big, 4), Some(3));
+        assert_eq!(tm.config_index(CoreType::Small, 1), Some(4));
+    }
+
+    #[test]
+    fn range_is_sum_of_layers() {
+        let (p, _) = &*SETUP;
+        let net = zoo::alexnet();
+        let tm = TimeMatrix::measured(p, &net);
+        let manual: f64 = (2..5).map(|j| tm.layer(j, 0)).sum();
+        assert!((tm.range(2, 5, 0) - manual).abs() < 1e-15);
+        assert_eq!(tm.range(3, 3, 0), 0.0);
+    }
+
+    #[test]
+    fn measured_matches_simulator() {
+        let (p, _) = &*SETUP;
+        let net = zoo::mobilenet();
+        let tm = TimeMatrix::measured(p, &net);
+        let ci = tm.config_index(CoreType::Big, 4).unwrap();
+        let direct = gemm::layers_time(p, &net.layers, CoreType::Big, 4);
+        assert!((tm.range(0, net.layers.len(), ci) - direct).abs() < 1e-12);
+    }
+}

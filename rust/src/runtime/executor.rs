@@ -1,0 +1,205 @@
+//! PJRT execution of AOT-lowered HLO modules (the L3 <-> L1/L2 bridge).
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): load HLO *text* ->
+//! `HloModuleProto::from_text_file` -> compile -> execute. Text is the
+//! interchange format because jax >= 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1's proto path rejects (see /opt/xla-example/README).
+//!
+//! THREADING: `xla::PjRtClient` is `Rc`-based — neither `Send` nor `Sync`.
+//! Every pipeline-stage thread therefore builds its own `StageRunner`
+//! (client + compiled executables) via [`StageRunnerSpec`], which IS `Send`.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// One compiled layer executable (single input -> 1-tuple output).
+pub struct LayerExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+impl LayerExecutable {
+    /// Load + compile an HLO text file on the given client.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &PathBuf,
+        in_shape: Vec<usize>,
+        out_shape: Vec<usize>,
+    ) -> Result<LayerExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(LayerExecutable { exe, in_shape, out_shape })
+    }
+
+    /// Execute on one tensor; shape-checked both ways.
+    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            x.shape == self.in_shape,
+            "input shape {:?} != expected {:?}",
+            x.shape,
+            self.in_shape
+        );
+        let lit = xla::Literal::vec1(&x.data)
+            .reshape(&x.shape_i64())
+            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        anyhow::ensure!(
+            data.len() == self.out_shape.iter().product::<usize>(),
+            "output element count {} != shape {:?}",
+            data.len(),
+            self.out_shape
+        );
+        Ok(Tensor::new(self.out_shape.clone(), data))
+    }
+}
+
+/// `Send` description of a stage's executables; materialized per-thread.
+#[derive(Debug, Clone)]
+pub struct StageRunnerSpec {
+    /// (hlo path, input shape, output shape) per layer, in order, for each
+    /// supported batch size: batch -> layer list.
+    pub batches: Vec<(usize, Vec<(PathBuf, Vec<usize>, Vec<usize>)>)>,
+}
+
+impl StageRunnerSpec {
+    /// Build the spec for layers `[lo, hi)` of a manifest, for the given
+    /// batch sizes (must be exported in the artifacts).
+    pub fn from_manifest(
+        m: &Manifest,
+        lo: usize,
+        hi: usize,
+        batch_sizes: &[usize],
+    ) -> Result<StageRunnerSpec> {
+        anyhow::ensure!(lo < hi && hi <= m.num_layers(), "bad layer range {lo}..{hi}");
+        let mut batches = Vec::new();
+        for &b in batch_sizes {
+            let mut in_shape = m.layers[lo].input_shape.clone();
+            let mut out_shape = m.layers[hi - 1].output_shape.clone();
+            if b > 1 {
+                in_shape.insert(0, b);
+                out_shape.insert(0, b);
+            }
+            // Prefer the fused segment module (stage-granular XLA fusion,
+            // ~2x over chaining per-layer modules on CPU — §Perf L2);
+            // fall back to the per-layer chain for older artifacts.
+            if hi - lo > 1 {
+                if let Some(path) = m.segment_hlo_path(lo, hi, b) {
+                    batches.push((b, vec![(path, in_shape, out_shape)]));
+                    continue;
+                }
+            }
+            let mut layers = Vec::new();
+            for idx in lo..hi {
+                let l = &m.layers[idx];
+                let mut li = l.input_shape.clone();
+                let mut lo_ = l.output_shape.clone();
+                if b > 1 {
+                    li.insert(0, b);
+                    lo_.insert(0, b);
+                }
+                layers.push((m.layer_hlo_path(idx, b)?, li, lo_));
+            }
+            batches.push((b, layers));
+        }
+        Ok(StageRunnerSpec { batches })
+    }
+
+    /// Spec for the whole network as one module (kernel-level baseline).
+    pub fn full_network(m: &Manifest, batch_sizes: &[usize]) -> Result<StageRunnerSpec> {
+        let mut batches = Vec::new();
+        for &b in batch_sizes {
+            let mut in_shape = m.input_shape.clone();
+            let mut out_shape = m.output_shape.clone();
+            if b > 1 {
+                in_shape.insert(0, b);
+                out_shape.insert(0, b);
+            }
+            batches.push((b, vec![(m.full_hlo_path(b)?, in_shape, out_shape)]));
+        }
+        Ok(StageRunnerSpec { batches })
+    }
+
+    /// Materialize on the current thread: create a PJRT client and compile
+    /// every executable. Called from inside the stage thread.
+    pub fn build(&self) -> Result<StageRunner> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt client: {e}"))?;
+        let mut by_batch = Vec::new();
+        for (b, layers) in &self.batches {
+            let exes = layers
+                .iter()
+                .map(|(path, i, o)| LayerExecutable::load(&client, path, i.clone(), o.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            by_batch.push((*b, exes));
+        }
+        Ok(StageRunner { _client: client, by_batch })
+    }
+}
+
+/// Thread-local stage runner: owns the client + compiled layer chain.
+pub struct StageRunner {
+    _client: xla::PjRtClient,
+    by_batch: Vec<(usize, Vec<LayerExecutable>)>,
+}
+
+impl StageRunner {
+    pub fn supported_batches(&self) -> Vec<usize> {
+        self.by_batch.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Run a whole batch through this stage's layer chain. Uses the native
+    /// batch-B executables when `imgs.len()` matches one, else falls back
+    /// to per-image batch-1 execution.
+    pub fn run_batch(&self, imgs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run_batch_owned(imgs.to_vec())
+    }
+
+    /// Allocation-lean variant for the pipeline hot path: consumes the
+    /// batch, so per-image chains start from the owned tensor instead of a
+    /// defensive clone (§Perf L3 iteration 1 — see EXPERIMENTS.md).
+    pub fn run_batch_owned(&self, imgs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        if let Some((_, exes)) = self.by_batch.iter().find(|(b, _)| *b == imgs.len() && *b > 1)
+        {
+            let mut x = Tensor::stack(&imgs);
+            drop(imgs);
+            for e in exes {
+                x = e.run(&x)?;
+            }
+            return Ok(x.unstack());
+        }
+        let (_, exes) = self
+            .by_batch
+            .iter()
+            .find(|(b, _)| *b == 1)
+            .context("no batch-1 executables")?;
+        imgs.into_iter()
+            .map(|mut x| {
+                for e in exes {
+                    x = e.run(&x)?;
+                }
+                Ok(x)
+            })
+            .collect()
+    }
+}

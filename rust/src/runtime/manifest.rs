@@ -1,0 +1,236 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (DESIGN.md §3). Parsed with the in-tree JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// GEMM dims recorded for each layer (paper Eq. 4, from the L2 model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ManifestGemm {
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+/// One major layer's artifact record.
+#[derive(Debug, Clone)]
+pub struct ManifestLayer {
+    pub index: usize,
+    pub name: String,
+    pub kind: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// batch size -> HLO file name (relative to the network dir).
+    pub hlo: BTreeMap<usize, String>,
+    pub gemm: ManifestGemm,
+    pub macs: usize,
+    pub params_bytes: usize,
+}
+
+/// Parsed manifest for one network's artifacts.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub layers: Vec<ManifestLayer>,
+    /// Whole-network modules (kernel-level baseline), batch -> file.
+    pub full: BTreeMap<usize, String>,
+    /// Fused segment modules per contiguous layer range [lo, hi), batch ->
+    /// file (stage-granular fusion — EXPERIMENTS.md §Perf L2). Optional:
+    /// absent in older artifacts.
+    pub segments: BTreeMap<(usize, usize), BTreeMap<usize, String>>,
+}
+
+fn batch_map(j: &Json) -> Result<BTreeMap<usize, String>> {
+    let Json::Obj(m) = j else { anyhow::bail!("expected object of batch->file") };
+    let mut out = BTreeMap::new();
+    for (k, v) in m {
+        let b: usize = k.parse().context("batch size key")?;
+        out.insert(b, v.as_str().context("hlo file name")?.to_string());
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let layers_json = j.req("layers")?.as_arr().context("layers array")?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (i, lj) in layers_json.iter().enumerate() {
+            let g = lj.req("gemm")?;
+            let layer = ManifestLayer {
+                index: lj.req("index")?.as_usize().context("index")?,
+                name: lj.req("name")?.as_str().context("name")?.to_string(),
+                kind: lj.req("kind")?.as_str().context("kind")?.to_string(),
+                input_shape: lj.req("input_shape")?.usize_arr().context("input_shape")?,
+                output_shape: lj.req("output_shape")?.usize_arr().context("output_shape")?,
+                hlo: batch_map(lj.req("hlo")?)?,
+                gemm: ManifestGemm {
+                    n: g.req("n")?.as_usize().context("gemm.n")?,
+                    k: g.req("k")?.as_usize().context("gemm.k")?,
+                    m: g.req("m")?.as_usize().context("gemm.m")?,
+                },
+                macs: lj.req("macs")?.as_usize().context("macs")?,
+                params_bytes: lj.req("params_bytes")?.as_usize().context("params_bytes")?,
+            };
+            anyhow::ensure!(layer.index == i, "layer index out of order at {i}");
+            layers.push(layer);
+        }
+
+        let mut segments = BTreeMap::new();
+        if let Some(Json::Obj(seg)) = j.get("segments") {
+            for (k, v) in seg {
+                let (lo, hi) = k
+                    .split_once('-')
+                    .context("segment key format lo-hi")?;
+                segments.insert(
+                    (lo.parse::<usize>()?, hi.parse::<usize>()?),
+                    batch_map(v)?,
+                );
+            }
+        }
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            input_shape: j.req("input_shape")?.usize_arr().context("input_shape")?,
+            output_shape: j.req("output_shape")?.usize_arr().context("output_shape")?,
+            batch_sizes: j.req("batch_sizes")?.usize_arr().context("batch_sizes")?,
+            layers,
+            full: batch_map(j.req("full")?)?,
+            segments,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural checks: shapes chain, files exist on disk.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "no layers");
+        anyhow::ensure!(
+            self.layers[0].input_shape == self.input_shape,
+            "first layer input != network input"
+        );
+        for w in self.layers.windows(2) {
+            anyhow::ensure!(
+                w[0].output_shape == w[1].input_shape,
+                "shape chain broken at layer {}",
+                w[1].index
+            );
+        }
+        for l in &self.layers {
+            for b in &self.batch_sizes {
+                let f = l
+                    .hlo
+                    .get(b)
+                    .with_context(|| format!("layer {} missing batch {b}", l.index))?;
+                let p = self.dir.join(f);
+                anyhow::ensure!(p.is_file(), "missing HLO file {}", p.display());
+            }
+        }
+        for (b, f) in &self.full {
+            anyhow::ensure!(
+                self.dir.join(f).is_file(),
+                "missing full-net HLO for batch {b}"
+            );
+        }
+        for ((lo, hi), files) in &self.segments {
+            anyhow::ensure!(lo < hi && *hi <= self.layers.len(), "bad segment {lo}-{hi}");
+            for f in files.values() {
+                anyhow::ensure!(
+                    self.dir.join(f).is_file(),
+                    "missing segment HLO {}",
+                    f
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Absolute path of a layer's HLO for a batch size.
+    pub fn layer_hlo_path(&self, layer: usize, batch: usize) -> Result<PathBuf> {
+        let l = self.layers.get(layer).context("layer index")?;
+        let f = l.hlo.get(&batch).context("batch size not exported")?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn full_hlo_path(&self, batch: usize) -> Result<PathBuf> {
+        Ok(self.dir.join(self.full.get(&batch).context("batch size not exported")?))
+    }
+
+    /// Fused module covering layers [lo, hi) at `batch`, if exported.
+    /// The whole-network module doubles as the (0, W) segment.
+    pub fn segment_hlo_path(&self, lo: usize, hi: usize, batch: usize) -> Option<PathBuf> {
+        if lo == 0 && hi == self.layers.len() {
+            return self.full.get(&batch).map(|f| self.dir.join(f));
+        }
+        self.segments
+            .get(&(lo, hi))
+            .and_then(|m| m.get(&batch))
+            .map(|f| self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests against real artifacts run in rust/tests/ (integration); here
+    /// we exercise the parser on a synthetic manifest written to tmp.
+    fn write_fake(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in ["l0_b1.hlo.txt", "l0_b4.hlo.txt", "full_b1.hlo.txt", "full_b4.hlo.txt"] {
+            std::fs::write(dir.join(f), "HloModule fake ENTRY tuple()").unwrap();
+        }
+        let manifest = r#"{
+            "name": "fake", "input_shape": [4,4,1], "output_shape": [2],
+            "batch_sizes": [1,4], "seed": 0,
+            "layers": [{
+                "index": 0, "name": "l0", "kind": "conv",
+                "input_shape": [4,4,1], "output_shape": [2],
+                "hlo": {"1": "l0_b1.hlo.txt", "4": "l0_b4.hlo.txt"},
+                "gemm": {"n": 16, "k": 9, "m": 2}, "macs": 288, "params_bytes": 80
+            }],
+            "full": {"1": "full_b1.hlo.txt", "4": "full_b4.hlo.txt"}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("pipeit_manifest_test");
+        write_fake(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "fake");
+        assert_eq!(m.num_layers(), 1);
+        assert_eq!(m.layers[0].gemm, ManifestGemm { n: 16, k: 9, m: 2 });
+        assert!(m.layer_hlo_path(0, 4).unwrap().ends_with("l0_b4.hlo.txt"));
+        assert!(m.layer_hlo_path(0, 2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_fails_validation() {
+        let dir = std::env::temp_dir().join("pipeit_manifest_test2");
+        write_fake(&dir);
+        std::fs::remove_file(dir.join("l0_b4.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

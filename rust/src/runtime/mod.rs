@@ -1,0 +1,10 @@
+//! PJRT runtime: artifact manifests, host tensors, and per-stage compiled
+//! executables (the only module that touches the `xla` crate).
+
+pub mod executor;
+pub mod manifest;
+pub mod tensor;
+
+pub use executor::{LayerExecutable, StageRunner, StageRunnerSpec};
+pub use manifest::{Manifest, ManifestGemm, ManifestLayer};
+pub use tensor::Tensor;

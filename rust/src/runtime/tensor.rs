@@ -1,0 +1,82 @@
+//! Host-side tensor: shape + f32 buffer, the payload flowing between
+//! pipeline stages and into/out of PJRT executables.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Stack `n` equally-shaped tensors into a leading batch dimension.
+    pub fn stack(ts: &[Tensor]) -> Tensor {
+        assert!(!ts.is_empty());
+        let shape = &ts[0].shape;
+        assert!(ts.iter().all(|t| &t.shape == shape), "ragged stack");
+        let mut data = Vec::with_capacity(ts.len() * ts[0].elems());
+        for t in ts {
+            data.extend_from_slice(&t.data);
+        }
+        let mut out_shape = vec![ts.len()];
+        out_shape.extend_from_slice(shape);
+        Tensor { shape: out_shape, data }
+    }
+
+    /// Split a batched tensor back along its leading dimension.
+    pub fn unstack(&self) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty());
+        let b = self.shape[0];
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let stride: usize = inner.iter().product();
+        (0..b)
+            .map(|i| Tensor::new(inner.clone(), self.data[i * stride..(i + 1) * stride].to_vec()))
+            .collect()
+    }
+
+    pub fn shape_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        let back = s.unstack();
+        assert_eq!(back, vec![a, b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged stack")]
+    fn rejects_ragged_stack() {
+        let a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        Tensor::stack(&[a, b]);
+    }
+}

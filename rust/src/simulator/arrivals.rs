@@ -1,0 +1,153 @@
+//! Open-loop (arrival-driven) pipeline simulation — extension beyond the
+//! paper's saturated-stream evaluation, for serving scenarios where frames
+//! arrive at a camera rate and the metric is latency/SLO attainment rather
+//! than peak throughput (the paper's §I continuous-vision motivation).
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Result of an open-loop simulation.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    pub served: usize,
+    pub makespan: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    pub max_queue_wait: f64,
+    /// Fraction of images whose end-to-end latency met the deadline.
+    pub slo_attainment: f64,
+}
+
+/// Deterministic-rate arrivals: one image every `1/rate` seconds.
+pub fn uniform_arrivals(rate_hz: f64, count: usize) -> Vec<f64> {
+    (0..count).map(|i| i as f64 / rate_hz).collect()
+}
+
+/// Poisson arrivals at `rate_hz` (exponential inter-arrival gaps).
+pub fn poisson_arrivals(rate_hz: f64, count: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..count)
+        .map(|_| {
+            t += -rng.uniform().max(1e-12).ln() / rate_hz;
+            t
+        })
+        .collect()
+}
+
+/// Simulate arrival-driven execution through deterministic stages with
+/// infinite admission queue and bounded inter-stage buffers (`cap`).
+/// `deadline` is the per-image end-to-end latency SLO.
+pub fn simulate_open_loop(
+    stage_times: &[f64],
+    arrivals: &[f64],
+    cap: usize,
+    deadline: f64,
+) -> OpenLoopReport {
+    assert!(!stage_times.is_empty());
+    assert!(cap >= 1);
+    let p = stage_times.len();
+    let n = arrivals.len();
+    assert!(n >= 1);
+
+    let mut dep = vec![vec![0.0f64; n]; p];
+    for i in 0..n {
+        for s in 0..p {
+            let ready = if s == 0 {
+                let prev = if i == 0 { 0.0 } else { dep[0][i - 1] };
+                arrivals[i].max(prev)
+            } else {
+                let upstream = dep[s - 1][i];
+                let prev = if i == 0 { 0.0 } else { dep[s][i - 1] };
+                upstream.max(prev)
+            };
+            let unblock = if s + 1 < p && i > cap {
+                dep[s + 1][i - cap - 1]
+            } else {
+                0.0
+            };
+            dep[s][i] = ready.max(unblock) + stage_times[s];
+        }
+    }
+
+    let latencies: Vec<f64> = (0..n).map(|i| dep[p - 1][i] - arrivals[i]).collect();
+    let service: f64 = stage_times.iter().sum();
+    let waits: Vec<f64> = latencies.iter().map(|l| l - service).collect();
+    let met = latencies.iter().filter(|l| **l <= deadline).count();
+
+    OpenLoopReport {
+        served: n,
+        makespan: dep[p - 1][n - 1],
+        p50_latency: stats::percentile(&latencies, 50.0),
+        p95_latency: stats::percentile(&latencies, 95.0),
+        p99_latency: stats::percentile(&latencies, 99.0),
+        max_queue_wait: waits.iter().copied().fold(0.0, f64::max),
+        slo_attainment: met as f64 / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn underloaded_pipeline_has_service_latency() {
+        // Arrivals far slower than the bottleneck: latency == service time.
+        let times = [0.01, 0.02];
+        let arr = uniform_arrivals(5.0, 100); // bottleneck supports 50/s
+        let r = simulate_open_loop(&times, &arr, 2, 0.1);
+        assert!((r.p50_latency - 0.03).abs() < 1e-9);
+        assert!((r.slo_attainment - 1.0).abs() < 1e-12);
+        assert!(r.max_queue_wait < 1e-9);
+    }
+
+    #[test]
+    fn overloaded_pipeline_builds_queue() {
+        // Arrivals at 2x the bottleneck rate: latency grows unboundedly.
+        let times = [0.02];
+        let arr = uniform_arrivals(100.0, 400);
+        let r = simulate_open_loop(&times, &arr, 2, 0.1);
+        assert!(r.p99_latency > r.p50_latency);
+        assert!(r.slo_attainment < 0.5);
+        assert!(r.max_queue_wait > 1.0);
+    }
+
+    #[test]
+    fn poisson_mean_rate_matches() {
+        let arr = poisson_arrivals(50.0, 20_000, 3);
+        let rate = arr.len() as f64 / arr.last().unwrap();
+        assert!((rate - 50.0).abs() < 2.0, "rate {rate}");
+    }
+
+    #[test]
+    fn property_latency_at_least_service() {
+        check(100, |rng| {
+            let p = 1 + rng.index(4);
+            let times: Vec<f64> = (0..p).map(|_| rng.range_f64(0.001, 0.02)).collect();
+            let service: f64 = times.iter().sum();
+            let rate = rng.range_f64(5.0, 200.0);
+            let arr = poisson_arrivals(rate, 50 + rng.index(100), rng.next_u64());
+            let r = simulate_open_loop(&times, &arr, 1 + rng.index(3), 1.0);
+            crate::prop_assert!(
+                r.p50_latency >= service - 1e-12,
+                "latency below service time"
+            );
+            crate::prop_assert!(r.makespan >= *arr.last().unwrap(), "makespan too small");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_slo_monotone_in_deadline() {
+        check(50, |rng| {
+            let times = [rng.range_f64(0.005, 0.02), rng.range_f64(0.005, 0.02)];
+            let arr = poisson_arrivals(60.0, 200, rng.next_u64());
+            let loose = simulate_open_loop(&times, &arr, 2, 1.0).slo_attainment;
+            let tight = simulate_open_loop(&times, &arr, 2, 0.03).slo_attainment;
+            crate::prop_assert!(loose >= tight, "looser deadline must not hurt SLO");
+            Ok(())
+        });
+    }
+}

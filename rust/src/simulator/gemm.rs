@@ -1,0 +1,376 @@
+//! Ground-truth GEMM execution-time model — the simulated "hardware".
+//!
+//! This plays the role of the physical HiKey 970 board: the performance
+//! *predictor* in `perfmodel` (the paper's contribution) is fit against
+//! measurements taken from this module, exactly as the paper fits its
+//! regression against board measurements.
+//!
+//! Mechanisms modelled (all referenced to paper sections):
+//! * im2col + GEMM cost split into compute + operand-streaming + L2-spill
+//!   components (§V-A: "compute time of GEMM is a complex function of the
+//!   memory accesses, arithmetic computations, ...").
+//! * ARM-CL row-chunk dispatch: `n_iter = ceil(N / ts)` iterations dealt to
+//!   `H` threads; quantization + fork/join sync + SCU contention produce the
+//!   speedup concavity of Fig. 11.
+//! * Cross-cluster HMP execution: equal-per-thread (Fig. 3) or ratio-split
+//!   (Fig. 5) distribution with a CCI conflict-miss penalty `1 + f*4r(1-r)`.
+//! * Deterministic per-shape "ruggedness" — alignment/TLB/cache-conflict
+//!   texture that a dimension-linear regression cannot capture, sized to
+//!   reproduce the paper's ~11-13% Table III residuals.
+
+use crate::cnn::layer::{Layer, LayerKind};
+use crate::simulator::platform::{ClusterSpec, CoreType, Platform};
+
+/// Deterministic pseudo-random factor in [1-amp, 1+amp] keyed on the GEMM
+/// shape. Uses SplitMix64-style mixing so it is smooth-free (rugged) but
+/// perfectly reproducible.
+fn ruggedness_factor(n: usize, k: usize, m: usize, core: CoreType, amp: f64) -> f64 {
+    let mut z = (n as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((k as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add((m as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+        .wrapping_add(if core == CoreType::Big { 17 } else { 91 });
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    let unit = (z >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+    1.0 + amp * (2.0 * unit - 1.0)
+}
+
+/// Number of ARM-CL iterations for a layer's GEMM (row chunks of the image
+/// matrix). FC layers have N = 1, where ARM-CL parallelizes the GEMV along
+/// the output dimension instead — modelled as chunks of M.
+pub fn n_iterations(layer: &Layer, tile_rows: usize) -> usize {
+    let g = layer.gemm();
+    let rows = if layer.kind == LayerKind::Fc { g.m } else { g.n };
+    rows.div_ceil(tile_rows).max(1)
+}
+
+/// Single-core execution time (seconds) of one major layer on a cluster's
+/// core type. This is "the board measurement" for 1 core.
+pub fn layer_time_1core(platform: &Platform, layer: &Layer, core: CoreType) -> f64 {
+    let c = platform.cluster(core);
+    let g = layer.gemm();
+
+    let compute_ns = g.macs() as f64 * c.mac_ns;
+
+    // Operand traffic: image matrix is produced by im2col (read input, write
+    // N*K), filter matrix streamed, result written back (col2im).
+    let bytes = (g.n * g.k + g.k * g.m + 2 * g.n * g.m) as f64 * 4.0
+        + layer.input_bytes() as f64;
+    let mem_ns = bytes * c.mem_ns_per_byte;
+
+    // Working-set spill past the cluster L2: the portion that cannot be
+    // kept resident is re-streamed at far-memory cost.
+    let ws = layer.gemm_bytes() as f64;
+    let l2 = c.l2_bytes as f64;
+    let spill_ns = if ws > l2 { (ws - l2) * c.spill_ns_per_byte } else { 0.0 };
+
+    // Depthwise layers run many tiny GEMMs: poor NEON utilization, extra
+    // per-channel dispatch (§II; MobileNet's DW nodes are known to be
+    // inefficient in ARM-CL v18).
+    let kind_factor = match layer.kind {
+        LayerKind::DwConv => 2.2,
+        LayerKind::Fc | LayerKind::Conv => 1.0,
+    };
+
+    let rug = ruggedness_factor(g.n, g.k, g.m, core, platform.ruggedness);
+    let work_ns = (compute_ns + mem_ns + spill_ns) * kind_factor * rug;
+    (work_ns + c.dispatch_us * 1e3) * 1e-9
+}
+
+/// Multi-core (intra-cluster) execution time (seconds) of one layer using
+/// `h` homogeneous cores: ARM-CL deals `n_iter` row chunks to `h` threads.
+pub fn layer_time(platform: &Platform, layer: &Layer, core: CoreType, h: usize) -> f64 {
+    assert!(h >= 1, "need at least one core");
+    let c = platform.cluster(core);
+    assert!(h <= c.cores, "{h} cores requested on a {}-core cluster", c.cores);
+    if h == 1 {
+        return layer_time_1core(platform, layer, core);
+    }
+
+    let t1 = layer_time_1core(platform, layer, core);
+    let dispatch_s = c.dispatch_us * 1e-6;
+    let work = t1 - dispatch_s; // parallelizable portion
+
+    let n_iter = n_iterations(layer, platform.tile_rows);
+    let per_iter = work / n_iter as f64;
+    // Slowest thread gets ceil(n_iter / h) chunks (equal static dealing).
+    let chunks = n_iter.div_ceil(h) as f64;
+    // SCU pressure: parallel L2 access contention grows with active cores.
+    let contention = 1.0 + c.contention * (h as f64 - 1.0);
+    let sync_s = c.sync_us * 1e-6 * (h as f64 - 1.0).sqrt();
+
+    dispatch_s + per_iter * chunks * contention + sync_s
+}
+
+/// Execution time of a whole set of layers on one stage config (seconds)
+/// — the paper's `T_{L_i}^{P_i}` (Eq. 10).
+pub fn layers_time(
+    platform: &Platform,
+    layers: &[Layer],
+    core: CoreType,
+    h: usize,
+) -> f64 {
+    layers.iter().map(|l| layer_time(platform, l, core, h)).sum()
+}
+
+/// Kernel-level Heterogeneous Multi-Processing: one kernel split across
+/// `hb` Big + `hs` Small cores with *equal* per-thread chunks (Fig. 3).
+/// Cross-cluster conflict misses are served over CCI, inflating the time by
+/// `1 + cci_factor * 4 r (1-r)` where `r` is the Big-side share of work.
+pub fn layer_time_hmp(platform: &Platform, layer: &Layer, hb: usize, hs: usize) -> f64 {
+    assert!(hb + hs >= 1);
+    if hs == 0 {
+        return layer_time(platform, layer, CoreType::Big, hb);
+    }
+    if hb == 0 {
+        return layer_time(platform, layer, CoreType::Small, hs);
+    }
+
+    let n_iter = n_iterations(layer, platform.tile_rows);
+    // Fractional chunk accounting: averaged over a whole network the
+    // per-kernel ceil() quantization washes out, and fractional dealing
+    // keeps the Fig. 3 recovery monotone as Small cores are added.
+    let chunks_each = n_iter as f64 / (hb + hs) as f64;
+
+    let t1b = layer_time_1core(platform, layer, CoreType::Big);
+    let t1s = layer_time_1core(platform, layer, CoreType::Small);
+    let per_iter_b = (t1b - platform.big.dispatch_us * 1e-6) / n_iter as f64;
+    let per_iter_s = (t1s - platform.small.dispatch_us * 1e-6) / n_iter as f64;
+
+    // Equal dealing => Big share of the work r = hb/(hb+hs).
+    let r = hb as f64 / (hb + hs) as f64;
+    let cci = 1.0 + platform.cci_factor * 4.0 * r * (1.0 - r);
+
+    let cont_b = 1.0 + platform.big.contention * (hb as f64 - 1.0);
+    let cont_s = 1.0 + platform.small.contention * (hs as f64 - 1.0);
+    let tb = per_iter_b * chunks_each * cont_b;
+    let ts = per_iter_s * chunks_each * cont_s;
+
+    let dispatch = platform.big.dispatch_us.max(platform.small.dispatch_us) * 1e-6;
+    let sync = (platform.big.sync_us + platform.small.sync_us) * 1e-6;
+    dispatch + tb.max(ts) * cci + sync + platform.cci_fixed_us * 1e-6
+}
+
+/// Kernel-level HMP with a *disproportionate* iteration split (Fig. 5):
+/// fraction `ratio` of iterations to the Big cluster (dealt over its `hb`
+/// cores), remainder to Small.
+pub fn layer_time_hmp_ratio(
+    platform: &Platform,
+    layer: &Layer,
+    hb: usize,
+    hs: usize,
+    ratio: f64,
+) -> f64 {
+    assert!((0.0..=1.0).contains(&ratio));
+    if ratio >= 1.0 || hs == 0 {
+        return layer_time(platform, layer, CoreType::Big, hb);
+    }
+    if ratio <= 0.0 || hb == 0 {
+        return layer_time(platform, layer, CoreType::Small, hs);
+    }
+
+    let n_iter = n_iterations(layer, platform.tile_rows) as f64;
+    let t1b = layer_time_1core(platform, layer, CoreType::Big);
+    let t1s = layer_time_1core(platform, layer, CoreType::Small);
+    let per_iter_b = (t1b - platform.big.dispatch_us * 1e-6) / n_iter;
+    let per_iter_s = (t1s - platform.small.dispatch_us * 1e-6) / n_iter;
+
+    let iters_b = n_iter * ratio / hb as f64;
+    let iters_s = n_iter * (1.0 - ratio) / hs as f64;
+    let cont_b = 1.0 + platform.big.contention * (hb as f64 - 1.0);
+    let cont_s = 1.0 + platform.small.contention * (hs as f64 - 1.0);
+
+    let cci = 1.0 + platform.cci_factor * 4.0 * ratio * (1.0 - ratio);
+    let dispatch = platform.big.dispatch_us.max(platform.small.dispatch_us) * 1e-6;
+    let sync = (platform.big.sync_us + platform.small.sync_us) * 1e-6;
+    dispatch
+        + (per_iter_b * iters_b * cont_b).max(per_iter_s * iters_s * cont_s) * cci
+        + sync
+        + platform.cci_fixed_us * 1e-6
+}
+
+/// Per-image forward-pass time (seconds) of a whole network with
+/// kernel-level splitting on a homogeneous cluster (the paper's baseline).
+pub fn network_time(platform: &Platform, layers: &[Layer], core: CoreType, h: usize) -> f64 {
+    layers_time(platform, layers, core, h)
+}
+
+/// Per-image forward-pass time with kernel-level HMP over both clusters.
+pub fn network_time_hmp(platform: &Platform, layers: &[Layer], hb: usize, hs: usize) -> f64 {
+    layers.iter().map(|l| layer_time_hmp(platform, l, hb, hs)).sum()
+}
+
+/// Convenience: throughput (images/s) from a per-image time.
+pub fn throughput(t_image: f64) -> f64 {
+    1.0 / t_image
+}
+
+/// Capability ordering check helper (paper Eq. 11): mean layer time over a
+/// network for a stage config — smaller is more capable.
+pub fn mean_layer_time(
+    platform: &Platform,
+    layers: &[Layer],
+    core: CoreType,
+    h: usize,
+) -> f64 {
+    layers_time(platform, layers, core, h) / layers.len() as f64
+}
+
+#[allow(dead_code)]
+fn cluster_of(platform: &Platform, core: CoreType) -> &ClusterSpec {
+    platform.cluster(core)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+
+    fn plat() -> Platform {
+        Platform::hikey970()
+    }
+
+    fn big_conv() -> Layer {
+        Layer::conv("c", 56, 56, 64, 3, 64, 1, 1)
+    }
+
+    #[test]
+    fn more_cores_is_faster_within_cluster() {
+        let p = plat();
+        let l = big_conv();
+        for core in [CoreType::Big, CoreType::Small] {
+            let mut prev = f64::INFINITY;
+            for h in 1..=4 {
+                let t = layer_time(&p, &l, core, h);
+                assert!(t < prev, "{core:?} h={h}: {t} !< {prev}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_is_concave() {
+        // Fig. 11: speedup gains shrink with each added core.
+        let p = plat();
+        let l = big_conv();
+        let t1 = layer_time(&p, &l, CoreType::Big, 1);
+        let s: Vec<f64> = (1..=4)
+            .map(|h| t1 / layer_time(&p, &l, CoreType::Big, h))
+            .collect();
+        let d1 = s[1] - s[0];
+        let d2 = s[2] - s[1];
+        let d3 = s[3] - s[2];
+        assert!(d1 > d2 && d2 > d3, "increments {d1} {d2} {d3}");
+        assert!(s[3] < 4.0, "superlinear speedup is wrong");
+    }
+
+    #[test]
+    fn big_faster_than_small() {
+        let p = plat();
+        let l = big_conv();
+        for h in 1..=4 {
+            assert!(
+                layer_time(&p, &l, CoreType::Big, h)
+                    < layer_time(&p, &l, CoreType::Small, h)
+            );
+        }
+    }
+
+    #[test]
+    fn eq11_capability_ordering() {
+        // T^(B,4) < T^(B,3) < T^(B,2) <~ T^(s,4) < T^(s,3) < T^(s,2) <~
+        // T^(B,1) < T^(s,1) — checked as mean layer time over ResNet50.
+        let p = plat();
+        let net = zoo::resnet50();
+        let t = |c, h| mean_layer_time(&p, &net.layers, c, h);
+        assert!(t(CoreType::Big, 4) < t(CoreType::Big, 3));
+        assert!(t(CoreType::Big, 3) < t(CoreType::Big, 2));
+        assert!(t(CoreType::Small, 4) < t(CoreType::Small, 3));
+        assert!(t(CoreType::Small, 3) < t(CoreType::Small, 2));
+        assert!(t(CoreType::Small, 2) < t(CoreType::Big, 1) * 1.6); // <~
+        assert!(t(CoreType::Big, 1) < t(CoreType::Small, 1));
+    }
+
+    #[test]
+    fn fig3_hmp_collapse() {
+        // Adding the first Small core to a 4-Big kernel-level split must
+        // REDUCE throughput; 4B+4s must not beat 4B.
+        let p = plat();
+        for net in zoo::all_networks() {
+            let t_4b = network_time(&p, &net.layers, CoreType::Big, 4);
+            let t_4b1s = network_time_hmp(&p, &net.layers, 4, 1);
+            let t_4b4s = network_time_hmp(&p, &net.layers, 4, 4);
+            assert!(t_4b1s > t_4b, "{}: 4B+1s should drop", net.name);
+            assert!(t_4b4s > t_4b * 0.99, "{}: 4B+4s should not beat 4B", net.name);
+        }
+    }
+
+    #[test]
+    fn fig5_no_ratio_beats_big_only() {
+        let p = plat();
+        for net in zoo::all_networks() {
+            let t_big: f64 = network_time(&p, &net.layers, CoreType::Big, 4);
+            let best_ratio = (1..20)
+                .map(|i| {
+                    let r = i as f64 / 20.0;
+                    net.layers
+                        .iter()
+                        .map(|l| layer_time_hmp_ratio(&p, l, 4, 4, r))
+                        .sum::<f64>()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                best_ratio > t_big * 0.97,
+                "{}: some ratio beats Big-only materially",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn ruggedness_is_deterministic_and_bounded() {
+        let f1 = ruggedness_factor(100, 200, 300, CoreType::Big, 0.1);
+        let f2 = ruggedness_factor(100, 200, 300, CoreType::Big, 0.1);
+        assert_eq!(f1, f2);
+        assert!((0.9..=1.1).contains(&f1));
+        let g = ruggedness_factor(101, 200, 300, CoreType::Big, 0.1);
+        assert_ne!(f1, g);
+    }
+
+    #[test]
+    fn fc_layers_parallelize_along_m() {
+        let p = plat();
+        let fc = Layer::fc("fc6", 9216, 4096);
+        assert!(n_iterations(&fc, p.tile_rows) > 1);
+        assert!(
+            layer_time(&p, &fc, CoreType::Big, 4) < layer_time(&p, &fc, CoreType::Big, 1)
+        );
+    }
+
+    #[test]
+    fn table4_homogeneous_calibration_shape() {
+        // Big-cluster throughput ordering must match Table IV:
+        // MobileNet > SqueezeNet > AlexNet ~ GoogLeNet > ResNet50,
+        // and Big/Small ratios in the paper's 2-5.5x range.
+        let p = plat();
+        let tp = |name: &str, c, h| {
+            let net = zoo::by_name(name).unwrap();
+            throughput(network_time(&p, &net.layers, c, h))
+        };
+        let b = |n: &str| tp(n, CoreType::Big, 4);
+        let s = |n: &str| tp(n, CoreType::Small, 4);
+        assert!(b("mobilenet") > b("squeezenet"));
+        assert!(b("squeezenet") > b("alexnet"));
+        assert!(b("alexnet") > b("resnet50"));
+        assert!(b("googlenet") > b("resnet50"));
+        for n in ["alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"] {
+            let ratio = b(n) / s(n);
+            assert!(
+                (1.8..6.5).contains(&ratio),
+                "{n}: Big/Small ratio {ratio:.2} out of the paper's band"
+            );
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! big.LITTLE hardware substrate (DESIGN.md §1): calibrated analytical GEMM
+//! cost model, cluster/CCI platform description, power model, and a
+//! discrete-event pipeline simulator. This module plays the role of the
+//! paper's HiKey 970 board — `perfmodel` (the paper's predictor) is fit
+//! against "measurements" taken from here.
+
+pub mod arrivals;
+pub mod gemm;
+pub mod pipeline_sim;
+pub mod platform;
+pub mod power;
+
+pub use arrivals::{poisson_arrivals, simulate_open_loop, uniform_arrivals, OpenLoopReport};
+pub use gemm::{
+    layer_time, layer_time_1core, layer_time_hmp, layer_time_hmp_ratio, layers_time,
+    mean_layer_time, network_time, network_time_hmp, throughput,
+};
+pub use pipeline_sim::{simulate, steady_state_throughput, SimReport};
+pub use platform::{ClusterSpec, CoreType, Platform};
+pub use power::{ClusterActivity, PowerModel};

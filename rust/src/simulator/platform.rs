@@ -1,0 +1,169 @@
+//! Platform description: a two-cluster single-ISA heterogeneous multi-core
+//! (ARM big.LITTLE), default-calibrated to the paper's HiKey 970 testbed
+//! (Hi3670: 4x Cortex-A73 @2.4 GHz + 2 MB L2, 4x Cortex-A53 @1.8 GHz +
+//! 1 MB L2, CCI-coherent).
+//!
+//! The GEMM cost coefficients are calibrated so that whole-network
+//! throughputs on the homogeneous clusters land near the paper's Table IV
+//! (see `simulator::gemm` tests and EXPERIMENTS.md); the *microarchitectural
+//! mechanisms* (L2 spill, SCU-scaling concavity, CCI inter-cluster penalty)
+//! are modelled structurally, not fitted per-network.
+
+/// Core type of a cluster (the paper's B / s notation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CoreType {
+    Big,
+    Small,
+}
+
+impl CoreType {
+    pub fn letter(self) -> char {
+        match self {
+            CoreType::Big => 'B',
+            CoreType::Small => 's',
+        }
+    }
+
+    pub fn parse(c: char) -> Option<CoreType> {
+        match c {
+            'B' | 'b' => Some(CoreType::Big),
+            's' | 'S' => Some(CoreType::Small),
+            _ => None,
+        }
+    }
+}
+
+/// One homogeneous cluster and its cost coefficients.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub core_type: CoreType,
+    pub cores: usize,
+    pub freq_ghz: f64,
+    /// Shared L2 capacity (bytes) — drives the working-set spill term.
+    pub l2_bytes: usize,
+    /// Effective ns per MAC per core in the GEMM inner loop (includes the
+    /// achievable NEON efficiency, i.e. not theoretical peak).
+    pub mac_ns: f64,
+    /// Effective ns per byte for operand streaming (im2col + GEMM traffic).
+    pub mem_ns_per_byte: f64,
+    /// Extra ns per byte once the GEMM working set spills past L2.
+    pub spill_ns_per_byte: f64,
+    /// Fixed kernel dispatch overhead (us) per major layer.
+    pub dispatch_us: f64,
+    /// Per-extra-thread fork/join cost (us) of the ARM-CL thread pool.
+    pub sync_us: f64,
+    /// Intra-cluster memory contention per extra active core (SCU pressure):
+    /// multiplies the memory component by `1 + contention*(H-1)`.
+    pub contention: f64,
+}
+
+/// Whole platform: Big + Small clusters and the CCI interconnect.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub big: ClusterSpec,
+    pub small: ClusterSpec,
+    /// Peak multiplicative inflation of execution time when a single kernel
+    /// straddles both clusters (conflict misses served over CCI). Applied as
+    /// `1 + cci_factor * 4r(1-r)` where `r` is the Big-cluster work share.
+    pub cci_factor: f64,
+    /// Fixed per-kernel cross-cluster coordination cost (us).
+    pub cci_fixed_us: f64,
+    /// ARM-CL GEMM row-tile size `ts` (rows of the image matrix per
+    /// iteration); `n_iter = ceil(N / ts)`.
+    pub tile_rows: usize,
+    /// Deterministic "microarchitectural ruggedness" amplitude: per-shape
+    /// effects (alignment, TLB, cache conflicts) that a dimension-linear
+    /// model cannot capture. 0.10 ≈ the paper's observed ~11-13% residual.
+    pub ruggedness: f64,
+}
+
+impl Platform {
+    /// The paper's testbed.
+    pub fn hikey970() -> Platform {
+        Platform {
+            name: "hikey970".to_string(),
+            big: ClusterSpec {
+                core_type: CoreType::Big,
+                cores: 4,
+                freq_ghz: 2.4,
+                l2_bytes: 2 * 1024 * 1024,
+                // A73: ~9.6 GMAC/s peak/core; ~45% achievable in ARM-CL
+                // GEMM => ~0.23 ns/MAC.
+                mac_ns: 0.23,
+                mem_ns_per_byte: 0.11,
+                spill_ns_per_byte: 0.55,
+                dispatch_us: 30.0,
+                sync_us: 18.0,
+                contention: 0.045,
+            },
+            small: ClusterSpec {
+                core_type: CoreType::Small,
+                cores: 4,
+                freq_ghz: 1.8,
+                l2_bytes: 1024 * 1024,
+                // A53 in-order, dual-issue NEON: ~3.6 GMAC/s peak/core,
+                // lower achievable efficiency => ~0.48 ns/MAC. The memory
+                // system is proportionally much weaker than the compute
+                // (half the L2, slimmer interconnect ports), which is what
+                // makes the FC-heavy AlexNet collapse on this cluster
+                // (paper Table IV: 1.5 imgs/s, the largest Big/Small gap).
+                mac_ns: 0.48,
+                mem_ns_per_byte: 0.40,
+                spill_ns_per_byte: 2.6,
+                dispatch_us: 40.0,
+                sync_us: 25.0,
+                contention: 0.06,
+            },
+            cci_factor: 0.65,
+            cci_fixed_us: 150.0,
+            tile_rows: 16,
+            ruggedness: 0.06,
+        }
+    }
+
+    pub fn cluster(&self, t: CoreType) -> &ClusterSpec {
+        match t {
+            CoreType::Big => &self.big,
+            CoreType::Small => &self.small,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.big.cores + self.small.cores
+    }
+
+    /// All homogeneous stage configurations: (B,1)..(B,H_B), (s,1)..(s,H_s)
+    /// — the paper's `H_B + H_s` possible pipeline-stage configs.
+    pub fn stage_configs(&self) -> Vec<(CoreType, usize)> {
+        let mut v = Vec::new();
+        for n in 1..=self.big.cores {
+            v.push((CoreType::Big, n));
+        }
+        for n in 1..=self.small.cores {
+            v.push((CoreType::Small, n));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hikey_shape() {
+        let p = Platform::hikey970();
+        assert_eq!(p.total_cores(), 8);
+        assert_eq!(p.big.l2_bytes, 2 * p.small.l2_bytes);
+        assert!(p.big.mac_ns < p.small.mac_ns);
+        assert_eq!(p.stage_configs().len(), 8);
+    }
+
+    #[test]
+    fn core_type_letters() {
+        assert_eq!(CoreType::Big.letter(), 'B');
+        assert_eq!(CoreType::parse('s'), Some(CoreType::Small));
+        assert_eq!(CoreType::parse('x'), None);
+    }
+}

@@ -1,0 +1,131 @@
+//! Criterion-style micro-bench harness (criterion is not in the offline
+//! vendor set). Warmup + timed iterations, reports mean/p50/p95 per bench,
+//! used by the `cargo bench` targets (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "bench {:<44} iters={:<6} mean={:>12?} p50={:>12?} p95={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        )
+    }
+}
+
+/// Bench runner: calibrates an iteration count to roughly hit the time
+/// budget, then measures per-iteration latency.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(600),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration, max_iters: usize) -> Self {
+        Bencher { warmup, budget, max_iters, results: Vec::new() }
+    }
+
+    /// Quick harness for unit-ish benches in CI: tiny budget.
+    pub fn quick() -> Self {
+        Bencher::new(Duration::from_millis(10), Duration::from_millis(80), 1000)
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and single-shot calibration.
+        let cal_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = cal_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            p50: Duration::from_secs_f64(stats::percentile(&samples, 50.0)),
+            p95: Duration::from_secs_f64(stats::percentile(&samples, 95.0)),
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+}
+
+/// Opaque value sink that defeats dead-code elimination (std black_box is
+/// stable since 1.66; wrapped here so bench code reads uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::quick();
+        let r = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean.as_nanos() > 0);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn slower_code_measures_slower() {
+        let mut b = Bencher::quick();
+        let fast = b.bench("fast", || {
+            black_box((0..10u64).sum::<u64>());
+        }).mean;
+        let slow = b.bench("slow", || {
+            // black_box on the bound + accumulator defeats const-folding
+            // in release builds.
+            let n = black_box(200_000u64);
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(black_box(i).wrapping_mul(3));
+            }
+            black_box(acc);
+        }).mean;
+        assert!(slow > fast);
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal command-line argument parsing (no clap in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, which covers the whole `pipeit` CLI surface.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `bool_flags` lists option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.options.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["measured", "verbose"])
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("explore --net resnet50 --images 50");
+        assert_eq!(a.positional, vec!["explore"]);
+        assert_eq!(a.get("net"), Some("resnet50"));
+        assert_eq!(a.get_usize("images", 0).unwrap(), 50);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("simulate --net=alexnet --measured --pipeline B4-s4");
+        assert_eq!(a.get("net"), Some("alexnet"));
+        assert!(a.has_flag("measured"));
+        assert_eq!(a.get("pipeline"), Some("B4-s4"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --verbose");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --images many");
+        assert!(a.get_usize("images", 1).is_err());
+    }
+}

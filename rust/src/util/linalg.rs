@@ -1,0 +1,205 @@
+//! Small dense linear algebra for the performance-model regressions.
+//!
+//! The paper fits Eq. (5)–(8) with ordinary least squares; the design
+//! matrices here are tiny (8 features), so a plain normal-equation solve with
+//! partial-pivot Gaussian elimination is exact enough and dependency-free.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, a: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, a: rows.iter().flatten().copied().collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.a[i * self.cols + j]
+    }
+
+    /// self^T * self  (Gram matrix).
+    pub fn gram(&self) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for i in 0..self.cols {
+            for j in i..self.cols {
+                let mut s = 0.0;
+                for r in 0..self.rows {
+                    s += self.at(r, i) * self.at(r, j);
+                }
+                *g.at_mut(i, j) = s;
+                *g.at_mut(j, i) = s;
+            }
+        }
+        g
+    }
+
+    /// self^T * y.
+    pub fn t_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c] += self.at(r, c) * y[r];
+            }
+        }
+        out
+    }
+}
+
+/// Solve A x = b via Gaussian elimination with partial pivoting.
+/// Returns `None` for (numerically) singular systems.
+pub fn solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+
+    for col in 0..n {
+        // Pivot.
+        let (piv, piv_val) = (col..n)
+            .map(|r| (r, m.at(r, col).abs()))
+            .max_by(|p, q| p.1.total_cmp(&q.1))?;
+        if piv_val < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m.at(col, j);
+                *m.at_mut(col, j) = m.at(piv, j);
+                *m.at_mut(piv, j) = tmp;
+            }
+            x.swap(col, piv);
+        }
+        // Eliminate below.
+        for r in col + 1..n {
+            let f = m.at(r, col) / m.at(col, col);
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                *m.at_mut(r, j) -= f * m.at(col, j);
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // Back-substitute.
+    for col in (0..n).rev() {
+        x[col] /= m.at(col, col);
+        for r in 0..col {
+            let f = m.at(r, col);
+            x[r] -= f * x[col];
+            *m.at_mut(r, col) = 0.0;
+        }
+    }
+    Some(x)
+}
+
+/// Ordinary least squares: minimize ||X beta - y||^2.
+/// Adds a tiny ridge (1e-9 * trace/n) for numerical robustness on
+/// near-collinear designs (e.g. interaction terms over a coarse grid).
+pub fn ols(x: &Mat, y: &[f64]) -> Option<Vec<f64>> {
+    let mut g = x.gram();
+    let trace: f64 = (0..g.rows).map(|i| g.at(i, i)).sum();
+    let ridge = 1e-9 * trace / g.rows.max(1) as f64;
+    for i in 0..g.rows {
+        *g.at_mut(i, i) += ridge;
+    }
+    let xty = x.t_vec(y);
+    solve(&g, &xty)
+}
+
+/// Weighted least squares: minimize sum_i w_i^2 (x_i . beta - y_i)^2.
+/// With `w_i = 1 / y_i` this minimizes *relative* error, which is the
+/// objective the paper's percentage-error metric implies (measurements span
+/// five orders of magnitude across the micro-benchmark grid).
+pub fn wls(x: &Mat, y: &[f64], w: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(x.rows, y.len());
+    assert_eq!(x.rows, w.len());
+    let mut xs = x.clone();
+    let mut ys = y.to_vec();
+    for r in 0..x.rows {
+        for c in 0..x.cols {
+            *xs.at_mut(r, c) *= w[r];
+        }
+        ys[r] *= w[r];
+    }
+    ols(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_identity() {
+        let a = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(solve(&a, &[3.0, 4.0]).unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Leading zero forces a row swap.
+        let a = Mat::from_rows(&[vec![0.0, 2.0], vec![3.0, 1.0]]);
+        let x = solve(&a, &[4.0, 5.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_is_none() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn ols_recovers_known_coefficients() {
+        // y = 2 + 3*x1 - 0.5*x2 with noise-free data.
+        let mut rng = Rng::new(5);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..50 {
+            let x1 = rng.range_f64(0.0, 10.0);
+            let x2 = rng.range_f64(-5.0, 5.0);
+            rows.push(vec![1.0, x1, x2]);
+            ys.push(2.0 + 3.0 * x1 - 0.5 * x2);
+        }
+        let beta = ols(&Mat::from_rows(&rows), &ys).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-6);
+        assert!((beta[1] - 3.0).abs() < 1e-6);
+        assert!((beta[2] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ols_with_noise_is_close() {
+        let mut rng = Rng::new(9);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..500 {
+            let x1 = rng.range_f64(0.0, 10.0);
+            rows.push(vec![1.0, x1]);
+            ys.push(1.0 + 4.0 * x1 + rng.normal_with(0.0, 0.1));
+        }
+        let beta = ols(&Mat::from_rows(&rows), &ys).unwrap();
+        assert!((beta[0] - 1.0).abs() < 0.1);
+        assert!((beta[1] - 4.0).abs() < 0.05);
+    }
+}

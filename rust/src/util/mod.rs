@@ -1,0 +1,12 @@
+//! In-tree substrates: the offline build environment vendors only the `xla`
+//! crate's dependency closure, so JSON, RNG, linear algebra, CLI parsing,
+//! the bench harness and property testing are implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

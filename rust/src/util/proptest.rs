@@ -1,0 +1,68 @@
+//! Tiny property-testing helper (proptest is not in the offline vendor set).
+//!
+//! `check(cases, f)` runs `f` against `cases` independently-seeded RNGs and
+//! reports the failing seed so a failure reproduces with `check_seed`.
+
+use crate::util::rng::Rng;
+
+/// Run a property `f(rng)` for `cases` random cases. `f` returns
+/// `Err(description)` on violation; panics with the offending seed.
+pub fn check<F>(cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E37_79B9));
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single seed (debugging aid for failures reported by `check`).
+pub fn check_seed<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E37_79B9));
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assert helper returning the Result shape `check` expects.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(25, |rng| {
+            n += 1;
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.5, "got {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! CLI smoke tests: every subcommand runs and prints what it promises.
+
+use std::process::Command;
+
+fn pipeit(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pipeit"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = pipeit(&[]);
+    assert!(ok);
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = pipeit(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn count_prints_design_space() {
+    let (ok, text) = pipeit(&["count"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("pipelines on 4B+4s: 64"), "{text}");
+    assert!(text.contains("mobilenet"));
+}
+
+#[test]
+fn explore_resnet() {
+    let (ok, text) = pipeit(&["explore", "--net", "resnet50"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("pipeline"));
+    assert!(text.contains("imgs/s"));
+}
+
+#[test]
+fn explore_unknown_net_fails() {
+    let (ok, text) = pipeit(&["explore", "--net", "vgg19"]);
+    assert!(!ok);
+    assert!(text.contains("unknown network"));
+}
+
+#[test]
+fn simulate_with_pipeline() {
+    let (ok, text) = pipeit(&[
+        "simulate", "--net", "resnet50", "--pipeline", "B4-s2-s2", "--images", "100",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sim tp"));
+    assert!(text.contains("bottleneck"));
+}
+
+#[test]
+fn simulate_rejects_over_budget_pipeline() {
+    let (ok, text) = pipeit(&["simulate", "--net", "alexnet", "--pipeline", "B4-B1-s4"]);
+    assert!(!ok);
+    assert!(text.contains("core budget"), "{text}");
+}
+
+#[test]
+fn predict_prints_matrix() {
+    let (ok, text) = pipeit(&["predict", "--net", "alexnet"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("conv1"));
+    assert!(text.contains("fc8"));
+}
+
+#[test]
+fn platform_flag_is_honoured() {
+    let (ok, text) = pipeit(&[
+        "count",
+        "--platform",
+        "configs/asymmetric_2big_6small.json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("pipelines on 2B+6s"), "{text}");
+}
+
+#[test]
+fn serve_serial_on_artifacts() {
+    // Only when artifacts exist (built by `make artifacts`).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/pipenet_micro/manifest.json");
+    if !dir.is_file() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (ok, text) = pipeit(&[
+        "serve", "--artifacts", "artifacts/pipenet_micro", "--images", "6", "--serial",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("throughput="), "{text}");
+}

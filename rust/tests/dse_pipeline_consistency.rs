@@ -1,0 +1,100 @@
+//! Integration: perfmodel -> DSE -> discrete-event simulator consistency
+//! across the whole framework (no artifacts required).
+
+use pipeit::cnn::zoo;
+use pipeit::config::Config;
+use pipeit::dse;
+use pipeit::perfmodel::{PerfModel, TimeMatrix};
+use pipeit::simulator::{pipeline_sim, CoreType};
+
+#[test]
+fn dse_point_survives_des_simulation() {
+    // For every network: the Eq. 12 throughput of the chosen design point
+    // must match the discrete-event simulation within 2% at 1000 images.
+    let cfg = Config::default();
+    for net in zoo::all_networks() {
+        let tm = TimeMatrix::measured(&cfg.platform, &net);
+        let pt = dse::explore(&tm, 4, 4);
+        let times = dse::point_stage_times(&tm, &pt);
+        let sim = pipeline_sim::simulate(&times, 1000, 2);
+        let rel = (sim.throughput - pt.throughput).abs() / pt.throughput;
+        assert!(rel < 0.02, "{}: eq12 {} vs sim {}", net.name, pt.throughput, sim.throughput);
+    }
+}
+
+#[test]
+fn predicted_and_measured_dse_agree_on_shape() {
+    // Predicted-time DSE must pick a config whose *measured* performance
+    // still beats both homogeneous clusters (the paper's end-to-end story).
+    let cfg = Config::default();
+    let model = PerfModel::fit(&cfg.platform);
+    for net in zoo::all_networks() {
+        let tm_pred = TimeMatrix::predicted(&cfg.platform, &model, &net);
+        let tm_meas = TimeMatrix::measured(&cfg.platform, &net);
+        let pt = dse::explore(&tm_pred, 4, 4);
+        let alloc = dse::work_flow(&tm_meas, &pt.pipeline, tm_meas.num_layers());
+        let tp = dse::pipeline_throughput(&tm_meas, &pt.pipeline, &alloc);
+        let b4 = tm_meas.config_index(CoreType::Big, 4).unwrap();
+        let s4 = tm_meas.config_index(CoreType::Small, 4).unwrap();
+        let tp_b4 = 1.0 / tm_meas.range(0, tm_meas.num_layers(), b4);
+        let tp_s4 = 1.0 / tm_meas.range(0, tm_meas.num_layers(), s4);
+        assert!(
+            tp > tp_b4.max(tp_s4),
+            "{}: predicted-config tp {tp:.2} vs B4 {tp_b4:.2} / s4 {tp_s4:.2}",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn platform_retargeting_changes_design_points() {
+    // The config system must actually retarget the DSE: an asymmetric
+    // 2-big/6-small platform must produce valid (and generally different)
+    // pipelines within its core budget.
+    let cfg =
+        Config::load(std::path::Path::new("configs/asymmetric_2big_6small.json")).unwrap();
+    assert_eq!(cfg.platform.big.cores, 2);
+    assert_eq!(cfg.platform.small.cores, 6);
+    for net in zoo::all_networks() {
+        let tm = TimeMatrix::measured(&cfg.platform, &net);
+        let pt = dse::explore(&tm, 2, 6);
+        assert!(pt.pipeline.is_valid(2, 6), "{}", net.name);
+        assert!(pt.allocation.is_partition(tm.num_layers()));
+        assert!(pt.pipeline.cores_used(CoreType::Big) <= 2);
+    }
+}
+
+#[test]
+fn real_pipeline_executor_matches_des_on_synthetic_stages() {
+    // Drive the REAL thread pipeline with sleep-stages whose durations come
+    // from a DSE point, and compare wall-clock throughput against the DES
+    // prediction (coarse: scheduling jitter on a loaded host).
+    use pipeit::coordinator::{run_pipeline, StageSpec};
+    use std::time::Duration;
+
+    let times = [0.004, 0.006, 0.003];
+    let images = 120;
+    let stages: Vec<StageSpec<usize>> = times
+        .iter()
+        .map(|&t| {
+            StageSpec::new(
+                &format!("sleep{}us", (t * 1e6) as u64),
+                Box::new(move || {
+                    Box::new(move |x: usize| {
+                        std::thread::sleep(Duration::from_secs_f64(t));
+                        x
+                    })
+                }),
+            )
+        })
+        .collect();
+    let (_, report) = run_pipeline(stages, 2, 0..images);
+    let sim = pipeline_sim::simulate(&times, images, 2);
+    let rel = (report.throughput() - sim.throughput).abs() / sim.throughput;
+    assert!(
+        rel < 0.30,
+        "real {} vs DES {} (rel {rel:.2})",
+        report.throughput(),
+        sim.throughput
+    );
+}
