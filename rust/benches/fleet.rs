@@ -1,0 +1,69 @@
+//! `cargo bench --bench fleet` — replicated-pipeline serving benchmarks:
+//!
+//!   * the replicated DSE (core partitions x per-budget pipelines) per CNN
+//!   * the fleet discrete-event simulation at stream scale
+//!   * the dispatcher hot path of the real thread fleet (no stage work)
+//!
+//! Also prints the replicated-vs-single report table, so `cargo bench`
+//! output shows where replication pays (the PICO-style scaling story).
+
+use pipeit::cnn::zoo;
+use pipeit::config::Config;
+use pipeit::coordinator::{run_fleet, StageSpec};
+use pipeit::dse;
+use pipeit::perfmodel::TimeMatrix;
+use pipeit::reports::Reporter;
+use pipeit::simulator::pipeline_sim;
+use pipeit::util::bench::{black_box, Bencher};
+
+fn noop_replica(stages: usize) -> Vec<StageSpec<u64>> {
+    (0..stages)
+        .map(|s| {
+            StageSpec::new(
+                &format!("s{s}"),
+                Box::new(|| Box::new(|x: u64| x.wrapping_mul(0x9E37_79B9))),
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = Config::default();
+
+    println!("================ REPLICATED SERVING (fleet) ================\n");
+    Reporter::new(Config::default()).replicated().print();
+
+    let mut b = Bencher::default();
+    let nets = zoo::all_networks();
+    let tms: Vec<TimeMatrix> =
+        nets.iter().map(|n| TimeMatrix::measured(&cfg.platform, n)).collect();
+
+    for (net, tm) in nets.iter().zip(&tms) {
+        b.bench(&format!("explore_replicated_r4_{}", net.name), || {
+            black_box(dse::explore_replicated(tm, 4, 4, 4));
+        });
+    }
+
+    let fleet = dse::explore_replicated(&tms[3], 4, 4, 4); // resnet50
+    let times = fleet.stage_times(&tms[3]);
+    b.bench("fleet_des_10k_images_resnet50", || {
+        black_box(pipeline_sim::simulate_replicated(&times, 10_000, 2));
+    });
+
+    b.bench("partitions_enumeration_4_4_r4", || {
+        black_box(dse::replicated::partitions(4, 4, 4));
+    });
+
+    // Dispatcher hot path: 2 replicas x 2 no-op stages, 512 items per
+    // iteration — measures admission + least-outstanding-work routing +
+    // thread fleet setup/teardown, not stage compute.
+    let mut quick = Bencher::quick();
+    quick.bench("run_fleet_dispatch_2x2_512_items", || {
+        let replicas = vec![noop_replica(2), noop_replica(2)];
+        let (out, _) = run_fleet(replicas, 2, 4, 0..512u64);
+        black_box(out);
+    });
+
+    println!("\nnote: the replicated DSE spans every core partition (R<=4) of the");
+    println!("4+4 budget and still completes in milliseconds per network.");
+}

@@ -1,0 +1,495 @@
+//! Replicated-pipeline serving: R independent pipelines fed from ONE shared
+//! bounded admission queue by a least-outstanding-work dispatcher.
+//!
+//! A single latency-balanced pipeline is throughput-bound by its bottleneck
+//! stage (Eq. 12). The next lever — following PICO (arXiv 2206.08662) and
+//! pipeline-parallel hierarchical serving (arXiv 2109.13356) — is to run
+//! several *whole* pipelines side by side on disjoint core budgets and
+//! balance admission across them. Replicas process complete images, so they
+//! pay no layer-granularity quantization loss; the fleet's steady-state
+//! rate is the *sum* of replica rates.
+//!
+//! Topology (DESIGN.md §4):
+//!
+//! ```text
+//! source -> [admission queue] -> dispatcher -> [feed q, cap 1] -> replica 0
+//!                 (bounded)     (least          [feed q, cap 1] -> replica 1
+//!                                outstanding    ...
+//!                                work)          [feed q, cap 1] -> replica R-1
+//! ```
+//!
+//! Each replica is an ordinary [`run_pipeline`] chain built from the same
+//! [`StageSpec`] machinery as single-pipeline serving; the dispatcher
+//! tracks per-replica outstanding items (dispatched minus completed, the
+//! completion observed by wrapping the replica's last stage) and routes
+//! every admitted item to the replica with the fewest. Feed queues have
+//! capacity 1 so `outstanding` stays an honest in-flight count and
+//! backpressure propagates to the shared admission queue.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::coordinator::{run_fleet, StageSpec};
+//!
+//! // Two single-stage replicas that negate their input.
+//! let replica = || {
+//!     vec![StageSpec::new(
+//!         "negate",
+//!         Box::new(|| Box::new(|x: i64| -x)),
+//!     )]
+//! };
+//! let (out, report) = run_fleet(vec![replica(), replica()], 2, 4, 1..=10i64);
+//! assert_eq!(report.images, 10);
+//! assert_eq!(report.dispatched.iter().sum::<usize>(), 10);
+//! let mut sorted = out.clone();
+//! sorted.sort();
+//! assert_eq!(sorted, (-10..=-1).collect::<Vec<_>>());
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+use super::metrics::RunReport;
+use super::pipeline::{run_pipeline, Ready, SetupFailGuard, StageSpec};
+use super::queue::bounded;
+
+/// Fleet-level run report: merged aggregates plus the per-replica
+/// [`RunReport`]s they were derived from.
+#[derive(Debug)]
+pub struct FleetReport {
+    /// Total items that completed across all replicas.
+    pub images: usize,
+    /// Wall-clock time from when every replica finished stage setup (PJRT
+    /// client creation + executable compilation is excluded, exactly as in
+    /// [`run_pipeline`]'s report) until every replica drained.
+    pub wall: Duration,
+    /// Per-image latencies merged across replicas. Each latency is measured
+    /// from the moment the item entered its replica's pipeline; time spent
+    /// queued upstream of that point — in the shared admission queue under
+    /// backpressure, plus at most one item's wait in the cap-1 feed queue —
+    /// is not counted (DESIGN.md §4).
+    pub latencies: Summary,
+    /// Per-replica reports, in replica order.
+    pub replicas: Vec<RunReport>,
+    /// Items dispatched to each replica by the least-outstanding-work policy.
+    pub dispatched: Vec<usize>,
+}
+
+impl FleetReport {
+    /// Aggregate throughput: completed items over the fleet wall clock.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.images as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Per-replica throughputs against each replica's own wall clock.
+    pub fn replica_throughputs(&self) -> Vec<f64> {
+        self.replicas.iter().map(|r| r.throughput()).collect()
+    }
+
+    /// Per-replica utilization: busiest stage's busy time over the fleet
+    /// wall clock (1.0 = the replica's bottleneck never idled).
+    pub fn utilization(&self) -> Vec<f64> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                r.stages
+                    .iter()
+                    .map(|s| s.utilization(self.wall))
+                    .fold(0.0, f64::max)
+            })
+            .collect()
+    }
+
+    /// Human-readable fleet summary followed by indented per-replica blocks.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "fleet: {} replicas, images={} wall={:.3}s aggregate={:.2} imgs/s\n",
+            self.replicas.len(),
+            self.images,
+            self.wall.as_secs_f64(),
+            self.throughput()
+        ));
+        s.push_str(&format!(
+            "latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n",
+            self.latencies.p50() * 1e3,
+            self.latencies.p95() * 1e3,
+            self.latencies.p99() * 1e3,
+        ));
+        let util = self.utilization();
+        for (i, rep) in self.replicas.iter().enumerate() {
+            s.push_str(&format!(
+                "replica {i}: dispatched={} throughput={:.2} imgs/s util={:.0}%\n",
+                self.dispatched[i],
+                rep.throughput(),
+                100.0 * util[i],
+            ));
+            for line in rep.render().lines() {
+                s.push_str("  ");
+                s.push_str(line);
+                s.push('\n');
+            }
+        }
+        s
+    }
+}
+
+/// Wrap a replica's last stage so item completion decrements the replica's
+/// outstanding-work counter (read by the dispatcher).
+fn instrument_completion<T: Send + 'static>(
+    mut stages: Vec<StageSpec<T>>,
+    outstanding: Arc<Vec<AtomicUsize>>,
+    idx: usize,
+) -> Vec<StageSpec<T>> {
+    let last = stages.pop().expect("replica has at least one stage");
+    let name = last.name;
+    let factory = last.factory;
+    stages.push(StageSpec {
+        name,
+        factory: Box::new(move || {
+            let mut f = factory();
+            Box::new(move |x: T| {
+                let y = f(x);
+                outstanding[idx].fetch_sub(1, Ordering::SeqCst);
+                y
+            })
+        }),
+    });
+    stages
+}
+
+/// Build a synthetic fleet whose stage functions sleep for the given
+/// per-stage service times multiplied by `scale` — the simulated-time
+/// serving backend of `pipeit serve --net` and the harness the integration
+/// tests use to race wall-clock fleets against
+/// [`crate::simulator::pipeline_sim::simulate_replicated`].
+pub fn synthetic_fleet(times: &[Vec<f64>], scale: f64) -> Vec<Vec<StageSpec<usize>>> {
+    times
+        .iter()
+        .enumerate()
+        .map(|(r, stage_times)| {
+            stage_times
+                .iter()
+                .enumerate()
+                .map(|(s, &t)| {
+                    let dt = Duration::from_secs_f64(t * scale);
+                    StageSpec::new(
+                        &format!("r{r}s{s}"),
+                        Box::new(move || {
+                            Box::new(move |x: usize| {
+                                thread::sleep(dt);
+                                x
+                            })
+                        }),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Wrap every stage factory so it reports setup completion to the
+/// fleet-wide latch and then holds the stage at the fleet-wide start line:
+/// the fleet clock, the stream, AND every replica's internal run clock all
+/// begin only once the whole fleet is built, so `FleetReport` aggregates
+/// and the per-replica `RunReport`s share one steady-state time basis
+/// (fast-compiling replicas don't book the wait for slow ones as idle).
+/// A factory panic poisons the latch via the guard, releasing the held
+/// siblings so the abort cascade (§queue drop-close) can run.
+fn instrument_setup<T: Send + 'static>(
+    stages: Vec<StageSpec<T>>,
+    setup: &Arc<Ready>,
+) -> Vec<StageSpec<T>> {
+    stages
+        .into_iter()
+        .map(|spec| {
+            let setup = setup.clone();
+            let factory = spec.factory;
+            StageSpec {
+                name: spec.name,
+                factory: Box::new(move || {
+                    let mut guard = SetupFailGuard { ready: setup.clone(), armed: true };
+                    let f = factory();
+                    guard.armed = false;
+                    setup.done();
+                    setup.wait();
+                    f
+                }),
+            }
+        })
+        .collect()
+}
+
+/// Run `source` items through a fleet of replicated pipelines.
+///
+/// * `replicas` — one stage list per replica (each spec's factory runs
+///   inside its own stage thread, exactly as in [`run_pipeline`]).
+/// * `queue_cap` — inter-stage buffer capacity inside every replica.
+/// * `admission_cap` — capacity of the shared admission queue; when every
+///   replica is saturated this bounds how much work the fleet accepts
+///   before blocking the caller (admission control).
+///
+/// Returns every processed item (grouped by replica, stream order within a
+/// replica; cross-replica completion order is not defined) and the merged
+/// [`FleetReport`].
+///
+/// # Panics
+///
+/// Panics if `replicas` is empty, any replica has no stages, or a stage
+/// thread panics (mirroring [`run_pipeline`]).
+pub fn run_fleet<T, I>(
+    replicas: Vec<Vec<StageSpec<T>>>,
+    queue_cap: usize,
+    admission_cap: usize,
+    source: I,
+) -> (Vec<T>, FleetReport)
+where
+    T: Send + 'static,
+    I: IntoIterator<Item = T>,
+{
+    assert!(!replicas.is_empty(), "fleet needs at least one replica");
+    assert!(admission_cap >= 1);
+    let r = replicas.len();
+
+    let outstanding: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..r).map(|_| AtomicUsize::new(0)).collect());
+
+    // Fleet-wide setup latch: one slot per stage across all replicas. The
+    // clock starts and the stream begins only once every stage is built; a
+    // replica dying during setup poisons the latch (via its thread guard)
+    // so the fleet aborts instead of waiting forever.
+    let total_stages: usize = replicas.iter().map(|stages| stages.len()).sum();
+    let setup = Ready::new(total_stages);
+
+    // Replica threads, each an independent run_pipeline fed from a cap-1
+    // queue (see module docs for why cap 1).
+    let mut feed_txs = Vec::with_capacity(r);
+    let mut handles = Vec::with_capacity(r);
+    for (i, stages) in replicas.into_iter().enumerate() {
+        assert!(!stages.is_empty(), "replica {i} has no stages");
+        let (tx, rx) = bounded::<T>(1);
+        feed_txs.push(tx);
+        let stages = instrument_setup(
+            instrument_completion(stages, outstanding.clone(), i),
+            &setup,
+        );
+        let setup = setup.clone();
+        let handle = thread::spawn(move || {
+            let mut guard = SetupFailGuard { ready: setup, armed: true };
+            let result =
+                run_pipeline(stages, queue_cap, std::iter::from_fn(move || rx.recv()));
+            // run_pipeline returning means every stage completed setup.
+            guard.armed = false;
+            result
+        });
+        handles.push(handle);
+    }
+
+    // Dispatcher: admission queue -> least-outstanding-work replica.
+    let (adm_tx, adm_rx) = bounded::<T>(admission_cap);
+    let dispatcher = {
+        let outstanding = outstanding.clone();
+        thread::spawn(move || {
+            let mut dispatched = vec![0usize; r];
+            while let Some(item) = adm_rx.recv() {
+                // Least outstanding work; ties break to the lowest index.
+                let mut pick = 0;
+                let mut least = usize::MAX;
+                for i in 0..r {
+                    let o = outstanding[i].load(Ordering::SeqCst);
+                    if o < least {
+                        least = o;
+                        pick = i;
+                    }
+                }
+                outstanding[pick].fetch_add(1, Ordering::SeqCst);
+                if feed_txs[pick].send(item).is_err() {
+                    // Replica feed closed underneath us — stop serving.
+                    outstanding[pick].fetch_sub(1, Ordering::SeqCst);
+                    break;
+                }
+                dispatched[pick] += 1;
+            }
+            for tx in &feed_txs {
+                tx.close();
+            }
+            dispatched
+        })
+    };
+
+    // Mirror run_pipeline: wait out stage setup (PJRT compiles) before the
+    // clock starts and the stream flows; on a poisoned latch skip the
+    // stream and let the joins below propagate the replica's panic.
+    let setup_ok = setup.wait();
+    let start = Instant::now();
+    if setup_ok {
+        for item in source {
+            if adm_tx.send(item).is_err() {
+                break;
+            }
+        }
+    }
+    adm_tx.close();
+
+    let dispatched = dispatcher.join().expect("dispatcher panicked");
+    let mut outputs = Vec::new();
+    let mut reports = Vec::with_capacity(r);
+    let mut latencies = Summary::new();
+    for h in handles {
+        let (out, rep) = h.join().expect("replica pipeline panicked");
+        latencies.merge(&rep.latencies);
+        outputs.extend(out);
+        reports.push(rep);
+    }
+    let wall = start.elapsed();
+    let images = reports.iter().map(|rep| rep.images).sum();
+
+    (
+        outputs,
+        FleetReport { images, wall, latencies, replicas: reports, dispatched },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sleep_stage(name: &str, ms: u64) -> StageSpec<u64> {
+        StageSpec::new(
+            name,
+            Box::new(move || {
+                Box::new(move |x: u64| {
+                    thread::sleep(Duration::from_millis(ms));
+                    x + 1
+                })
+            }),
+        )
+    }
+
+    #[test]
+    fn fleet_processes_every_item_exactly_once() {
+        let replicas = vec![
+            vec![sleep_stage("a", 1), sleep_stage("b", 1)],
+            vec![sleep_stage("a", 1), sleep_stage("b", 1)],
+        ];
+        let (out, report) = run_fleet(replicas, 2, 4, 0..40u64);
+        let mut sorted = out.clone();
+        sorted.sort();
+        assert_eq!(sorted, (2..42u64).collect::<Vec<_>>());
+        assert_eq!(report.images, 40);
+        assert_eq!(report.dispatched.iter().sum::<usize>(), 40);
+        assert_eq!(report.latencies.count(), 40);
+        assert_eq!(
+            report.replicas.iter().map(|r| r.images).collect::<Vec<_>>(),
+            report.dispatched
+        );
+    }
+
+    #[test]
+    fn least_outstanding_work_prefers_the_faster_replica() {
+        let replicas = vec![
+            vec![sleep_stage("fast", 1)],
+            vec![sleep_stage("slow", 12)],
+        ];
+        let (_, report) = run_fleet(replicas, 1, 2, 0..40u64);
+        assert_eq!(report.images, 40);
+        assert!(
+            report.dispatched[0] > report.dispatched[1],
+            "fast replica should receive more work: {:?}",
+            report.dispatched
+        );
+    }
+
+    #[test]
+    fn identical_replicas_share_work_roughly_evenly() {
+        let replicas = vec![
+            vec![sleep_stage("a", 3)],
+            vec![sleep_stage("a", 3)],
+        ];
+        let (_, report) = run_fleet(replicas, 1, 2, 0..30u64);
+        let (d0, d1) = (report.dispatched[0] as f64, report.dispatched[1] as f64);
+        assert!(
+            d0 > 0.25 * d1 && d1 > 0.25 * d0,
+            "grossly unbalanced dispatch: {:?}",
+            report.dispatched
+        );
+    }
+
+    #[test]
+    fn two_replicas_beat_one_on_the_same_load() {
+        // 30 items through one 6 ms replica ~ 180 ms; through two ~ 90 ms.
+        let one = vec![vec![sleep_stage("s", 6)]];
+        let two = vec![vec![sleep_stage("s", 6)], vec![sleep_stage("s", 6)]];
+        let (_, rep1) = run_fleet(one, 1, 2, 0..30u64);
+        let (_, rep2) = run_fleet(two, 1, 2, 0..30u64);
+        assert!(
+            rep2.wall.as_secs_f64() < 0.8 * rep1.wall.as_secs_f64(),
+            "two replicas {:?} should beat one {:?}",
+            rep2.wall,
+            rep1.wall
+        );
+    }
+
+    #[test]
+    fn single_replica_fleet_matches_run_pipeline_semantics() {
+        let (out, report) =
+            run_fleet(vec![vec![sleep_stage("only", 0)]], 1, 1, 0..5u64);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+        assert_eq!(report.images, 5);
+        assert_eq!(report.dispatched, vec![5]);
+        assert_eq!(report.replicas.len(), 1);
+        assert_eq!(report.replicas[0].stages.len(), 1);
+    }
+
+    #[test]
+    fn empty_source_is_clean() {
+        let (out, report) =
+            run_fleet(vec![vec![sleep_stage("a", 1)], vec![sleep_stage("b", 1)]], 1, 1, Vec::<u64>::new());
+        assert!(out.is_empty());
+        assert_eq!(report.images, 0);
+        assert_eq!(report.dispatched, vec![0, 0]);
+        assert_eq!(report.throughput(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "replica pipeline panicked")]
+    fn replica_setup_panic_propagates_instead_of_hanging() {
+        // If a replica's stage factory dies (bad artifact, missing PJRT),
+        // its feed queue closes on unwind, the dispatcher stops, and the
+        // panic propagates — the fleet must not deadlock.
+        let bad: Vec<StageSpec<u64>> =
+            vec![StageSpec::new("bad", Box::new(|| panic!("factory boom")))];
+        run_fleet(vec![bad], 1, 1, 0..4u64);
+    }
+
+    #[test]
+    fn report_renders_aggregate_and_replicas() {
+        let replicas = vec![vec![sleep_stage("st", 1)], vec![sleep_stage("st", 1)]];
+        let (_, report) = run_fleet(replicas, 1, 2, 0..8u64);
+        let s = report.render();
+        assert!(s.contains("fleet: 2 replicas"));
+        assert!(s.contains("replica 0:"));
+        assert!(s.contains("replica 1:"));
+        assert!(s.contains("aggregate="));
+    }
+
+    #[test]
+    fn aggregate_throughput_tracks_sum_of_replica_rates() {
+        // Two 4 ms single-stage replicas: steady-state sum = 500 imgs/s.
+        // Accept a broad band — scheduling jitter on shared CI hosts.
+        let replicas = vec![vec![sleep_stage("s", 4)], vec![sleep_stage("s", 4)]];
+        let (_, report) = run_fleet(replicas, 1, 2, 0..60u64);
+        let tp = report.throughput();
+        assert!(
+            tp > 150.0 && tp < 650.0,
+            "aggregate {tp:.0} imgs/s far from the ~500 imgs/s rate sum"
+        );
+    }
+}

@@ -1,10 +1,22 @@
 //! The Pipe-it L3 coordinator: bounded inter-stage queues, the real
-//! multi-threaded pipeline executor, dynamic batcher, image-stream source,
-//! metrics, and the PJRT serving glue. The *simulated* pipeline (for the
-//! paper's experiments) lives in `simulator::pipeline_sim`; this module is
-//! the wall-clock twin used by the end-to-end serving example.
+//! multi-threaded pipeline executor, the replicated-pipeline fleet, dynamic
+//! batcher, image-stream source, metrics, and the PJRT serving glue.
+//!
+//! Two serving shapes share one stage abstraction ([`StageSpec`]):
+//!
+//! * [`run_pipeline`] — ONE pipeline, one OS thread per stage, bounded
+//!   queues between stages (the paper's design).
+//! * [`run_fleet`] — R replicated pipelines on disjoint core budgets behind
+//!   one shared bounded admission queue with least-outstanding-work
+//!   dispatch (DESIGN.md §4; the scaling lever beyond a balanced single
+//!   pipeline).
+//!
+//! The *simulated* pipeline (for the paper's experiments) lives in
+//! [`crate::simulator::pipeline_sim`]; this module is the wall-clock twin
+//! used by the end-to-end serving example and the `serve` subcommand.
 
 pub mod batcher;
+pub mod fleet;
 pub mod metrics;
 pub mod pipeline;
 pub mod queue;
@@ -12,10 +24,11 @@ pub mod server;
 pub mod stream;
 
 pub use batcher::{Batcher, Job};
+pub use fleet::{run_fleet, synthetic_fleet, FleetReport};
 pub use metrics::{RunReport, StageMetrics};
 pub use pipeline::{run_pipeline, run_serial, StageFactory, StageSpec};
 pub use server::{
-    balance_by_times, profile_layer_times, serve_layerwise_serial, serve_pipelined,
-    serve_serial,
+    balance_by_times, profile_layer_times, serve_fleet, serve_layerwise_serial,
+    serve_pipelined, serve_serial,
 };
 pub use stream::{Image, ImageStream};

@@ -7,6 +7,7 @@
 //! (DESIGN.md §1). On the paper's board this corresponds to pinning each
 //! stage's ARM-CL thread pool to its cluster cores.
 
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
 
@@ -14,6 +15,72 @@ use crate::util::stats::Summary;
 
 use super::metrics::{RunReport, StageMetrics};
 use super::queue::{bounded, Receiver};
+
+/// Readiness latch for stage setup (also used fleet-wide by
+/// `coordinator::fleet`). Unlike `std::sync::Barrier`, it can be poisoned:
+/// when a stage factory panics before reaching the rendezvous,
+/// [`Ready::fail`] (via a drop guard) releases every waiter so the feeder
+/// skips the stream and the panic propagates through `join` instead of the
+/// whole pipeline deadlocking on a barrier that can never complete.
+pub(super) struct Ready {
+    state: Mutex<ReadyState>,
+    cv: Condvar,
+}
+
+struct ReadyState {
+    pending: usize,
+    failed: bool,
+}
+
+impl Ready {
+    pub(super) fn new(participants: usize) -> Arc<Ready> {
+        Arc::new(Ready {
+            state: Mutex::new(ReadyState { pending: participants, failed: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Mark one participant's setup complete.
+    pub(super) fn done(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.pending -= 1;
+        if st.pending == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Poison the latch (a participant died during setup).
+    pub(super) fn fail(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.failed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until every participant is ready or the latch is poisoned.
+    /// Returns `true` when the pipeline may start.
+    pub(super) fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.pending > 0 && !st.failed {
+            st = self.cv.wait(st).unwrap();
+        }
+        !st.failed
+    }
+}
+
+/// Poisons the latch if dropped while still armed (i.e. during unwinding
+/// from a stage-factory panic).
+pub(super) struct SetupFailGuard {
+    pub(super) ready: Arc<Ready>,
+    pub(super) armed: bool,
+}
+
+impl Drop for SetupFailGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.ready.fail();
+        }
+    }
+}
 
 /// Factory that constructs the per-thread stage function.
 pub type StageFactory<T> = Box<dyn FnOnce() -> Box<dyn FnMut(T) -> T> + Send>;
@@ -38,6 +105,21 @@ struct Tagged<T> {
 /// Run `source` items through the stages; returns the processed items (in
 /// order) and the run report. `queue_cap` bounds every inter-stage buffer
 /// (backpressure).
+///
+/// # Example
+///
+/// ```
+/// use pipeit::coordinator::{run_pipeline, StageSpec};
+///
+/// let stages = vec![
+///     StageSpec::new("double", Box::new(|| Box::new(|x: u32| x * 2))),
+///     StageSpec::new("inc", Box::new(|| Box::new(|x: u32| x + 1))),
+/// ];
+/// let (out, report) = run_pipeline(stages, 2, 0..4u32);
+/// assert_eq!(out, vec![1, 3, 5, 7]);
+/// assert_eq!(report.images, 4);
+/// assert_eq!(report.stages.len(), 2);
+/// ```
 pub fn run_pipeline<T, I>(
     stages: Vec<StageSpec<T>>,
     queue_cap: usize,
@@ -50,11 +132,13 @@ where
     assert!(!stages.is_empty());
     let n = stages.len();
 
-    // Readiness barrier: stage setup (PJRT client creation + executable
+    // Readiness latch: stage setup (PJRT client creation + executable
     // compilation) happens inside each thread; the clock starts and the
     // source begins feeding only once every stage is ready, so reported
-    // throughput/latency are steady-state, not compile-time.
-    let ready = std::sync::Arc::new(std::sync::Barrier::new(n + 1));
+    // throughput/latency are steady-state, not compile-time. A setup panic
+    // poisons the latch so the run aborts (propagating the panic) instead
+    // of deadlocking on a rendezvous that can never complete.
+    let ready = Ready::new(n);
 
     // Queues: source -> s0 -> s1 -> ... -> sink.
     let (src_tx, mut prev_rx) = bounded::<Tagged<T>>(queue_cap);
@@ -67,7 +151,10 @@ where
         let is_last = i == n - 1;
         let ready = ready.clone();
         let handle = thread::spawn(move || -> StageMetrics {
+            let mut guard = SetupFailGuard { ready: ready.clone(), armed: true };
             let mut f = (stage.factory)();
+            guard.armed = false;
+            ready.done();
             ready.wait();
             let mut m = StageMetrics { name: stage.name, ..Default::default() };
             loop {
@@ -110,11 +197,15 @@ where
     });
 
     // Wait for every stage to finish setup, then start the clock and feed.
-    ready.wait();
+    // If a stage factory panicked, skip the stream: the closes below drain
+    // the surviving stages and the join propagates the panic.
+    let setup_ok = ready.wait();
     let start = Instant::now();
-    for item in source {
-        if src_tx.send(Tagged { item, admitted: Instant::now() }).is_err() {
-            break;
+    if setup_ok {
+        for item in source {
+            if src_tx.send(Tagged { item, admitted: Instant::now() }).is_err() {
+                break;
+            }
         }
     }
     src_tx.close();
@@ -232,5 +323,18 @@ mod tests {
         let (out, report) = run_pipeline(vec![sleep_stage("a", 1)], 1, Vec::<u64>::new());
         assert!(out.is_empty());
         assert_eq!(report.images, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stage panicked")]
+    fn stage_setup_panic_propagates_instead_of_deadlocking() {
+        // A factory that dies (e.g. PJRT executable compilation failing)
+        // must poison the readiness latch and surface as a panic — not
+        // leave the feeder blocked on a rendezvous that never completes.
+        let stages: Vec<StageSpec<u64>> = vec![
+            sleep_stage("ok", 0),
+            StageSpec::new("bad", Box::new(|| panic!("factory boom"))),
+        ];
+        run_pipeline(stages, 1, 0..4u64);
     }
 }

@@ -3,6 +3,13 @@
 //! Built on `Mutex<VecDeque>` + two `Condvar`s (the offline vendor set has
 //! no crossbeam-channel). Provides close semantics for graceful drain and a
 //! depth gauge for backpressure introspection.
+//!
+//! Endpoints are ref-counted: dropping the LAST `Sender` or the LAST
+//! `Receiver` closes the queue, exactly like explicit [`Sender::close`].
+//! This is what keeps a panicking stage or replica thread from deadlocking
+//! its neighbors — when the panicking side's endpoint unwinds away, blocked
+//! peers observe the close (senders get `SendError`, receivers drain then
+//! see `None`) and the shutdown cascades instead of hanging.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -17,6 +24,16 @@ struct Inner<T> {
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
+    senders: usize,
+    receivers: usize,
+}
+
+impl<T> Inner<T> {
+    fn close_locked(&self, st: &mut State<T>) {
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
 }
 
 /// Sending half (clonable; the queue is MPMC).
@@ -27,21 +44,64 @@ pub struct Receiver<T>(Arc<Inner<T>>);
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().senders += 1;
         Sender(self.0.clone())
     }
 }
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().receivers += 1;
         Receiver(self.0.clone())
     }
 }
 
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 && !st.closed {
+            // No producer left: receivers drain what's buffered, then None.
+            self.0.close_locked(&mut st);
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 && !st.closed {
+            // No consumer left: blocked senders must see SendError, not hang.
+            self.0.close_locked(&mut st);
+        }
+    }
+}
+
 /// Create a bounded queue with capacity `cap` (>= 1).
+///
+/// # Example
+///
+/// ```
+/// use pipeit::coordinator::queue::bounded;
+///
+/// let (tx, rx) = bounded(2);
+/// tx.send(1).unwrap();
+/// tx.send(2).unwrap();
+/// tx.close();
+/// assert_eq!(rx.recv(), Some(1));
+/// assert_eq!(rx.recv(), Some(2));
+/// assert_eq!(rx.recv(), None); // closed and drained
+/// ```
 pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
     assert!(cap >= 1);
     let inner = Arc::new(Inner {
-        q: Mutex::new(State { items: VecDeque::with_capacity(cap), closed: false }),
+        q: Mutex::new(State {
+            items: VecDeque::with_capacity(cap),
+            closed: false,
+            senders: 1,
+            receivers: 1,
+        }),
         not_empty: Condvar::new(),
         not_full: Condvar::new(),
         cap,
@@ -202,6 +262,42 @@ mod tests {
         assert_eq!(batch, vec![0, 1, 2, 3]);
         let rest = rx.recv_batch(4);
         assert_eq!(rest, vec![4]);
+    }
+
+    #[test]
+    fn dropping_last_receiver_unblocks_senders() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        drop(rx);
+        // Receiver gone: a blocked/full send must error, not hang.
+        assert_eq!(tx.send(2), Err(SendError(2)));
+    }
+
+    #[test]
+    fn dropping_last_sender_closes_for_receivers() {
+        let (tx, rx) = bounded(4);
+        tx.send(7).unwrap();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            drop(tx);
+        });
+        // Buffered item still delivered, then a clean close.
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), None);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn clones_keep_the_queue_open() {
+        let (tx, rx) = bounded(2);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(1).unwrap(); // one sender left: still open
+        let rx2 = rx.clone();
+        drop(rx);
+        assert_eq!(rx2.recv(), Some(1));
+        drop(tx2);
+        assert_eq!(rx2.recv(), None);
     }
 
     #[test]

@@ -1,18 +1,34 @@
 //! Serving glue: manifest + pipeline allocation -> real multi-threaded
 //! pipeline over PJRT (the end-to-end path proving all three layers
 //! compose: Pallas kernels -> JAX layers -> HLO artifacts -> Rust stages).
+//! [`serve_fleet`] replicates that pipeline R times behind the shared
+//! admission queue of [`run_fleet`]. All entry points here require the
+//! `pjrt` feature at runtime (DESIGN.md §6); the simulated serving path
+//! (`pipeit serve --net`) works in every build.
 
 use anyhow::Result;
 
 use crate::dse::Allocation;
-use crate::runtime::executor::StageRunnerSpec;
+use crate::runtime::executor::{pjrt_available, StageRunnerSpec};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 
 use super::batcher::{Batcher, Job};
+use super::fleet::{run_fleet, FleetReport};
 use super::metrics::RunReport;
 use super::pipeline::{run_pipeline, run_serial, StageSpec};
 use super::stream::ImageStream;
+
+/// Fail fast (instead of panicking inside a stage thread) when the binary
+/// was built without the `pjrt` feature — see DESIGN.md §6.
+fn ensure_pjrt() -> Result<()> {
+    anyhow::ensure!(
+        pjrt_available(),
+        "PJRT serving requires `--features pjrt` (the `xla` crate); this \
+         build only supports the simulated serving paths — see DESIGN.md §6"
+    );
+    Ok(())
+}
 
 /// Build the per-stage factories for a layer allocation. Each factory,
 /// executed inside its stage thread, creates a private PJRT client and
@@ -54,6 +70,7 @@ pub fn serve_pipelined(
     queue_cap: usize,
     seed: u64,
 ) -> Result<(Vec<Job>, RunReport)> {
+    ensure_pjrt()?;
     let batch_sizes: Vec<usize> = if batch > 1 { vec![1, batch] } else { vec![1] };
     let specs = stage_specs(manifest, alloc, &batch_sizes)?;
     let stream = ImageStream::new(&manifest.input_shape, images, seed)
@@ -70,6 +87,7 @@ pub fn serve_serial(
     batch: usize,
     seed: u64,
 ) -> Result<(Vec<Job>, RunReport)> {
+    ensure_pjrt()?;
     let batch_sizes: Vec<usize> = if batch > 1 { vec![1, batch] } else { vec![1] };
     let runner_spec = StageRunnerSpec::full_network(manifest, &batch_sizes)?;
     let spec = StageSpec::new(
@@ -96,6 +114,7 @@ pub fn serve_layerwise_serial(
     images: usize,
     seed: u64,
 ) -> Result<(Vec<Job>, RunReport)> {
+    ensure_pjrt()?;
     let alloc = Allocation { ranges: vec![(0, manifest.num_layers())] };
     let specs = stage_specs(manifest, &alloc, &[1])?;
     let stream = ImageStream::new(&manifest.input_shape, images, seed)
@@ -109,6 +128,7 @@ pub fn serve_layerwise_serial(
 /// stage's busy time. This is the launcher's analogue of the paper's
 /// "measured layer timings" (Table VI) for the real PJRT substrate.
 pub fn profile_layer_times(manifest: &Manifest, samples: usize, seed: u64) -> Result<Vec<f64>> {
+    ensure_pjrt()?;
     let w = manifest.num_layers();
     let alloc = Allocation { ranges: (0..w).map(|i| (i, i + 1)).collect() };
     let specs = stage_specs(manifest, &alloc, &[1])?;
@@ -121,6 +141,34 @@ pub fn profile_layer_times(manifest: &Manifest, samples: usize, seed: u64) -> Re
         .iter()
         .map(|s| s.busy.as_secs_f64() / s.items.max(1) as f64)
         .collect())
+}
+
+/// Replicated PJRT serving: `replicas` copies of the same manifest pipeline
+/// (one private PJRT client + executable set per stage thread per replica),
+/// fed from one shared admission queue with least-outstanding-work dispatch
+/// ([`run_fleet`]). On a big.LITTLE board each replica's stages would be
+/// pinned to that replica's core budget; on this host the replicas share
+/// the CPU and the fleet demonstrates the coordinator's scale-out path.
+pub fn serve_fleet(
+    manifest: &Manifest,
+    alloc: &Allocation,
+    replicas: usize,
+    images: usize,
+    batch: usize,
+    queue_cap: usize,
+    seed: u64,
+) -> Result<(Vec<Job>, FleetReport)> {
+    ensure_pjrt()?;
+    anyhow::ensure!(replicas >= 1, "need at least one replica");
+    let batch_sizes: Vec<usize> = if batch > 1 { vec![1, batch] } else { vec![1] };
+    let mut fleet = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        fleet.push(stage_specs(manifest, alloc, &batch_sizes)?);
+    }
+    let stream = ImageStream::new(&manifest.input_shape, images, seed)
+        .map(|im| Tensor::new(im.shape, im.data));
+    let jobs = Batcher::new(stream, batch_sizes);
+    Ok(run_fleet(fleet, queue_cap, 2 * replicas, jobs))
 }
 
 /// Balance `times` (seconds per layer) into `k` contiguous stages — greedy

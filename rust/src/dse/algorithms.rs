@@ -110,7 +110,7 @@ fn merge_helpful(
 
 /// Order stages by compute capability (Eq. 11): ascending mean layer time,
 /// so the most capable stage leads and workload flows one way.
-fn sort_by_capability(tm: &TimeMatrix, stages: &mut [StageConfig]) {
+pub(crate) fn sort_by_capability(tm: &TimeMatrix, stages: &mut [StageConfig]) {
     let means = tm.mean_per_config();
     stages.sort_by(|a, b| {
         let ta = means[tm.config_index(a.core, a.count).unwrap()];
@@ -135,7 +135,7 @@ fn initial_pipeline(tm: &TimeMatrix, hb: usize, hs: usize) -> PipelineConfig {
 /// Finalize a DSE point: drop idle stages (the paper reports only populated
 /// stages, e.g. AlexNet's B4-s4 rather than B4-s4-...-∅) and close the
 /// partition.
-fn finalize(tm: &TimeMatrix, pipeline: PipelineConfig, alloc: Allocation) -> DsePoint {
+pub(crate) fn finalize(tm: &TimeMatrix, pipeline: PipelineConfig, alloc: Allocation) -> DsePoint {
     let w = tm.num_layers();
     let keep: Vec<usize> = (0..pipeline.num_stages())
         .filter(|&i| alloc.ranges[i].0 < alloc.ranges[i].1)
@@ -267,7 +267,7 @@ pub fn point_stage_times(tm: &TimeMatrix, pt: &DsePoint) -> Vec<f64> {
 /// Positive-integer compositions of `n` into `parts` parts (ordered).
 /// There are `C(n-1, parts-1)` of them — exactly the per-cluster factor in
 /// the paper's Eq. 1.
-fn compositions(n: usize, parts: usize) -> Vec<Vec<usize>> {
+pub(crate) fn compositions(n: usize, parts: usize) -> Vec<Vec<usize>> {
     fn rec(n: usize, parts: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
         if parts == 1 {
             cur.push(n);

@@ -42,6 +42,18 @@ impl PipelineConfig {
     }
 
     /// Parse the paper's `B4-s2-s2` notation.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use pipeit::dse::PipelineConfig;
+    ///
+    /// let p = PipelineConfig::parse("B4-s2-s2").unwrap();
+    /// assert_eq!(p.num_stages(), 3);
+    /// assert!(p.is_valid(4, 4));
+    /// assert_eq!(p.to_string(), "B4-s2-s2");
+    /// assert!(PipelineConfig::parse("X9").is_err());
+    /// ```
     pub fn parse(s: &str) -> anyhow::Result<PipelineConfig> {
         let mut stages = Vec::new();
         for part in s.split('-') {

@@ -59,6 +59,73 @@ pub fn design_points_paper_variant(w: usize, hb: usize, hs: usize) -> u128 {
         .sum()
 }
 
+/// Pipeline configurations available to ONE replica owning exactly `(b, s)`
+/// cores: every composition of each cluster into stages, including
+/// single-cluster and single-stage pipelines (a replica may be just `B4`).
+/// Compositions of `n` cores number `2^(n-1)`, so this is
+/// `2^(b-1) * 2^(s-1)` when both clusters are present.
+pub fn budget_pipelines(b: usize, s: usize) -> u128 {
+    if b == 0 && s == 0 {
+        return 0;
+    }
+    let per_cluster = |n: usize| -> u128 {
+        if n == 0 {
+            1
+        } else {
+            1u128 << (n - 1)
+        }
+    };
+    per_cluster(b) * per_cluster(s)
+}
+
+/// Number of distinct ways to partition `(hb, hs)` cores into at most
+/// `max_replicas` disjoint non-empty replica budgets (order-free — budget
+/// multisets). This is the outer factor of the replicated design space;
+/// the enumeration itself lives in [`super::replicated::partitions`] (the
+/// spaces are tiny — at most a few thousand partitions on real platforms).
+pub fn core_partitions(hb: usize, hs: usize, max_replicas: usize) -> u128 {
+    super::replicated::partitions(hb, hs, max_replicas).len() as u128
+}
+
+/// Multiset coefficient `C(m + k - 1, k)`: unordered selections of `k`
+/// pipelines (with repetition) from `m` options — what `k` replicas with
+/// identical budgets can jointly run.
+fn multichoose(m: u128, k: usize) -> u128 {
+    let mut acc: u128 = 1;
+    for i in 1..=k as u128 {
+        acc = acc * (m - 1 + i) / i;
+    }
+    acc
+}
+
+/// Total replicated fleet configurations, order-free (matching the
+/// [`core_partitions`] convention): over every core partition, the product
+/// across *runs of equal budgets* of `C(m + k - 1, k)` unordered pipeline
+/// choices, where `m` is the run's [`budget_pipelines`] and `k` its
+/// multiplicity — replicas are interchangeable, so `{B2, B1-B1}` and
+/// `{B1-B1, B2}` are one fleet. (Layer allocations multiply on top exactly
+/// as in Eq. 2, independently per replica — the full replicated design
+/// space the `work_flow` heuristic collapses.)
+pub fn replicated_pipelines(hb: usize, hs: usize, max_replicas: usize) -> u128 {
+    let mut total = 0u128;
+    for part in super::replicated::partitions(hb, hs, max_replicas) {
+        // Partitions are canonically sorted, so equal budgets are adjacent.
+        let mut prod: u128 = 1;
+        let mut i = 0;
+        while i < part.len() {
+            let mut j = i;
+            while j < part.len() && part[j] == part[i] {
+                j += 1;
+            }
+            let m = budget_pipelines(part[i].big, part[i].small);
+            prod *= multichoose(m, j - i);
+            i = j;
+        }
+        total += prod;
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +172,62 @@ mod tests {
         // exhaustive search at ~10 s per point would indeed take
         // "hundreds of days" (paper §VII-A).
         assert!(design_points(54, 4, 4) > 100_000_000);
+    }
+
+    #[test]
+    fn budget_pipelines_matches_eq1_on_the_full_budget() {
+        // Both-cluster budgets reproduce the Eq. 1 count (64 on 4+4); the
+        // single-cluster extension counts plain compositions.
+        assert_eq!(budget_pipelines(4, 4), total_pipelines(4, 4));
+        assert_eq!(budget_pipelines(4, 0), 8);
+        assert_eq!(budget_pipelines(0, 4), 8);
+        assert_eq!(budget_pipelines(1, 0), 1);
+        assert_eq!(budget_pipelines(0, 0), 0);
+    }
+
+    #[test]
+    fn core_partitions_small_cases() {
+        // (1,1): [(1,1)] and [(1,0),(0,1)].
+        assert_eq!(core_partitions(1, 1, 2), 2);
+        assert_eq!(core_partitions(1, 1, 1), 1);
+        // R capped at 1 always yields exactly the full-budget partition.
+        assert_eq!(core_partitions(4, 4, 1), 1);
+        // (2,0): [(2,0)] and [(1,0),(1,0)].
+        assert_eq!(core_partitions(2, 0, 2), 2);
+        // Degenerate inputs.
+        assert_eq!(core_partitions(0, 0, 3), 0);
+        assert_eq!(core_partitions(4, 4, 0), 0);
+        // More replicas allowed -> at least as many partitions.
+        let mut prev = 0;
+        for r in 1..=8 {
+            let c = core_partitions(4, 4, r);
+            assert!(c >= prev);
+            prev = c;
+        }
+        // No partition can have more than hb+hs non-empty budgets.
+        assert_eq!(core_partitions(4, 4, 8), core_partitions(4, 4, 9));
+    }
+
+    #[test]
+    fn replicated_space_contains_the_single_pipeline_space() {
+        // R = 1 contributes budget_pipelines(4,4) = 64; more replicas only add.
+        assert_eq!(replicated_pipelines(4, 4, 1), 64);
+        assert!(replicated_pipelines(4, 4, 2) > 64);
+        assert!(replicated_pipelines(4, 4, 4) > replicated_pipelines(4, 4, 2));
+        // Hand check (1,1): [(1,1)] -> 1 pipeline; [(1,0),(0,1)] -> 1*1.
+        assert_eq!(replicated_pipelines(1, 1, 2), 2);
+    }
+
+    #[test]
+    fn replicated_fleets_with_equal_budgets_count_multisets() {
+        // (4,0) into <=2 replicas: [(4,0)] -> 8 pipelines; [(3,0),(1,0)] ->
+        // 4*1; [(2,0),(2,0)] -> unordered pairs over {B2, B1-B1} =
+        // C(2+2-1, 2) = 3 (NOT 2^2 = 4: {B2,B1B1} and {B1B1,B2} are one
+        // fleet). Total 8 + 4 + 3 = 15.
+        assert_eq!(replicated_pipelines(4, 0, 2), 15);
+        // (3,0) into <=3: [(3,0)] -> 4; [(2,0),(1,0)] -> 2*1; the three
+        // identical (1,0) budgets have exactly one fleet. Total 7.
+        assert_eq!(replicated_pipelines(3, 0, 3), 4 + 2 + 1);
     }
 
     #[test]

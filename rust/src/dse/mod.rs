@@ -1,12 +1,32 @@
 //! Design-space exploration (paper §IV & §VI): pipeline configurations and
 //! allocations, design-space counting (Eq. 1–2), the Pipe-it heuristic
-//! (Algorithms 1–3) and the exhaustive baseline for small spaces.
+//! (Algorithms 1–3), the exhaustive baseline for small spaces, the
+//! energy-aware variant, and the replicated-pipeline extension
+//! ([`replicated`]) that partitions the core budget across R independent
+//! pipelines served as a fleet.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::cnn::zoo;
+//! use pipeit::dse;
+//! use pipeit::perfmodel::TimeMatrix;
+//! use pipeit::simulator::platform::Platform;
+//!
+//! let platform = Platform::hikey970();
+//! let tm = TimeMatrix::measured(&platform, &zoo::squeezenet());
+//! let point = dse::explore(&tm, 4, 4);
+//! assert!(point.pipeline.is_valid(4, 4));
+//! assert!(point.allocation.is_partition(tm.num_layers()));
+//! assert!(point.throughput > 0.0);
+//! ```
 
 pub mod algorithms;
 pub mod config;
 pub mod count;
 pub mod energy;
 pub mod exhaustive;
+pub mod replicated;
 
 pub use algorithms::{
     all_pipelines, explore, find_split, merge_stage, merge_stage_eq14, point_stage_times,
@@ -15,5 +35,8 @@ pub use algorithms::{
 pub use config::{
     pipeline_throughput, stage_times, Allocation, PipelineConfig, StageConfig,
 };
-pub use energy::{explore_energy, pipeline_power, EnergyPoint};
 pub use count::{binom, design_points, pipelines_with_p_stages, total_pipelines};
+pub use energy::{explore_energy, pipeline_power, EnergyPoint};
+pub use replicated::{
+    explore_exact, explore_replicated, CoreBudget, ReplicaDesign, ReplicatedDesign,
+};

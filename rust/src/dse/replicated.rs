@@ -1,0 +1,447 @@
+//! Replicated-pipeline design-space exploration.
+//!
+//! The single-pipeline DSE ([`crate::dse::explore`]) picks ONE pipeline
+//! spanning both clusters; its throughput is capped by the bottleneck stage
+//! plus layer-granularity quantization (a stage boundary can only sit on a
+//! layer boundary). Replication sidesteps both: partition the core budget
+//! into R disjoint per-replica budgets, give each replica its own pipeline
+//! over the *whole* network, and serve them behind one shared admission
+//! queue ([`crate::coordinator::run_fleet`]). A replica processes complete
+//! images, so the fleet's steady-state rate is the sum of replica rates.
+//!
+//! The searched space is therefore: every core partition into at most
+//! `max_replicas` budgets ([`partitions`]), times the per-budget pipeline
+//! space ([`explore_budget`]) — which, unlike the paper's Eq. 1 space, also
+//! contains single-cluster and single-stage pipelines, because a replica
+//! may own just `B4`. `R = 1` with the full budget reproduces the classic
+//! space, so the replicated optimum never loses to [`crate::dse::explore`].
+//! All designs are scored by the same Eq. 10/12 performance model and can
+//! be cross-checked with
+//! [`crate::simulator::pipeline_sim::simulate_replicated`].
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::cnn::zoo;
+//! use pipeit::dse;
+//! use pipeit::perfmodel::TimeMatrix;
+//! use pipeit::simulator::platform::Platform;
+//!
+//! let platform = Platform::hikey970();
+//! let tm = TimeMatrix::measured(&platform, &zoo::alexnet());
+//! let single = dse::explore(&tm, 4, 4);
+//! let fleet = dse::explore_replicated(&tm, 4, 4, 4);
+//! assert!(fleet.throughput >= single.throughput - 1e-9);
+//! assert!(fleet.num_replicas() >= 1);
+//! ```
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::perfmodel::TimeMatrix;
+
+use super::algorithms::{compositions, finalize, sort_by_capability, work_flow, DsePoint};
+use super::config::{pipeline_throughput, stage_times, PipelineConfig, StageConfig};
+use crate::simulator::platform::CoreType;
+
+/// Per-replica core budget: how many Big and Small cores the replica owns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CoreBudget {
+    pub big: usize,
+    pub small: usize,
+}
+
+impl CoreBudget {
+    pub fn new(big: usize, small: usize) -> CoreBudget {
+        CoreBudget { big, small }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.big + self.small
+    }
+}
+
+impl fmt::Display for CoreBudget {
+    /// The CLI's `2B+1s` shorthand.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}B+{}s", self.big, self.small)
+    }
+}
+
+/// One replica of a replicated design: its core budget and the pipeline
+/// the per-budget DSE chose for it.
+#[derive(Debug, Clone)]
+pub struct ReplicaDesign {
+    pub budget: CoreBudget,
+    pub point: DsePoint,
+}
+
+/// A replicated serving design: R pipelines on disjoint core budgets.
+#[derive(Debug, Clone)]
+pub struct ReplicatedDesign {
+    /// Replicas in budget-descending order (the [`partitions`] order).
+    pub replicas: Vec<ReplicaDesign>,
+    /// Aggregate predicted throughput: the sum of replica Eq. 12 rates.
+    pub throughput: f64,
+}
+
+impl ReplicatedDesign {
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// `B4 | s2-s2` style display: replica pipelines joined with `|`.
+    pub fn partition_display(&self) -> String {
+        self.replicas
+            .iter()
+            .map(|r| r.point.pipeline.to_string())
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    /// Per-replica stage service times under `tm` — the input to
+    /// [`crate::simulator::pipeline_sim::simulate_replicated`] and to the
+    /// synthetic-stage fleet built by `pipeit serve --net`.
+    pub fn stage_times(&self, tm: &TimeMatrix) -> Vec<Vec<f64>> {
+        self.replicas
+            .iter()
+            .map(|r| stage_times(tm, &r.point.pipeline, &r.point.allocation))
+            .collect()
+    }
+}
+
+/// All ways to split `(hb, hs)` cores into 1..=`max_replicas` disjoint,
+/// exhaustive budgets: every core is assigned, every budget is non-empty,
+/// and budgets are non-increasing (lexicographically on `(big, small)`) to
+/// skip permutations of the same multiset.
+pub fn partitions(hb: usize, hs: usize, max_replicas: usize) -> Vec<Vec<CoreBudget>> {
+    fn rec(
+        hb: usize,
+        hs: usize,
+        left: usize,
+        max_budget: CoreBudget,
+        cur: &mut Vec<CoreBudget>,
+        out: &mut Vec<Vec<CoreBudget>>,
+    ) {
+        if hb == 0 && hs == 0 {
+            if !cur.is_empty() {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        if left == 0 {
+            return;
+        }
+        for b in (0..=hb).rev() {
+            for s in (0..=hs).rev() {
+                if b + s == 0 {
+                    continue;
+                }
+                let budget = CoreBudget::new(b, s);
+                if budget > max_budget {
+                    continue;
+                }
+                cur.push(budget);
+                rec(hb - b, hs - s, left - 1, budget, cur, out);
+                cur.pop();
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    if hb + hs > 0 && max_replicas > 0 {
+        let mut cur = Vec::new();
+        rec(hb, hs, max_replicas, CoreBudget::new(hb, hs), &mut cur, &mut out);
+    }
+    out
+}
+
+/// Best pipeline within one replica's (possibly single-cluster) core
+/// budget. The space is every capability-ordered pipeline using *exactly*
+/// the budget's cores: all compositions of `budget.big` Big cores into
+/// 1..=big stages crossed with all compositions of `budget.small` — so
+/// single-cluster budgets yield single-cluster pipelines and `B4` alone is
+/// a valid (single-stage) pipeline, neither of which the paper's Eq. 1
+/// space contains. Allocation is by `work_flow`, scoring by Eq. 12.
+/// Returns `None` only for the empty budget.
+pub fn explore_budget(tm: &TimeMatrix, budget: CoreBudget) -> Option<DsePoint> {
+    if budget.cores() == 0 {
+        return None;
+    }
+    let w = tm.num_layers();
+
+    let cluster_options = |cores: usize, core: CoreType| -> Vec<Vec<StageConfig>> {
+        if cores == 0 {
+            return vec![Vec::new()];
+        }
+        let mut opts = Vec::new();
+        for parts in 1..=cores {
+            for comp in compositions(cores, parts) {
+                opts.push(comp.iter().map(|&c| StageConfig::new(core, c)).collect());
+            }
+        }
+        opts
+    };
+    let big_opts = cluster_options(budget.big, CoreType::Big);
+    let small_opts = cluster_options(budget.small, CoreType::Small);
+
+    let mut best: Option<(f64, PipelineConfig, super::config::Allocation)> = None;
+    for bo in &big_opts {
+        for so in &small_opts {
+            let mut stages: Vec<StageConfig> = bo.iter().chain(so.iter()).copied().collect();
+            if stages.is_empty() {
+                continue;
+            }
+            sort_by_capability(tm, &mut stages);
+            let p = PipelineConfig::new(stages);
+            let a = work_flow(tm, &p, w);
+            let tp = pipeline_throughput(tm, &p, &a);
+            if best.as_ref().map_or(true, |(b, _, _)| tp > *b) {
+                best = Some((tp, p, a));
+            }
+        }
+    }
+    best.map(|(_, p, a)| finalize(tm, p, a))
+}
+
+/// Search the replicated design space: every core partition into at most
+/// `max_replicas` budgets, each budget's pipeline chosen by
+/// [`explore_budget`], scored by the aggregate Eq. 12 rate sum. `R = 1`
+/// is part of the space, so the result never loses to
+/// [`crate::dse::explore`].
+pub fn explore_replicated(
+    tm: &TimeMatrix,
+    hb: usize,
+    hs: usize,
+    max_replicas: usize,
+) -> ReplicatedDesign {
+    explore_partitions(tm, hb, hs, 1, max_replicas).expect("nonempty replicated design space")
+}
+
+/// Best design with *exactly* `replicas` pipelines (CLI `serve --replicas
+/// R`). `None` when the core budget cannot host that many non-empty
+/// replicas.
+pub fn explore_exact(
+    tm: &TimeMatrix,
+    hb: usize,
+    hs: usize,
+    replicas: usize,
+) -> Option<ReplicatedDesign> {
+    explore_partitions(tm, hb, hs, replicas, replicas)
+}
+
+fn explore_partitions(
+    tm: &TimeMatrix,
+    hb: usize,
+    hs: usize,
+    r_min: usize,
+    r_max: usize,
+) -> Option<ReplicatedDesign> {
+    let mut cache: HashMap<CoreBudget, Option<DsePoint>> = HashMap::new();
+    let mut best: Option<ReplicatedDesign> = None;
+    for part in partitions(hb, hs, r_max) {
+        if part.len() < r_min {
+            continue;
+        }
+        let mut replicas = Vec::with_capacity(part.len());
+        let mut total = 0.0;
+        let mut feasible = true;
+        for &budget in &part {
+            let point = cache
+                .entry(budget)
+                .or_insert_with(|| explore_budget(tm, budget))
+                .clone();
+            match point {
+                Some(p) => {
+                    total += p.throughput;
+                    replicas.push(ReplicaDesign { budget, point: p });
+                }
+                None => {
+                    feasible = false;
+                    break;
+                }
+            }
+        }
+        if !feasible {
+            continue;
+        }
+        if best.as_ref().map_or(true, |b| total > b.throughput) {
+            best = Some(ReplicatedDesign { replicas, throughput: total });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::dse::{count, explore};
+    use crate::simulator::pipeline_sim;
+    use crate::simulator::platform::Platform;
+    use crate::util::proptest::check;
+
+    fn measured(net: &str) -> TimeMatrix {
+        TimeMatrix::measured(&Platform::hikey970(), &zoo::by_name(net).unwrap())
+    }
+
+    #[test]
+    fn partitions_are_exhaustive_disjoint_and_canonical() {
+        for (hb, hs, max_r) in [(4, 4, 4), (2, 6, 3), (4, 4, 1), (1, 1, 2)] {
+            let parts = partitions(hb, hs, max_r);
+            assert!(!parts.is_empty());
+            for p in &parts {
+                assert!(p.len() <= max_r);
+                assert_eq!(p.iter().map(|b| b.big).sum::<usize>(), hb, "{p:?}");
+                assert_eq!(p.iter().map(|b| b.small).sum::<usize>(), hs, "{p:?}");
+                assert!(p.iter().all(|b| b.cores() >= 1));
+                assert!(p.windows(2).all(|w| w[0] >= w[1]), "not canonical: {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_small_cases_by_hand() {
+        // (1,1) into <=2: [(1,1)] and [(1,0),(0,1)].
+        assert_eq!(partitions(1, 1, 2).len(), 2);
+        // max_replicas = 1: only the full budget.
+        assert_eq!(partitions(4, 4, 1), vec![vec![CoreBudget::new(4, 4)]]);
+        // Counting helper agrees with the enumeration.
+        for (hb, hs, r) in [(4, 4, 4), (2, 6, 3), (1, 1, 2), (3, 2, 5)] {
+            assert_eq!(
+                count::core_partitions(hb, hs, r),
+                partitions(hb, hs, r).len() as u128
+            );
+        }
+    }
+
+    #[test]
+    fn explore_budget_single_cluster_and_single_stage() {
+        let tm = measured("alexnet");
+        let pt = explore_budget(&tm, CoreBudget::new(4, 0)).unwrap();
+        assert_eq!(pt.pipeline.cores_used(CoreType::Big), 4);
+        assert_eq!(pt.pipeline.cores_used(CoreType::Small), 0);
+        assert!(pt.allocation.is_partition(tm.num_layers()));
+        // A pure-B4 single-stage pipeline is in the space, so the chosen
+        // point is at least as fast as serial B4.
+        let b4 = tm.config_index(CoreType::Big, 4).unwrap();
+        let tp_b4 = 1.0 / tm.range(0, tm.num_layers(), b4);
+        assert!(pt.throughput >= tp_b4 - 1e-12);
+        assert!(explore_budget(&tm, CoreBudget::new(0, 0)).is_none());
+    }
+
+    #[test]
+    fn full_budget_matches_or_beats_classic_explore() {
+        // explore_budget(4,4) covers the Eq. 1 space (plus single-stage
+        // configs the classic space lacks), so it can only be >=.
+        for net in ["alexnet", "mobilenet", "resnet50"] {
+            let tm = measured(net);
+            let classic = explore(&tm, 4, 4);
+            let budget = explore_budget(&tm, CoreBudget::new(4, 4)).unwrap();
+            assert!(
+                budget.throughput >= classic.throughput - 1e-9,
+                "{net}: budget {:.3} < classic {:.3}",
+                budget.throughput,
+                classic.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn replicated_never_loses_to_single_pipeline() {
+        for net in zoo::all_networks() {
+            let tm = TimeMatrix::measured(&Platform::hikey970(), &net);
+            let single = explore(&tm, 4, 4);
+            let fleet = explore_replicated(&tm, 4, 4, 4);
+            assert!(
+                fleet.throughput >= single.throughput - 1e-9,
+                "{}: fleet {:.3} < single {:.3}",
+                net.name,
+                fleet.throughput,
+                single.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn replication_beats_the_best_single_pipeline_somewhere() {
+        // The Pipe-it+fleet headline: for at least one network, splitting
+        // the 4+4 budget into replicas beats the best single pipeline.
+        let mut any_gain = false;
+        for net in zoo::all_networks() {
+            let tm = TimeMatrix::measured(&Platform::hikey970(), &net);
+            let single = explore(&tm, 4, 4);
+            let fleet = explore_replicated(&tm, 4, 4, 4);
+            if fleet.throughput > single.throughput * 1.001 && fleet.num_replicas() > 1 {
+                any_gain = true;
+            }
+        }
+        assert!(any_gain, "no network benefits from replication");
+    }
+
+    #[test]
+    fn exact_replica_count_is_honoured() {
+        let tm = measured("mobilenet");
+        for r in 1..=3 {
+            let d = explore_exact(&tm, 4, 4, r).unwrap();
+            assert_eq!(d.num_replicas(), r);
+        }
+        // 9 replicas cannot each own a core on an 8-core platform.
+        assert!(explore_exact(&tm, 4, 4, 9).is_none());
+    }
+
+    #[test]
+    fn design_is_internally_consistent_and_simulable() {
+        let tm = measured("resnet50");
+        let fleet = explore_replicated(&tm, 4, 4, 4);
+        let sum: f64 = fleet.replicas.iter().map(|r| r.point.throughput).sum();
+        assert!((fleet.throughput - sum).abs() < 1e-9);
+        let times = fleet.stage_times(&tm);
+        assert_eq!(times.len(), fleet.num_replicas());
+        let sim = pipeline_sim::simulate_replicated(&times, 2000, 2);
+        let rel = (sim.throughput - fleet.throughput).abs() / fleet.throughput;
+        assert!(
+            rel < 0.05,
+            "DES {:.3} vs Eq. 12 aggregate {:.3} (rel {rel:.3})",
+            sim.throughput,
+            fleet.throughput
+        );
+    }
+
+    #[test]
+    fn property_replicated_design_always_valid() {
+        let nets = zoo::all_networks();
+        check(20, |rng| {
+            let net = &nets[rng.index(nets.len())];
+            let tm = TimeMatrix::measured(&Platform::hikey970(), net);
+            let max_r = 1 + rng.index(4);
+            let fleet = explore_replicated(&tm, 4, 4, max_r);
+            crate::prop_assert!(
+                fleet.num_replicas() >= 1 && fleet.num_replicas() <= max_r,
+                "replica count {} outside 1..={max_r}",
+                fleet.num_replicas()
+            );
+            let big: usize =
+                fleet.replicas.iter().map(|r| r.budget.big).sum();
+            let small: usize =
+                fleet.replicas.iter().map(|r| r.budget.small).sum();
+            crate::prop_assert!(big == 4 && small == 4, "budgets not a partition");
+            for r in &fleet.replicas {
+                crate::prop_assert!(
+                    r.point.allocation.is_partition(tm.num_layers()),
+                    "replica allocation not a partition"
+                );
+                crate::prop_assert!(
+                    r.point.pipeline.cores_used(CoreType::Big) <= r.budget.big
+                        && r.point.pipeline.cores_used(CoreType::Small) <= r.budget.small,
+                    "replica exceeds its budget"
+                );
+                crate::prop_assert!(
+                    r.point.throughput.is_finite() && r.point.throughput > 0.0,
+                    "bad replica throughput"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -5,17 +5,27 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the Pipe-it coordinator: per-layer performance
-//!   prediction ([`perfmodel`]), design-space exploration ([`dse`]), the
-//!   pipelined executor ([`coordinator`]), the big.LITTLE hardware substrate
-//!   ([`simulator`]), baselines ([`baselines`]), and a PJRT runtime
-//!   ([`runtime`]) that executes AOT-lowered per-layer HLO modules.
+//!   prediction ([`perfmodel`]), design-space exploration ([`dse`]) — now
+//!   including the replicated-pipeline space ([`dse::replicated`]) — the
+//!   pipelined executor and replicated-serving fleet ([`coordinator`]), the
+//!   big.LITTLE hardware substrate ([`simulator`]), baselines
+//!   ([`baselines`]), and a PJRT runtime ([`runtime`]) that executes
+//!   AOT-lowered per-layer HLO modules.
 //! * **L2 (python/compile/model.py)** — CNN forward pass in JAX, lowered
 //!   once to HLO text per major layer (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas tiled im2col+GEMM kernels.
 //!
 //! Python never runs on the request path: the Rust binary loads
 //! `artifacts/<net>/*.hlo.txt` and serves an image stream through a
-//! multi-threaded pipeline, one stage per homogeneous core group.
+//! multi-threaded pipeline, one stage per homogeneous core group — or
+//! through R replicated pipelines behind one shared admission queue
+//! ([`coordinator::run_fleet`]) when a single balanced pipeline stops
+//! scaling.
+//!
+//! Architecture details live in `DESIGN.md`; the quickstart and the
+//! paper-to-module map live in `README.md`.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod baselines;
 pub mod cnn;

@@ -2,12 +2,12 @@
 //!
 //! Subcommands:
 //!   tables                         print every paper table/figure (paper-vs-ours)
-//!   explore   --net N [--predicted]  run the DSE, print config + allocation
+//!   explore   --net N [--predicted] [--replicated [--max-replicas R]]
 //!   predict   --net N              dump the layer x config time matrix
 //!   simulate  --net N --pipeline P [--images I] [--queue-cap C]
-//!   count     [--net N]            design-space sizes (Eq. 1-2)
-//!   serve     --artifacts DIR [--images I] [--batch B] [--stages K]
-//!                                  real PJRT serving over AOT artifacts
+//!   count     [--net N]            design-space sizes (Eq. 1-2 + replicated)
+//!   serve     --net N [--replicas R] ...   simulated-time fleet serving
+//!   serve     --artifacts DIR [--replicas R] ...  real PJRT serving
 //!
 //! All simulator-backed subcommands accept `--platform configs/<f>.json`.
 
@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::coordinator;
+use pipeit::coordinator::{run_fleet, synthetic_fleet};
 use pipeit::dse;
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
 use pipeit::reports::Reporter;
@@ -31,11 +32,16 @@ USAGE: pipeit <tables|explore|predict|simulate|count|serve> [options]
 
   tables     [--platform F]                 regenerate every paper table & figure
   explore    --net N [--predicted] [--platform F]
+             [--replicated] [--max-replicas 4]   also search replica partitions
   predict    --net N [--platform F]         per-layer time matrix (ms)
   simulate   --net N --pipeline B4-s2-s2 [--images 500] [--queue-cap 2]
-  count      [--net N]                      design-space sizes (Eq. 1-2)
-  serve      --artifacts artifacts/pipenet_tiny [--images 50] [--batch 1]
-             [--stages 3] [--queue-cap 2] [--serial] [--seed 7]
+  count      [--net N] [--max-replicas 4]   design-space sizes (Eq. 1-2 + fleet)
+  serve      --net N [--replicas 1] [--images 60] [--queue-cap 2]
+             [--time-scale 0.1]              simulated-time fleet serving
+                                             (deterministic; no seed)
+  serve      --artifacts artifacts/pipenet_tiny [--replicas 1] [--images 50]
+             [--batch 1] [--stages 3] [--queue-cap 2] [--serial] [--seed 7]
+                                            real PJRT serving (needs --features pjrt)
 
 networks: alexnet googlenet mobilenet resnet50 squeezenet";
 
@@ -44,8 +50,25 @@ fn net_arg(args: &Args) -> Result<pipeit::cnn::Network> {
     zoo::by_name(name).with_context(|| format!("unknown network {name:?}"))
 }
 
+/// One line per replica of a replicated design (shared by
+/// `explore --replicated` and `serve --net`).
+fn print_replicas(design: &dse::ReplicatedDesign) {
+    for (i, rep) in design.replicas.iter().enumerate() {
+        println!(
+            "  replica {i}: {:<6} {}  alloc {}  {:.2} imgs/s",
+            rep.budget.to_string(),
+            rep.point.pipeline,
+            rep.point.allocation.display_1based(),
+            rep.point.throughput
+        );
+    }
+}
+
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["predicted", "serial", "measured"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["predicted", "serial", "measured", "replicated"],
+    );
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -73,6 +96,25 @@ fn main() -> Result<()> {
             let times = dse::point_stage_times(&tm, &pt);
             for (i, (s, t)) in pt.pipeline.stages.iter().zip(&times).enumerate() {
                 println!("  stage {i}: {s}  {:.1} ms", t * 1e3);
+            }
+            if args.has_flag("replicated") {
+                let max_r = args.get_usize("max-replicas", 4)?;
+                let fleet = dse::explore_replicated(&tm, hb, hs, max_r);
+                println!();
+                println!(
+                    "replicated : {} (R={})",
+                    fleet.partition_display(),
+                    fleet.num_replicas()
+                );
+                print_replicas(&fleet);
+                println!(
+                    "aggregate  : {:.2} imgs/s ({:+.1}% vs best single pipeline)",
+                    fleet.throughput,
+                    100.0 * (fleet.throughput / pt.throughput - 1.0)
+                );
+                let sim =
+                    pipeline_sim::simulate_replicated(&fleet.stage_times(&tm), 1000, 2);
+                println!("simulated  : {:.2} imgs/s (DES, 1000 images)", sim.throughput);
             }
         }
         "predict" => {
@@ -130,6 +172,12 @@ fn main() -> Result<()> {
                 hs,
                 dse::count::total_pipelines(hb, hs)
             );
+            let max_r = args.get_usize("max-replicas", 4)?;
+            println!(
+                "replicated (R<={max_r}): {} core partitions, {} fleet pipelines",
+                dse::count::core_partitions(hb, hs, max_r),
+                dse::count::replicated_pipelines(hb, hs, max_r)
+            );
             let nets = match args.get("net") {
                 Some(_) => vec![net_arg(&args)?],
                 None => zoo::all_networks(),
@@ -144,34 +192,121 @@ fn main() -> Result<()> {
             }
         }
         "serve" => {
-            let dir = args.get("artifacts").context("--artifacts DIR required")?;
-            let manifest = Manifest::load(std::path::Path::new(dir))?;
-            let images = args.get_usize("images", 50)?;
-            let batch = args.get_usize("batch", 1)?;
-            let cap = args.get_usize("queue-cap", 2)?;
-            let stages = args.get_usize("stages", 3)?;
-            let seed = args.get_usize("seed", 7)? as u64;
-            if args.has_flag("serial") {
-                let (_, report) = coordinator::serve_serial(&manifest, images, batch, seed)?;
-                println!("serial (kernel-level analogue) on {}:", manifest.name);
-                print!("{}", report.render());
+            let replicas = args.get_usize("replicas", 1)?;
+            anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+            if let Some(dir) = args.get("artifacts") {
+                serve_artifacts(&args, dir, replicas)?;
+            } else if args.get("net").is_some() {
+                serve_simulated(&args, &cfg, replicas)?;
             } else {
-                let alloc = balance_by_macs(&manifest, stages);
-                println!(
-                    "pipelined serving on {} with {} stages: {}",
-                    manifest.name,
-                    alloc.active_stages(),
-                    alloc.display_1based()
+                anyhow::bail!(
+                    "serve needs --net N (simulated-time fleet) or --artifacts DIR \
+                     (real PJRT serving)\n\n{USAGE}"
                 );
-                let (_, report) =
-                    coordinator::serve_pipelined(&manifest, &alloc, images, batch, cap, seed)?;
-                print!("{}", report.render());
             }
         }
         other => {
             println!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);
         }
+    }
+    Ok(())
+}
+
+/// Simulated-time serving: pick the best R-replica design for the network,
+/// then drive the REAL thread fleet (shared admission queue, LOW dispatch)
+/// with synthetic stages that sleep for the predicted stage service times,
+/// scaled by `--time-scale`. Runs in every build — no PJRT required — and
+/// prints wall-clock numbers next to the DES prediction.
+fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
+    anyhow::ensure!(
+        !args.has_flag("serial"),
+        "--serial applies to --artifacts serving only"
+    );
+    for key in ["batch", "stages", "seed"] {
+        anyhow::ensure!(
+            args.get(key).is_none(),
+            "--{key} applies to --artifacts serving only"
+        );
+    }
+    let net = net_arg(args)?;
+    let images = args.get_usize("images", 60)?;
+    let cap = args.get_usize("queue-cap", 2)?;
+    let scale = args.get_f64("time-scale", 0.1)?;
+    anyhow::ensure!(scale > 0.0, "--time-scale must be positive");
+    anyhow::ensure!(images >= 1, "--images must be >= 1");
+    let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
+
+    let tm = TimeMatrix::measured(&cfg.platform, &net);
+    let design = dse::explore_exact(&tm, hb, hs, replicas).with_context(|| {
+        format!("no {replicas}-replica design fits on {hb}B+{hs}s")
+    })?;
+    println!(
+        "simulated-time serving: {} on {} ({}B+{}s), {} replicas",
+        net.name, cfg.platform.name, hb, hs, replicas
+    );
+    println!("fleet      : {}", design.partition_display());
+    print_replicas(&design);
+
+    let times = design.stage_times(&tm);
+    let sim = pipeline_sim::simulate_replicated(&times, images, cap);
+
+    // The real thread fleet: one sleep-stage per pipeline stage.
+    let fleet = synthetic_fleet(&times, scale);
+    let (_, report) = run_fleet(fleet, cap, 2 * replicas, 0..images);
+    println!();
+    print!("{}", report.render());
+    println!(
+        "predicted  : {:.2} imgs/s aggregate (DES, unscaled Eq. 10 times)",
+        sim.throughput
+    );
+    println!(
+        "wall-clock : {:.2} imgs/s at time-scale {scale} (~{:.2} imgs/s unscaled)",
+        report.throughput(),
+        report.throughput() * scale
+    );
+    Ok(())
+}
+
+/// Real PJRT serving over AOT artifacts (requires `--features pjrt`).
+fn serve_artifacts(args: &Args, dir: &str, replicas: usize) -> Result<()> {
+    let manifest = Manifest::load(std::path::Path::new(dir))?;
+    let images = args.get_usize("images", 50)?;
+    let batch = args.get_usize("batch", 1)?;
+    let cap = args.get_usize("queue-cap", 2)?;
+    let stages = args.get_usize("stages", 3)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    if args.has_flag("serial") {
+        anyhow::ensure!(
+            replicas == 1,
+            "--serial serves on one thread; it cannot be combined with --replicas {replicas}"
+        );
+        let (_, report) = coordinator::serve_serial(&manifest, images, batch, seed)?;
+        println!("serial (kernel-level analogue) on {}:", manifest.name);
+        print!("{}", report.render());
+    } else if replicas > 1 {
+        let alloc = balance_by_macs(&manifest, stages);
+        println!(
+            "replicated serving on {}: {} replicas x {} stages: {}",
+            manifest.name,
+            replicas,
+            alloc.active_stages(),
+            alloc.display_1based()
+        );
+        let (_, report) =
+            coordinator::serve_fleet(&manifest, &alloc, replicas, images, batch, cap, seed)?;
+        print!("{}", report.render());
+    } else {
+        let alloc = balance_by_macs(&manifest, stages);
+        println!(
+            "pipelined serving on {} with {} stages: {}",
+            manifest.name,
+            alloc.active_stages(),
+            alloc.display_1based()
+        );
+        let (_, report) =
+            coordinator::serve_pipelined(&manifest, &alloc, images, batch, cap, seed)?;
+        print!("{}", report.render());
     }
     Ok(())
 }

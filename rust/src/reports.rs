@@ -556,6 +556,39 @@ impl Reporter {
         t
     }
 
+    // ---- Replicated serving (beyond the paper: PICO-style fleet) ----------
+
+    /// One row per network: the best single pipeline (Eq. 12 + DES) against
+    /// the best replicated fleet from [`dse::explore_replicated`]
+    /// (aggregate Eq. 12 + replicated DES), with the chosen partition.
+    pub fn replicated(&self) -> Table {
+        let mut t = Table::new(
+            "Replicated serving: best single pipeline vs replicated fleet (imgs/s; R<=4)",
+            &["CNN", "single", "single sim", "fleet", "fleet sim", "R", "partition", "gain %"],
+        );
+        let (hb, hs) = (self.cfg.platform.big.cores, self.cfg.platform.small.cores);
+        for net in zoo::all_networks() {
+            let tm = self.tm_measured(&net);
+            let single = dse::explore(&tm, hb, hs);
+            let st = dse::point_stage_times(&tm, &single);
+            let single_sim = pipeline_sim::simulate(&st, 1000, 2);
+            let fleet = dse::explore_replicated(&tm, hb, hs, 4);
+            let fleet_sim =
+                pipeline_sim::simulate_replicated(&fleet.stage_times(&tm), 1000, 2);
+            t.row(vec![
+                net.name.clone(),
+                f(single.throughput, 2),
+                f(single_sim.throughput, 2),
+                f(fleet.throughput, 2),
+                f(fleet_sim.throughput, 2),
+                fleet.num_replicas().to_string(),
+                fleet.partition_display(),
+                f(100.0 * (fleet.throughput / single.throughput - 1.0), 1),
+            ]);
+        }
+        t
+    }
+
     /// Ablation: explore vs the paper-literal merge variants, plus the DES
     /// cross-check of Eq. 12 steady-state throughput.
     pub fn ablation(&self) -> Table {
@@ -604,6 +637,7 @@ impl Reporter {
         self.fig14().print();
         self.deepx().print();
         self.ablation().print();
+        self.replicated().print();
     }
 }
 
@@ -687,9 +721,43 @@ mod tests {
             REP.fig14(),
             REP.deepx(),
             REP.ablation(),
+            REP.replicated(),
         ] {
             assert!(table.render().lines().count() >= 3);
         }
+    }
+
+    #[test]
+    fn replicated_fleet_never_loses_and_wins_somewhere() {
+        // Acceptance: for at least one network, the replicated design's
+        // simulated throughput beats the best single-pipeline design.
+        let (hb, hs) = (REP.cfg.platform.big.cores, REP.cfg.platform.small.cores);
+        let mut any_sim_gain = false;
+        for net in zoo::all_networks() {
+            let tm = TimeMatrix::measured(&REP.cfg.platform, &net);
+            let single = dse::explore(&tm, hb, hs);
+            let st = dse::point_stage_times(&tm, &single);
+            let single_sim = pipeline_sim::simulate(&st, 1000, 2);
+            let fleet = dse::explore_replicated(&tm, hb, hs, 4);
+            let fleet_sim =
+                pipeline_sim::simulate_replicated(&fleet.stage_times(&tm), 1000, 2);
+            assert!(
+                fleet.throughput >= single.throughput - 1e-9,
+                "{}: fleet {:.3} lost to single {:.3}",
+                net.name,
+                fleet.throughput,
+                single.throughput
+            );
+            if fleet.num_replicas() > 1
+                && fleet_sim.throughput > single_sim.throughput * 1.001
+            {
+                any_sim_gain = true;
+            }
+        }
+        assert!(
+            any_sim_gain,
+            "no network's replicated fleet beat its best single pipeline in the DES"
+        );
     }
 
     #[test]

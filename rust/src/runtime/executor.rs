@@ -6,72 +6,29 @@
 //! xla_extension 0.5.1's proto path rejects (see /opt/xla-example/README).
 //!
 //! THREADING: `xla::PjRtClient` is `Rc`-based — neither `Send` nor `Sync`.
-//! Every pipeline-stage thread therefore builds its own `StageRunner`
-//! (client + compiled executables) via [`StageRunnerSpec`], which IS `Send`.
+//! Every pipeline-stage thread therefore builds its own [`StageRunner`]
+//! (client + compiled executables) via [`StageRunnerSpec`], which IS `Send`
+//! (DESIGN.md §1).
+//!
+//! FEATURE GATE: the `xla` crate is not part of the offline vendor set, so
+//! the real execution path only compiles with `--features pjrt` (DESIGN.md
+//! §6). The default build substitutes an API-compatible stub whose
+//! [`StageRunnerSpec::build`] returns an error; everything that merely
+//! *describes* executables ([`StageRunnerSpec::from_manifest`],
+//! [`StageRunnerSpec::full_network`]) works in both builds.
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::manifest::Manifest;
-use super::tensor::Tensor;
 
-/// One compiled layer executable (single input -> 1-tuple output).
-pub struct LayerExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub in_shape: Vec<usize>,
-    pub out_shape: Vec<usize>,
-}
-
-impl LayerExecutable {
-    /// Load + compile an HLO text file on the given client.
-    pub fn load(
-        client: &xla::PjRtClient,
-        path: &PathBuf,
-        in_shape: Vec<usize>,
-        out_shape: Vec<usize>,
-    ) -> Result<LayerExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
-        Ok(LayerExecutable { exe, in_shape, out_shape })
-    }
-
-    /// Execute on one tensor; shape-checked both ways.
-    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
-        anyhow::ensure!(
-            x.shape == self.in_shape,
-            "input shape {:?} != expected {:?}",
-            x.shape,
-            self.in_shape
-        );
-        let lit = xla::Literal::vec1(&x.data)
-            .reshape(&x.shape_i64())
-            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow::anyhow!("to_tuple1: {e}"))?;
-        let data = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
-        anyhow::ensure!(
-            data.len() == self.out_shape.iter().product::<usize>(),
-            "output element count {} != shape {:?}",
-            data.len(),
-            self.out_shape
-        );
-        Ok(Tensor::new(self.out_shape.clone(), data))
-    }
+/// True when the crate was compiled with the `pjrt` feature, i.e. when
+/// [`StageRunnerSpec::build`] can actually create PJRT clients. Serving
+/// entry points check this up front to fail with a clear error instead of
+/// panicking inside a stage thread.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 /// `Send` description of a stage's executables; materialized per-thread.
@@ -141,12 +98,87 @@ impl StageRunnerSpec {
     }
 
     /// Materialize on the current thread: create a PJRT client and compile
-    /// every executable. Called from inside the stage thread.
+    /// every executable. Called from inside the stage thread. Fails in
+    /// builds without the `pjrt` feature.
     pub fn build(&self) -> Result<StageRunner> {
+        imp::build(self)
+    }
+}
+
+pub use imp::{LayerExecutable, StageRunner};
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::PathBuf;
+
+    use anyhow::{Context, Result};
+
+    use super::StageRunnerSpec;
+    use crate::runtime::tensor::Tensor;
+
+    /// One compiled layer executable (single input -> 1-tuple output).
+    pub struct LayerExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub in_shape: Vec<usize>,
+        pub out_shape: Vec<usize>,
+    }
+
+    impl LayerExecutable {
+        /// Load + compile an HLO text file on the given client.
+        pub fn load(
+            client: &xla::PjRtClient,
+            path: &PathBuf,
+            in_shape: Vec<usize>,
+            out_shape: Vec<usize>,
+        ) -> Result<LayerExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+            Ok(LayerExecutable { exe, in_shape, out_shape })
+        }
+
+        /// Execute on one tensor; shape-checked both ways.
+        pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+            anyhow::ensure!(
+                x.shape == self.in_shape,
+                "input shape {:?} != expected {:?}",
+                x.shape,
+                self.in_shape
+            );
+            let lit = xla::Literal::vec1(&x.data)
+                .reshape(&x.shape_i64())
+                .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("to_tuple1: {e}"))?;
+            let data = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+            anyhow::ensure!(
+                data.len() == self.out_shape.iter().product::<usize>(),
+                "output element count {} != shape {:?}",
+                data.len(),
+                self.out_shape
+            );
+            Ok(Tensor::new(self.out_shape.clone(), data))
+        }
+    }
+
+    pub fn build(spec: &StageRunnerSpec) -> Result<StageRunner> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt client: {e}"))?;
         let mut by_batch = Vec::new();
-        for (b, layers) in &self.batches {
+        for (b, layers) in &spec.batches {
             let exes = layers
                 .iter()
                 .map(|(path, i, o)| LayerExecutable::load(&client, path, i.clone(), o.clone()))
@@ -155,51 +187,104 @@ impl StageRunnerSpec {
         }
         Ok(StageRunner { _client: client, by_batch })
     }
-}
 
-/// Thread-local stage runner: owns the client + compiled layer chain.
-pub struct StageRunner {
-    _client: xla::PjRtClient,
-    by_batch: Vec<(usize, Vec<LayerExecutable>)>,
-}
-
-impl StageRunner {
-    pub fn supported_batches(&self) -> Vec<usize> {
-        self.by_batch.iter().map(|(b, _)| *b).collect()
+    /// Thread-local stage runner: owns the client + compiled layer chain.
+    pub struct StageRunner {
+        _client: xla::PjRtClient,
+        by_batch: Vec<(usize, Vec<LayerExecutable>)>,
     }
 
-    /// Run a whole batch through this stage's layer chain. Uses the native
-    /// batch-B executables when `imgs.len()` matches one, else falls back
-    /// to per-image batch-1 execution.
-    pub fn run_batch(&self, imgs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.run_batch_owned(imgs.to_vec())
-    }
-
-    /// Allocation-lean variant for the pipeline hot path: consumes the
-    /// batch, so per-image chains start from the owned tensor instead of a
-    /// defensive clone (§Perf L3 iteration 1 — see EXPERIMENTS.md).
-    pub fn run_batch_owned(&self, imgs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        if let Some((_, exes)) = self.by_batch.iter().find(|(b, _)| *b == imgs.len() && *b > 1)
-        {
-            let mut x = Tensor::stack(&imgs);
-            drop(imgs);
-            for e in exes {
-                x = e.run(&x)?;
-            }
-            return Ok(x.unstack());
+    impl StageRunner {
+        pub fn supported_batches(&self) -> Vec<usize> {
+            self.by_batch.iter().map(|(b, _)| *b).collect()
         }
-        let (_, exes) = self
-            .by_batch
-            .iter()
-            .find(|(b, _)| *b == 1)
-            .context("no batch-1 executables")?;
-        imgs.into_iter()
-            .map(|mut x| {
+
+        /// Run a whole batch through this stage's layer chain. Uses the native
+        /// batch-B executables when `imgs.len()` matches one, else falls back
+        /// to per-image batch-1 execution.
+        pub fn run_batch(&self, imgs: &[Tensor]) -> Result<Vec<Tensor>> {
+            self.run_batch_owned(imgs.to_vec())
+        }
+
+        /// Allocation-lean variant for the pipeline hot path: consumes the
+        /// batch, so per-image chains start from the owned tensor instead of a
+        /// defensive clone (§Perf L3 iteration 1 — see EXPERIMENTS.md).
+        pub fn run_batch_owned(&self, imgs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+            if let Some((_, exes)) =
+                self.by_batch.iter().find(|(b, _)| *b == imgs.len() && *b > 1)
+            {
+                let mut x = Tensor::stack(&imgs);
+                drop(imgs);
                 for e in exes {
                     x = e.run(&x)?;
                 }
-                Ok(x)
-            })
-            .collect()
+                return Ok(x.unstack());
+            }
+            let (_, exes) = self
+                .by_batch
+                .iter()
+                .find(|(b, _)| *b == 1)
+                .context("no batch-1 executables")?;
+            imgs.into_iter()
+                .map(|mut x| {
+                    for e in exes {
+                        x = e.run(&x)?;
+                    }
+                    Ok(x)
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::Result;
+
+    use super::StageRunnerSpec;
+    use crate::runtime::tensor::Tensor;
+
+    fn unavailable() -> anyhow::Error {
+        anyhow::anyhow!(
+            "PJRT runtime not built: recompile with `--features pjrt` and the \
+             vendored `xla` crate (DESIGN.md §6)"
+        )
+    }
+
+    /// Stub of the compiled-layer handle; never constructible without the
+    /// `pjrt` feature, kept so `use pipeit::runtime::LayerExecutable`
+    /// compiles in both builds.
+    pub struct LayerExecutable {
+        pub in_shape: Vec<usize>,
+        pub out_shape: Vec<usize>,
+    }
+
+    impl LayerExecutable {
+        pub fn run(&self, _x: &Tensor) -> Result<Tensor> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub runner; [`StageRunnerSpec::build`] never returns one.
+    pub struct StageRunner {
+        _private: (),
+    }
+
+    impl StageRunner {
+        pub fn supported_batches(&self) -> Vec<usize> {
+            Vec::new()
+        }
+
+        pub fn run_batch(&self, _imgs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(unavailable())
+        }
+
+        pub fn run_batch_owned(&self, _imgs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+            Err(unavailable())
+        }
+    }
+
+    pub fn build(_spec: &StageRunnerSpec) -> Result<StageRunner> {
+        Err(unavailable())
     }
 }

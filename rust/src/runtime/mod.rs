@@ -1,10 +1,12 @@
 //! PJRT runtime: artifact manifests, host tensors, and per-stage compiled
-//! executables (the only module that touches the `xla` crate).
+//! executables (the only module that touches the `xla` crate, and only when
+//! built with `--features pjrt` — see [`executor::pjrt_available`] and
+//! DESIGN.md §6).
 
 pub mod executor;
 pub mod manifest;
 pub mod tensor;
 
-pub use executor::{LayerExecutable, StageRunner, StageRunnerSpec};
+pub use executor::{pjrt_available, LayerExecutable, StageRunner, StageRunnerSpec};
 pub use manifest::{Manifest, ManifestGemm, ManifestLayer};
 pub use tensor::Tensor;

@@ -15,6 +15,8 @@ pub use gemm::{
     layer_time, layer_time_1core, layer_time_hmp, layer_time_hmp_ratio, layers_time,
     mean_layer_time, network_time, network_time_hmp, throughput,
 };
-pub use pipeline_sim::{simulate, steady_state_throughput, SimReport};
+pub use pipeline_sim::{
+    simulate, simulate_replicated, steady_state_throughput, FleetSimReport, SimReport,
+};
 pub use platform::{ClusterSpec, CoreType, Platform};
 pub use power::{ClusterActivity, PowerModel};

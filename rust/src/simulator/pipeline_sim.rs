@@ -5,6 +5,11 @@
 //! converge to `1 / max_i T_{L_i}^{P_i}` (paper Eq. 12); the simulator also
 //! reports fill/drain transients, per-stage utilization and per-image
 //! latency, which the closed form does not give.
+//!
+//! [`simulate_replicated`] extends the same model to a *fleet* of
+//! replicated pipelines behind a shared least-outstanding-work dispatcher,
+//! mirroring [`crate::coordinator::run_fleet`] so that design-time
+//! predictions and wall-clock fleet runs stay comparable.
 
 /// Result of simulating a stream through a pipeline.
 #[derive(Debug, Clone)]
@@ -102,6 +107,99 @@ pub fn steady_state_throughput(stage_times: &[f64]) -> f64 {
     1.0 / stage_times.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Result of simulating a stream through a *replicated* fleet of pipelines
+/// (the DES twin of [`crate::coordinator::run_fleet`]).
+#[derive(Debug, Clone)]
+pub struct FleetSimReport {
+    /// Wall-clock time until the slowest replica drains (s).
+    pub makespan: f64,
+    /// Aggregate average throughput over the whole run (imgs/s).
+    pub throughput: f64,
+    /// Sum of per-replica Eq. 12 steady-state rates (imgs/s).
+    pub steady_state_throughput: f64,
+    /// Images routed to each replica by least-outstanding-work dispatch.
+    pub dispatched: Vec<usize>,
+    /// Per-replica simulation reports (a zeroed report for replicas that
+    /// received no images).
+    pub per_replica: Vec<SimReport>,
+}
+
+fn idle_sim_report(stage_times: &[f64]) -> SimReport {
+    let (bottleneck, _) = stage_times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .expect("nonempty stage times");
+    SimReport {
+        makespan: 0.0,
+        throughput: 0.0,
+        steady_state_throughput: steady_state_throughput(stage_times),
+        bottleneck,
+        utilization: vec![0.0; stage_times.len()],
+        latencies: Vec::new(),
+    }
+}
+
+/// Simulate `images` items through a fleet of replicated pipelines with a
+/// saturated shared source and least-outstanding-work dispatch — the DES
+/// analogue of [`crate::coordinator::run_fleet`], so predicted and
+/// wall-clock fleet numbers stay comparable.
+///
+/// `replica_stage_times[r]` gives replica `r`'s deterministic per-stage
+/// service times. Dispatch assigns each image to the replica whose
+/// outstanding work plus marginal cycle time is smallest (cycle time = the
+/// replica's bottleneck stage time), which converges to rate-proportional
+/// routing; each replica's stream is then simulated exactly with
+/// [`simulate`]. The fleet's makespan is the slowest replica's makespan
+/// (replicas run concurrently), and for long streams the aggregate
+/// throughput approaches `steady_state_throughput` — the sum of replica
+/// rates.
+pub fn simulate_replicated(
+    replica_stage_times: &[Vec<f64>],
+    images: usize,
+    queue_cap: usize,
+) -> FleetSimReport {
+    assert!(!replica_stage_times.is_empty());
+    assert!(images >= 1);
+    let r = replica_stage_times.len();
+    let cycles: Vec<f64> = replica_stage_times
+        .iter()
+        .map(|t| t.iter().copied().fold(f64::NEG_INFINITY, f64::max))
+        .collect();
+    assert!(cycles.iter().all(|c| c.is_finite() && *c > 0.0));
+
+    let mut work = vec![0.0f64; r];
+    let mut dispatched = vec![0usize; r];
+    for _ in 0..images {
+        let pick = (0..r)
+            .min_by(|&a, &b| (work[a] + cycles[a]).total_cmp(&(work[b] + cycles[b])))
+            .expect("nonempty fleet");
+        work[pick] += cycles[pick];
+        dispatched[pick] += 1;
+    }
+
+    let per_replica: Vec<SimReport> = replica_stage_times
+        .iter()
+        .zip(&dispatched)
+        .map(|(times, &n)| {
+            if n == 0 {
+                idle_sim_report(times)
+            } else {
+                simulate(times, n, queue_cap)
+            }
+        })
+        .collect();
+
+    let makespan = per_replica.iter().map(|s| s.makespan).fold(0.0, f64::max);
+    FleetSimReport {
+        makespan,
+        throughput: images as f64 / makespan,
+        steady_state_throughput: cycles.iter().map(|c| 1.0 / c).sum(),
+        dispatched,
+        per_replica,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +293,82 @@ mod tests {
             crate::prop_assert!(
                 (large - ss).abs() <= (small - ss).abs() + 1e-9,
                 "longer run should be closer to steady state"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replicated_single_replica_matches_simulate() {
+        let times = vec![0.03, 0.05, 0.02];
+        let fleet = simulate_replicated(&[times.clone()], 500, 2);
+        let solo = simulate(&times, 500, 2);
+        assert_eq!(fleet.dispatched, vec![500]);
+        assert!((fleet.makespan - solo.makespan).abs() < 1e-12);
+        assert!((fleet.throughput - solo.throughput).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicated_dispatch_is_rate_proportional() {
+        // Replica 0 is 3x faster: it should receive ~3x the images.
+        let fleet =
+            simulate_replicated(&[vec![0.01], vec![0.03]], 400, 2);
+        let share = fleet.dispatched[0] as f64 / fleet.dispatched[1] as f64;
+        assert!(
+            (2.5..3.5).contains(&share),
+            "dispatch ratio {share:.2} should be ~3 ({:?})",
+            fleet.dispatched
+        );
+    }
+
+    #[test]
+    fn two_identical_replicas_double_throughput() {
+        let times = vec![0.02, 0.04];
+        let solo = simulate(&times, 1000, 2).throughput;
+        let fleet =
+            simulate_replicated(&[times.clone(), times.clone()], 2000, 2).throughput;
+        assert!(
+            (fleet / solo - 2.0).abs() < 0.05,
+            "fleet {fleet:.2} vs solo {solo:.2}"
+        );
+    }
+
+    /// The satellite property: fleet aggregate throughput equals the sum of
+    /// replica steady-state throughputs within tolerance (the transient
+    /// fill/drain shrinks as the stream grows).
+    #[test]
+    fn property_fleet_throughput_is_sum_of_replica_rates() {
+        check(100, |rng| {
+            let r = 1 + rng.index(4);
+            let replicas: Vec<Vec<f64>> = (0..r)
+                .map(|_| {
+                    let p = 1 + rng.index(4);
+                    (0..p).map(|_| rng.range_f64(0.002, 0.05)).collect()
+                })
+                .collect();
+            let cap = 1 + rng.index(3);
+            let fleet = simulate_replicated(&replicas, 3000, cap);
+            let sum_rates: f64 = replicas
+                .iter()
+                .map(|t| steady_state_throughput(t))
+                .sum();
+            crate::prop_assert!(
+                fleet.throughput <= sum_rates * (1.0 + 1e-9),
+                "aggregate {} exceeds the rate-sum bound {}",
+                fleet.throughput,
+                sum_rates
+            );
+            let rel = (fleet.throughput - sum_rates).abs() / sum_rates;
+            crate::prop_assert!(
+                rel < 0.05,
+                "aggregate {} not within 5% of rate sum {} (rel {rel:.3})",
+                fleet.throughput,
+                sum_rates
+            );
+            crate::prop_assert!(
+                fleet.dispatched.iter().sum::<usize>() == 3000,
+                "dispatch lost images: {:?}",
+                fleet.dispatched
             );
             Ok(())
         });

@@ -88,6 +88,17 @@ impl Summary {
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
+
+    /// Absorb another summary's samples (fleet-level report merging: the
+    /// percentile queries then answer over the union of all replicas).
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Raw samples, in recording order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +132,19 @@ mod tests {
         let pred = [11.0, 18.0];
         // (10% + 10%) / 2 = 10%
         assert!((mape(&pred, &truth) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_merge_unions_samples() {
+        let mut a = Summary::new();
+        a.record(1.0);
+        a.record(2.0);
+        let mut b = Summary::new();
+        b.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 10.0);
+        assert_eq!(a.samples(), &[1.0, 2.0, 10.0]);
     }
 
     #[test]

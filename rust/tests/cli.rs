@@ -90,6 +90,51 @@ fn platform_flag_is_honoured() {
 }
 
 #[test]
+fn count_prints_replicated_space() {
+    let (ok, text) = pipeit(&["count", "--max-replicas", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("replicated (R<=2)"), "{text}");
+    assert!(text.contains("core partitions"), "{text}");
+}
+
+#[test]
+fn explore_replicated_reports_fleet() {
+    let (ok, text) = pipeit(&["explore", "--net", "alexnet", "--replicated"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("replicated"), "{text}");
+    assert!(text.contains("aggregate"), "{text}");
+    assert!(text.contains("vs best single pipeline"), "{text}");
+}
+
+#[test]
+fn serve_simulated_fleet_two_replicas() {
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "alexnet", "--replicas", "2", "--images", "16",
+        "--time-scale", "0.02",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fleet"), "{text}");
+    assert!(text.contains("aggregate"), "{text}");
+    assert!(text.contains("replica 1"), "{text}");
+}
+
+#[test]
+fn serve_simulated_single_replica() {
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "squeezenet", "--images", "10", "--time-scale", "0.02",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fleet: 1 replicas"), "{text}");
+}
+
+#[test]
+fn serve_without_target_fails_with_usage() {
+    let (ok, text) = pipeit(&["serve"]);
+    assert!(!ok);
+    assert!(text.contains("--net") || text.contains("--artifacts"), "{text}");
+}
+
+#[test]
 fn serve_serial_on_artifacts() {
     // Only when artifacts exist (built by `make artifacts`).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -1,0 +1,65 @@
+//! Minimal offline stand-in for the `once_cell` crate.
+//!
+//! Implements only `once_cell::sync::Lazy` (the subset the workspace's
+//! tests use for shared fixtures), built on `std::sync::OnceLock`. The
+//! initializer is `F: Fn() -> T` rather than `FnOnce` — `OnceLock`
+//! guarantees it runs at most once, and every call site passes a
+//! non-capturing closure, which coerces to the default `fn() -> T`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, usable in `static` items.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        /// Force initialization and return the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static CALLS: AtomicUsize = AtomicUsize::new(0);
+    static VALUE: Lazy<u64> = Lazy::new(|| {
+        CALLS.fetch_add(1, Ordering::SeqCst);
+        40 + 2
+    });
+
+    #[test]
+    fn initializes_once_in_static() {
+        assert_eq!(*VALUE, 42);
+        assert_eq!(*VALUE, 42);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn works_with_capturing_closure_local() {
+        let base = 10;
+        let lazy = Lazy::new(move || base * 3);
+        assert_eq!(*lazy, 30);
+    }
+}
