@@ -4,71 +4,57 @@
 //!
 //!   make artifacts && cargo run --release --example continuous_vision
 //!
-//! Serves two models at once: `pipenet_tiny` through a 3-stage pipeline and
-//! `pipenet_micro` through a 2-stage pipeline, each in its own thread
-//! group, then reports per-model and aggregate throughput. On the paper's
-//! board these pipelines would be pinned to disjoint core sets; on this
-//! host they share the CPU, demonstrating the coordinator's multi-tenancy.
+//! Compiles one serving plan per model (`pipenet_tiny` as a 3-stage
+//! pipeline, `pipenet_micro` as 2 stages) and deploys both at once, each
+//! in its own thread group, then reports per-model and aggregate
+//! throughput. On the paper's board these pipelines would be pinned to
+//! disjoint core sets; on this host they share the CPU, demonstrating the
+//! coordinator's multi-tenancy.
 
-use anyhow::{Context, Result};
 use std::thread;
 
-use pipeit::coordinator::serve_pipelined;
-use pipeit::dse::Allocation;
-use pipeit::runtime::Manifest;
+use anyhow::{Context, Result};
+
+use pipeit::api::{DeployOptions, PlanSpec};
+use pipeit::reports::render_serve;
 use pipeit::util::cli::Args;
 
-fn even_split(w: usize, k: usize) -> Allocation {
-    let k = k.clamp(1, w);
-    let ranges = (0..k)
-        .map(|i| (i * w / k, (i + 1) * w / k))
-        .collect();
-    Allocation { ranges }
-}
-
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &[]);
+    let args = Args::parse(std::env::args().skip(1), &[])?;
     let images = args.get_usize("images", 60)?;
 
-    let tiny = Manifest::load(std::path::Path::new("artifacts/pipenet_tiny"))
+    let tiny = PlanSpec::from_artifacts("artifacts/pipenet_tiny")
+        .stages(3)
+        .compile()
         .context("run `make artifacts` first")?;
-    let micro = Manifest::load(std::path::Path::new("artifacts/pipenet_micro"))?;
-
+    let micro = PlanSpec::from_artifacts("artifacts/pipenet_micro").stages(2).compile()?;
     println!(
-        "serving {} ({} layers) and {} ({} layers) concurrently, {} images each\n",
-        tiny.name,
-        tiny.num_layers(),
-        micro.name,
-        micro.num_layers(),
-        images
+        "serving {} and {} concurrently, {images} images each\n",
+        tiny.network, micro.network
     );
 
     let t1 = {
-        let m = tiny.clone();
-        thread::spawn(move || {
-            let alloc = even_split(m.num_layers(), 3);
-            serve_pipelined(&m, &alloc, images, 1, 2, 11)
-        })
+        let plan = tiny.clone();
+        let opts = DeployOptions { images, seed: 11, ..DeployOptions::default() };
+        thread::spawn(move || plan.deploy(&opts))
     };
     let t2 = {
-        let m = micro.clone();
-        thread::spawn(move || {
-            let alloc = even_split(m.num_layers(), 2);
-            serve_pipelined(&m, &alloc, images, 1, 2, 13)
-        })
+        let plan = micro.clone();
+        let opts = DeployOptions { images, seed: 13, ..DeployOptions::default() };
+        thread::spawn(move || plan.deploy(&opts))
     };
 
-    let (_, rep_tiny) = t1.join().expect("tiny thread")?;
-    let (_, rep_micro) = t2.join().expect("micro thread")?;
+    let rep_tiny = t1.join().expect("tiny thread")?;
+    let rep_micro = t2.join().expect("micro thread")?;
 
-    println!("--- {} ---", tiny.name);
-    print!("{}", rep_tiny.render());
-    println!("\n--- {} ---", micro.name);
-    print!("{}", rep_micro.render());
+    println!("--- {} ---", rep_tiny.network);
+    print!("{}", render_serve(&rep_tiny));
+    println!("\n--- {} ---", rep_micro.network);
+    print!("{}", render_serve(&rep_micro));
 
     println!(
         "\naggregate: {:.1} inferences/s across both models",
-        rep_tiny.throughput() + rep_micro.throughput()
+        rep_tiny.throughput + rep_micro.throughput
     );
     Ok(())
 }

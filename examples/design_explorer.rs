@@ -1,22 +1,41 @@
-//! Design explorer: runs the full Pipe-it DSE for all five benchmark CNNs
-//! and prints the paper's Tables IV, V and VI plus the design-space sizes.
+//! Design explorer: compiles a replicated serving plan for all five
+//! benchmark CNNs through the `pipeit::api` facade, then prints the
+//! paper's Tables IV, V and VI plus the design-space sizes.
 //!
 //!   cargo run --release --example design_explorer [-- --platform configs/x.json]
 //!
 //! Also demonstrates platform retargeting: pass any configs/*.json to see
 //! how the chosen pipelines change on a different big.LITTLE design.
 
+use pipeit::api::{PlanSpec, Strategy};
+use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::reports::Reporter;
 use pipeit::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &[]);
+    let args = Args::parse(std::env::args().skip(1), &[])?;
     let cfg = Config::load_or_default(args.get("platform"))?;
     println!(
         "platform: {} ({}B + {}s)\n",
         cfg.platform.name, cfg.platform.big.cores, cfg.platform.small.cores
     );
+
+    // One compiled plan per network — the artifact `pipeit plan` emits.
+    for net in zoo::all_networks() {
+        let plan = PlanSpec::new(&net.name)
+            .platform(cfg.clone())
+            .strategy(Strategy::Replicated { max_replicas: 4, exact: false })
+            .compile()?;
+        println!(
+            "{:<11} {:<28} {:>6.2} imgs/s (R={})",
+            plan.network,
+            plan.partition_display(),
+            plan.throughput,
+            plan.num_replicas()
+        );
+    }
+    println!();
 
     let rep = Reporter::new(cfg);
     rep.design_space().print();
@@ -24,5 +43,6 @@ fn main() -> anyhow::Result<()> {
     rep.table5().print();
     rep.table6().print();
     rep.ablation().print();
+    rep.replicated().print();
     Ok(())
 }

@@ -1,119 +1,80 @@
 //! End-to-end serving driver (DESIGN.md §6) — the proof that all three
 //! layers compose: Pallas GEMM kernels (L1) -> JAX layer graphs (L2) ->
-//! AOT HLO artifacts -> Rust pipelined serving over PJRT (L3).
+//! AOT HLO artifacts -> Rust pipelined serving over PJRT (L3), driven
+//! through the Plan → Deploy facade.
 //!
 //!   make artifacts && cargo run --release --example e2e_serving
 //!   (options: -- --artifacts artifacts/pipenet_tiny --images 200
-//!             --stages 3 --batch 4 --queue-cap 2)
+//!             --stages 3 --batch 4 --queue-cap 2 [--no-profile])
 //!
-//! Loads the small real CNN exported by `python/compile/aot.py`, serves a
-//! synthetic image stream through (a) the serial kernel-level analogue and
-//! (b) the layer-level pipeline, verifies both produce identical
-//! classifications, and reports throughput / latency / stage utilization.
-//! Results are recorded in EXPERIMENTS.md.
+//! Plans the small real CNN exported by `python/compile/aot.py` —
+//! profile-guided stage balancing by default, MAC-proportional with
+//! `--no-profile` — serves the stream through (a) the serial kernel-level
+//! analogue and (b) the layer-level pipeline plan, verifies both produce
+//! identical classifications, and reports throughput / latency / stage
+//! utilization. Results are recorded in EXPERIMENTS.md.
 
 use anyhow::{Context, Result};
 
-use pipeit::coordinator::{serve_pipelined, serve_serial};
-use pipeit::dse::Allocation;
-use pipeit::runtime::Manifest;
+use pipeit::api::{DeployOptions, PlanSpec, Strategy, TimeSource};
+use pipeit::coordinator::Job;
+use pipeit::reports::render_serve;
 use pipeit::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["no-profile"]);
+    let args = Args::parse(std::env::args().skip(1), &["no-profile"])?;
     let dir = args.get_or("artifacts", "artifacts/pipenet_tiny");
-    let images = args.get_usize("images", 200)?;
     let stages = args.get_usize("stages", 3)?;
-    let batch = args.get_usize("batch", 1)?;
-    let cap = args.get_usize("queue-cap", 2)?;
-    let seed = 7u64;
-
-    let manifest = Manifest::load(std::path::Path::new(dir))
-        .context("run `make artifacts` first")?;
-    println!(
-        "model {}: {} major layers, input {:?}, {:.1} MMACs/image",
-        manifest.name,
-        manifest.num_layers(),
-        manifest.input_shape,
-        manifest.layers.iter().map(|l| l.macs).sum::<usize>() as f64 / 1e6
-    );
-
-    // Stage allocation: profile-guided (measure per-layer times on this
-    // host with a short calibration run, then balance ranges on time — the
-    // launcher analogue of the paper's Table VI "measured layer timings").
-    // Falls back to MAC-proportional balancing with --no-profile.
-    let alloc = if args.has_flag("no-profile") {
-        balance_by_macs(&manifest, stages)
-    } else {
-        let times = pipeit::coordinator::profile_layer_times(&manifest, 16, 3)?;
-        println!(
-            "profiled layer times (ms): {:?}",
-            times.iter().map(|t| (t * 1e5).round() / 100.0).collect::<Vec<_>>()
-        );
-        pipeit::coordinator::balance_by_times(&times, stages)
+    let opts = DeployOptions {
+        images: args.get_usize("images", 200)?,
+        batch: args.get_usize("batch", 1)?,
+        queue_cap: args.get_usize("queue-cap", 2)?,
+        seed: 7,
+        ..DeployOptions::default()
     };
-    println!("pipeline stages: {}\n", alloc.display_1based());
 
-    println!("--- serial (kernel-level analogue, whole-net module) ---");
-    let (serial_jobs, serial_report) = serve_serial(&manifest, images, batch, seed)?;
-    print!("{}", serial_report.render());
+    let mut spec = PlanSpec::from_artifacts(dir).stages(stages);
+    if !args.has_flag("no-profile") {
+        spec = spec.time_source(TimeSource::ProfiledArtifacts);
+    }
+    let plan = spec.compile().context("run `make artifacts` first")?;
+    print!("{}", plan.summary());
+
+    println!("\n--- serial (kernel-level analogue, whole-net module) ---");
+    let serial = PlanSpec::from_artifacts(dir).strategy(Strategy::Serial).compile()?;
+    let (serial_jobs, serial_report) = serial.deploy_collect(&opts)?;
+    print!("{}", render_serve(&serial_report));
 
     println!("\n--- pipelined (layer-level split, {stages} stage threads) ---");
-    let (piped_jobs, piped_report) =
-        serve_pipelined(&manifest, &alloc, images, batch, cap, seed)?;
-    print!("{}", piped_report.render());
+    let (piped_jobs, piped_report) = plan.deploy_collect(&opts)?;
+    print!("{}", render_serve(&piped_report));
 
     // Functional equivalence: identical argmax classifications.
-    let argmax = |jobs: &[pipeit::coordinator::Job]| -> Vec<usize> {
-        let mut out: Vec<(usize, usize)> = Vec::new();
-        for j in jobs {
-            for (k, t) in j.tensors.iter().enumerate() {
-                let am = t
-                    .data
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i)
-                    .unwrap();
-                out.push((j.seq + k, am));
-            }
-        }
-        out.sort();
-        out.into_iter().map(|(_, v)| v).collect()
-    };
     let a = argmax(&serial_jobs);
     let b = argmax(&piped_jobs);
     anyhow::ensure!(a == b, "serial and pipelined classifications diverge!");
     println!("\nfunctional check: {} classifications identical across modes ✓", a.len());
     println!(
         "pipeline speedup over serial: {:.2}x",
-        piped_report.throughput() / serial_report.throughput()
+        piped_report.throughput / serial_report.throughput
     );
     Ok(())
 }
 
-fn balance_by_macs(manifest: &Manifest, k: usize) -> Allocation {
-    let w = manifest.num_layers();
-    let k = k.clamp(1, w);
-    let total: usize = manifest.layers.iter().map(|l| l.macs).sum();
-    let target = total as f64 / k as f64;
-    let mut ranges = Vec::with_capacity(k);
-    let mut lo = 0;
-    let mut acc = 0.0;
-    for (i, l) in manifest.layers.iter().enumerate() {
-        acc += l.macs as f64;
-        let stages_left = k - ranges.len();
-        let layers_left = w - i - 1;
-        if (acc >= target && stages_left > 1 && layers_left >= stages_left - 1)
-            || layers_left + 1 == stages_left
-        {
-            ranges.push((lo, i + 1));
-            lo = i + 1;
-            acc = 0.0;
+fn argmax(jobs: &[Job]) -> Vec<usize> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for j in jobs {
+        for (k, t) in j.tensors.iter().enumerate() {
+            let am = t
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or_else(|| panic!("empty output tensor in job {}", j.seq));
+            out.push((j.seq + k, am));
         }
     }
-    if lo < w {
-        ranges.push((lo, w));
-    }
-    Allocation { ranges }
+    out.sort();
+    out.into_iter().map(|(_, v)| v).collect()
 }

@@ -1,47 +1,38 @@
-//! Quickstart: the Pipe-it API in ~30 lines.
+//! Quickstart: the Plan → Deploy facade in ~20 lines.
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Fits the layer-level performance model, explores the pipeline design
-//! space for ResNet50 on the (simulated) HiKey 970, and cross-checks the
-//! chosen design point with the discrete-event pipeline simulator.
+//! Compiles a predicted-time serving plan for ResNet50 on the (simulated)
+//! HiKey 970 — the same artifact `pipeit plan --net resnet50 --predicted`
+//! writes — cross-checks it in the discrete-event simulator, and compares
+//! against the Big-cluster serial baseline.
 
-use pipeit::config::Config;
-use pipeit::cnn::zoo;
-use pipeit::dse;
-use pipeit::perfmodel::{PerfModel, TimeMatrix};
-use pipeit::simulator::pipeline_sim;
+use pipeit::api::{PlanSpec, Strategy, TimeSource};
+use pipeit::reports::render_serve;
 
-fn main() {
-    let cfg = Config::default(); // HiKey 970: 4x A73 + 4x A53
-    let net = zoo::resnet50();
+fn main() -> anyhow::Result<()> {
+    // 1. Plan: fit the Eq. 5-8 predictor, build the time matrix, explore
+    //    the pipeline design space. The result is a serializable artifact
+    //    (`plan.save(...)` / `Plan::load(...)`).
+    let plan = PlanSpec::new("resnet50")
+        .time_source(TimeSource::Predicted)
+        .compile()?;
+    print!("{}", plan.summary());
 
-    // 1. Fit the paper's Eq. 5-8 performance predictor from
-    //    micro-benchmarks run on the (simulated) board.
-    let model = PerfModel::fit(&cfg.platform);
-
-    // 2. Build the time matrix T (54 layers x 8 stage configs) and explore
-    //    the design space (millions of points, milliseconds of search).
-    let tm = TimeMatrix::predicted(&cfg.platform, &model, &net);
-    let point = dse::explore(&tm, cfg.platform.big.cores, cfg.platform.small.cores);
-    println!("pipeline   : {}", point.pipeline);
-    println!("allocation : {}", point.allocation.display_1based());
-    println!("predicted  : {:.2} imgs/s (Eq. 12)", point.throughput);
-
-    // 3. Cross-check with the discrete-event simulator over a 500-image
+    // 2. Cross-check with the discrete-event simulator over a 500-image
     //    stream (includes pipeline fill/drain).
-    let times = dse::point_stage_times(&tm, &point);
-    let sim = pipeline_sim::simulate(&times, 500, 2);
-    println!(
-        "simulated  : {:.2} imgs/s (bottleneck stage {})",
-        sim.throughput, sim.bottleneck
-    );
+    let sim = plan.simulate(500, 2)?;
+    print!("{}", render_serve(&sim));
 
-    // 4. Compare with the best the default strategy can do (Big cluster).
-    let b4 = tm.config_index(pipeit::simulator::CoreType::Big, 4).unwrap();
-    let baseline = 1.0 / tm.range(0, tm.num_layers(), b4);
+    // 3. Compare with the best the default strategy can do (Big cluster).
+    let serial = PlanSpec::new("resnet50")
+        .time_source(TimeSource::Predicted)
+        .strategy(Strategy::Serial)
+        .compile()?;
     println!(
-        "baseline B4: {baseline:.2} imgs/s  (Pipe-it gain {:+.0}%)",
-        100.0 * (sim.throughput / baseline - 1.0)
+        "baseline B4: {:.2} imgs/s  (Pipe-it gain {:+.0}%)",
+        serial.throughput,
+        100.0 * (sim.throughput / serial.throughput - 1.0)
     );
+    Ok(())
 }

@@ -1,0 +1,51 @@
+//! The unified **Plan → Deploy** facade (DESIGN.md §8).
+//!
+//! Pipe-it's lifecycle is *predict layer times → explore the design space →
+//! run the chosen pipeline* (paper §IV–§VI). This module makes that
+//! lifecycle a first-class API instead of a pile of free functions:
+//!
+//! * [`PlanSpec`] — builder describing *what* to plan: network (or AOT
+//!   artifact directory), platform, [`TimeSource`], [`Strategy`].
+//! * [`Plan`] — the compiled, **serializable** design artifact: pipelines,
+//!   layer allocations, replica core budgets, predicted stage times and
+//!   throughput. A plan explored once can be saved ([`Plan::save`]),
+//!   shipped, reloaded ([`Plan::load`]) and executed anywhere with
+//!   identical behavior — no search re-runs at deploy time.
+//! * [`Plan::simulate`] — the discrete-event backend
+//!   ([`crate::simulator::pipeline_sim`]).
+//! * [`Plan::deploy`] — the wall-clock backend: the real thread fleet
+//!   ([`crate::coordinator::run_fleet`]) over synthetic stages, or real
+//!   PJRT serving for artifact-bound plans.
+//! * [`ServeReport`] — one result shape for all of the above, rendered by
+//!   [`crate::reports::render_serve`].
+//!
+//! The CLI (`pipeit plan / serve --plan / simulate --plan`) and every
+//! example are thin wrappers over this module.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::api::{Plan, PlanSpec, Strategy};
+//!
+//! // Explore once, save the decision as an artifact…
+//! let plan = PlanSpec::new("squeezenet")
+//!     .strategy(Strategy::Replicated { max_replicas: 2, exact: false })
+//!     .compile()
+//!     .unwrap();
+//! let json = plan.to_json().to_string();
+//!
+//! // …and anything that can read the artifact can run it.
+//! let loaded = Plan::from_json(&pipeit::util::json::Json::parse(&json).unwrap()).unwrap();
+//! assert_eq!(plan, loaded);
+//! let report = loaded.simulate(500, 2).unwrap();
+//! assert!(report.throughput > 0.0);
+//! ```
+
+pub mod plan;
+pub mod report;
+
+pub use plan::{
+    ArtifactBinding, DeployOptions, Plan, PlanReplica, PlanSpec, Strategy, TimeSource,
+    PLAN_VERSION,
+};
+pub use report::{LatencyReport, ReplicaReport, ServeMode, ServeReport, StageReport};

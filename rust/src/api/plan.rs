@@ -1,0 +1,1148 @@
+//! The serving plan artifact: [`PlanSpec`] (what to plan) compiles to a
+//! [`Plan`] (the chosen design), which serializes to JSON and dispatches to
+//! every execution backend — [`Plan::simulate`] (DES), [`Plan::deploy`]
+//! (wall-clock thread fleet or real PJRT serving).
+//!
+//! The JSON schema is documented in `DESIGN.md` §8; the contract is that a
+//! plan saved with [`Plan::save`] and reloaded with [`Plan::load`] behaves
+//! identically — the artifact carries the pipeline, allocation, and stage
+//! service times, so no search re-runs at deploy time.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cnn::zoo;
+use crate::config::Config;
+use crate::coordinator::{self, run_fleet, synthetic_fleet, Job};
+use crate::dse::{
+    self, Allocation, CoreBudget, DsePoint, PipelineConfig, ReplicatedDesign, StageConfig,
+};
+use crate::perfmodel::{PerfModel, TimeMatrix};
+use crate::runtime::Manifest;
+use crate::simulator::pipeline_sim;
+use crate::simulator::platform::CoreType;
+use crate::util::json::Json;
+
+use super::report::{ServeMode, ServeReport};
+
+/// Plan schema version written by [`Plan::save`] and required by
+/// [`Plan::load`].
+pub const PLAN_VERSION: usize = 1;
+
+/// Where the layer times backing the plan come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeSource {
+    /// Board measurements (here: the simulator ground truth) — the paper's
+    /// Table VI setting. For artifact plans: MAC-proportional balancing
+    /// (no timing available without a profiling run).
+    Measured,
+    /// The fitted Eq. 5–8 predictor — the paper's Table V setting.
+    Predicted,
+    /// Per-layer times profiled on this host by running a calibration
+    /// stream through the AOT artifacts (artifact plans only; requires the
+    /// `pjrt` feature at plan-compile time).
+    ProfiledArtifacts,
+}
+
+impl fmt::Display for TimeSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TimeSource::Measured => write!(f, "measured"),
+            TimeSource::Predicted => write!(f, "predicted"),
+            TimeSource::ProfiledArtifacts => write!(f, "profiled"),
+        }
+    }
+}
+
+impl TimeSource {
+    fn to_json(self) -> Json {
+        Json::str(match self {
+            TimeSource::Measured => "measured",
+            TimeSource::Predicted => "predicted",
+            TimeSource::ProfiledArtifacts => "profiled",
+        })
+    }
+
+    fn from_json(j: &Json) -> Result<TimeSource> {
+        match j.as_str().context("time_source string")? {
+            "measured" => Ok(TimeSource::Measured),
+            "predicted" => Ok(TimeSource::Predicted),
+            "profiled" => Ok(TimeSource::ProfiledArtifacts),
+            other => Err(anyhow::anyhow!("unknown time source {other:?}")),
+        }
+    }
+}
+
+/// Which design-space search picks the plan's pipelines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// No pipeline: the whole network on the Big cluster (the kernel-level
+    /// baseline); for artifact plans, the one-thread whole-net module.
+    Serial,
+    /// The paper's single-pipeline DSE ([`dse::explore`], Eq. 1 space).
+    Pipeline,
+    /// Exhaustive single-pipeline search over the extended space that also
+    /// contains single-cluster and single-stage pipelines
+    /// ([`dse::explore_budget`] on the full core budget).
+    Exhaustive,
+    /// Replicated fleets on disjoint core partitions. `exact` demands
+    /// exactly `max_replicas` pipelines ([`dse::explore_exact`]); otherwise
+    /// the best design with 1..=`max_replicas` wins
+    /// ([`dse::explore_replicated`]). Artifact plans deploy exactly
+    /// `max_replicas` host replicas.
+    Replicated { max_replicas: usize, exact: bool },
+    /// Best imgs/J subject to a throughput floor ([`dse::explore_energy`]).
+    Energy { min_throughput: f64, mem_intensity: f64 },
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Strategy::Serial => write!(f, "serial"),
+            Strategy::Pipeline => write!(f, "pipeline"),
+            Strategy::Exhaustive => write!(f, "exhaustive"),
+            Strategy::Replicated { max_replicas, exact: true } => {
+                write!(f, "replicated (R={max_replicas})")
+            }
+            Strategy::Replicated { max_replicas, exact: false } => {
+                write!(f, "replicated (R<={max_replicas})")
+            }
+            Strategy::Energy { min_throughput, .. } => {
+                write!(f, "energy (floor {min_throughput:.2} imgs/s)")
+            }
+        }
+    }
+}
+
+impl Strategy {
+    fn to_json(self) -> Json {
+        match self {
+            Strategy::Serial => Json::obj(vec![("kind", Json::str("serial"))]),
+            Strategy::Pipeline => Json::obj(vec![("kind", Json::str("pipeline"))]),
+            Strategy::Exhaustive => Json::obj(vec![("kind", Json::str("exhaustive"))]),
+            Strategy::Replicated { max_replicas, exact } => Json::obj(vec![
+                ("kind", Json::str("replicated")),
+                ("max_replicas", Json::num(max_replicas as f64)),
+                ("exact", Json::Bool(exact)),
+            ]),
+            Strategy::Energy { min_throughput, mem_intensity } => Json::obj(vec![
+                ("kind", Json::str("energy")),
+                ("min_throughput", Json::num(min_throughput)),
+                ("mem_intensity", Json::num(mem_intensity)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Strategy> {
+        let kind = j.req("kind")?.as_str().context("strategy kind")?;
+        Ok(match kind {
+            "serial" => Strategy::Serial,
+            "pipeline" => Strategy::Pipeline,
+            "exhaustive" => Strategy::Exhaustive,
+            "replicated" => Strategy::Replicated {
+                max_replicas: j.req("max_replicas")?.as_usize().context("max_replicas")?,
+                exact: j.req("exact")?.as_bool().context("exact")?,
+            },
+            "energy" => Strategy::Energy {
+                min_throughput: j
+                    .req("min_throughput")?
+                    .as_f64()
+                    .context("min_throughput")?,
+                mem_intensity: j.req("mem_intensity")?.as_f64().context("mem_intensity")?,
+            },
+            other => anyhow::bail!("unknown strategy kind {other:?}"),
+        })
+    }
+}
+
+/// One replica of a compiled plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanReplica {
+    /// Big cores owned by this replica (0 for artifact/host plans).
+    pub big: usize,
+    /// Small cores owned by this replica (0 for artifact/host plans).
+    pub small: usize,
+    /// Pipeline shorthand: `B4-s2-s2` for big.LITTLE plans, `host-K` /
+    /// `full-net` for artifact plans.
+    pub pipeline: String,
+    /// Contiguous `[lo, hi)` layer range per stage.
+    pub allocation: Vec<(usize, usize)>,
+    /// Predicted per-stage service times in seconds (Eq. 10). Empty for
+    /// artifact plans balanced by MACs (no timing available).
+    pub stage_times: Vec<f64>,
+    /// Predicted replica throughput (Eq. 12); 0.0 = unknown.
+    pub throughput: f64,
+}
+
+/// Binding of a plan to an AOT artifact directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactBinding {
+    pub dir: String,
+    /// Layer count at compile time — checked again at deploy time so a
+    /// regenerated artifact set cannot silently invalidate the allocation.
+    pub num_layers: usize,
+}
+
+/// A compiled, serializable serving plan: the design chosen by the
+/// [`PlanSpec`] search, ready to [`simulate`](Plan::simulate) or
+/// [`deploy`](Plan::deploy) anywhere.
+///
+/// # Example
+///
+/// ```
+/// use pipeit::api::{Plan, PlanSpec};
+///
+/// let plan = PlanSpec::new("alexnet").compile().unwrap();
+/// let path = std::env::temp_dir().join("pipeit_doc_plan.json");
+/// plan.save(&path).unwrap();
+/// let loaded = Plan::load(&path).unwrap();
+/// assert_eq!(plan, loaded); // the artifact round-trips losslessly
+/// std::fs::remove_file(&path).ok();
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Network name (zoo) or artifact model name.
+    pub network: String,
+    /// Platform name the plan was compiled for (`host` for artifact plans).
+    pub platform: String,
+    /// Big-cluster core budget at compile time.
+    pub big: usize,
+    /// Small-cluster core budget at compile time.
+    pub small: usize,
+    pub time_source: TimeSource,
+    pub strategy: Strategy,
+    /// Predicted aggregate throughput: the sum of replica Eq. 12 rates
+    /// (0.0 = unknown, e.g. MAC-balanced artifact plans).
+    pub throughput: f64,
+    pub replicas: Vec<PlanReplica>,
+    /// Present only for artifact plans.
+    pub artifacts: Option<ArtifactBinding>,
+}
+
+/// Runtime knobs for [`Plan::deploy`]; the plan itself fixes the design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeployOptions {
+    /// Images to stream through the fleet.
+    pub images: usize,
+    /// Inter-stage queue capacity inside each replica.
+    pub queue_cap: usize,
+    /// Synthetic deploys sleep for `stage_time * time_scale` per item.
+    pub time_scale: f64,
+    /// Batch size for PJRT artifact serving.
+    pub batch: usize,
+    /// Stream seed for PJRT artifact serving.
+    pub seed: u64,
+}
+
+impl Default for DeployOptions {
+    fn default() -> DeployOptions {
+        DeployOptions { images: 60, queue_cap: 2, time_scale: 0.1, batch: 1, seed: 7 }
+    }
+}
+
+impl Plan {
+    /// The replica's layer allocation as a [`dse::Allocation`].
+    pub fn allocation_of(&self, replica: usize) -> Allocation {
+        Allocation { ranges: self.replicas[replica].allocation.clone() }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// `B4 | s2-s2` style display: replica pipelines joined with `|`.
+    pub fn partition_display(&self) -> String {
+        self.replicas
+            .iter()
+            .map(|r| r.pipeline.clone())
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let replicas = Json::Arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        (
+                            "budget",
+                            Json::obj(vec![
+                                ("big", Json::num(r.big as f64)),
+                                ("small", Json::num(r.small as f64)),
+                            ]),
+                        ),
+                        ("pipeline", Json::str(&r.pipeline)),
+                        (
+                            "allocation",
+                            Json::Arr(
+                                r.allocation
+                                    .iter()
+                                    .map(|&(lo, hi)| {
+                                        Json::Arr(vec![
+                                            Json::num(lo as f64),
+                                            Json::num(hi as f64),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "stage_times",
+                            Json::Arr(r.stage_times.iter().map(|&t| Json::num(t)).collect()),
+                        ),
+                        ("throughput", Json::num(r.throughput)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("version", Json::num(PLAN_VERSION as f64)),
+            ("network", Json::str(&self.network)),
+            (
+                "platform",
+                Json::obj(vec![
+                    ("name", Json::str(&self.platform)),
+                    ("big", Json::num(self.big as f64)),
+                    ("small", Json::num(self.small as f64)),
+                ]),
+            ),
+            ("time_source", self.time_source.to_json()),
+            ("strategy", self.strategy.to_json()),
+            ("throughput", Json::num(self.throughput)),
+            ("replicas", replicas),
+        ];
+        if let Some(a) = &self.artifacts {
+            fields.push((
+                "artifacts",
+                Json::obj(vec![
+                    ("dir", Json::str(&a.dir)),
+                    ("num_layers", Json::num(a.num_layers as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let version = j.req("version")?.as_usize().context("version")?;
+        anyhow::ensure!(
+            version == PLAN_VERSION,
+            "plan version {version} not supported (this build reads version {PLAN_VERSION})"
+        );
+        let platform = j.req("platform")?;
+        let mut replicas = Vec::new();
+        for (i, rj) in j.req("replicas")?.as_arr().context("replicas array")?.iter().enumerate()
+        {
+            replicas.push(replica_from_json(i, rj)?);
+        }
+        anyhow::ensure!(!replicas.is_empty(), "plan has no replicas");
+        for (i, r) in replicas.iter().enumerate() {
+            anyhow::ensure!(!r.allocation.is_empty(), "replica {i}: empty allocation");
+            let w = r.allocation.last().map(|&(_, hi)| hi).unwrap_or(0);
+            let a = Allocation { ranges: r.allocation.clone() };
+            anyhow::ensure!(
+                a.is_partition(w),
+                "replica {i}: allocation is not a contiguous layer partition"
+            );
+            anyhow::ensure!(
+                r.stage_times.is_empty() || r.stage_times.len() == r.allocation.len(),
+                "replica {i}: {} stage times for {} stages",
+                r.stage_times.len(),
+                r.allocation.len()
+            );
+        }
+        let artifacts = match j.get("artifacts") {
+            Some(a) => Some(ArtifactBinding {
+                dir: a.req("dir")?.as_str().context("artifacts dir")?.to_string(),
+                num_layers: a.req("num_layers")?.as_usize().context("num_layers")?,
+            }),
+            None => None,
+        };
+        Ok(Plan {
+            network: j.req("network")?.as_str().context("network")?.to_string(),
+            platform: platform.req("name")?.as_str().context("platform name")?.to_string(),
+            big: platform.req("big")?.as_usize().context("platform big")?,
+            small: platform.req("small")?.as_usize().context("platform small")?,
+            time_source: TimeSource::from_json(j.req("time_source")?)?,
+            strategy: Strategy::from_json(j.req("strategy")?)?,
+            throughput: j.req("throughput")?.as_f64().context("throughput")?,
+            replicas,
+            artifacts,
+        })
+    }
+
+    /// Write the plan as a JSON artifact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a plan saved by [`Plan::save`].
+    pub fn load(path: &Path) -> Result<Plan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Plan::from_json(&j).with_context(|| format!("parsing plan {}", path.display()))
+    }
+
+    // ---- display ---------------------------------------------------------
+
+    /// The design lines only (no header) — used by `explore --replicated`.
+    pub fn design_summary(&self) -> String {
+        let mut s = String::new();
+        if self.replicas.len() == 1 {
+            let r = &self.replicas[0];
+            s.push_str(&format!("pipeline   : {}\n", r.pipeline));
+            s.push_str(&format!(
+                "allocation : {}\n",
+                self.allocation_of(0).display_1based()
+            ));
+            if self.throughput > 0.0 {
+                s.push_str(&format!(
+                    "throughput : {:.2} imgs/s (Eq. 12)\n",
+                    self.throughput
+                ));
+            }
+            // Stage labels come from the `B4-s2-s2` notation; artifact
+            // plans use opaque names like `host-2` that must not be split.
+            let names: Vec<&str> = r.pipeline.split('-').collect();
+            let labeled = self.artifacts.is_none() && names.len() == r.stage_times.len();
+            for (i, t) in r.stage_times.iter().enumerate() {
+                if labeled {
+                    s.push_str(&format!("  stage {i}: {}  {:.1} ms\n", names[i], t * 1e3));
+                } else {
+                    s.push_str(&format!("  stage {i}: {:.1} ms\n", t * 1e3));
+                }
+            }
+        } else {
+            s.push_str(&format!(
+                "replicated : {} (R={})\n",
+                self.partition_display(),
+                self.replicas.len()
+            ));
+            for (i, r) in self.replicas.iter().enumerate() {
+                let budget = format!("{}B+{}s", r.big, r.small);
+                s.push_str(&format!(
+                    "  replica {i}: {budget:<6} {}  alloc {}  {:.2} imgs/s\n",
+                    r.pipeline,
+                    self.allocation_of(i).display_1based(),
+                    r.throughput
+                ));
+            }
+            s.push_str(&format!(
+                "aggregate  : {:.2} imgs/s (Eq. 12 sum)\n",
+                self.throughput
+            ));
+        }
+        s
+    }
+
+    /// Human-readable plan description (the `pipeit plan` output).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("network    : {}\n", self.network));
+        s.push_str(&format!(
+            "platform   : {} ({}B+{}s)\n",
+            self.platform, self.big, self.small
+        ));
+        s.push_str(&format!(
+            "strategy   : {} ({} times)\n",
+            self.strategy, self.time_source
+        ));
+        if let Some(a) = &self.artifacts {
+            s.push_str(&format!("artifacts  : {} ({} layers)\n", a.dir, a.num_layers));
+        }
+        s.push_str(&self.design_summary());
+        s
+    }
+
+    // ---- execution backends ---------------------------------------------
+
+    fn stage_time_table(&self) -> Result<Vec<Vec<f64>>> {
+        let times: Vec<Vec<f64>> =
+            self.replicas.iter().map(|r| r.stage_times.clone()).collect();
+        let ok = !times.is_empty()
+            && times
+                .iter()
+                .all(|t| !t.is_empty() && t.iter().all(|x| x.is_finite() && *x > 0.0));
+        anyhow::ensure!(
+            ok,
+            "plan for {:?} carries no stage-time profile (MAC-balanced artifact \
+             plans cannot be simulated; recompile with TimeSource::ProfiledArtifacts)",
+            self.network
+        );
+        Ok(times)
+    }
+
+    /// Discrete-event simulation of the plan's fleet over `images` items
+    /// with per-replica queue capacity `queue_cap` — the design-time twin
+    /// of [`Plan::deploy`].
+    pub fn simulate(&self, images: usize, queue_cap: usize) -> Result<ServeReport> {
+        anyhow::ensure!(images >= 1, "need at least one image");
+        anyhow::ensure!(queue_cap >= 1, "queue capacity must be >= 1");
+        let times = self.stage_time_table()?;
+        let sim = pipeline_sim::simulate_replicated(&times, images, queue_cap);
+        Ok(ServeReport::from_des(self, &sim))
+    }
+
+    /// Execute the plan: PJRT serving when the plan is bound to artifacts,
+    /// otherwise the real thread fleet over synthetic sleep stages scaled
+    /// by [`DeployOptions::time_scale`].
+    pub fn deploy(&self, opts: &DeployOptions) -> Result<ServeReport> {
+        if self.artifacts.is_some() {
+            let (_, report) = self.deploy_collect(opts)?;
+            Ok(report)
+        } else {
+            self.deploy_synthetic(opts)
+        }
+    }
+
+    /// Artifact-plan deploy that also returns the processed jobs (for
+    /// functional-equivalence checks, e.g. the `e2e_serving` example).
+    /// Errors for plans without an artifact binding — use [`Plan::deploy`].
+    pub fn deploy_collect(&self, opts: &DeployOptions) -> Result<(Vec<Job>, ServeReport)> {
+        let binding = self
+            .artifacts
+            .as_ref()
+            .context("deploy_collect applies to artifact plans; use deploy()")?;
+        let manifest = Manifest::load(Path::new(&binding.dir))?;
+        anyhow::ensure!(
+            manifest.num_layers() == binding.num_layers,
+            "artifacts in {} changed since the plan was compiled: {} layers now, {} in the plan",
+            binding.dir,
+            manifest.num_layers(),
+            binding.num_layers
+        );
+        let alloc = self.allocation_of(0);
+        anyhow::ensure!(
+            alloc.is_partition(manifest.num_layers()),
+            "plan allocation covers layers {} but the artifacts have {} layers",
+            alloc.display_1based(),
+            manifest.num_layers()
+        );
+        match self.strategy {
+            Strategy::Serial => {
+                let (jobs, report) =
+                    coordinator::serve_serial(&manifest, opts.images, opts.batch, opts.seed)?;
+                Ok((jobs, ServeReport::from_run(self, &report, ServeMode::Pjrt { serial: true })))
+            }
+            _ if self.replicas.len() > 1 => {
+                let (jobs, report) = coordinator::serve_fleet(
+                    &manifest,
+                    &alloc,
+                    self.replicas.len(),
+                    opts.images,
+                    opts.batch,
+                    opts.queue_cap,
+                    opts.seed,
+                )?;
+                let mode = ServeMode::Pjrt { serial: false };
+                Ok((jobs, ServeReport::from_fleet(self, &report, mode)))
+            }
+            _ => {
+                let (jobs, report) = coordinator::serve_pipelined(
+                    &manifest,
+                    &alloc,
+                    opts.images,
+                    opts.batch,
+                    opts.queue_cap,
+                    opts.seed,
+                )?;
+                Ok((jobs, ServeReport::from_run(self, &report, ServeMode::Pjrt { serial: false })))
+            }
+        }
+    }
+
+    fn deploy_synthetic(&self, opts: &DeployOptions) -> Result<ServeReport> {
+        anyhow::ensure!(opts.images >= 1, "need at least one image");
+        anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
+        anyhow::ensure!(opts.time_scale > 0.0, "time_scale must be positive");
+        let times = self.stage_time_table()?;
+        let fleet = synthetic_fleet(&times, opts.time_scale);
+        let (_, report) =
+            run_fleet(fleet, opts.queue_cap, 2 * times.len(), 0..opts.images);
+        Ok(ServeReport::from_fleet(
+            self,
+            &report,
+            ServeMode::Synthetic { time_scale: opts.time_scale },
+        ))
+    }
+}
+
+fn replica_from_json(i: usize, j: &Json) -> Result<PlanReplica> {
+    let budget = j.req("budget")?;
+    let alloc_json = j.req("allocation")?.as_arr().context("allocation array")?;
+    let mut allocation = Vec::with_capacity(alloc_json.len());
+    for pair in alloc_json {
+        let p = pair
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .with_context(|| format!("replica {i}: allocation entries are [lo, hi] pairs"))?;
+        allocation.push((
+            p[0].as_usize().context("allocation lo")?,
+            p[1].as_usize().context("allocation hi")?,
+        ));
+    }
+    let st_json = j.req("stage_times")?.as_arr().context("stage_times array")?;
+    let mut stage_times = Vec::with_capacity(st_json.len());
+    for t in st_json {
+        stage_times.push(t.as_f64().context("stage time")?);
+    }
+    Ok(PlanReplica {
+        big: budget.req("big")?.as_usize().context("budget big")?,
+        small: budget.req("small")?.as_usize().context("budget small")?,
+        pipeline: j.req("pipeline")?.as_str().context("pipeline")?.to_string(),
+        allocation,
+        stage_times,
+        throughput: j.req("throughput")?.as_f64().context("throughput")?,
+    })
+}
+
+/// Builder describing what to plan; [`PlanSpec::compile`] runs the chosen
+/// search and produces the [`Plan`] artifact.
+///
+/// # Example
+///
+/// ```
+/// use pipeit::api::{PlanSpec, Strategy, TimeSource};
+///
+/// let plan = PlanSpec::new("squeezenet")
+///     .time_source(TimeSource::Measured)
+///     .strategy(Strategy::Replicated { max_replicas: 2, exact: false })
+///     .compile()
+///     .unwrap();
+/// assert!(plan.num_replicas() >= 1);
+/// assert!(plan.throughput > 0.0);
+/// let des = plan.simulate(200, 2).unwrap();
+/// assert!(des.throughput > 0.0);
+/// ```
+#[derive(Debug)]
+pub struct PlanSpec {
+    network: Option<String>,
+    artifacts: Option<String>,
+    config: Config,
+    time_source: TimeSource,
+    strategy: Strategy,
+    fixed_pipeline: Option<String>,
+    stages: usize,
+    profile_samples: usize,
+    profile_seed: u64,
+}
+
+impl PlanSpec {
+    /// Plan for a zoo network on the configured big.LITTLE platform.
+    /// Defaults: HiKey 970, measured times, [`Strategy::Pipeline`].
+    pub fn new(network: &str) -> PlanSpec {
+        PlanSpec {
+            network: Some(network.to_string()),
+            artifacts: None,
+            config: Config::default(),
+            time_source: TimeSource::Measured,
+            strategy: Strategy::Pipeline,
+            fixed_pipeline: None,
+            stages: 3,
+            profile_samples: 16,
+            profile_seed: 3,
+        }
+    }
+
+    /// Plan over an AOT artifact directory (real PJRT serving on this
+    /// host). Defaults: MAC-balanced 3-stage pipeline.
+    pub fn from_artifacts(dir: &str) -> PlanSpec {
+        let mut spec = PlanSpec::new("");
+        spec.network = None;
+        spec.artifacts = Some(dir.to_string());
+        spec
+    }
+
+    /// Retarget the platform (and power model) the searches run against.
+    pub fn platform(mut self, config: Config) -> PlanSpec {
+        self.config = config;
+        self
+    }
+
+    pub fn time_source(mut self, source: TimeSource) -> PlanSpec {
+        self.time_source = source;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> PlanSpec {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Pin the pipeline to a `B4-s2-s2` spec instead of searching; the
+    /// allocation is still balanced by `work_flow` and the compiled plan
+    /// records the pinned pipeline in its replica. Zoo plans only.
+    pub fn pipeline(mut self, spec: &str) -> PlanSpec {
+        self.fixed_pipeline = Some(spec.to_string());
+        self
+    }
+
+    /// Stage count for artifact plans (ignored for zoo plans).
+    pub fn stages(mut self, k: usize) -> PlanSpec {
+        self.stages = k;
+        self
+    }
+
+    /// Calibration-stream length for [`TimeSource::ProfiledArtifacts`].
+    pub fn profile_samples(mut self, samples: usize) -> PlanSpec {
+        self.profile_samples = samples;
+        self
+    }
+
+    /// Run the configured search and produce the serializable [`Plan`].
+    pub fn compile(self) -> Result<Plan> {
+        if self.artifacts.is_some() {
+            self.compile_artifacts()
+        } else {
+            self.compile_network()
+        }
+    }
+
+    fn compile_network(self) -> Result<Plan> {
+        let name = self.network.clone().unwrap_or_default();
+        let net = zoo::by_name(&name).with_context(|| format!("unknown network {name:?}"))?;
+        let platform = &self.config.platform;
+        let (hb, hs) = (platform.big.cores, platform.small.cores);
+        let tm = match self.time_source {
+            TimeSource::Measured => TimeMatrix::measured(platform, &net),
+            TimeSource::Predicted => {
+                let model = PerfModel::fit(platform);
+                TimeMatrix::predicted(platform, &model, &net)
+            }
+            TimeSource::ProfiledArtifacts => anyhow::bail!(
+                "TimeSource::ProfiledArtifacts applies to artifact plans \
+                 (PlanSpec::from_artifacts)"
+            ),
+        };
+        let w = tm.num_layers();
+        let full = CoreBudget::new(hb, hs);
+
+        let design = if let Some(spec) = &self.fixed_pipeline {
+            let p = PipelineConfig::parse(spec)?;
+            anyhow::ensure!(
+                p.is_valid(hb, hs),
+                "pipeline {p} exceeds platform core budget ({hb}B+{hs}s)"
+            );
+            let budget = CoreBudget::new(
+                p.cores_used(CoreType::Big),
+                p.cores_used(CoreType::Small),
+            );
+            let a = dse::work_flow(&tm, &p, w);
+            let tp = dse::pipeline_throughput(&tm, &p, &a);
+            ReplicatedDesign::single(
+                budget,
+                DsePoint { pipeline: p, allocation: a, throughput: tp },
+            )
+        } else {
+            match self.strategy {
+                Strategy::Serial => {
+                    let p = PipelineConfig::new(vec![StageConfig::new(CoreType::Big, hb)]);
+                    let a = Allocation { ranges: vec![(0, w)] };
+                    let tp = dse::pipeline_throughput(&tm, &p, &a);
+                    ReplicatedDesign::single(
+                        CoreBudget::new(hb, 0),
+                        DsePoint { pipeline: p, allocation: a, throughput: tp },
+                    )
+                }
+                Strategy::Pipeline => {
+                    ReplicatedDesign::single(full, dse::explore(&tm, hb, hs))
+                }
+                Strategy::Exhaustive => {
+                    let pt = dse::explore_budget(&tm, full)
+                        .context("empty pipeline design space")?;
+                    ReplicatedDesign::single(full, pt)
+                }
+                Strategy::Replicated { max_replicas, exact } => {
+                    anyhow::ensure!(max_replicas >= 1, "need at least one replica");
+                    if exact {
+                        dse::explore_exact(&tm, hb, hs, max_replicas).with_context(|| {
+                            format!("no {max_replicas}-replica design fits on {hb}B+{hs}s")
+                        })?
+                    } else {
+                        dse::explore_replicated(&tm, hb, hs, max_replicas)
+                    }
+                }
+                Strategy::Energy { min_throughput, mem_intensity } => {
+                    let e = dse::explore_energy(
+                        &tm,
+                        &self.config.power,
+                        hb,
+                        hs,
+                        min_throughput,
+                        mem_intensity,
+                    )
+                    .with_context(|| {
+                        format!("no configuration reaches the {min_throughput:.2} imgs/s floor")
+                    })?;
+                    ReplicatedDesign::single(full, e.point)
+                }
+            }
+        };
+        anyhow::ensure!(
+            design.throughput.is_finite() && design.throughput > 0.0,
+            "search produced a non-finite throughput"
+        );
+
+        let replicas = design
+            .replicas
+            .iter()
+            .map(|r| PlanReplica {
+                big: r.budget.big,
+                small: r.budget.small,
+                pipeline: r.point.pipeline.to_string(),
+                allocation: r.point.allocation.ranges.clone(),
+                stage_times: dse::stage_times(&tm, &r.point.pipeline, &r.point.allocation),
+                throughput: r.point.throughput,
+            })
+            .collect();
+        Ok(Plan {
+            network: net.name.clone(),
+            platform: platform.name.clone(),
+            big: hb,
+            small: hs,
+            time_source: self.time_source,
+            strategy: self.strategy,
+            throughput: design.throughput,
+            replicas,
+            artifacts: None,
+        })
+    }
+
+    fn compile_artifacts(self) -> Result<Plan> {
+        let dir = self.artifacts.clone().unwrap_or_default();
+        let manifest = Manifest::load(Path::new(&dir))?;
+        let w = manifest.num_layers();
+        anyhow::ensure!(
+            self.fixed_pipeline.is_none(),
+            "pipeline specs describe big.LITTLE stage configs; artifact plans \
+             are balanced into --stages host stages"
+        );
+        let replicas_wanted = match self.strategy {
+            Strategy::Serial | Strategy::Pipeline => 1,
+            Strategy::Replicated { max_replicas, .. } => {
+                anyhow::ensure!(max_replicas >= 1, "need at least one replica");
+                max_replicas
+            }
+            Strategy::Exhaustive | Strategy::Energy { .. } => anyhow::bail!(
+                "strategy {} needs a big.LITTLE time matrix; artifact plans \
+                 support serial, pipeline, and replicated",
+                self.strategy
+            ),
+        };
+        let serial = matches!(self.strategy, Strategy::Serial);
+        let k = if serial { 1 } else { self.stages.clamp(1, w) };
+
+        let (alloc, stage_times, replica_tp) = match self.time_source {
+            TimeSource::ProfiledArtifacts => {
+                let layer_times = coordinator::profile_layer_times(
+                    &manifest,
+                    self.profile_samples,
+                    self.profile_seed,
+                )?;
+                let alloc = coordinator::balance_by_times(&layer_times, k);
+                let times: Vec<f64> = alloc
+                    .ranges
+                    .iter()
+                    .map(|&(lo, hi)| layer_times[lo..hi].iter().sum())
+                    .collect();
+                let bottleneck = times.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                anyhow::ensure!(
+                    bottleneck.is_finite() && bottleneck > 0.0,
+                    "profiling produced non-positive stage times"
+                );
+                (alloc, times, 1.0 / bottleneck)
+            }
+            TimeSource::Measured => {
+                (coordinator::balance_by_macs(&manifest, k), Vec::new(), 0.0)
+            }
+            TimeSource::Predicted => anyhow::bail!(
+                "TimeSource::Predicted applies to zoo networks; artifact plans \
+                 use Measured (MAC-balanced) or ProfiledArtifacts"
+            ),
+        };
+
+        let pipeline = if serial {
+            "full-net".to_string()
+        } else {
+            format!("host-{}", alloc.active_stages())
+        };
+        let replica = PlanReplica {
+            big: 0,
+            small: 0,
+            pipeline,
+            allocation: alloc.ranges.clone(),
+            stage_times,
+            throughput: replica_tp,
+        };
+        Ok(Plan {
+            network: manifest.name.clone(),
+            platform: "host".to_string(),
+            big: 0,
+            small: 0,
+            time_source: self.time_source,
+            strategy: self.strategy,
+            throughput: replica_tp * replicas_wanted as f64,
+            replicas: vec![replica; replicas_wanted],
+            artifacts: Some(ArtifactBinding { dir, num_layers: w }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(plan: &Plan) -> Plan {
+        let text = plan.to_json().to_string();
+        let j = Json::parse(&text).expect("plan JSON reparses");
+        Plan::from_json(&j).expect("plan JSON deserializes")
+    }
+
+    #[test]
+    fn compiled_plan_roundtrips_through_json() {
+        for strategy in [
+            Strategy::Serial,
+            Strategy::Pipeline,
+            Strategy::Exhaustive,
+            Strategy::Replicated { max_replicas: 3, exact: false },
+            Strategy::Replicated { max_replicas: 2, exact: true },
+            Strategy::Energy { min_throughput: 0.0, mem_intensity: 0.6 },
+        ] {
+            let plan = PlanSpec::new("squeezenet")
+                .strategy(strategy)
+                .compile()
+                .unwrap_or_else(|e| panic!("compile {strategy}: {e}"));
+            assert_eq!(plan, roundtrip(&plan), "{strategy} plan changed in round-trip");
+        }
+    }
+
+    fn arbitrary_plan(rng: &mut Rng) -> Plan {
+        let nets = ["alexnet", "squeezenet", "mobilenet"];
+        let strategies = [
+            Strategy::Serial,
+            Strategy::Pipeline,
+            Strategy::Exhaustive,
+            Strategy::Replicated { max_replicas: 1 + rng.index(4), exact: rng.index(2) == 0 },
+            Strategy::Energy {
+                min_throughput: rng.range_f64(0.0, 10.0),
+                mem_intensity: rng.range_f64(0.3, 0.95),
+            },
+        ];
+        let replicas: Vec<PlanReplica> = (0..1 + rng.index(3))
+            .map(|_| {
+                let stages = 1 + rng.index(4);
+                let mut allocation = Vec::new();
+                let mut lo = 0;
+                for _ in 0..stages {
+                    let hi = lo + 1 + rng.index(9);
+                    allocation.push((lo, hi));
+                    lo = hi;
+                }
+                let stage_times: Vec<f64> =
+                    (0..stages).map(|_| rng.range_f64(1e-4, 0.2)).collect();
+                PlanReplica {
+                    big: rng.index(5),
+                    small: rng.index(5),
+                    pipeline: format!("B{}-s{}", 1 + rng.index(4), 1 + rng.index(4)),
+                    allocation,
+                    stage_times,
+                    throughput: rng.range_f64(0.1, 100.0),
+                }
+            })
+            .collect();
+        Plan {
+            network: nets[rng.index(nets.len())].to_string(),
+            platform: "hikey970".to_string(),
+            big: 4,
+            small: 4,
+            time_source: [TimeSource::Measured, TimeSource::Predicted][rng.index(2)],
+            strategy: strategies[rng.index(strategies.len())],
+            throughput: rng.range_f64(0.1, 400.0),
+            replicas,
+            artifacts: if rng.index(2) == 0 {
+                None
+            } else {
+                Some(ArtifactBinding {
+                    dir: "artifacts/pipenet_tiny".to_string(),
+                    num_layers: 1 + rng.index(20),
+                })
+            },
+        }
+    }
+
+    /// The satellite property: Plan JSON round-trips losslessly, including
+    /// every f64 (the serializer emits shortest round-trip reprs).
+    #[test]
+    fn property_plan_json_roundtrip_is_lossless() {
+        check(200, |rng| {
+            let plan = arbitrary_plan(rng);
+            let back = roundtrip(&plan);
+            crate::prop_assert!(
+                plan == back,
+                "round-trip changed the plan:\n{plan:?}\nvs\n{back:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pipeline_strategy_matches_classic_explore() {
+        let cfg = Config::default();
+        let net = zoo::by_name("resnet50").unwrap();
+        let tm = TimeMatrix::measured(&cfg.platform, &net);
+        let pt = dse::explore(&tm, 4, 4);
+        let plan = PlanSpec::new("resnet50").compile().unwrap();
+        assert_eq!(plan.replicas.len(), 1);
+        assert_eq!(plan.replicas[0].pipeline, pt.pipeline.to_string());
+        assert_eq!(plan.replicas[0].allocation, pt.allocation.ranges);
+        assert!((plan.throughput - pt.throughput).abs() < 1e-12);
+        assert_eq!(
+            plan.replicas[0].stage_times,
+            dse::stage_times(&tm, &pt.pipeline, &pt.allocation)
+        );
+    }
+
+    #[test]
+    fn replicated_strategy_matches_explore_replicated() {
+        let cfg = Config::default();
+        let net = zoo::by_name("alexnet").unwrap();
+        let tm = TimeMatrix::measured(&cfg.platform, &net);
+        let fleet = dse::explore_replicated(&tm, 4, 4, 4);
+        let plan = PlanSpec::new("alexnet")
+            .strategy(Strategy::Replicated { max_replicas: 4, exact: false })
+            .compile()
+            .unwrap();
+        assert_eq!(plan.num_replicas(), fleet.num_replicas());
+        assert!((plan.throughput - fleet.throughput).abs() < 1e-12);
+        assert_eq!(
+            plan.partition_display(),
+            fleet.partition_display(),
+            "plan must capture the explored partition"
+        );
+    }
+
+    #[test]
+    fn serial_strategy_is_the_big_cluster_baseline() {
+        let cfg = Config::default();
+        let net = zoo::by_name("mobilenet").unwrap();
+        let tm = TimeMatrix::measured(&cfg.platform, &net);
+        let b4 = tm.config_index(CoreType::Big, 4).unwrap();
+        let tp = 1.0 / tm.range(0, tm.num_layers(), b4);
+        let plan =
+            PlanSpec::new("mobilenet").strategy(Strategy::Serial).compile().unwrap();
+        assert_eq!(plan.replicas[0].pipeline, "B4");
+        assert_eq!(plan.replicas[0].allocation, vec![(0, tm.num_layers())]);
+        assert!((plan.throughput - tp).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strategy_ordering_exhaustive_never_loses() {
+        // Exhaustive searches a superset of the Eq. 1 space; replicated a
+        // superset of that. Serial is the floor.
+        let compile = |s: Strategy| {
+            PlanSpec::new("squeezenet").strategy(s).compile().unwrap().throughput
+        };
+        let serial = compile(Strategy::Serial);
+        let pipeline = compile(Strategy::Pipeline);
+        let exhaustive = compile(Strategy::Exhaustive);
+        let replicated = compile(Strategy::Replicated { max_replicas: 4, exact: false });
+        assert!(pipeline > serial, "pipelining must beat serial B4");
+        assert!(exhaustive >= pipeline - 1e-9);
+        assert!(replicated >= exhaustive - 1e-9);
+    }
+
+    #[test]
+    fn energy_strategy_respects_the_floor() {
+        let best = PlanSpec::new("googlenet").compile().unwrap().throughput;
+        let plan = PlanSpec::new("googlenet")
+            .strategy(Strategy::Energy { min_throughput: 0.9 * best, mem_intensity: 0.6 })
+            .compile()
+            .unwrap();
+        assert!(plan.throughput >= 0.9 * best - 1e-9);
+        // An impossible floor is a compile error, not a silent fallback.
+        assert!(PlanSpec::new("googlenet")
+            .strategy(Strategy::Energy { min_throughput: best * 10.0, mem_intensity: 0.6 })
+            .compile()
+            .is_err());
+    }
+
+    #[test]
+    fn pinned_pipeline_is_recorded_and_validated() {
+        let plan = PlanSpec::new("resnet50").pipeline("B4-s2-s2").compile().unwrap();
+        assert_eq!(plan.replicas[0].pipeline, "B4-s2-s2");
+        assert_eq!(plan.replicas[0].stage_times.len(), 3);
+        let err = PlanSpec::new("resnet50").pipeline("B4-B1-s4").compile().unwrap_err();
+        assert!(err.to_string().contains("core budget"), "{err}");
+    }
+
+    #[test]
+    fn simulate_dispatches_to_the_des() {
+        let plan = PlanSpec::new("alexnet")
+            .strategy(Strategy::Replicated { max_replicas: 2, exact: true })
+            .compile()
+            .unwrap();
+        let times: Vec<Vec<f64>> =
+            plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
+        let direct = pipeline_sim::simulate_replicated(&times, 300, 2);
+        let via_plan = plan.simulate(300, 2).unwrap();
+        assert!((via_plan.throughput - direct.throughput).abs() < 1e-12);
+        assert_eq!(via_plan.images, 300);
+        assert_eq!(via_plan.replicas.len(), 2);
+        assert!(via_plan.latency.is_some());
+    }
+
+    #[test]
+    fn bad_inputs_are_compile_errors() {
+        assert!(PlanSpec::new("vgg19").compile().is_err(), "unknown network");
+        assert!(
+            PlanSpec::new("alexnet")
+                .time_source(TimeSource::ProfiledArtifacts)
+                .compile()
+                .is_err(),
+            "profiled times need an artifact spec"
+        );
+        assert!(
+            PlanSpec::new("alexnet")
+                .strategy(Strategy::Replicated { max_replicas: 9, exact: true })
+                .compile()
+                .is_err(),
+            "9 replicas cannot fit on 8 cores"
+        );
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_plans() {
+        let plan = PlanSpec::new("alexnet").compile().unwrap();
+        let good = plan.to_json();
+
+        // Wrong version.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".to_string(), Json::num(99.0));
+        }
+        assert!(Plan::from_json(&j).unwrap_err().to_string().contains("version"));
+
+        // Missing strategy.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.remove("strategy");
+        }
+        assert!(Plan::from_json(&j).is_err());
+
+        // Non-contiguous allocation.
+        let text = good.to_string().replace("[[0,", "[[1,");
+        let j = Json::parse(&text).unwrap();
+        let err = Plan::from_json(&j).unwrap_err();
+        let shown = format!("{err:?}");
+        assert!(shown.contains("partition"), "{shown}");
+    }
+}

@@ -1,0 +1,225 @@
+//! The unified serving report: one shape for single-pipeline runs, fleet
+//! runs, and discrete-event simulations, so every execution backend of a
+//! [`Plan`](crate::api::Plan) prints through the same renderer
+//! ([`crate::reports::render_serve`]).
+//!
+//! A [`ServeReport`] always looks like a fleet — a single pipeline is a
+//! one-replica fleet — which keeps downstream consumers (CLI, examples,
+//! tests) free of per-backend match arms.
+
+use crate::coordinator::{FleetReport, RunReport};
+use crate::simulator::pipeline_sim::FleetSimReport;
+use crate::util::stats::{self, Summary};
+
+use super::plan::Plan;
+
+/// Which backend produced a [`ServeReport`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeMode {
+    /// Discrete-event simulation ([`Plan::simulate`]).
+    Des,
+    /// Wall-clock run of the real thread fleet over synthetic sleep stages
+    /// scaled by `time_scale` ([`Plan::deploy`] without artifacts).
+    Synthetic { time_scale: f64 },
+    /// Real PJRT execution over AOT artifacts ([`Plan::deploy`] with an
+    /// artifact binding); `serial` is the one-thread kernel-level analogue.
+    Pjrt { serial: bool },
+}
+
+/// Latency percentiles in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyReport {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Per-stage accounting within one replica.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageReport {
+    pub name: String,
+    pub items: usize,
+    pub busy_s: f64,
+    /// Busy fraction against the run's wall clock.
+    pub utilization: f64,
+}
+
+/// One replica's slice of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaReport {
+    /// The plan's pipeline shorthand (`B4-s2-s2`, `host-3`, `full-net`).
+    pub pipeline: String,
+    /// 1-based layer-allocation display (`[1,35] - [36,54]`).
+    pub allocation: String,
+    /// Items routed to this replica.
+    pub dispatched: usize,
+    /// Throughput against the replica's own clock (imgs/s).
+    pub throughput: f64,
+    /// Bottleneck-stage busy fraction (1.0 = never idle).
+    pub utilization: f64,
+    /// Bottleneck stage index, when the backend knows it (DES only).
+    pub bottleneck: Option<usize>,
+    pub stages: Vec<StageReport>,
+}
+
+/// Unified result of serving a [`Plan`] through any backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    pub mode: ServeMode,
+    /// Network (or artifact model) name from the plan.
+    pub network: String,
+    /// Items that completed across all replicas.
+    pub images: usize,
+    /// Wall-clock (or simulated-clock) duration in seconds.
+    pub wall_s: f64,
+    /// Aggregate throughput over `wall_s` (imgs/s).
+    pub throughput: f64,
+    /// The plan's predicted aggregate Eq. 12 throughput (0.0 = unknown,
+    /// e.g. artifact plans balanced by MACs without profiling).
+    pub predicted_throughput: f64,
+    pub latency: Option<LatencyReport>,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+fn latency_from(s: &Summary) -> Option<LatencyReport> {
+    if s.count() == 0 {
+        return None;
+    }
+    Some(LatencyReport { p50: s.p50(), p95: s.p95(), p99: s.p99() })
+}
+
+impl ServeReport {
+    /// Convert a wall-clock fleet run. `plan.replicas` and `fleet.replicas`
+    /// must be index-aligned (they are, for reports produced by
+    /// [`Plan::deploy`]).
+    pub fn from_fleet(plan: &Plan, fleet: &FleetReport, mode: ServeMode) -> ServeReport {
+        let util = fleet.utilization();
+        let replicas = plan
+            .replicas
+            .iter()
+            .zip(&fleet.replicas)
+            .enumerate()
+            .map(|(i, (pr, rr))| ReplicaReport {
+                pipeline: pr.pipeline.clone(),
+                allocation: plan.allocation_of(i).display_1based(),
+                dispatched: fleet.dispatched[i],
+                throughput: rr.throughput(),
+                utilization: util[i],
+                bottleneck: None,
+                stages: rr
+                    .stages
+                    .iter()
+                    .map(|s| StageReport {
+                        name: s.name.clone(),
+                        items: s.items,
+                        busy_s: s.busy.as_secs_f64(),
+                        utilization: s.utilization(fleet.wall),
+                    })
+                    .collect(),
+            })
+            .collect();
+        ServeReport {
+            mode,
+            network: plan.network.clone(),
+            images: fleet.images,
+            wall_s: fleet.wall.as_secs_f64(),
+            throughput: fleet.throughput(),
+            predicted_throughput: plan.throughput,
+            latency: latency_from(&fleet.latencies),
+            replicas,
+        }
+    }
+
+    /// Convert a single-pipeline (or serial) wall-clock run into a
+    /// one-replica report.
+    pub fn from_run(plan: &Plan, report: &RunReport, mode: ServeMode) -> ServeReport {
+        let util = report
+            .stages
+            .iter()
+            .map(|s| s.utilization(report.wall))
+            .fold(0.0, f64::max);
+        let replica = ReplicaReport {
+            pipeline: plan
+                .replicas
+                .first()
+                .map(|r| r.pipeline.clone())
+                .unwrap_or_default(),
+            allocation: plan.allocation_of(0).display_1based(),
+            dispatched: report.images,
+            throughput: if report.wall.is_zero() { 0.0 } else { report.throughput() },
+            utilization: util,
+            bottleneck: None,
+            stages: report
+                .stages
+                .iter()
+                .map(|s| StageReport {
+                    name: s.name.clone(),
+                    items: s.items,
+                    busy_s: s.busy.as_secs_f64(),
+                    utilization: s.utilization(report.wall),
+                })
+                .collect(),
+        };
+        ServeReport {
+            mode,
+            network: plan.network.clone(),
+            images: report.images,
+            wall_s: report.wall.as_secs_f64(),
+            throughput: if report.wall.is_zero() { 0.0 } else { report.throughput() },
+            predicted_throughput: plan.throughput,
+            latency: latency_from(&report.latencies),
+            replicas: vec![replica],
+        }
+    }
+
+    /// Convert a replicated discrete-event simulation.
+    pub fn from_des(plan: &Plan, sim: &FleetSimReport) -> ServeReport {
+        let merged = sim.merged_latencies();
+        let latency = if merged.is_empty() {
+            None
+        } else {
+            Some(LatencyReport {
+                p50: stats::percentile(&merged, 50.0),
+                p95: stats::percentile(&merged, 95.0),
+                p99: stats::percentile(&merged, 99.0),
+            })
+        };
+        let util = sim.replica_utilization();
+        let replicas = plan
+            .replicas
+            .iter()
+            .zip(&sim.per_replica)
+            .enumerate()
+            .map(|(i, (pr, sr))| ReplicaReport {
+                pipeline: pr.pipeline.clone(),
+                allocation: plan.allocation_of(i).display_1based(),
+                dispatched: sim.dispatched[i],
+                throughput: sr.throughput,
+                utilization: util[i],
+                bottleneck: Some(sr.bottleneck),
+                stages: sr
+                    .utilization
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &u)| StageReport {
+                        name: format!("stage{j}"),
+                        items: sim.dispatched[i],
+                        busy_s: pr.stage_times.get(j).copied().unwrap_or(0.0)
+                            * sim.dispatched[i] as f64,
+                        utilization: u,
+                    })
+                    .collect(),
+            })
+            .collect();
+        ServeReport {
+            mode: ServeMode::Des,
+            network: plan.network.clone(),
+            images: sim.dispatched.iter().sum(),
+            wall_s: sim.makespan,
+            throughput: sim.throughput,
+            predicted_throughput: plan.throughput,
+            latency,
+            replicas,
+        }
+    }
+}

@@ -97,9 +97,12 @@ mod tests {
         for net in zoo::all_networks() {
             let row = fig4_row(&p, &net);
             let get = |n: &str| {
-                row.iter().find(|(name, _)| name == n).unwrap().1
+                row.iter()
+                    .find(|(name, _)| name == n)
+                    .unwrap_or_else(|| panic!("fig4 row is missing the {n:?} series"))
+                    .1
             };
-            let armcl = get("ARM-CL").unwrap();
+            let armcl = get("ARM-CL").expect("ARM-CL baseline has no throughput");
             if let Some(ncnn) = get("NCNN") {
                 assert!((ncnn / armcl - 0.95).abs() < 1e-9);
             }
@@ -115,14 +118,22 @@ mod tests {
         let p = Platform::hikey970();
         let net = zoo::mobilenet();
         let series = fig14_series(&p, &net, 29.0, 1.18);
-        let pipeit = series.iter().find(|(n, _)| n == "Pipe-it").unwrap().1;
+        let pipeit = series
+            .iter()
+            .find(|(n, _)| n == "Pipe-it")
+            .expect("fig14 series missing Pipe-it")
+            .1;
         let best_other = series
             .iter()
             .filter(|(n, _)| !n.starts_with("Pipe-it"))
             .map(|(_, tp)| *tp)
             .fold(f64::NEG_INFINITY, f64::max);
         assert!(pipeit > best_other);
-        let quant = series.iter().find(|(n, _)| n == "Pipe-it**").unwrap().1;
+        let quant = series
+            .iter()
+            .find(|(n, _)| n == "Pipe-it**")
+            .expect("fig14 series missing Pipe-it**")
+            .1;
         assert!(quant > pipeit);
     }
 

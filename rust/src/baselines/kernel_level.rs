@@ -124,7 +124,7 @@ mod tests {
         for net in zoo::all_networks() {
             let sweep = ratio_sweep(&p, &net, 20);
             let best = sweep.iter().map(|(_, tp)| *tp).fold(f64::NEG_INFINITY, f64::max);
-            let at_one = sweep.last().unwrap().1;
+            let at_one = sweep.last().expect("fig5 ratio sweep is empty").1;
             assert!((at_one - 1.0).abs() < 1e-9);
             assert!(best <= 1.03, "{}: ratio sweep best {best:.3} beats Big-only", net.name);
         }
@@ -136,7 +136,11 @@ mod tests {
         let share_alex = conv_time_share(&p, &zoo::alexnet());
         assert!(share_alex < 0.65, "AlexNet conv share {share_alex:.2} should be lowest");
         for name in ["googlenet", "mobilenet", "resnet50", "squeezenet"] {
-            let share = conv_time_share(&p, &zoo::by_name(name).unwrap());
+            let share = conv_time_share(
+                &p,
+                &zoo::by_name(name)
+                    .unwrap_or_else(|| panic!("zoo is missing network {name:?}")),
+            );
             assert!(share > 0.85, "{name}: conv share {share:.2}");
             assert!(share > share_alex);
         }

@@ -75,7 +75,11 @@ mod tests {
     use super::*;
 
     fn find(points: &[QuantPoint], v: ArmClVersion, q: bool) -> QuantPoint {
-        points.iter().find(|p| p.version == v && p.quantized == q).unwrap().clone()
+        points
+            .iter()
+            .find(|p| p.version == v && p.quantized == q)
+            .unwrap_or_else(|| panic!("fig13 series missing {v:?} quantized={q}"))
+            .clone()
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //!                                work)          [feed q, cap 1] -> replica R-1
 //! ```
 //!
+//! The high-level entry point is the plan facade: a replicated
+//! [`crate::api::Plan`] deploys onto this fleet via
+//! [`crate::api::Plan::deploy`], and [`FleetReport`] converts into the
+//! unified [`crate::api::ServeReport`] shape.
+//!
 //! Each replica is an ordinary [`run_pipeline`] chain built from the same
 //! [`StageSpec`] machinery as single-pipeline serving; the dispatcher
 //! tracks per-replica outstanding items (dispatched minus completed, the
@@ -450,8 +455,8 @@ mod tests {
 
     #[test]
     fn empty_source_is_clean() {
-        let (out, report) =
-            run_fleet(vec![vec![sleep_stage("a", 1)], vec![sleep_stage("b", 1)]], 1, 1, Vec::<u64>::new());
+        let replicas = vec![vec![sleep_stage("a", 1)], vec![sleep_stage("b", 1)]];
+        let (out, report) = run_fleet(replicas, 1, 1, Vec::<u64>::new());
         assert!(out.is_empty());
         assert_eq!(report.images, 0);
         assert_eq!(report.dispatched, vec![0, 0]);

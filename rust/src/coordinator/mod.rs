@@ -28,7 +28,7 @@ pub use fleet::{run_fleet, synthetic_fleet, FleetReport};
 pub use metrics::{RunReport, StageMetrics};
 pub use pipeline::{run_pipeline, run_serial, StageFactory, StageSpec};
 pub use server::{
-    balance_by_times, profile_layer_times, serve_fleet, serve_layerwise_serial,
-    serve_pipelined, serve_serial,
+    balance_by_macs, balance_by_times, profile_layer_times, serve_fleet,
+    serve_layerwise_serial, serve_pipelined, serve_serial,
 };
 pub use stream::{Image, ImageStream};

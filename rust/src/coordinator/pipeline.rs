@@ -5,7 +5,9 @@
 //! the PJRT client (`xla::PjRtClient`) is `Rc`-based and must never cross
 //! threads, so each stage owns a private client + compiled executables
 //! (DESIGN.md §1). On the paper's board this corresponds to pinning each
-//! stage's ARM-CL thread pool to its cluster cores.
+//! stage's ARM-CL thread pool to its cluster cores. The high-level entry
+//! point is the plan facade ([`crate::api::Plan::deploy`]); [`RunReport`]
+//! converts into the unified [`crate::api::ServeReport`] shape.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;

@@ -198,3 +198,11 @@ pub fn balance_by_times(times: &[f64], k: usize) -> Allocation {
     }
     Allocation { ranges }
 }
+
+/// Balance manifest layers into `k` contiguous stages by MAC count — the
+/// static fallback when no profile is available (the serving host is a
+/// symmetric CPU, so MACs are the balancing proxy).
+pub fn balance_by_macs(manifest: &Manifest, k: usize) -> Allocation {
+    let macs: Vec<f64> = manifest.layers.iter().map(|l| l.macs as f64).collect();
+    balance_by_times(&macs, k)
+}

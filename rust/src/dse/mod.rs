@@ -38,5 +38,6 @@ pub use config::{
 pub use count::{binom, design_points, pipelines_with_p_stages, total_pipelines};
 pub use energy::{explore_energy, pipeline_power, EnergyPoint};
 pub use replicated::{
-    explore_exact, explore_replicated, CoreBudget, ReplicaDesign, ReplicatedDesign,
+    explore_budget, explore_exact, explore_replicated, CoreBudget, ReplicaDesign,
+    ReplicatedDesign,
 };

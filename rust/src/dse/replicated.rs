@@ -86,6 +86,14 @@ pub struct ReplicatedDesign {
 }
 
 impl ReplicatedDesign {
+    /// Wrap a single-pipeline design point as a one-replica design, so the
+    /// plan facade ([`crate::api`]) can treat every strategy's result as a
+    /// (possibly singleton) fleet.
+    pub fn single(budget: CoreBudget, point: DsePoint) -> ReplicatedDesign {
+        let throughput = point.throughput;
+        ReplicatedDesign { replicas: vec![ReplicaDesign { budget, point }], throughput }
+    }
+
     pub fn num_replicas(&self) -> usize {
         self.replicas.len()
     }

@@ -22,11 +22,18 @@
 //! ([`coordinator::run_fleet`]) when a single balanced pipeline stops
 //! scaling.
 //!
+//! The whole lifecycle — predict, explore, execute — is exposed through the
+//! [`api`] facade: a [`api::PlanSpec`] compiles to a serializable
+//! [`api::Plan`] artifact that can be simulated ([`api::Plan::simulate`])
+//! or deployed ([`api::Plan::deploy`]) anywhere, and the CLI subcommands
+//! (`pipeit plan / serve / simulate`) are thin wrappers over it.
+//!
 //! Architecture details live in `DESIGN.md`; the quickstart and the
 //! paper-to-module map live in `README.md`.
 
 #![deny(rustdoc::broken_intra_doc_links)]
 
+pub mod api;
 pub mod baselines;
 pub mod cnn;
 pub mod config;

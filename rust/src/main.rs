@@ -1,74 +1,61 @@
 //! `pipeit` — Pipe-it CLI (L3 leader entrypoint).
 //!
-//! Subcommands:
-//!   tables                         print every paper table/figure (paper-vs-ours)
-//!   explore   --net N [--predicted] [--replicated [--max-replicas R]]
-//!   predict   --net N              dump the layer x config time matrix
-//!   simulate  --net N --pipeline P [--images I] [--queue-cap C]
-//!   count     [--net N]            design-space sizes (Eq. 1-2 + replicated)
-//!   serve     --net N [--replicas R] ...   simulated-time fleet serving
-//!   serve     --artifacts DIR [--replicas R] ...  real PJRT serving
+//! Every subcommand is a thin wrapper over the `pipeit::api` Plan → Deploy
+//! facade (DESIGN.md §8): `plan` compiles a serializable design artifact,
+//! `serve` / `simulate` execute one (freshly compiled or loaded from
+//! `--plan plan.json`), and the legacy forms (`explore`, `serve --net`,
+//! `simulate --net --pipeline`, …) compile a plan in-process and run it.
 //!
 //! All simulator-backed subcommands accept `--platform configs/<f>.json`.
 
+use std::path::Path;
+
 use anyhow::{Context, Result};
 
+use pipeit::api::{DeployOptions, Plan, PlanSpec, Strategy, TimeSource};
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
-use pipeit::coordinator;
-use pipeit::coordinator::{run_fleet, synthetic_fleet};
 use pipeit::dse;
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
-use pipeit::reports::Reporter;
-use pipeit::runtime::Manifest;
-use pipeit::simulator::pipeline_sim;
+use pipeit::reports::{render_serve, Reporter};
 use pipeit::util::cli::Args;
 use pipeit::util::table::{f, Table};
 
 const USAGE: &str = "\
 pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
 
-USAGE: pipeit <tables|explore|predict|simulate|count|serve> [options]
+USAGE: pipeit <plan|serve|simulate|explore|predict|count|tables> [options]
 
-  tables     [--platform F]                 regenerate every paper table & figure
+  plan       --net N [--predicted] [--platform F] [--out plan.json]
+             [--strategy serial|pipeline|replicated|exhaustive|energy]
+             [--replicas R | --max-replicas 4] [--pipeline B4-s2-s2]
+             [--min-throughput T] [--mem-intensity 0.6]
+                                               compile a serving-plan artifact
+  plan       --artifacts DIR [--stages 3] [--replicas R] [--profile]
+             [--out plan.json]                 plan over AOT artifacts
+  serve      --plan plan.json [--images 60] [--queue-cap 2] [--time-scale 0.1]
+             [--batch 1] [--seed 7]            deploy a saved plan
+  simulate   --plan plan.json [--images 500] [--queue-cap 2]
+                                               DES a saved plan
   explore    --net N [--predicted] [--platform F]
              [--replicated] [--max-replicas 4]   also search replica partitions
-  predict    --net N [--platform F]         per-layer time matrix (ms)
+  predict    --net N [--platform F]            per-layer time matrix (ms)
   simulate   --net N --pipeline B4-s2-s2 [--images 500] [--queue-cap 2]
-  count      [--net N] [--max-replicas 4]   design-space sizes (Eq. 1-2 + fleet)
+  count      [--net N] [--max-replicas 4]      design-space sizes (Eq. 1-2 + fleet)
   serve      --net N [--replicas 1] [--images 60] [--queue-cap 2]
-             [--time-scale 0.1]              simulated-time fleet serving
-                                             (deterministic; no seed)
+             [--time-scale 0.1]                simulated-time fleet serving
   serve      --artifacts artifacts/pipenet_tiny [--replicas 1] [--images 50]
              [--batch 1] [--stages 3] [--queue-cap 2] [--serial] [--seed 7]
-                                            real PJRT serving (needs --features pjrt)
+                                               real PJRT serving (needs --features pjrt)
+  tables     [--platform F]                    regenerate every paper table & figure
 
 networks: alexnet googlenet mobilenet resnet50 squeezenet";
-
-fn net_arg(args: &Args) -> Result<pipeit::cnn::Network> {
-    let name = args.get("net").context("--net is required")?;
-    zoo::by_name(name).with_context(|| format!("unknown network {name:?}"))
-}
-
-/// One line per replica of a replicated design (shared by
-/// `explore --replicated` and `serve --net`).
-fn print_replicas(design: &dse::ReplicatedDesign) {
-    for (i, rep) in design.replicas.iter().enumerate() {
-        println!(
-            "  replica {i}: {:<6} {}  alloc {}  {:.2} imgs/s",
-            rep.budget.to_string(),
-            rep.point.pipeline,
-            rep.point.allocation.display_1based(),
-            rep.point.throughput
-        );
-    }
-}
 
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["predicted", "serial", "measured", "replicated"],
-    );
+        &["predicted", "serial", "measured", "replicated", "profile"],
+    )?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -79,129 +66,52 @@ fn main() -> Result<()> {
         "tables" => {
             Reporter::new(cfg).print_all();
         }
-        "explore" => {
-            let net = net_arg(&args)?;
-            let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
-            let tm = if args.has_flag("predicted") {
-                let model = PerfModel::fit(&cfg.platform);
-                TimeMatrix::predicted(&cfg.platform, &model, &net)
-            } else {
-                TimeMatrix::measured(&cfg.platform, &net)
-            };
-            let pt = dse::explore(&tm, hb, hs);
-            println!("network    : {}", net.name);
-            println!("pipeline   : {}", pt.pipeline);
-            println!("allocation : {}", pt.allocation.display_1based());
-            println!("throughput : {:.2} imgs/s (Eq. 12)", pt.throughput);
-            let times = dse::point_stage_times(&tm, &pt);
-            for (i, (s, t)) in pt.pipeline.stages.iter().zip(&times).enumerate() {
-                println!("  stage {i}: {s}  {:.1} ms", t * 1e3);
-            }
-            if args.has_flag("replicated") {
-                let max_r = args.get_usize("max-replicas", 4)?;
-                let fleet = dse::explore_replicated(&tm, hb, hs, max_r);
-                println!();
-                println!(
-                    "replicated : {} (R={})",
-                    fleet.partition_display(),
-                    fleet.num_replicas()
-                );
-                print_replicas(&fleet);
-                println!(
-                    "aggregate  : {:.2} imgs/s ({:+.1}% vs best single pipeline)",
-                    fleet.throughput,
-                    100.0 * (fleet.throughput / pt.throughput - 1.0)
-                );
-                let sim =
-                    pipeline_sim::simulate_replicated(&fleet.stage_times(&tm), 1000, 2);
-                println!("simulated  : {:.2} imgs/s (DES, 1000 images)", sim.throughput);
+        "plan" => {
+            let plan = compile_from_args(&args, &cfg)?;
+            print!("{}", plan.summary());
+            if let Some(out) = args.get("out") {
+                plan.save(Path::new(out))?;
+                println!("plan saved : {out}");
             }
         }
-        "predict" => {
-            let net = net_arg(&args)?;
-            let model = PerfModel::fit(&cfg.platform);
-            let tm = TimeMatrix::predicted(&cfg.platform, &model, &net);
-            let mut t = Table::new(
-                &format!("{} predicted layer times (ms)", net.name),
-                &["layer", "B1", "B2", "B3", "B4", "s1", "s2", "s3", "s4"],
-            );
-            for (j, name) in tm.layer_names.iter().enumerate() {
-                let mut row = vec![name.clone()];
-                for ci in 0..tm.configs.len() {
-                    row.push(f(tm.layer(j, ci) * 1e3, 2));
-                }
-                t.row(row);
-            }
-            t.print();
-        }
+        "explore" => explore(&args, &cfg)?,
+        "predict" => predict(&args, &cfg)?,
         "simulate" => {
-            let net = net_arg(&args)?;
-            let spec = args.get("pipeline").context("--pipeline required (e.g. B4-s2-s2)")?;
-            let p = dse::PipelineConfig::parse(spec)?;
-            anyhow::ensure!(
-                p.is_valid(cfg.platform.big.cores, cfg.platform.small.cores),
-                "pipeline exceeds platform core budget"
-            );
-            let tm = TimeMatrix::measured(&cfg.platform, &net);
-            let alloc = dse::work_flow(&tm, &p, tm.num_layers());
-            let times = dse::stage_times(&tm, &p, &alloc);
             let images = args.get_usize("images", 500)?;
             let cap = args.get_usize("queue-cap", 2)?;
-            let sim = pipeline_sim::simulate(&times, images, cap);
-            println!("network    : {}", net.name);
-            println!("pipeline   : {p}");
-            println!("allocation : {}", alloc.display_1based());
-            println!(
-                "eq12 tp    : {:.2} imgs/s",
-                pipeline_sim::steady_state_throughput(&times)
-            );
-            println!(
-                "sim tp     : {:.2} imgs/s over {images} images (cap {cap})",
-                sim.throughput
-            );
-            println!("bottleneck : stage {}", sim.bottleneck);
-            for (i, u) in sim.utilization.iter().enumerate() {
-                println!("  stage {i} utilization {:.0}%", 100.0 * u);
-            }
-        }
-        "count" => {
-            let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
-            println!(
-                "pipelines on {}B+{}s: {}",
-                hb,
-                hs,
-                dse::count::total_pipelines(hb, hs)
-            );
-            let max_r = args.get_usize("max-replicas", 4)?;
-            println!(
-                "replicated (R<={max_r}): {} core partitions, {} fleet pipelines",
-                dse::count::core_partitions(hb, hs, max_r),
-                dse::count::replicated_pipelines(hb, hs, max_r)
-            );
-            let nets = match args.get("net") {
-                Some(_) => vec![net_arg(&args)?],
-                None => zoo::all_networks(),
+            let plan = if let Some(path) = args.get("plan") {
+                reject_compile_flags(&args)?;
+                Plan::load(Path::new(path))?
+            } else {
+                let spec = args.get("pipeline").context(
+                    "--pipeline required (e.g. B4-s2-s2), or --plan plan.json",
+                )?;
+                let net = args.get("net").context("--net is required")?;
+                PlanSpec::new(net).platform(cfg).pipeline(spec).compile()?
             };
-            for net in nets {
-                println!(
-                    "{:<11} W={:<3} design points = {}",
-                    net.name,
-                    net.num_layers(),
-                    dse::count::design_points(net.num_layers(), hb, hs)
-                );
-            }
+            print!("{}", plan.summary());
+            let report = plan.simulate(images, cap)?;
+            print!("{}", render_serve(&report));
         }
+        "count" => count(&args, &cfg)?,
         "serve" => {
             let replicas = args.get_usize("replicas", 1)?;
             anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
-            if let Some(dir) = args.get("artifacts") {
-                serve_artifacts(&args, dir, replicas)?;
+            if let Some(path) = args.get("plan") {
+                reject_compile_flags(&args)?;
+                let plan = Plan::load(Path::new(path))?;
+                print!("{}", plan.summary());
+                let report = plan.deploy(&deploy_opts(&args)?)?;
+                println!();
+                print!("{}", render_serve(&report));
+            } else if args.get("artifacts").is_some() {
+                serve_artifacts(&args, replicas)?;
             } else if args.get("net").is_some() {
                 serve_simulated(&args, &cfg, replicas)?;
             } else {
                 anyhow::bail!(
-                    "serve needs --net N (simulated-time fleet) or --artifacts DIR \
-                     (real PJRT serving)\n\n{USAGE}"
+                    "serve needs --plan plan.json, --net N (simulated-time fleet), \
+                     or --artifacts DIR (real PJRT serving)\n\n{USAGE}"
                 );
             }
         }
@@ -213,11 +123,200 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Simulated-time serving: pick the best R-replica design for the network,
-/// then drive the REAL thread fleet (shared admission queue, LOW dispatch)
-/// with synthetic stages that sleep for the predicted stage service times,
-/// scaled by `--time-scale`. Runs in every build — no PJRT required — and
-/// prints wall-clock numbers next to the DES prediction.
+/// With `--plan`, the design is fixed by the plan file: reject every
+/// plan-compile option instead of silently ignoring it.
+fn reject_compile_flags(args: &Args) -> Result<()> {
+    let options = [
+        "net", "artifacts", "replicas", "stages", "strategy", "pipeline",
+        "max-replicas", "min-throughput", "mem-intensity",
+    ];
+    for key in options {
+        anyhow::ensure!(
+            args.get(key).is_none(),
+            "--{key} is a plan-compile option; the plan file fixes the design \
+             (recompile with `pipeit plan --{key} ...`)"
+        );
+    }
+    for flag in ["serial", "predicted", "profile"] {
+        anyhow::ensure!(
+            !args.has_flag(flag),
+            "--{flag} is a plan-compile option; the plan file fixes the design \
+             (recompile with `pipeit plan`)"
+        );
+    }
+    Ok(())
+}
+
+/// Deploy knobs shared by every `serve` form.
+fn deploy_opts(args: &Args) -> Result<DeployOptions> {
+    let opts = DeployOptions {
+        images: args.get_usize("images", 60)?,
+        queue_cap: args.get_usize("queue-cap", 2)?,
+        time_scale: args.get_f64("time-scale", 0.1)?,
+        batch: args.get_usize("batch", 1)?,
+        seed: args.get_usize("seed", 7)? as u64,
+    };
+    anyhow::ensure!(opts.images >= 1, "--images must be >= 1");
+    anyhow::ensure!(opts.time_scale > 0.0, "--time-scale must be positive");
+    Ok(opts)
+}
+
+/// Build a [`PlanSpec`] from `plan` subcommand flags and compile it.
+/// Every flag is applied to the spec — invalid combinations (e.g.
+/// `--artifacts` + `--pipeline`) surface as the facade's compile errors
+/// instead of being silently dropped.
+fn compile_from_args(args: &Args, cfg: &Config) -> Result<Plan> {
+    anyhow::ensure!(
+        !(args.has_flag("profile") && args.has_flag("predicted")),
+        "--profile and --predicted are mutually exclusive time sources"
+    );
+    let mut spec = if let Some(dir) = args.get("artifacts") {
+        PlanSpec::from_artifacts(dir).stages(args.get_usize("stages", 3)?)
+    } else {
+        let net = args.get("net").context("plan needs --net N or --artifacts DIR")?;
+        PlanSpec::new(net).platform(cfg.clone())
+    };
+    spec = spec.strategy(strategy_from_args(args)?);
+    if args.has_flag("predicted") {
+        spec = spec.time_source(TimeSource::Predicted);
+    }
+    if args.has_flag("profile") {
+        spec = spec.time_source(TimeSource::ProfiledArtifacts);
+    }
+    if let Some(p) = args.get("pipeline") {
+        spec = spec.pipeline(p);
+    }
+    spec.compile()
+}
+
+/// `--strategy` plus its parameter flags. Defaults: `--replicas R` implies
+/// an exact R-replica fleet, otherwise the paper's single-pipeline DSE.
+fn strategy_from_args(args: &Args) -> Result<Strategy> {
+    let default = if args.get("replicas").is_some() { "replicated" } else { "pipeline" };
+    Ok(match args.get_or("strategy", default) {
+        "serial" => Strategy::Serial,
+        "pipeline" => Strategy::Pipeline,
+        "exhaustive" => Strategy::Exhaustive,
+        "replicated" => match args.get("replicas") {
+            Some(_) => Strategy::Replicated {
+                max_replicas: args.get_usize("replicas", 1)?,
+                exact: true,
+            },
+            None => Strategy::Replicated {
+                max_replicas: args.get_usize("max-replicas", 4)?,
+                exact: false,
+            },
+        },
+        "energy" => Strategy::Energy {
+            min_throughput: args.get_f64("min-throughput", 0.0)?,
+            mem_intensity: args.get_f64("mem-intensity", 0.6)?,
+        },
+        other => anyhow::bail!(
+            "unknown strategy {other:?} (serial|pipeline|replicated|exhaustive|energy)"
+        ),
+    })
+}
+
+/// `explore`: the single-pipeline DSE, plus the replicated fleet space
+/// with `--replicated` — both as compiled plans.
+fn explore(args: &Args, cfg: &Config) -> Result<()> {
+    let net = args.get("net").context("--net is required")?;
+    let spec = |strategy: Strategy| {
+        let s = PlanSpec::new(net).platform(cfg.clone()).strategy(strategy);
+        if args.has_flag("predicted") {
+            s.time_source(TimeSource::Predicted)
+        } else {
+            s
+        }
+    };
+    let plan = spec(Strategy::Pipeline).compile()?;
+    println!("network    : {}", plan.network);
+    print!("{}", plan.design_summary());
+
+    if args.has_flag("replicated") {
+        let max_r = args.get_usize("max-replicas", 4)?;
+        let fleet =
+            spec(Strategy::Replicated { max_replicas: max_r, exact: false }).compile()?;
+        println!();
+        println!(
+            "replicated : {} (R={})",
+            fleet.partition_display(),
+            fleet.num_replicas()
+        );
+        for (i, r) in fleet.replicas.iter().enumerate() {
+            let budget = format!("{}B+{}s", r.big, r.small);
+            println!(
+                "  replica {i}: {budget:<6} {}  alloc {}  {:.2} imgs/s",
+                r.pipeline,
+                fleet.allocation_of(i).display_1based(),
+                r.throughput
+            );
+        }
+        println!(
+            "aggregate  : {:.2} imgs/s ({:+.1}% vs best single pipeline)",
+            fleet.throughput,
+            100.0 * (fleet.throughput / plan.throughput - 1.0)
+        );
+        let sim = fleet.simulate(1000, 2)?;
+        println!("simulated  : {:.2} imgs/s (DES, 1000 images)", sim.throughput);
+    }
+    Ok(())
+}
+
+/// `predict`: dump the layer x config time matrix (not a plan — the raw
+/// perfmodel view the planner consumes).
+fn predict(args: &Args, cfg: &Config) -> Result<()> {
+    let name = args.get("net").context("--net is required")?;
+    let net = zoo::by_name(name).with_context(|| format!("unknown network {name:?}"))?;
+    let model = PerfModel::fit(&cfg.platform);
+    let tm = TimeMatrix::predicted(&cfg.platform, &model, &net);
+    let mut t = Table::new(
+        &format!("{} predicted layer times (ms)", net.name),
+        &["layer", "B1", "B2", "B3", "B4", "s1", "s2", "s3", "s4"],
+    );
+    for (j, name) in tm.layer_names.iter().enumerate() {
+        let mut row = vec![name.clone()];
+        for ci in 0..tm.configs.len() {
+            row.push(f(tm.layer(j, ci) * 1e3, 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+/// `count`: design-space sizes (Eq. 1-2 + the replicated extension).
+fn count(args: &Args, cfg: &Config) -> Result<()> {
+    let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
+    println!("pipelines on {}B+{}s: {}", hb, hs, dse::count::total_pipelines(hb, hs));
+    let max_r = args.get_usize("max-replicas", 4)?;
+    println!(
+        "replicated (R<={max_r}): {} core partitions, {} fleet pipelines",
+        dse::count::core_partitions(hb, hs, max_r),
+        dse::count::replicated_pipelines(hb, hs, max_r)
+    );
+    let nets = match args.get("net") {
+        Some(name) => {
+            vec![zoo::by_name(name).with_context(|| format!("unknown network {name:?}"))?]
+        }
+        None => zoo::all_networks(),
+    };
+    for net in nets {
+        println!(
+            "{:<11} W={:<3} design points = {}",
+            net.name,
+            net.num_layers(),
+            dse::count::design_points(net.num_layers(), hb, hs)
+        );
+    }
+    Ok(())
+}
+
+/// Simulated-time serving: compile an exact-R replicated plan for the
+/// network and deploy it on the REAL thread fleet (shared admission queue,
+/// LOW dispatch) with synthetic stages that sleep for the predicted stage
+/// service times, scaled by `--time-scale`. Runs in every build — no PJRT
+/// required — and prints wall-clock numbers next to the DES prediction.
 fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
     anyhow::ensure!(
         !args.has_flag("serial"),
@@ -229,112 +328,60 @@ fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
             "--{key} applies to --artifacts serving only"
         );
     }
-    let net = net_arg(args)?;
-    let images = args.get_usize("images", 60)?;
-    let cap = args.get_usize("queue-cap", 2)?;
-    let scale = args.get_f64("time-scale", 0.1)?;
-    anyhow::ensure!(scale > 0.0, "--time-scale must be positive");
-    anyhow::ensure!(images >= 1, "--images must be >= 1");
+    let net = args.get("net").context("--net is required")?;
+    let opts = deploy_opts(args)?;
     let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
 
-    let tm = TimeMatrix::measured(&cfg.platform, &net);
-    let design = dse::explore_exact(&tm, hb, hs, replicas).with_context(|| {
-        format!("no {replicas}-replica design fits on {hb}B+{hs}s")
-    })?;
+    let plan = PlanSpec::new(net)
+        .platform(cfg.clone())
+        .strategy(Strategy::Replicated { max_replicas: replicas, exact: true })
+        .compile()?;
     println!(
         "simulated-time serving: {} on {} ({}B+{}s), {} replicas",
-        net.name, cfg.platform.name, hb, hs, replicas
+        plan.network, cfg.platform.name, hb, hs, replicas
     );
-    println!("fleet      : {}", design.partition_display());
-    print_replicas(&design);
+    print!("{}", plan.design_summary());
 
-    let times = design.stage_times(&tm);
-    let sim = pipeline_sim::simulate_replicated(&times, images, cap);
-
-    // The real thread fleet: one sleep-stage per pipeline stage.
-    let fleet = synthetic_fleet(&times, scale);
-    let (_, report) = run_fleet(fleet, cap, 2 * replicas, 0..images);
+    let sim = plan.simulate(opts.images, opts.queue_cap)?;
+    let report = plan.deploy(&opts)?;
     println!();
-    print!("{}", report.render());
+    print!("{}", render_serve(&report));
     println!(
         "predicted  : {:.2} imgs/s aggregate (DES, unscaled Eq. 10 times)",
         sim.throughput
-    );
-    println!(
-        "wall-clock : {:.2} imgs/s at time-scale {scale} (~{:.2} imgs/s unscaled)",
-        report.throughput(),
-        report.throughput() * scale
     );
     Ok(())
 }
 
 /// Real PJRT serving over AOT artifacts (requires `--features pjrt`).
-fn serve_artifacts(args: &Args, dir: &str, replicas: usize) -> Result<()> {
-    let manifest = Manifest::load(std::path::Path::new(dir))?;
-    let images = args.get_usize("images", 50)?;
-    let batch = args.get_usize("batch", 1)?;
-    let cap = args.get_usize("queue-cap", 2)?;
-    let stages = args.get_usize("stages", 3)?;
-    let seed = args.get_usize("seed", 7)? as u64;
+fn serve_artifacts(args: &Args, replicas: usize) -> Result<()> {
+    let dir = args.get("artifacts").context("--artifacts is required")?;
     if args.has_flag("serial") {
         anyhow::ensure!(
             replicas == 1,
             "--serial serves on one thread; it cannot be combined with --replicas {replicas}"
         );
-        let (_, report) = coordinator::serve_serial(&manifest, images, batch, seed)?;
-        println!("serial (kernel-level analogue) on {}:", manifest.name);
-        print!("{}", report.render());
+    }
+    let strategy = if args.has_flag("serial") {
+        Strategy::Serial
     } else if replicas > 1 {
-        let alloc = balance_by_macs(&manifest, stages);
-        println!(
-            "replicated serving on {}: {} replicas x {} stages: {}",
-            manifest.name,
-            replicas,
-            alloc.active_stages(),
-            alloc.display_1based()
-        );
-        let (_, report) =
-            coordinator::serve_fleet(&manifest, &alloc, replicas, images, batch, cap, seed)?;
-        print!("{}", report.render());
+        Strategy::Replicated { max_replicas: replicas, exact: true }
     } else {
-        let alloc = balance_by_macs(&manifest, stages);
-        println!(
-            "pipelined serving on {} with {} stages: {}",
-            manifest.name,
-            alloc.active_stages(),
-            alloc.display_1based()
-        );
-        let (_, report) =
-            coordinator::serve_pipelined(&manifest, &alloc, images, batch, cap, seed)?;
-        print!("{}", report.render());
+        Strategy::Pipeline
+    };
+    let mut spec = PlanSpec::from_artifacts(dir)
+        .stages(args.get_usize("stages", 3)?)
+        .strategy(strategy);
+    if args.has_flag("profile") {
+        spec = spec.time_source(TimeSource::ProfiledArtifacts);
     }
+    let plan = spec.compile()?;
+    print!("{}", plan.summary());
+    let opts = DeployOptions {
+        images: args.get_usize("images", 50)?,
+        ..deploy_opts(args)?
+    };
+    let report = plan.deploy(&opts)?;
+    print!("{}", render_serve(&report));
     Ok(())
-}
-
-/// Balance manifest layers into `k` contiguous stages by MAC count (the
-/// host is a symmetric CPU, so MACs are the balancing proxy).
-fn balance_by_macs(manifest: &Manifest, k: usize) -> dse::Allocation {
-    let w = manifest.num_layers();
-    let k = k.clamp(1, w);
-    let total: usize = manifest.layers.iter().map(|l| l.macs).sum();
-    let target = total as f64 / k as f64;
-    let mut ranges = Vec::with_capacity(k);
-    let mut lo = 0;
-    let mut acc = 0.0;
-    for (i, l) in manifest.layers.iter().enumerate() {
-        acc += l.macs as f64;
-        let stages_left = k - ranges.len();
-        let layers_left = w - i - 1;
-        if (acc >= target && stages_left > 1 && layers_left >= stages_left - 1)
-            || layers_left + 1 == stages_left
-        {
-            ranges.push((lo, i + 1));
-            lo = i + 1;
-            acc = 0.0;
-        }
-    }
-    if lo < w {
-        ranges.push((lo, w));
-    }
-    dse::Allocation { ranges }
 }

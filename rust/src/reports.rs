@@ -1,8 +1,10 @@
 //! Report generation for every table and figure in the paper's evaluation
-//! (the per-experiment index in DESIGN.md §5). Shared by the CLI `tables`
-//! subcommand, the bench targets, and the examples, so the numbers printed
-//! everywhere come from one code path.
+//! (the per-experiment index in DESIGN.md §5), plus the renderer for the
+//! unified serving report ([`render_serve`]). Shared by the CLI, the bench
+//! targets, and the examples, so the numbers printed everywhere come from
+//! one code path.
 
+use crate::api::{ServeMode, ServeReport};
 use crate::baselines;
 use crate::cnn::layer::LayerKind;
 use crate::cnn::zoo;
@@ -14,6 +16,78 @@ use crate::simulator::power::ClusterActivity;
 use crate::simulator::{gemm, pipeline_sim};
 use crate::util::stats;
 use crate::util::table::{f, Table};
+
+/// Render the unified [`ServeReport`] — the ONE print shape for
+/// single-pipeline runs, fleet runs, and discrete-event simulations, used
+/// by the CLI (`serve`, `simulate`) and the examples. A single pipeline is
+/// a one-replica fleet, so the output always reads the same way.
+pub fn render_serve(r: &ServeReport) -> String {
+    let mode = match r.mode {
+        ServeMode::Des => "DES".to_string(),
+        ServeMode::Synthetic { time_scale } => {
+            format!("wall-clock, time-scale {time_scale}")
+        }
+        ServeMode::Pjrt { serial: true } => "PJRT, serial".to_string(),
+        ServeMode::Pjrt { serial: false } => "PJRT".to_string(),
+    };
+    let mut s = format!(
+        "fleet: {} replicas, images={} wall={:.3}s aggregate={:.2} imgs/s ({mode})\n",
+        r.replicas.len(),
+        r.images,
+        r.wall_s,
+        r.throughput
+    );
+    if r.predicted_throughput > 0.0 {
+        s.push_str(&format!(
+            "eq12 tp    : {:.2} imgs/s aggregate (plan prediction)\n",
+            r.predicted_throughput
+        ));
+    }
+    match r.mode {
+        ServeMode::Des => s.push_str(&format!(
+            "sim tp     : {:.2} imgs/s over {} images (DES)\n",
+            r.throughput, r.images
+        )),
+        ServeMode::Synthetic { time_scale } => s.push_str(&format!(
+            "wall-clock : {:.2} imgs/s at time-scale {time_scale} (~{:.2} imgs/s unscaled)\n",
+            r.throughput,
+            r.throughput * time_scale
+        )),
+        ServeMode::Pjrt { .. } => {}
+    }
+    if let Some(l) = r.latency {
+        s.push_str(&format!(
+            "latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n",
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3,
+        ));
+    }
+    for (i, rep) in r.replicas.iter().enumerate() {
+        let bottleneck = rep
+            .bottleneck
+            .map(|j| format!("  bottleneck=stage {j}"))
+            .unwrap_or_default();
+        s.push_str(&format!(
+            "replica {i}: {:<10} alloc {}  dispatched={} throughput={:.2} imgs/s util={:.0}%{bottleneck}\n",
+            rep.pipeline,
+            rep.allocation,
+            rep.dispatched,
+            rep.throughput,
+            100.0 * rep.utilization,
+        ));
+        for st in &rep.stages {
+            s.push_str(&format!(
+                "  stage {:<14} items={:<6} busy={:>8.3}s util={:>5.1}%\n",
+                st.name,
+                st.items,
+                st.busy_s,
+                100.0 * st.utilization,
+            ));
+        }
+    }
+    s
+}
 
 /// Holds the fitted model + config; memoizes nothing heavier than the fit.
 pub struct Reporter {
@@ -123,14 +197,14 @@ impl Reporter {
                     .min_by(|a, b| {
                         (a.0 - r).abs().total_cmp(&(b.0 - r).abs())
                     })
-                    .unwrap()
+                    .expect("fig5 ratio sweep is empty")
                     .1
             };
             let (best_r, best) = sweep
                 .iter()
                 .copied()
                 .max_by(|a, b| a.1.total_cmp(&b.1))
-                .unwrap();
+                .expect("fig5 ratio sweep is empty");
             t.row(vec![
                 net.name.clone(),
                 f(at(0.0), 2),
@@ -203,10 +277,10 @@ impl Reporter {
                 .iter()
                 .copied()
                 .max_by(|a, b| a.1.total_cmp(&b.1))
-                .unwrap();
+                .expect("fig8 two-stage sweep is empty");
             let w = tm.num_layers();
             let mid = sweep[w / 2 - 1].1;
-            let last = sweep.last().unwrap().1;
+            let last = sweep.last().expect("fig8 two-stage sweep is empty").1;
             t.row(vec![
                 net.name.clone(),
                 w.to_string(),
@@ -231,7 +305,7 @@ impl Reporter {
             .iter()
             .copied()
             .max_by(|a, b| a.2.total_cmp(&b.2))
-            .unwrap();
+            .expect("fig9 three-stage surface is empty");
         let p2 = dse::PipelineConfig::parse("B4-s4").unwrap();
         let best2 = dse::exhaustive::two_stage_sweep(&tm, &p2)
             .into_iter()
@@ -489,8 +563,14 @@ impl Reporter {
         let pt = dse::explore(&tm, 4, 4);
         // Pipe-it** factor: v18.11+quant overall gain from Fig. 13.
         let pts = baselines::fig13_points();
-        let f32_05 = pts.iter().find(|p| !p.quantized && matches!(p.version, baselines::ArmClVersion::V1805)).unwrap();
-        let q11 = pts.iter().find(|p| p.quantized && matches!(p.version, baselines::ArmClVersion::V1811)).unwrap();
+        let f32_05 = pts
+            .iter()
+            .find(|p| !p.quantized && matches!(p.version, baselines::ArmClVersion::V1805))
+            .expect("fig13 series missing the v18.05 F32 point");
+        let q11 = pts
+            .iter()
+            .find(|p| p.quantized && matches!(p.version, baselines::ArmClVersion::V1811))
+            .expect("fig13 series missing the v18.11 QASYMM8 point");
         let quant_factor = f32_05.total_time / q11.total_time;
         let series =
             baselines::fig14_series(&self.cfg.platform, &net, pt.throughput, quant_factor);
@@ -758,6 +838,28 @@ mod tests {
             any_sim_gain,
             "no network's replicated fleet beat its best single pipeline in the DES"
         );
+    }
+
+    #[test]
+    fn render_serve_unifies_des_and_fleet_shapes() {
+        use crate::api::{PlanSpec, Strategy};
+        let plan = PlanSpec::new("alexnet")
+            .strategy(Strategy::Replicated { max_replicas: 2, exact: true })
+            .compile()
+            .unwrap();
+        let s = render_serve(&plan.simulate(200, 2).unwrap());
+        assert!(s.contains("fleet: 2 replicas"), "{s}");
+        assert!(s.contains("aggregate="), "{s}");
+        assert!(s.contains("sim tp"), "{s}");
+        assert!(s.contains("bottleneck=stage"), "{s}");
+        assert!(s.contains("replica 1:"), "{s}");
+        assert!(s.contains("latency p50="), "{s}");
+
+        // A single pipeline renders through the SAME shape.
+        let single = PlanSpec::new("alexnet").compile().unwrap();
+        let s = render_serve(&single.simulate(200, 2).unwrap());
+        assert!(s.contains("fleet: 1 replicas"), "{s}");
+        assert!(s.contains("replica 0:"), "{s}");
     }
 
     #[test]

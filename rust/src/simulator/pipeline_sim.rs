@@ -124,6 +124,28 @@ pub struct FleetSimReport {
     pub per_replica: Vec<SimReport>,
 }
 
+impl FleetSimReport {
+    /// Per-image latencies merged across replicas (replica order, stream
+    /// order within a replica) — what the unified
+    /// [`crate::api::ServeReport`] computes its percentiles from.
+    pub fn merged_latencies(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for r in &self.per_replica {
+            out.extend_from_slice(&r.latencies);
+        }
+        out
+    }
+
+    /// Per-replica bottleneck utilization: each replica's busiest stage's
+    /// busy fraction over its own makespan.
+    pub fn replica_utilization(&self) -> Vec<f64> {
+        self.per_replica
+            .iter()
+            .map(|r| r.utilization.iter().copied().fold(0.0, f64::max))
+            .collect()
+    }
+}
+
 fn idle_sim_report(stage_times: &[f64]) -> SimReport {
     let (bottleneck, _) = stage_times
         .iter()
@@ -306,6 +328,17 @@ mod tests {
         assert_eq!(fleet.dispatched, vec![500]);
         assert!((fleet.makespan - solo.makespan).abs() < 1e-12);
         assert!((fleet.throughput - solo.throughput).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_latencies_cover_every_dispatched_image() {
+        let fleet = simulate_replicated(&[vec![0.01, 0.02], vec![0.03]], 200, 2);
+        let merged = fleet.merged_latencies();
+        assert_eq!(merged.len(), 200);
+        assert!(merged.iter().all(|l| *l > 0.0));
+        let util = fleet.replica_utilization();
+        assert_eq!(util.len(), 2);
+        assert!(util.iter().all(|u| *u > 0.0 && *u <= 1.0 + 1e-9));
     }
 
     #[test]

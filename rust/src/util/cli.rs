@@ -14,8 +14,15 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw args (without argv[0]).
-    /// `bool_flags` lists option names that take no value.
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Args {
+    /// `bool_flags` lists option names that take no value; every other
+    /// `--name` must be followed by a value (or written `--name=value`).
+    /// A missing value — end of argv, or a next token that itself starts
+    /// with `--` — is a parse error, so a typo like `--net --replicas 2`
+    /// fails loudly instead of silently degrading `--net` to a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> anyhow::Result<Args> {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -24,20 +31,24 @@ impl Args {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if bool_flags.contains(&body) {
                     out.flags.push(body.to_string());
-                } else if let Some(v) = it.peek() {
-                    if v.starts_with("--") {
-                        out.flags.push(body.to_string());
-                    } else {
-                        out.options.insert(body.to_string(), it.next().unwrap());
-                    }
                 } else {
-                    out.flags.push(body.to_string());
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().expect("peeked value");
+                            out.options.insert(body.to_string(), v);
+                        }
+                        Some(v) => anyhow::bail!(
+                            "option --{body} expects a value, found {v:?} \
+                             (write --{body}=VALUE if the value starts with '--')"
+                        ),
+                        None => anyhow::bail!("option --{body} expects a value"),
+                    }
                 }
             } else {
                 out.positional.push(a);
             }
         }
-        out
+        Ok(out)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -77,6 +88,7 @@ mod tests {
 
     fn parse(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(String::from), &["measured", "verbose"])
+            .expect("well-formed args")
     }
 
     #[test]
@@ -105,5 +117,36 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("x --images many");
         assert!(a.get_usize("images", 1).is_err());
+    }
+
+    #[test]
+    fn equals_form_value_may_start_with_dashes() {
+        let a = parse("x --note=--weird");
+        assert_eq!(a.get("note"), Some("--weird"));
+    }
+
+    #[test]
+    fn missing_trailing_value_is_an_error() {
+        let err = Args::parse(["--net".to_string()].into_iter(), &[])
+            .expect_err("trailing --net must not parse");
+        assert!(err.to_string().contains("--net expects a value"), "{err}");
+    }
+
+    #[test]
+    fn option_swallowing_another_option_is_an_error() {
+        // The typo this used to hide: `--net --replicas 2` degraded --net
+        // to a flag and silently dropped the network.
+        let raw = ["--net", "--replicas", "2"].map(String::from);
+        let err = Args::parse(raw.into_iter(), &[])
+            .expect_err("--net without a value must not parse");
+        assert!(err.to_string().contains("--net expects a value"), "{err}");
+        assert!(err.to_string().contains("--replicas"), "{err}");
+    }
+
+    #[test]
+    fn declared_bool_flag_never_consumes_a_value() {
+        let a = parse("x --measured --images 5");
+        assert!(a.has_flag("measured"));
+        assert_eq!(a.get_usize("images", 0).unwrap(), 5);
     }
 }

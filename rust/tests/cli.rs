@@ -135,6 +135,28 @@ fn serve_without_target_fails_with_usage() {
 }
 
 #[test]
+fn plan_without_out_prints_summary() {
+    let (ok, text) = pipeit(&["plan", "--net", "mobilenet", "--strategy", "exhaustive"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("strategy   : exhaustive"), "{text}");
+    assert!(text.contains("throughput"), "{text}");
+}
+
+#[test]
+fn plan_with_unknown_strategy_fails() {
+    let (ok, text) = pipeit(&["plan", "--net", "mobilenet", "--strategy", "magic"]);
+    assert!(!ok);
+    assert!(text.contains("unknown strategy"), "{text}");
+}
+
+#[test]
+fn serve_missing_plan_file_fails_cleanly() {
+    let (ok, text) = pipeit(&["serve", "--plan", "/nonexistent/plan.json"]);
+    assert!(!ok);
+    assert!(text.contains("plan.json"), "{text}");
+}
+
+#[test]
 fn serve_serial_on_artifacts() {
     // Only when artifacts exist (built by `make artifacts`).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -1,0 +1,140 @@
+//! Integration: the Plan → Deploy lifecycle across the whole framework.
+//! The contract under test: a plan explored once, saved to JSON, and
+//! reloaded behaves identically to the in-process explore + serve path —
+//! same pipeline, same allocation, same predicted throughput, same DES
+//! results.
+
+use std::process::Command;
+
+use pipeit::api::{Plan, PlanSpec, Strategy};
+use pipeit::cnn::zoo;
+use pipeit::config::Config;
+use pipeit::dse;
+use pipeit::perfmodel::TimeMatrix;
+use pipeit::simulator::pipeline_sim;
+
+fn pipeit(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pipeit"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn saved_plan_behaves_identically_to_the_original() {
+    let plan = PlanSpec::new("squeezenet")
+        .strategy(Strategy::Replicated { max_replicas: 4, exact: false })
+        .compile()
+        .unwrap();
+    let dir = std::env::temp_dir().join("pipeit_plan_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("p.json");
+    plan.save(&path).unwrap();
+    let loaded = Plan::load(&path).unwrap();
+    assert_eq!(plan, loaded, "save -> load must be lossless");
+
+    // Identical behavior: the DES over the loaded plan reproduces the DES
+    // over the freshly compiled one bit-for-bit (stage times round-trip
+    // exactly through the JSON).
+    let a = plan.simulate(800, 2).unwrap();
+    let b = loaded.simulate(800, 2).unwrap();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_facade_matches_in_process_explore_path() {
+    // The `plan` -> `serve --plan` path must reproduce what the in-process
+    // `explore` + `serve --net` path computes: same pipeline, same
+    // allocation, and the same predicted throughput.
+    let cfg = Config::default();
+    let tm = TimeMatrix::measured(&cfg.platform, &zoo::by_name("alexnet").unwrap());
+    let design = dse::explore_exact(&tm, 4, 4, 2).expect("2-replica design exists");
+
+    let plan = PlanSpec::new("alexnet")
+        .strategy(Strategy::Replicated { max_replicas: 2, exact: true })
+        .compile()
+        .unwrap();
+    assert_eq!(plan.num_replicas(), 2);
+    for (pr, dr) in plan.replicas.iter().zip(&design.replicas) {
+        assert_eq!(pr.pipeline, dr.point.pipeline.to_string());
+        assert_eq!(pr.allocation, dr.point.allocation.ranges);
+        assert!((pr.throughput - dr.point.throughput).abs() < 1e-12);
+        assert_eq!((pr.big, pr.small), (dr.budget.big, dr.budget.small));
+    }
+    assert!((plan.throughput - design.throughput).abs() < 1e-12);
+
+    // And the plan's DES backend agrees with the raw simulator on the
+    // design's stage times (within float identity — same inputs).
+    let direct = pipeline_sim::simulate_replicated(&design.stage_times(&tm), 500, 2);
+    let via_plan = plan.simulate(500, 2).unwrap();
+    let rel = (via_plan.throughput - direct.throughput).abs() / direct.throughput;
+    assert!(
+        rel < 1e-9,
+        "plan DES {} vs direct DES {}",
+        via_plan.throughput,
+        direct.throughput
+    );
+}
+
+#[test]
+fn cli_plan_serve_simulate_lifecycle() {
+    let dir = std::env::temp_dir().join("pipeit_plan_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.json");
+    let p = path.to_str().unwrap();
+
+    let (ok, text) = pipeit(&["plan", "--net", "squeezenet", "--out", p]);
+    assert!(ok, "{text}");
+    assert!(text.contains("plan saved"), "{text}");
+    assert!(text.contains("pipeline"), "{text}");
+
+    let (ok, text) = pipeit(&["simulate", "--plan", p, "--images", "300"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sim tp"), "{text}");
+    assert!(text.contains("bottleneck"), "{text}");
+
+    let (ok, text) = pipeit(&[
+        "serve", "--plan", p, "--images", "12", "--time-scale", "0.02",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fleet"), "{text}");
+    assert!(text.contains("aggregate"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_plan_replicas_roundtrip_preserves_partition() {
+    let dir = std::env::temp_dir().join("pipeit_plan_cli_replicas");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.json");
+    let p = path.to_str().unwrap();
+
+    let (ok, text) = pipeit(&["plan", "--net", "alexnet", "--replicas", "2", "--out", p]);
+    assert!(ok, "{text}");
+
+    let loaded = Plan::load(&path).unwrap();
+    assert_eq!(loaded.num_replicas(), 2);
+    let cfg = Config::default();
+    let tm = TimeMatrix::measured(&cfg.platform, &zoo::by_name("alexnet").unwrap());
+    let design = dse::explore_exact(&tm, 4, 4, 2).unwrap();
+    assert_eq!(loaded.partition_display(), design.partition_display());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_rejects_option_without_value() {
+    // The Args::parse hardening: `--net --replicas 2` used to silently
+    // degrade --net to a flag; now it is a loud parse error.
+    let (ok, text) = pipeit(&["explore", "--net", "--replicated"]);
+    assert!(!ok);
+    assert!(text.contains("--net expects a value"), "{text}");
+}
