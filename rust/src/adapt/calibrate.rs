@@ -1,0 +1,224 @@
+//! Online recalibration: turn a confirmed [`Disturbance`] into multiplicative
+//! corrections of the [`TimeMatrix`] the planner searches over.
+//!
+//! The key design choice (per the issue and the dynamic-distribution line of
+//! work, arXiv 2107.05828): do **not** refit the Eq. 5–8 regression betas at
+//! runtime. The fitted model's *structure* (relative layer costs, scaling
+//! across core counts) is still right under a throttle — what moved is a
+//! per-configuration scale. So calibration rescales the affected
+//! `(core type, count)` columns of the matrix by the observed/expected
+//! ratio and leaves everything else untouched; a whole-cluster slowdown
+//! rescales every column of that cluster, including counts the running
+//! pipeline never observed, so the re-plan sees the cluster as uniformly
+//! slower rather than concluding that unobserved configurations became
+//! relatively fast.
+//!
+//! Calibrations compose: applying a second correction on an
+//! already-calibrated matrix multiplies the factors, which is exactly what
+//! the detector produces (its expectations always come from the *current*
+//! plan, i.e. the current matrix).
+
+use anyhow::Result;
+
+use crate::perfmodel::TimeMatrix;
+use crate::simulator::platform::CoreType;
+
+use super::drift::Disturbance;
+
+/// One multiplicative correction of the time matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConfigScale {
+    /// Scale every configuration of `core`'s cluster.
+    Cluster { core: CoreType, factor: f64 },
+    /// Scale the single `(core, count)` configuration.
+    Config { core: CoreType, count: usize, factor: f64 },
+}
+
+/// A set of matrix corrections derived from one confirmed disturbance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    pub scales: Vec<ConfigScale>,
+}
+
+impl Calibration {
+    /// Lower a classified disturbance into matrix corrections.
+    pub fn from_disturbance(d: &Disturbance) -> Calibration {
+        let scales = match d {
+            Disturbance::ClusterSlowdown { core, factor } => {
+                vec![ConfigScale::Cluster { core: *core, factor: *factor }]
+            }
+            Disturbance::StageSkew { configs } => configs
+                .iter()
+                .map(|&(core, count, factor)| ConfigScale::Config { core, count, factor })
+                .collect(),
+        };
+        Calibration { scales }
+    }
+
+    /// Apply the corrections to `tm` in place. Errors (without partial
+    /// application) on non-positive factors or unknown configurations.
+    pub fn apply(&self, tm: &mut TimeMatrix) -> Result<()> {
+        for s in &self.scales {
+            let factor = match s {
+                ConfigScale::Cluster { factor, .. } => *factor,
+                ConfigScale::Config { factor, .. } => *factor,
+            };
+            anyhow::ensure!(
+                factor.is_finite() && factor > 0.0,
+                "calibration factor {factor} is not a positive finite number"
+            );
+            if let ConfigScale::Config { core, count, .. } = s {
+                anyhow::ensure!(
+                    tm.config_index(*core, *count).is_some(),
+                    "time matrix has no ({}{count}) configuration to calibrate",
+                    core.letter()
+                );
+            }
+        }
+        for s in &self.scales {
+            match *s {
+                ConfigScale::Cluster { core, factor } => tm.scale_core(core, factor),
+                ConfigScale::Config { core, count, factor } => {
+                    tm.scale_config(core, count, factor);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::drift::{DriftConfig, DriftDetector, DriftStatus};
+    use crate::adapt::telemetry::{StageWindow, TelemetrySnapshot};
+    use crate::cnn::zoo;
+    use crate::config::Config;
+    use crate::dse::{self, PipelineConfig};
+    use crate::perfmodel::TimeMatrix;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn cluster_calibration_scales_every_cluster_config() {
+        let cfg = Config::default();
+        let net = zoo::squeezenet();
+        let base = TimeMatrix::measured(&cfg.platform, &net);
+        let mut tm = base.clone();
+        let cal = Calibration::from_disturbance(&Disturbance::ClusterSlowdown {
+            core: CoreType::Big,
+            factor: 2.0,
+        });
+        cal.apply(&mut tm).unwrap();
+        for j in 0..base.num_layers() {
+            for (ci, &(core, _)) in base.configs.iter().enumerate() {
+                let f = if core == CoreType::Big { 2.0 } else { 1.0 };
+                assert!((tm.layer(j, ci) - f * base.layer(j, ci)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn skew_calibration_touches_only_named_configs() {
+        let cfg = Config::default();
+        let net = zoo::alexnet();
+        let base = TimeMatrix::measured(&cfg.platform, &net);
+        let mut tm = base.clone();
+        let cal = Calibration::from_disturbance(&Disturbance::StageSkew {
+            configs: vec![(CoreType::Small, 2, 1.7)],
+        });
+        cal.apply(&mut tm).unwrap();
+        let s2 = base.config_index(CoreType::Small, 2).unwrap();
+        for j in 0..base.num_layers() {
+            for ci in 0..base.configs.len() {
+                let f = if ci == s2 { 1.7 } else { 1.0 };
+                assert!((tm.layer(j, ci) - f * base.layer(j, ci)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_calibrations_are_rejected_without_partial_application() {
+        let cfg = Config::default();
+        let base = TimeMatrix::measured(&cfg.platform, &zoo::mobilenet());
+        let mut tm = base.clone();
+        // Valid first entry + invalid second: nothing may change.
+        let cal = Calibration {
+            scales: vec![
+                ConfigScale::Cluster { core: CoreType::Big, factor: 2.0 },
+                ConfigScale::Config { core: CoreType::Big, count: 99, factor: 2.0 },
+            ],
+        };
+        assert!(cal.apply(&mut tm).is_err());
+        for j in 0..base.num_layers() {
+            for ci in 0..base.configs.len() {
+                assert_eq!(tm.layer(j, ci), base.layer(j, ci));
+            }
+        }
+        let nan = Calibration {
+            scales: vec![ConfigScale::Cluster { core: CoreType::Big, factor: f64::NAN }],
+        };
+        assert!(nan.apply(&mut tm).is_err());
+    }
+
+    /// Satellite property: detector + calibrator close the loop. Inject a
+    /// known cluster slowdown into the "observed" times; the calibrated
+    /// matrix must reproduce the injected factor within tolerance on every
+    /// affected configuration and leave the other cluster untouched.
+    #[test]
+    fn property_calibrated_matrix_reproduces_injected_slowdown() {
+        let cfg = Config::default();
+        let nets = ["alexnet", "squeezenet", "mobilenet"];
+        check(60, |rng| {
+            let net = zoo::by_name(rng.choose(&nets)).unwrap();
+            let base = TimeMatrix::measured(&cfg.platform, &net);
+            let factor = rng.range_f64(1.5, 4.0);
+            let core =
+                if rng.index(2) == 0 { CoreType::Big } else { CoreType::Small };
+            let mut truth = base.clone();
+            truth.scale_core(core, factor);
+
+            // A pipeline that uses both clusters observes the disturbance.
+            let pipe = PipelineConfig::parse("B4-s2-s2").unwrap();
+            let w = base.num_layers();
+            let alloc = dse::work_flow(&base, &pipe, w);
+            let expected = dse::stage_times(&base, &pipe, &alloc);
+            let observed = dse::stage_times(&truth, &pipe, &alloc);
+
+            let dcfg = DriftConfig { hysteresis: 1, ..DriftConfig::default() };
+            let mut det = DriftDetector::new(
+                vec![expected],
+                vec![pipe.stages.clone()],
+                dcfg,
+            )
+            .unwrap();
+            let snap = TelemetrySnapshot {
+                per_replica: vec![observed
+                    .iter()
+                    .map(|&t| StageWindow { count: 50, mean: t, recent: vec![t; 50] })
+                    .collect()],
+            };
+            let status = det.observe(&snap);
+            let DriftStatus::Confirmed(d) = status else {
+                return Err(format!(
+                    "factor {factor} on {core:?} not confirmed: {status:?}"
+                ));
+            };
+            let mut calibrated = base.clone();
+            Calibration::from_disturbance(&d).apply(&mut calibrated).unwrap();
+
+            for j in 0..base.num_layers() {
+                for (ci, &(c, _)) in base.configs.iter().enumerate() {
+                    let want = truth.layer(j, ci);
+                    let got = calibrated.layer(j, ci);
+                    let tol = if c == core { 0.02 * want } else { 1e-12 };
+                    crate::prop_assert!(
+                        (got - want).abs() <= tol,
+                        "config {ci} layer {j}: calibrated {got} vs truth {want} \
+                         (factor {factor}, core {core:?})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,691 @@
+//! The closed-loop adaptation controller: telemetry → drift detection →
+//! recalibration → re-plan → hot-swap.
+//!
+//! Serving proceeds in control periods of [`AdaptOptions::interval`] items.
+//! After each period the controller snapshots telemetry and asks the
+//! [`DriftDetector`] whether the deployed plan is still believable. On a
+//! confirmed disturbance it (1) lowers the classification into a
+//! [`Calibration`] and applies it to its working copy of the
+//! [`TimeMatrix`], (2) re-runs the plan's own strategy search on the
+//! calibrated matrix via [`Plan::replan_on_matrix`], and (3) hot-swaps the
+//! fleet to the new stage partition at the period boundary — the running
+//! pipelines drain fully (no item is lost or reordered) and the next
+//! period is built from the new plan's [`StageSpec`](crate::coordinator::StageSpec)s,
+//! reusing the executor's readiness latch so the clock never charges
+//! rebuild time as serving time unfairly. Every swap is recorded as an
+//! [`AdaptationEvent`] in the final [`ServeReport`].
+//!
+//! Two backends share the loop:
+//!
+//! * [`simulate_adaptive`] — the deterministic DES testbed. Ground truth is
+//!   `base matrix × scripted throttle events`
+//!   ([`crate::simulator::pipeline_sim::simulate_replicated_disturbed`]);
+//!   the whole loop runs without threads or wall-clock time, so the
+//!   throttle-recovery acceptance test is exact and repeatable.
+//! * [`deploy_adaptive`] — the wall-clock twin on the real thread fleet
+//!   ([`crate::coordinator::run_fleet_observed`]) over synthetic sleep
+//!   stages, with the same scripted disturbances applied via a shared
+//!   clock (`pipeit serve --net N --adapt`).
+//!
+//! In both, the *belief* (detector expectations, re-planned stage times)
+//! comes from the calibrated matrix, while the *truth* (executed service
+//! times) comes from the base matrix times the active throttle factors —
+//! the loop is closed precisely when belief catches up with truth.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::{
+    AdaptationEvent, DeployOptions, LatencyReport, Plan, ReplicaReport, ServeMode,
+    ServeReport, StageReport,
+};
+use crate::coordinator::{run_fleet_observed, StageObserver, StageSpec};
+use crate::dse::{self, Allocation, PipelineConfig};
+use crate::perfmodel::TimeMatrix;
+use crate::simulator::pipeline_sim::{self, ThrottleEvent};
+use crate::simulator::platform::CoreType;
+use crate::simulator::power::PowerModel;
+use crate::util::stats;
+
+use super::calibrate::Calibration;
+use super::drift::{DriftConfig, DriftDetector, DriftStatus};
+use super::telemetry::{Telemetry, TelemetrySnapshot};
+
+/// A scripted cluster-level disturbance: from time `at` (simulated seconds
+/// for the DES, wall seconds from serving start for deploys), every
+/// configuration of `core`'s cluster runs `factor`× slower. Events compose
+/// multiplicatively.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterThrottle {
+    pub at: f64,
+    pub core: CoreType,
+    pub factor: f64,
+}
+
+impl ClusterThrottle {
+    /// Parse the CLI's `AT:FACTOR[:big|small]` form (cluster defaults to
+    /// `big`, the cluster that actually throttles on boards).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use pipeit::adapt::ClusterThrottle;
+    /// use pipeit::simulator::platform::CoreType;
+    ///
+    /// let t = ClusterThrottle::parse("1.5:2.0:big").unwrap();
+    /// assert_eq!(t.at, 1.5);
+    /// assert_eq!(t.factor, 2.0);
+    /// assert_eq!(t.core, CoreType::Big);
+    /// assert!(ClusterThrottle::parse("1.5:0").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<ClusterThrottle> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 2 || parts.len() == 3,
+            "throttle spec {spec:?} is not AT:FACTOR[:big|small]"
+        );
+        let at: f64 = parts[0]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad throttle time in {spec:?}"))?;
+        let factor: f64 = parts[1]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad throttle factor in {spec:?}"))?;
+        anyhow::ensure!(at >= 0.0 && at.is_finite(), "throttle time must be >= 0");
+        anyhow::ensure!(
+            factor.is_finite() && factor > 0.0,
+            "throttle factor must be positive"
+        );
+        let core = match parts.get(2).copied().unwrap_or("big") {
+            "big" | "B" | "b" => CoreType::Big,
+            "small" | "s" | "S" => CoreType::Small,
+            other => anyhow::bail!("unknown cluster {other:?} in {spec:?} (big|small)"),
+        };
+        Ok(ClusterThrottle { at, core, factor })
+    }
+}
+
+/// Adaptation-loop tuning.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptOptions {
+    /// Items per control period: telemetry is inspected and swaps happen at
+    /// these item boundaries.
+    pub interval: usize,
+    /// Telemetry ring capacity per stage (recent-window length).
+    pub window: usize,
+    /// Drift-detector tuning.
+    pub drift: DriftConfig,
+}
+
+impl Default for AdaptOptions {
+    fn default() -> AdaptOptions {
+        AdaptOptions { interval: 50, window: 40, drift: DriftConfig::default() }
+    }
+}
+
+/// Outcome of an adaptive serve: the unified report (whole-run totals,
+/// final-partition replica detail, adaptation log), the plan the fleet
+/// ended on, post-swap sustained-throughput accounting, and the final
+/// telemetry snapshot (persisted by `serve --metrics-out`).
+#[derive(Debug, Clone)]
+pub struct AdaptiveServe {
+    pub report: ServeReport,
+    pub final_plan: Plan,
+    /// Items completed since the last swap (the whole run when no swap).
+    pub post_swap_images: usize,
+    /// Serving seconds since the last swap (same clock as `report.wall_s`).
+    pub post_swap_wall_s: f64,
+    pub final_snapshot: TelemetrySnapshot,
+}
+
+impl AdaptiveServe {
+    /// Sustained throughput after the last swap (imgs/s; equals the
+    /// whole-run throughput when no swap happened).
+    pub fn post_swap_throughput(&self) -> f64 {
+        if self.post_swap_wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.post_swap_images as f64 / self.post_swap_wall_s
+    }
+}
+
+/// Per-replica pipeline + allocation structure of a plan, validated against
+/// a time matrix (every stage config must exist in the matrix and the
+/// allocation must cover its layers).
+fn replica_structures(
+    plan: &Plan,
+    tm: &TimeMatrix,
+) -> Result<Vec<(PipelineConfig, Allocation)>> {
+    anyhow::ensure!(
+        plan.artifacts.is_none(),
+        "adaptation needs a big.LITTLE plan with Eq. 10 stage times"
+    );
+    anyhow::ensure!(
+        tm.net_name == plan.network,
+        "time matrix describes {:?} but the plan serves {:?}",
+        tm.net_name,
+        plan.network
+    );
+    let w = tm.num_layers();
+    let mut out = Vec::with_capacity(plan.replicas.len());
+    for (i, r) in plan.replicas.iter().enumerate() {
+        let p = PipelineConfig::parse(&r.pipeline)
+            .with_context(|| format!("replica {i} pipeline {:?}", r.pipeline))?;
+        for sc in &p.stages {
+            anyhow::ensure!(
+                tm.config_index(sc.core, sc.count).is_some(),
+                "replica {i}: stage config {sc} is not in the time matrix \
+                 (platform mismatch?)"
+            );
+        }
+        let a = plan.allocation_of(i);
+        anyhow::ensure!(
+            a.is_partition(w),
+            "replica {i}: allocation does not cover the matrix's {w} layers"
+        );
+        out.push((p, a));
+    }
+    Ok(out)
+}
+
+/// True (disturbance-free) per-stage service times of every replica under
+/// `base` — what the hardware actually delivers before throttle factors.
+fn truth_times(structures: &[(PipelineConfig, Allocation)], base: &TimeMatrix) -> Vec<Vec<f64>> {
+    structures
+        .iter()
+        .map(|(p, a)| dse::stage_times(base, p, a))
+        .collect()
+}
+
+/// Lower cluster-level throttles into DES stage-scoped events for the
+/// current partition.
+fn lower_script(
+    script: &[ClusterThrottle],
+    structures: &[(PipelineConfig, Allocation)],
+) -> Vec<ThrottleEvent> {
+    script
+        .iter()
+        .map(|t| {
+            let scope = structures
+                .iter()
+                .enumerate()
+                .flat_map(|(r, (p, _))| {
+                    p.stages
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, sc)| sc.core == t.core)
+                        .map(move |(s, _)| (r, s))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            ThrottleEvent { at: t.at, factor: t.factor, scope }
+        })
+        .collect()
+}
+
+/// Accumulated per-epoch (since last swap) replica accounting.
+struct EpochStats {
+    start_t: f64,
+    images: usize,
+    dispatched: Vec<usize>,
+    /// Per replica, per stage busy seconds.
+    busy: Vec<Vec<f64>>,
+    /// Last-seen bottleneck index per replica (DES only).
+    bottleneck: Vec<Option<usize>>,
+}
+
+impl EpochStats {
+    fn new(plan: &Plan, start_t: f64) -> EpochStats {
+        EpochStats {
+            start_t,
+            images: 0,
+            dispatched: vec![0; plan.num_replicas()],
+            busy: plan.replicas.iter().map(|r| vec![0.0; r.allocation.len()]).collect(),
+            bottleneck: vec![None; plan.num_replicas()],
+        }
+    }
+
+    fn replica_reports(&self, plan: &Plan, epoch_wall: f64) -> Vec<ReplicaReport> {
+        plan.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, pr)| {
+                let stages: Vec<StageReport> = self.busy[i]
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &busy_s)| StageReport {
+                        name: format!("stage{j}"),
+                        items: self.dispatched[i],
+                        busy_s,
+                        utilization: if epoch_wall > 0.0 { busy_s / epoch_wall } else { 0.0 },
+                    })
+                    .collect();
+                let util = stages.iter().map(|s| s.utilization).fold(0.0, f64::max);
+                ReplicaReport {
+                    pipeline: pr.pipeline.clone(),
+                    allocation: plan.allocation_of(i).display_1based(),
+                    dispatched: self.dispatched[i],
+                    throughput: if epoch_wall > 0.0 {
+                        self.dispatched[i] as f64 / epoch_wall
+                    } else {
+                        0.0
+                    },
+                    utilization: util,
+                    bottleneck: self.bottleneck[i],
+                    stages,
+                }
+            })
+            .collect()
+    }
+}
+
+fn latency_report(latencies: &[f64]) -> Option<LatencyReport> {
+    if latencies.is_empty() {
+        return None;
+    }
+    Some(LatencyReport {
+        p50: stats::percentile(latencies, 50.0),
+        p95: stats::percentile(latencies, 95.0),
+        p99: stats::percentile(latencies, 99.0),
+    })
+}
+
+/// Closed-loop adaptive serving in the discrete-event simulator.
+///
+/// * `plan` — the deployed design (compiled on `base`).
+/// * `base` — the undisturbed time matrix; ground-truth service times are
+///   `base × active throttle factors` from `script`.
+/// * `power` — power model for [`crate::api::Strategy::Energy`] re-plans.
+/// * `images` / `queue_cap` — stream length and per-replica buffer size.
+///
+/// Returns the whole-run [`ServeReport`] (mode [`ServeMode::Des`]) with the
+/// adaptation log, plus post-swap sustained-throughput accounting for
+/// recovery checks.
+pub fn simulate_adaptive(
+    plan: &Plan,
+    base: &TimeMatrix,
+    power: &PowerModel,
+    script: &[ClusterThrottle],
+    opts: &AdaptOptions,
+    images: usize,
+    queue_cap: usize,
+) -> Result<AdaptiveServe> {
+    anyhow::ensure!(images >= 1, "need at least one image");
+    anyhow::ensure!(queue_cap >= 1, "queue capacity must be >= 1");
+    anyhow::ensure!(opts.interval >= 1, "adapt interval must be >= 1");
+
+    let mut current = plan.clone();
+    let mut structures = replica_structures(&current, base)?;
+    let mut calibrated = base.clone();
+    let mut detector = DriftDetector::for_plan(&current, opts.drift)?;
+    let mut telemetry = Telemetry::for_plan(&current, opts.window);
+
+    let mut t_abs = 0.0f64;
+    let mut done = 0usize;
+    let mut adaptations: Vec<AdaptationEvent> = Vec::new();
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let mut epoch = EpochStats::new(&current, 0.0);
+
+    while done < images {
+        let n = opts.interval.min(images - done);
+        let times = truth_times(&structures, base);
+        let events = lower_script(script, &structures);
+        let sim = pipeline_sim::simulate_replicated_disturbed(
+            &times,
+            n,
+            queue_cap,
+            &events,
+            t_abs,
+            |r, s, dt| telemetry.record(r, s, dt),
+        );
+        let chunk_wall = sim.makespan;
+        t_abs += chunk_wall;
+        done += n;
+        epoch.images += n;
+        all_latencies.extend(sim.merged_latencies());
+        for (i, sr) in sim.per_replica.iter().enumerate() {
+            epoch.dispatched[i] += sim.dispatched[i];
+            epoch.bottleneck[i] = Some(sr.bottleneck);
+            for (j, &u) in sr.utilization.iter().enumerate() {
+                // utilization is busy/makespan of the replica's own chunk
+                // run; convert back to busy seconds.
+                epoch.busy[i][j] += u * sr.makespan;
+            }
+        }
+
+        if done >= images {
+            break;
+        }
+        let status = detector.observe(&telemetry.snapshot());
+        // Fresh window per control period: without this, a replica whose
+        // per-period dispatch share is smaller than the ring would judge
+        // (and calibrate from) windows still holding pre-disturbance
+        // samples.
+        telemetry.clear_windows();
+        if let DriftStatus::Confirmed(d) = status {
+            Calibration::from_disturbance(&d).apply(&mut calibrated)?;
+            let next = current.replan_on_matrix(&calibrated, power)?;
+            adaptations.push(AdaptationEvent {
+                at_s: t_abs,
+                after_images: done,
+                disturbance: d.to_string(),
+                from: current.partition_display(),
+                to: next.partition_display(),
+                predicted_throughput: next.throughput,
+            });
+            current = next;
+            structures = replica_structures(&current, base)?;
+            detector = DriftDetector::for_plan(&current, opts.drift)?;
+            telemetry = Telemetry::for_plan(&current, opts.window);
+            epoch = EpochStats::new(&current, t_abs);
+        }
+    }
+
+    let epoch_wall = t_abs - epoch.start_t;
+    let report = ServeReport {
+        mode: ServeMode::Des,
+        network: current.network.clone(),
+        images: done,
+        wall_s: t_abs,
+        throughput: if t_abs > 0.0 { done as f64 / t_abs } else { 0.0 },
+        predicted_throughput: current.throughput,
+        latency: latency_report(&all_latencies),
+        replicas: epoch.replica_reports(&current, epoch_wall),
+        adaptations,
+    };
+    Ok(AdaptiveServe {
+        final_snapshot: telemetry.snapshot(),
+        post_swap_images: epoch.images,
+        post_swap_wall_s: epoch_wall,
+        final_plan: current,
+        report,
+    })
+}
+
+// ---- wall-clock backend ---------------------------------------------------
+
+/// Shared disturbance clock for wall-clock deploys: throttle factors are a
+/// function of elapsed time since [`deploy_adaptive`] started. The same
+/// `start` instant stamps [`AdaptationEvent::at_s`], so scripted `at`
+/// times and reported swap times live on ONE clock (which, unlike the
+/// summed serving walls, also ticks through inter-period fleet rebuilds).
+/// `factor` is lock-free — it runs on every stage's hot path.
+struct WallEnv {
+    script: Vec<ClusterThrottle>,
+    start: Instant,
+}
+
+impl WallEnv {
+    fn factor(&self, core: CoreType) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        self.script
+            .iter()
+            .filter(|e| e.core == core && e.at <= t)
+            .map(|e| e.factor)
+            .product()
+    }
+}
+
+/// Synthetic sleep-stage fleet whose per-item sleep is
+/// `true_time × time_scale × active throttle factor` — the wall-clock twin
+/// of the DES disturbance layer.
+fn disturbed_synthetic_fleet(
+    times: &[Vec<f64>],
+    cores: &[Vec<CoreType>],
+    scale: f64,
+    env: Arc<WallEnv>,
+) -> Vec<Vec<StageSpec<usize>>> {
+    times
+        .iter()
+        .zip(cores)
+        .enumerate()
+        .map(|(r, (stage_times, stage_cores))| {
+            stage_times
+                .iter()
+                .zip(stage_cores)
+                .enumerate()
+                .map(|(s, (&t, &core))| {
+                    let env = env.clone();
+                    StageSpec::new(
+                        &format!("r{r}s{s}"),
+                        Box::new(move || {
+                            Box::new(move |x: usize| {
+                                let dt = t * scale * env.factor(core);
+                                thread::sleep(Duration::from_secs_f64(dt));
+                                x
+                            })
+                        }),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Normalizes observed wall-clock service times back to unscaled simulated
+/// seconds before they reach the telemetry (detector expectations are
+/// unscaled Eq. 10 times).
+struct ScaledObserver {
+    inner: Arc<Telemetry>,
+    inv_scale: f64,
+}
+
+impl StageObserver for ScaledObserver {
+    fn on_item(&self, replica: usize, stage: usize, service_s: f64) {
+        self.inner.record(replica, stage, service_s * self.inv_scale);
+    }
+}
+
+/// Closed-loop adaptive serving on the real thread fleet over synthetic
+/// sleep stages — the wall-clock twin of [`simulate_adaptive`], backing
+/// `pipeit serve --net N --adapt`.
+///
+/// Each control period runs the current plan's partition as a
+/// [`run_fleet_observed`] fleet (shared admission queue, least-outstanding-
+/// work dispatch, readiness latch); at period boundaries the fleet drains
+/// fully, telemetry is inspected, and on confirmed drift the next period is
+/// rebuilt from the re-planned partition — items are never lost or
+/// reordered across a swap. Throttle times in `script` are wall seconds
+/// from deploy start, on the same clock that stamps
+/// [`AdaptationEvent::at_s`] (it keeps ticking through inter-period fleet
+/// rebuilds; `report.wall_s` counts only serving periods). Telemetry is
+/// normalized by `1/time_scale` so the detector compares against unscaled
+/// Eq. 10 expectations; reports use mode [`ServeMode::Synthetic`].
+pub fn deploy_adaptive(
+    plan: &Plan,
+    base: &TimeMatrix,
+    power: &PowerModel,
+    script: &[ClusterThrottle],
+    opts: &AdaptOptions,
+    deploy: &DeployOptions,
+) -> Result<AdaptiveServe> {
+    anyhow::ensure!(deploy.images >= 1, "need at least one image");
+    anyhow::ensure!(deploy.queue_cap >= 1, "queue capacity must be >= 1");
+    anyhow::ensure!(deploy.time_scale > 0.0, "time_scale must be positive");
+    anyhow::ensure!(opts.interval >= 1, "adapt interval must be >= 1");
+
+    let serve_start = Instant::now();
+    let env = Arc::new(WallEnv { script: script.to_vec(), start: serve_start });
+    let mut current = plan.clone();
+    let mut structures = replica_structures(&current, base)?;
+    let mut calibrated = base.clone();
+    let mut detector = DriftDetector::for_plan(&current, opts.drift)?;
+    let mut telemetry = Arc::new(Telemetry::for_plan(&current, opts.window));
+
+    let mut wall_total = 0.0f64;
+    let mut done = 0usize;
+    let mut adaptations: Vec<AdaptationEvent> = Vec::new();
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let mut epoch = EpochStats::new(&current, 0.0);
+
+    while done < deploy.images {
+        let n = opts.interval.min(deploy.images - done);
+        let times = truth_times(&structures, base);
+        let cores: Vec<Vec<CoreType>> = structures
+            .iter()
+            .map(|(p, _)| p.stages.iter().map(|sc| sc.core).collect())
+            .collect();
+        let fleet =
+            disturbed_synthetic_fleet(&times, &cores, deploy.time_scale, env.clone());
+        let observer: Arc<dyn StageObserver> = Arc::new(ScaledObserver {
+            inner: telemetry.clone(),
+            inv_scale: 1.0 / deploy.time_scale,
+        });
+        let (_, rep) = run_fleet_observed(
+            fleet,
+            deploy.queue_cap,
+            2 * times.len(),
+            done..done + n,
+            Some(observer),
+        );
+        wall_total += rep.wall.as_secs_f64();
+        done += rep.images;
+        epoch.images += rep.images;
+        all_latencies.extend_from_slice(rep.latencies.samples());
+        for (i, rr) in rep.replicas.iter().enumerate() {
+            epoch.dispatched[i] += rep.dispatched[i];
+            for (j, st) in rr.stages.iter().enumerate() {
+                epoch.busy[i][j] += st.busy.as_secs_f64();
+            }
+        }
+
+        if done >= deploy.images {
+            break;
+        }
+        let status = detector.observe(&telemetry.snapshot());
+        // Fresh window per control period — see simulate_adaptive.
+        telemetry.clear_windows();
+        if let DriftStatus::Confirmed(d) = status {
+            Calibration::from_disturbance(&d).apply(&mut calibrated)?;
+            let next = current.replan_on_matrix(&calibrated, power)?;
+            adaptations.push(AdaptationEvent {
+                // Same clock as the throttle script (see WallEnv), so
+                // reported swap times are comparable with scripted `at`s.
+                at_s: serve_start.elapsed().as_secs_f64(),
+                after_images: done,
+                disturbance: d.to_string(),
+                from: current.partition_display(),
+                to: next.partition_display(),
+                predicted_throughput: next.throughput,
+            });
+            current = next;
+            structures = replica_structures(&current, base)?;
+            detector = DriftDetector::for_plan(&current, opts.drift)?;
+            telemetry = Arc::new(Telemetry::for_plan(&current, opts.window));
+            epoch = EpochStats::new(&current, wall_total);
+        }
+    }
+
+    let epoch_wall = wall_total - epoch.start_t;
+    let report = ServeReport {
+        mode: ServeMode::Synthetic { time_scale: deploy.time_scale },
+        network: current.network.clone(),
+        images: done,
+        wall_s: wall_total,
+        throughput: if wall_total > 0.0 { done as f64 / wall_total } else { 0.0 },
+        predicted_throughput: current.throughput,
+        latency: latency_report(&all_latencies),
+        replicas: epoch.replica_reports(&current, epoch_wall),
+        adaptations,
+    };
+    Ok(AdaptiveServe {
+        final_snapshot: telemetry.snapshot(),
+        post_swap_images: epoch.images,
+        post_swap_wall_s: epoch_wall,
+        final_plan: current,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{PlanSpec, Strategy};
+    use crate::cnn::zoo;
+    use crate::config::Config;
+
+    fn setup(net: &str, strategy: Strategy) -> (Config, TimeMatrix, Plan) {
+        let cfg = Config::default();
+        let network = zoo::by_name(net).unwrap();
+        let tm = TimeMatrix::measured(&cfg.platform, &network);
+        let plan = PlanSpec::new(net).strategy(strategy).compile().unwrap();
+        (cfg, tm, plan)
+    }
+
+    #[test]
+    fn throttle_spec_parsing() {
+        let t = ClusterThrottle::parse("2.5:3").unwrap();
+        assert_eq!(t.core, CoreType::Big);
+        assert!((t.factor - 3.0).abs() < 1e-12);
+        let t = ClusterThrottle::parse("0:0.5:small").unwrap();
+        assert_eq!(t.core, CoreType::Small);
+        assert!(ClusterThrottle::parse("").is_err());
+        assert!(ClusterThrottle::parse("1:2:3:4").is_err());
+        assert!(ClusterThrottle::parse("x:2").is_err());
+        assert!(ClusterThrottle::parse("1:-2").is_err());
+        assert!(ClusterThrottle::parse("1:2:medium").is_err());
+    }
+
+    #[test]
+    fn stable_conditions_never_trigger_a_swap() {
+        let (cfg, tm, plan) = setup("squeezenet", Strategy::Pipeline);
+        // interval 100 keeps the per-period fill/drain transient small
+        // enough that the DES tracks Eq. 12 closely even for deep pipelines.
+        let opts = AdaptOptions { interval: 100, ..AdaptOptions::default() };
+        let out = simulate_adaptive(&plan, &tm, &cfg.power, &[], &opts, 300, 2)
+            .unwrap();
+        assert!(out.report.adaptations.is_empty(), "{:?}", out.report.adaptations);
+        assert_eq!(out.report.images, 300);
+        assert_eq!(out.post_swap_images, 300);
+        // Without disturbance the DES tracks the plan's Eq. 12 prediction.
+        let rel = (out.report.throughput - plan.throughput).abs() / plan.throughput;
+        assert!(rel < 0.1, "throughput {} vs predicted {}", out.report.throughput, plan.throughput);
+        assert_eq!(out.final_plan, plan);
+    }
+
+    #[test]
+    fn small_cluster_throttle_on_big_only_plan_is_invisible() {
+        // A serial B4 plan never touches the small cluster: a small-cluster
+        // throttle must neither drift nor swap.
+        let (cfg, tm, plan) = setup("alexnet", Strategy::Serial);
+        let script = [ClusterThrottle { at: 0.0, core: CoreType::Small, factor: 4.0 }];
+        let out = simulate_adaptive(
+            &plan,
+            &tm,
+            &cfg.power,
+            &script,
+            &AdaptOptions::default(),
+            200,
+            2,
+        )
+        .unwrap();
+        assert!(out.report.adaptations.is_empty());
+        let rel = (out.report.throughput - plan.throughput).abs() / plan.throughput;
+        assert!(rel < 0.05, "{} vs {}", out.report.throughput, plan.throughput);
+    }
+
+    #[test]
+    fn adaptive_wall_clock_deploy_processes_every_item() {
+        // Threshold far above any scheduler jitter: the loop must pass
+        // items through untouched with zero adaptations.
+        let (cfg, tm, plan) = setup("squeezenet", Strategy::Pipeline);
+        let opts = AdaptOptions {
+            interval: 8,
+            drift: DriftConfig { threshold: 50.0, ..DriftConfig::default() },
+            ..AdaptOptions::default()
+        };
+        let deploy = DeployOptions {
+            images: 24,
+            time_scale: 0.02,
+            ..DeployOptions::default()
+        };
+        let out =
+            deploy_adaptive(&plan, &tm, &cfg.power, &[], &opts, &deploy).unwrap();
+        assert_eq!(out.report.images, 24);
+        assert!(out.report.adaptations.is_empty());
+        assert!(out.report.throughput > 0.0);
+        assert_eq!(out.report.replicas.len(), plan.num_replicas());
+    }
+}

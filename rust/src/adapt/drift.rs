@@ -1,0 +1,505 @@
+//! Drift detection: compare observed per-stage service times against the
+//! plan's stored Eq. 10 predictions with an EWMA-smoothed ratio, a relative
+//! threshold, and hysteresis, then classify the disturbance.
+//!
+//! The detector answers two questions the controller needs:
+//!
+//! 1. **Is the deployed plan still believable?** Per stage, the ratio
+//!    `observed window mean / expected stage time` is smoothed with an EWMA
+//!    across snapshots; a stage drifts when the smoothed ratio leaves the
+//!    `1 ± threshold` band. Drift must persist for `hysteresis` consecutive
+//!    snapshots before it is confirmed — a single noisy window (GC pause,
+//!    scheduler hiccup) never triggers a re-plan.
+//! 2. **What kind of disturbance is it?** If every stage running on one
+//!    cluster drifted by a common factor it is a whole-cluster slowdown
+//!    (thermal throttling / DVFS) and the calibrator should rescale *all*
+//!    of that cluster's configurations — including counts the current
+//!    pipeline does not use, so the re-plan sees the cluster as uniformly
+//!    slower. Otherwise it is per-stage skew (e.g. a co-runner pinned to
+//!    specific cores) and only the observed configurations are rescaled.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::api::Plan;
+use crate::dse::{PipelineConfig, StageConfig};
+use crate::simulator::platform::CoreType;
+
+use super::telemetry::TelemetrySnapshot;
+
+/// Detector tuning. Defaults suit the DES and the synthetic wall-clock
+/// fleet; raise `threshold` on noisy shared hosts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    /// Relative deviation `|ratio - 1|` of the smoothed observed/expected
+    /// ratio that counts as drift.
+    pub threshold: f64,
+    /// Consecutive drifting snapshots required of a *single stage* before
+    /// its drift is confirmed (>= 1) — transient spikes on different
+    /// stages in successive snapshots never add up to a confirmation.
+    pub hysteresis: usize,
+    /// Window samples a stage must hold at snapshot time to be judged.
+    pub min_samples: u64,
+    /// EWMA weight of the newest snapshot's window-mean ratio.
+    pub ewma_alpha: f64,
+    /// Max relative spread of per-stage factors still classified as one
+    /// whole-cluster slowdown.
+    pub cluster_spread: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            threshold: 0.35,
+            hysteresis: 2,
+            min_samples: 8,
+            ewma_alpha: 0.5,
+            cluster_spread: 0.25,
+        }
+    }
+}
+
+/// Classified disturbance, produced on confirmation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Disturbance {
+    /// Every stage on `core`'s cluster drifted by a common factor.
+    ClusterSlowdown { core: CoreType, factor: f64 },
+    /// Individual stage configurations drifted by distinct factors:
+    /// `(core, count, factor)` per affected configuration.
+    StageSkew { configs: Vec<(CoreType, usize, f64)> },
+}
+
+impl fmt::Display for Disturbance {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Disturbance::ClusterSlowdown { core, factor } => {
+                let name = match core {
+                    CoreType::Big => "big",
+                    CoreType::Small => "small",
+                };
+                write!(f, "{name}-cluster slowdown x{factor:.2}")
+            }
+            Disturbance::StageSkew { configs } => {
+                write!(f, "stage skew")?;
+                for (core, count, factor) in configs {
+                    write!(f, " {}{count}x{factor:.2}", core.letter())?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Detector verdict for one snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriftStatus {
+    /// No stage has accumulated `min_samples` yet.
+    Cold,
+    /// Every judged stage is inside the threshold band.
+    Stable,
+    /// Drift observed but not yet persistent enough to act on.
+    Drifting { strikes: usize },
+    /// Drift persisted for `hysteresis` snapshots — recalibrate and re-plan.
+    Confirmed(Disturbance),
+}
+
+/// EWMA + threshold + hysteresis drift detector over a plan's expected
+/// stage times.
+#[derive(Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    /// Expected per-stage service times (the plan's Eq. 10 predictions),
+    /// indexed `[replica][stage]`.
+    expected: Vec<Vec<f64>>,
+    /// Stage configurations, same indexing (for disturbance classification).
+    stages: Vec<Vec<StageConfig>>,
+    /// Smoothed observed/expected ratio per stage.
+    ewma: Vec<Vec<Option<f64>>>,
+    /// Consecutive drifting snapshots per stage (hysteresis is per stage:
+    /// a one-off spike on stage A followed by one on stage B must not sum
+    /// to a confirmation no single stage sustained).
+    strikes: Vec<Vec<usize>>,
+}
+
+impl DriftDetector {
+    /// Build from explicit expectations. `expected[r][s]` must be a finite
+    /// positive time for stage `s` of replica `r`, and `stages` must have
+    /// the same shape.
+    pub fn new(
+        expected: Vec<Vec<f64>>,
+        stages: Vec<Vec<StageConfig>>,
+        cfg: DriftConfig,
+    ) -> Result<DriftDetector> {
+        anyhow::ensure!(cfg.hysteresis >= 1, "hysteresis must be >= 1");
+        anyhow::ensure!(
+            cfg.threshold.is_finite() && cfg.threshold > 0.0,
+            "drift threshold must be positive"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.ewma_alpha) && cfg.ewma_alpha > 0.0,
+            "ewma_alpha must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            expected.len() == stages.len()
+                && expected.iter().zip(&stages).all(|(e, s)| e.len() == s.len()),
+            "expected times and stage configs must have the same shape"
+        );
+        anyhow::ensure!(
+            expected.iter().flatten().all(|t| t.is_finite() && *t > 0.0),
+            "expected stage times must be finite and positive"
+        );
+        anyhow::ensure!(
+            !expected.is_empty() && expected.iter().all(|e| !e.is_empty()),
+            "detector needs at least one stage per replica"
+        );
+        let ewma = expected.iter().map(|e| vec![None; e.len()]).collect();
+        let strikes = expected.iter().map(|e| vec![0; e.len()]).collect();
+        Ok(DriftDetector { cfg, expected, stages, ewma, strikes })
+    }
+
+    /// Build from a deployed plan: expectations are the plan's stored
+    /// Eq. 10 stage times, stage configurations come from parsing the
+    /// replica pipelines. Errors for artifact/host plans (no `B4-s2-s2`
+    /// structure to classify drift against).
+    pub fn for_plan(plan: &Plan, cfg: DriftConfig) -> Result<DriftDetector> {
+        anyhow::ensure!(
+            plan.artifacts.is_none(),
+            "drift detection needs a big.LITTLE plan with Eq. 10 stage times \
+             (artifact plans have no cluster structure)"
+        );
+        let mut expected = Vec::with_capacity(plan.replicas.len());
+        let mut stages = Vec::with_capacity(plan.replicas.len());
+        for (i, r) in plan.replicas.iter().enumerate() {
+            anyhow::ensure!(
+                !r.stage_times.is_empty(),
+                "replica {i} carries no stage-time profile"
+            );
+            let p = PipelineConfig::parse(&r.pipeline)?;
+            anyhow::ensure!(
+                p.num_stages() == r.stage_times.len(),
+                "replica {i}: pipeline {} has {} stages but {} stage times",
+                r.pipeline,
+                p.num_stages(),
+                r.stage_times.len()
+            );
+            expected.push(r.stage_times.clone());
+            stages.push(p.stages.clone());
+        }
+        DriftDetector::new(expected, stages, cfg)
+    }
+
+    /// Ingest one telemetry snapshot and report the drift status. Stages
+    /// whose window holds fewer than `min_samples` samples are skipped; a
+    /// snapshot where no stage qualifies returns [`DriftStatus::Cold`]
+    /// without touching any stage's hysteresis strikes.
+    pub fn observe(&mut self, snap: &TelemetrySnapshot) -> DriftStatus {
+        let mut any_ready = false;
+        // (replica, stage, freshest window ratio) per drifted stage. The
+        // EWMA decides *whether* a stage drifted; the latest window mean
+        // (recent samples only) estimates *how much*, so the calibration
+        // factor is not diluted by pre-disturbance history.
+        let mut drifted: Vec<(usize, usize, f64)> = Vec::new();
+        for r in 0..self.expected.len() {
+            for s in 0..self.expected[r].len() {
+                let Some(w) = snap.per_replica.get(r).and_then(|x| x.get(s)) else {
+                    continue;
+                };
+                if (w.recent.len() as u64) < self.cfg.min_samples {
+                    continue;
+                }
+                any_ready = true;
+                let ratio = w.mean / self.expected[r][s];
+                let e = match self.ewma[r][s] {
+                    None => {
+                        self.ewma[r][s] = Some(ratio);
+                        ratio
+                    }
+                    Some(prev) => {
+                        let e = self.cfg.ewma_alpha * ratio
+                            + (1.0 - self.cfg.ewma_alpha) * prev;
+                        self.ewma[r][s] = Some(e);
+                        e
+                    }
+                };
+                if (e - 1.0).abs() > self.cfg.threshold {
+                    self.strikes[r][s] += 1;
+                    drifted.push((r, s, ratio));
+                } else {
+                    self.strikes[r][s] = 0;
+                }
+            }
+        }
+        if !any_ready {
+            return DriftStatus::Cold;
+        }
+        if drifted.is_empty() {
+            return DriftStatus::Stable;
+        }
+        let max_strikes = drifted
+            .iter()
+            .map(|&(r, s, _)| self.strikes[r][s])
+            .max()
+            .unwrap_or(0);
+        if max_strikes < self.cfg.hysteresis {
+            return DriftStatus::Drifting { strikes: max_strikes };
+        }
+        // At least one stage sustained its drift for `hysteresis`
+        // snapshots. Classification considers every currently-drifting
+        // stage (a simultaneous cluster disturbance strikes them in step).
+        let disturbance = self.classify(&drifted);
+        self.reset();
+        DriftStatus::Confirmed(disturbance)
+    }
+
+    /// Forget smoothing state and strikes (used after a plan swap; the
+    /// controller normally builds a fresh detector for the new plan).
+    pub fn reset(&mut self) {
+        for row in &mut self.strikes {
+            for k in row {
+                *k = 0;
+            }
+        }
+        for row in &mut self.ewma {
+            for e in row {
+                *e = None;
+            }
+        }
+    }
+
+    fn classify(&self, drifted: &[(usize, usize, f64)]) -> Disturbance {
+        // Whole-cluster slowdown: every drifted stage sits on one cluster,
+        // every stage of that cluster drifted, and the factors agree.
+        let cores: Vec<CoreType> =
+            drifted.iter().map(|&(r, s, _)| self.stages[r][s].core).collect();
+        let first = cores[0];
+        if cores.iter().all(|&c| c == first) {
+            let present = self
+                .stages
+                .iter()
+                .flatten()
+                .filter(|sc| sc.core == first)
+                .count();
+            let ratios: Vec<f64> = drifted.iter().map(|&(_, _, f)| f).collect();
+            let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+            let max = ratios.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let min = ratios.iter().copied().fold(f64::INFINITY, f64::min);
+            if drifted.len() == present && (max - min) / mean <= self.cfg.cluster_spread
+            {
+                return Disturbance::ClusterSlowdown { core: first, factor: mean };
+            }
+        }
+        // Per-stage skew: average the ratios per distinct configuration.
+        let mut groups: BTreeMap<(CoreType, usize), Vec<f64>> = BTreeMap::new();
+        for &(r, s, ratio) in drifted {
+            let sc = self.stages[r][s];
+            groups.entry((sc.core, sc.count)).or_default().push(ratio);
+        }
+        Disturbance::StageSkew {
+            configs: groups
+                .into_iter()
+                .map(|((core, count), ratios)| {
+                    (core, count, ratios.iter().sum::<f64>() / ratios.len() as f64)
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::telemetry::{StageWindow, TelemetrySnapshot};
+    use crate::util::proptest::check;
+
+    /// Snapshot where each stage's window holds `count` copies of `mean`.
+    fn snap(windows: &[&[(u64, f64)]]) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            per_replica: windows
+                .iter()
+                .map(|stages| {
+                    stages
+                        .iter()
+                        .map(|&(count, mean)| StageWindow {
+                            count,
+                            mean,
+                            recent: vec![mean; count as usize],
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    fn detector(expected: Vec<Vec<f64>>, pipes: &[&str], cfg: DriftConfig) -> DriftDetector {
+        let stages = pipes
+            .iter()
+            .map(|p| PipelineConfig::parse(p).unwrap().stages)
+            .collect();
+        DriftDetector::new(expected, stages, cfg).unwrap()
+    }
+
+    #[test]
+    fn cold_until_min_samples() {
+        let mut d =
+            detector(vec![vec![0.1]], &["B4"], DriftConfig::default());
+        assert_eq!(d.observe(&snap(&[&[(3, 0.5)]])), DriftStatus::Cold);
+        assert_eq!(d.observe(&snap(&[&[(8, 0.1)]])), DriftStatus::Stable);
+    }
+
+    #[test]
+    fn confirms_cluster_slowdown_after_hysteresis() {
+        let cfg = DriftConfig { hysteresis: 2, ..DriftConfig::default() };
+        let mut d = detector(vec![vec![0.1, 0.05]], &["B4-s4"], cfg);
+        // Big stage doubled, small stage nominal.
+        let s = snap(&[&[(20, 0.2), (20, 0.05)]]);
+        assert_eq!(d.observe(&s), DriftStatus::Drifting { strikes: 1 });
+        match d.observe(&s) {
+            DriftStatus::Confirmed(Disturbance::ClusterSlowdown { core, factor }) => {
+                assert_eq!(core, CoreType::Big);
+                assert!((factor - 2.0).abs() < 1e-9, "factor={factor}");
+            }
+            other => panic!("expected confirmed cluster slowdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_cluster_drift_is_stage_skew() {
+        // Two big stages, only one drifted: not a whole-cluster story.
+        let cfg = DriftConfig { hysteresis: 1, ..DriftConfig::default() };
+        let mut d = detector(vec![vec![0.1, 0.1, 0.05]], &["B2-B2-s4"], cfg);
+        let s = snap(&[&[(20, 0.3), (20, 0.1), (20, 0.05)]]);
+        match d.observe(&s) {
+            DriftStatus::Confirmed(Disturbance::StageSkew { configs }) => {
+                assert_eq!(configs.len(), 1);
+                let (core, count, factor) = configs[0];
+                assert_eq!(core, CoreType::Big);
+                assert_eq!(count, 2);
+                assert!((factor - 3.0).abs() < 1e-9, "factor={factor}");
+            }
+            other => panic!("expected stage skew, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recovery_resets_strikes() {
+        // ewma_alpha 1.0 isolates the hysteresis logic from smoothing.
+        let cfg =
+            DriftConfig { hysteresis: 3, ewma_alpha: 1.0, ..DriftConfig::default() };
+        let mut d = detector(vec![vec![0.1]], &["B4"], cfg);
+        let bad = snap(&[&[(20, 0.25)]]);
+        let good = snap(&[&[(20, 0.1)]]);
+        assert_eq!(d.observe(&bad), DriftStatus::Drifting { strikes: 1 });
+        assert_eq!(d.observe(&bad), DriftStatus::Drifting { strikes: 2 });
+        // A clean window: stable again, strikes gone — the next drift
+        // starts its count from scratch.
+        assert_eq!(d.observe(&good), DriftStatus::Stable);
+        assert_eq!(d.observe(&bad), DriftStatus::Drifting { strikes: 1 });
+    }
+
+    #[test]
+    fn spikes_on_different_stages_never_sum_to_a_confirmation() {
+        // Hysteresis is per stage: a one-off spike on stage A followed by a
+        // one-off spike on stage B is two transients, not persistent drift.
+        let cfg =
+            DriftConfig { hysteresis: 2, ewma_alpha: 1.0, ..DriftConfig::default() };
+        let mut d = detector(vec![vec![0.1, 0.1]], &["B2-B2"], cfg);
+        let spike_a = snap(&[&[(20, 0.3), (20, 0.1)]]);
+        let spike_b = snap(&[&[(20, 0.1), (20, 0.3)]]);
+        assert_eq!(d.observe(&spike_a), DriftStatus::Drifting { strikes: 1 });
+        // Stage A recovered, stage B spikes: B's own strike count is 1.
+        assert_eq!(d.observe(&spike_b), DriftStatus::Drifting { strikes: 1 });
+        // Only when ONE stage sustains its drift does confirmation fire.
+        assert!(matches!(d.observe(&spike_b), DriftStatus::Confirmed(_)));
+    }
+
+    #[test]
+    fn speedup_drift_is_detected_too() {
+        // A throttle being lifted (ratio < 1) is also a reason to re-plan.
+        let cfg = DriftConfig { hysteresis: 1, ..DriftConfig::default() };
+        let mut d = detector(vec![vec![0.1]], &["B4"], cfg);
+        match d.observe(&snap(&[&[(20, 0.04)]])) {
+            DriftStatus::Confirmed(Disturbance::ClusterSlowdown { core, factor }) => {
+                assert_eq!(core, CoreType::Big);
+                assert!(factor < 0.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn for_plan_rejects_artifact_plans() {
+        use crate::api::{ArtifactBinding, PlanSpec};
+        let mut plan = PlanSpec::new("alexnet").compile().unwrap();
+        plan.artifacts =
+            Some(ArtifactBinding { dir: "x".into(), num_layers: 3 });
+        assert!(DriftDetector::for_plan(&plan, DriftConfig::default()).is_err());
+    }
+
+    #[test]
+    fn for_plan_tracks_every_replica() {
+        use crate::api::{PlanSpec, Strategy};
+        let plan = PlanSpec::new("alexnet")
+            .strategy(Strategy::Replicated { max_replicas: 2, exact: true })
+            .compile()
+            .unwrap();
+        let mut d = DriftDetector::for_plan(&plan, DriftConfig::default()).unwrap();
+        // A snapshot exactly matching the plan's expectations is stable.
+        let s = TelemetrySnapshot {
+            per_replica: plan
+                .replicas
+                .iter()
+                .map(|r| {
+                    r.stage_times
+                        .iter()
+                        .map(|&t| StageWindow { count: 50, mean: t, recent: vec![t; 50] })
+                        .collect()
+                })
+                .collect(),
+        };
+        assert_eq!(d.observe(&s), DriftStatus::Stable);
+    }
+
+    /// Satellite property: stationary noise strictly inside the threshold
+    /// band never confirms drift — the EWMA of in-band ratios stays in
+    /// band, so no false-positive re-plans on noisy-but-honest telemetry.
+    #[test]
+    fn property_no_false_positive_on_stationary_noise() {
+        check(150, |rng| {
+            let threshold = rng.range_f64(0.1, 0.6);
+            let cfg = DriftConfig {
+                threshold,
+                hysteresis: 1 + rng.index(3),
+                min_samples: 4,
+                ewma_alpha: rng.range_f64(0.2, 1.0),
+                cluster_spread: 0.25,
+            };
+            let p = 1 + rng.index(3);
+            let expected: Vec<f64> =
+                (0..p).map(|_| rng.range_f64(0.01, 0.2)).collect();
+            let pipe = vec![StageConfig::new(CoreType::Big, 1); p];
+            let mut d =
+                DriftDetector::new(vec![expected.clone()], vec![pipe], cfg).unwrap();
+            for _ in 0..25 {
+                let windows: Vec<StageWindow> = expected
+                    .iter()
+                    .map(|&t| {
+                        // Noise bounded strictly inside the band.
+                        let noise = rng.range_f64(-0.9 * threshold, 0.9 * threshold);
+                        let mean = t * (1.0 + noise);
+                        StageWindow { count: 50, mean, recent: vec![mean; 50] }
+                    })
+                    .collect();
+                let status = d.observe(&TelemetrySnapshot {
+                    per_replica: vec![windows],
+                });
+                crate::prop_assert!(
+                    !matches!(status, DriftStatus::Confirmed(_)),
+                    "false positive at threshold {threshold}: {status:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

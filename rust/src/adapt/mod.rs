@@ -1,0 +1,69 @@
+//! Online adaptation (DESIGN.md §9): telemetry → drift detection → model
+//! recalibration → live re-plan.
+//!
+//! Pipe-it's performance predictor (paper §V) is fit offline, but on real
+//! big.LITTLE silicon the fitted times drift at runtime — thermal
+//! throttling, DVFS governors, and co-runner contention skew cluster
+//! service times and unbalance the pipeline (the failure mode the
+//! dynamic-distribution line of work targets, arXiv 2107.05828 /
+//! 2206.08662). This module closes the predict→plan→deploy loop that the
+//! [`crate::api`] facade opens:
+//!
+//! * [`Telemetry`] — lock-light per-stage ring buffers of recent per-item
+//!   service times, fed by the stage workers through the
+//!   [`StageObserver`](crate::coordinator::StageObserver) hook and
+//!   snapshotted as serializable [`TelemetrySnapshot`]s.
+//! * [`DriftDetector`] — EWMA + threshold + hysteresis comparison of
+//!   observed times against the deployed [`Plan`](crate::api::Plan)'s
+//!   Eq. 10 predictions, classifying disturbances as whole-cluster
+//!   slowdowns vs. per-stage skew ([`Disturbance`]).
+//! * [`Calibration`] — rescales the affected `(core type, count)` columns
+//!   of the [`TimeMatrix`](crate::perfmodel::TimeMatrix) from observed
+//!   ratios, reusing the fitted model's structure instead of refitting
+//!   betas at runtime.
+//! * [`simulate_adaptive`] / [`deploy_adaptive`] — the control loop:
+//!   re-runs the plan's strategy search on the calibrated matrix
+//!   ([`Plan::replan_on_matrix`](crate::api::Plan::replan_on_matrix)) and
+//!   hot-swaps the fleet at an item boundary, logging every switch as an
+//!   [`AdaptationEvent`](crate::api::AdaptationEvent).
+//!
+//! The DES backend plus the scripted disturbance layer
+//! ([`crate::simulator::pipeline_sim::ThrottleEvent`]) make the whole loop
+//! testable deterministically (`tests/adapt_loop.rs` holds the
+//! throttle-recovery acceptance test); the wall-clock backend powers
+//! `pipeit serve --net N --adapt`.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::adapt::{simulate_adaptive, AdaptOptions, ClusterThrottle};
+//! use pipeit::api::PlanSpec;
+//! use pipeit::cnn::zoo;
+//! use pipeit::config::Config;
+//! use pipeit::perfmodel::TimeMatrix;
+//! use pipeit::simulator::platform::CoreType;
+//!
+//! let cfg = Config::default();
+//! let net = zoo::by_name("squeezenet").unwrap();
+//! let tm = TimeMatrix::measured(&cfg.platform, &net);
+//! let plan = PlanSpec::new("squeezenet").compile().unwrap();
+//! // Big cluster throttles 2x shortly into the run…
+//! let script = [ClusterThrottle { at: 0.5, core: CoreType::Big, factor: 2.0 }];
+//! let out = simulate_adaptive(
+//!     &plan, &tm, &cfg.power, &script, &AdaptOptions::default(), 400, 2,
+//! ).unwrap();
+//! // …the controller notices, recalibrates, and re-partitions the fleet.
+//! assert_eq!(out.report.images, 400);
+//! ```
+
+pub mod calibrate;
+pub mod controller;
+pub mod drift;
+pub mod telemetry;
+
+pub use calibrate::{Calibration, ConfigScale};
+pub use controller::{
+    deploy_adaptive, simulate_adaptive, AdaptOptions, AdaptiveServe, ClusterThrottle,
+};
+pub use drift::{Disturbance, DriftConfig, DriftDetector, DriftStatus};
+pub use telemetry::{StageWindow, Telemetry, TelemetrySnapshot};

@@ -1,0 +1,329 @@
+//! Per-stage service-time telemetry: lock-light ring buffers fed by the
+//! stage workers, snapshotted as serializable [`TelemetrySnapshot`]s.
+//!
+//! [`Telemetry`] plugs into the executors through the
+//! [`StageObserver`](crate::coordinator::StageObserver) hook
+//! ([`crate::coordinator::run_pipeline_observed`] /
+//! [`crate::coordinator::run_fleet_observed`]) and into the DES through the
+//! `on_service` callback of
+//! [`crate::simulator::pipeline_sim::simulate_replicated_disturbed`], so
+//! the drift detector ([`crate::adapt::DriftDetector`]) sees the same
+//! snapshot shape regardless of backend.
+//!
+//! Lock discipline: one mutex per `(replica, stage)` ring. Each ring is
+//! written by exactly one stage worker and read only by the (infrequent)
+//! control-loop snapshot, so the locks are effectively uncontended — no
+//! global lock sits on the pipeline hot path.
+
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::api::Plan;
+use crate::coordinator::StageObserver;
+use crate::util::json::Json;
+
+/// Fixed-capacity ring of the most recent service-time samples.
+#[derive(Debug)]
+struct Ring {
+    cap: usize,
+    buf: Vec<f64>,
+    /// Next write position (== oldest sample once the ring is full).
+    next: usize,
+    /// Samples ever recorded (not capped).
+    total: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { cap: cap.max(1), buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    /// Window samples oldest → newest.
+    fn ordered(&self) -> Vec<f64> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut v = Vec::with_capacity(self.cap);
+            v.extend_from_slice(&self.buf[self.next..]);
+            v.extend_from_slice(&self.buf[..self.next]);
+            v
+        }
+    }
+}
+
+/// Live telemetry store: one ring per `(replica, stage)`. Shape is fixed at
+/// construction (it mirrors the deployed plan's partition); out-of-range
+/// records are dropped, which makes stale observers harmless across a
+/// drain-and-rebuild plan swap.
+#[derive(Debug)]
+pub struct Telemetry {
+    rings: Vec<Vec<Mutex<Ring>>>,
+}
+
+impl Telemetry {
+    /// `stages_per_replica[r]` is the stage count of replica `r`; `window`
+    /// is the per-stage ring capacity.
+    pub fn new(stages_per_replica: &[usize], window: usize) -> Telemetry {
+        Telemetry {
+            rings: stages_per_replica
+                .iter()
+                .map(|&p| (0..p).map(|_| Mutex::new(Ring::new(window))).collect())
+                .collect(),
+        }
+    }
+
+    /// Telemetry shaped after a plan's replica partition.
+    pub fn for_plan(plan: &Plan, window: usize) -> Telemetry {
+        let shape: Vec<usize> =
+            plan.replicas.iter().map(|r| r.allocation.len()).collect();
+        Telemetry::new(&shape, window)
+    }
+
+    /// Record one item's service time (seconds) on a stage. Unknown
+    /// `(replica, stage)` coordinates are ignored.
+    pub fn record(&self, replica: usize, stage: usize, service_s: f64) {
+        if let Some(ring) = self.rings.get(replica).and_then(|r| r.get(stage)) {
+            ring.lock().unwrap().push(service_s);
+        }
+    }
+
+    /// Drop every ring's window samples, keeping cumulative counts. The
+    /// controller calls this after each control-period snapshot so a
+    /// window never mixes samples from different periods — crucial when a
+    /// replica's per-period dispatch share is smaller than the ring, where
+    /// stale pre-disturbance samples would otherwise dilute the estimated
+    /// drift factor (and can demote a cluster slowdown to stage skew).
+    pub fn clear_windows(&self) {
+        for replica in &self.rings {
+            for ring in replica {
+                let mut r = ring.lock().unwrap();
+                r.buf.clear();
+                r.next = 0;
+            }
+        }
+    }
+
+    /// Point-in-time copy of every ring — what the drift detector consumes
+    /// and what `serve --metrics-out` can persist.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            per_replica: self
+                .rings
+                .iter()
+                .map(|replica| {
+                    replica
+                        .iter()
+                        .map(|ring| {
+                            let r = ring.lock().unwrap();
+                            StageWindow {
+                                count: r.total,
+                                mean: r.mean(),
+                                recent: r.ordered(),
+                            }
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+}
+
+impl StageObserver for Telemetry {
+    fn on_item(&self, replica: usize, stage: usize, service_s: f64) {
+        self.record(replica, stage, service_s);
+    }
+}
+
+/// One stage's telemetry window at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageWindow {
+    /// Samples ever recorded on this stage (not capped by the window).
+    pub count: u64,
+    /// Mean of the `recent` window (0.0 when empty).
+    pub mean: f64,
+    /// The window samples, oldest → newest.
+    pub recent: Vec<f64>,
+}
+
+/// Serializable snapshot of the whole telemetry store, indexed
+/// `[replica][stage]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub per_replica: Vec<Vec<StageWindow>>,
+}
+
+impl TelemetrySnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "replicas",
+            Json::Arr(
+                self.per_replica
+                    .iter()
+                    .map(|stages| {
+                        Json::Arr(
+                            stages
+                                .iter()
+                                .map(|w| {
+                                    Json::obj(vec![
+                                        ("count", Json::num(w.count as f64)),
+                                        ("mean", Json::num(w.mean)),
+                                        (
+                                            "recent",
+                                            Json::Arr(
+                                                w.recent
+                                                    .iter()
+                                                    .map(|&x| Json::num(x))
+                                                    .collect(),
+                                            ),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TelemetrySnapshot> {
+        let mut per_replica = Vec::new();
+        for rj in j.req("replicas")?.as_arr().context("replicas array")? {
+            let mut stages = Vec::new();
+            for wj in rj.as_arr().context("stage array")? {
+                let mut recent = Vec::new();
+                for x in wj.req("recent")?.as_arr().context("recent array")? {
+                    recent.push(x.as_f64().context("recent sample")?);
+                }
+                stages.push(StageWindow {
+                    count: wj.req("count")?.as_usize().context("count")? as u64,
+                    mean: wj.req("mean")?.as_f64().context("mean")?,
+                    recent,
+                });
+            }
+            per_replica.push(stages);
+        }
+        Ok(TelemetrySnapshot { per_replica })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_fleet_observed, StageSpec};
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn ring_keeps_the_newest_window() {
+        let mut r = Ring::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(x);
+        }
+        assert_eq!(r.total, 5);
+        assert_eq!(r.ordered(), vec![3.0, 4.0, 5.0]);
+        assert!((r.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_partial_fill_is_in_order() {
+        let mut r = Ring::new(8);
+        r.push(0.5);
+        r.push(1.5);
+        assert_eq!(r.ordered(), vec![0.5, 1.5]);
+        assert!((r.mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_records_are_dropped() {
+        let t = Telemetry::new(&[2], 4);
+        t.record(0, 0, 1.0);
+        t.record(0, 5, 9.0); // no such stage
+        t.record(7, 0, 9.0); // no such replica
+        let snap = t.snapshot();
+        assert_eq!(snap.per_replica.len(), 1);
+        assert_eq!(snap.per_replica[0].len(), 2);
+        assert_eq!(snap.per_replica[0][0].count, 1);
+        assert_eq!(snap.per_replica[0][1].count, 0);
+    }
+
+    #[test]
+    fn clear_windows_keeps_counts_but_drops_samples() {
+        let t = Telemetry::new(&[1], 4);
+        for x in [1.0, 2.0, 3.0] {
+            t.record(0, 0, x);
+        }
+        t.clear_windows();
+        let w = &t.snapshot().per_replica[0][0];
+        assert_eq!(w.count, 3, "cumulative count survives the clear");
+        assert!(w.recent.is_empty());
+        assert_eq!(w.mean, 0.0);
+        // The ring fills cleanly again afterwards.
+        t.record(0, 0, 5.0);
+        let w = &t.snapshot().per_replica[0][0];
+        assert_eq!(w.recent, vec![5.0]);
+        assert_eq!(w.count, 4);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let t = Telemetry::new(&[2, 1], 4);
+        t.record(0, 0, 0.010);
+        t.record(0, 1, 0.020);
+        t.record(1, 0, 0.030);
+        t.record(1, 0, 0.032);
+        let snap = t.snapshot();
+        let text = snap.to_json().to_string();
+        let back =
+            TelemetrySnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(snap, back);
+    }
+
+    #[test]
+    fn fleet_observer_fills_every_stage_ring() {
+        let telemetry = Arc::new(Telemetry::new(&[1, 1], 16));
+        let mk = || {
+            vec![StageSpec::new(
+                "st",
+                Box::new(|| {
+                    Box::new(|x: u64| {
+                        thread::sleep(Duration::from_millis(1));
+                        x
+                    })
+                }),
+            )]
+        };
+        let obs: Arc<dyn StageObserver> = telemetry.clone();
+        let (_, report) =
+            run_fleet_observed(vec![mk(), mk()], 1, 2, 0..20u64, Some(obs));
+        assert_eq!(report.images, 20);
+        let snap = telemetry.snapshot();
+        let total: u64 = snap.per_replica.iter().flatten().map(|w| w.count).sum();
+        assert_eq!(total, 20, "every item recorded exactly once");
+        for w in snap.per_replica.iter().flatten() {
+            if w.count > 0 {
+                assert!(w.mean >= 0.001, "sleep-stage service below 1ms: {}", w.mean);
+            }
+        }
+    }
+}

@@ -48,4 +48,6 @@ pub use plan::{
     ArtifactBinding, DeployOptions, Plan, PlanReplica, PlanSpec, Strategy, TimeSource,
     PLAN_VERSION,
 };
-pub use report::{LatencyReport, ReplicaReport, ServeMode, ServeReport, StageReport};
+pub use report::{
+    AdaptationEvent, LatencyReport, ReplicaReport, ServeMode, ServeReport, StageReport,
+};

@@ -23,6 +23,7 @@ use crate::perfmodel::{PerfModel, TimeMatrix};
 use crate::runtime::Manifest;
 use crate::simulator::pipeline_sim;
 use crate::simulator::platform::CoreType;
+use crate::simulator::power::PowerModel;
 use crate::util::json::Json;
 
 use super::report::{ServeMode, ServeReport};
@@ -70,7 +71,10 @@ impl TimeSource {
             "measured" => Ok(TimeSource::Measured),
             "predicted" => Ok(TimeSource::Predicted),
             "profiled" => Ok(TimeSource::ProfiledArtifacts),
-            other => Err(anyhow::anyhow!("unknown time source {other:?}")),
+            other => Err(anyhow::anyhow!(
+                "unknown time source {other:?} (field \"time_source\"; expected \
+                 measured|predicted|profiled)"
+            )),
         }
     }
 }
@@ -152,7 +156,10 @@ impl Strategy {
                     .context("min_throughput")?,
                 mem_intensity: j.req("mem_intensity")?.as_f64().context("mem_intensity")?,
             },
-            other => anyhow::bail!("unknown strategy kind {other:?}"),
+            other => anyhow::bail!(
+                "unknown strategy kind {other:?} (field \"strategy.kind\"; expected \
+                 serial|pipeline|exhaustive|replicated|energy)"
+            ),
         })
     }
 }
@@ -332,7 +339,8 @@ impl Plan {
         let version = j.req("version")?.as_usize().context("version")?;
         anyhow::ensure!(
             version == PLAN_VERSION,
-            "plan version {version} not supported (this build reads version {PLAN_VERSION})"
+            "plan schema version {version} is not supported (field \"version\"; \
+             this build reads version {PLAN_VERSION})"
         );
         let platform = j.req("platform")?;
         let mut replicas = Vec::new();
@@ -558,6 +566,45 @@ impl Plan {
         }
     }
 
+    /// Re-run this plan's strategy search against `tm` — a (possibly
+    /// recalibrated) time matrix for the same network and platform budget —
+    /// keeping the plan's network/platform/time-source/strategy identity.
+    ///
+    /// This is the re-plan step of the online-adaptation loop
+    /// ([`crate::adapt`]): after drift calibration rescales the matrix, the
+    /// controller compiles a fresh partition from it and hot-swaps the
+    /// fleet. A plan compiled from a pinned pipeline re-plans through its
+    /// recorded strategy (the pin described a fixed design; under drift the
+    /// whole point is to choose a new one).
+    pub fn replan_on_matrix(&self, tm: &TimeMatrix, power: &PowerModel) -> Result<Plan> {
+        anyhow::ensure!(
+            self.artifacts.is_none(),
+            "artifact plans have no big.LITTLE time matrix to re-plan from"
+        );
+        anyhow::ensure!(
+            tm.net_name == self.network,
+            "time matrix describes {:?} but the plan serves {:?}",
+            tm.net_name,
+            self.network
+        );
+        let design = search_design(tm, self.big, self.small, self.strategy, power)?;
+        anyhow::ensure!(
+            design.throughput.is_finite() && design.throughput > 0.0,
+            "search produced a non-finite throughput"
+        );
+        Ok(Plan {
+            network: self.network.clone(),
+            platform: self.platform.clone(),
+            big: self.big,
+            small: self.small,
+            time_source: self.time_source,
+            strategy: self.strategy,
+            throughput: design.throughput,
+            replicas: replicas_from_design(tm, &design),
+            artifacts: None,
+        })
+    }
+
     fn deploy_synthetic(&self, opts: &DeployOptions) -> Result<ServeReport> {
         anyhow::ensure!(opts.images >= 1, "need at least one image");
         anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
@@ -572,6 +619,70 @@ impl Plan {
             ServeMode::Synthetic { time_scale: opts.time_scale },
         ))
     }
+}
+
+/// Run `strategy`'s design-space search against `tm` on an `hb`B + `hs`s
+/// core budget — the strategy dispatch shared by [`PlanSpec::compile`] and
+/// [`Plan::replan_on_matrix`] (DESIGN.md §8 table).
+fn search_design(
+    tm: &TimeMatrix,
+    hb: usize,
+    hs: usize,
+    strategy: Strategy,
+    power: &PowerModel,
+) -> Result<ReplicatedDesign> {
+    let w = tm.num_layers();
+    let full = CoreBudget::new(hb, hs);
+    Ok(match strategy {
+        Strategy::Serial => {
+            let p = PipelineConfig::new(vec![StageConfig::new(CoreType::Big, hb)]);
+            let a = Allocation { ranges: vec![(0, w)] };
+            let tp = dse::pipeline_throughput(tm, &p, &a);
+            ReplicatedDesign::single(
+                CoreBudget::new(hb, 0),
+                DsePoint { pipeline: p, allocation: a, throughput: tp },
+            )
+        }
+        Strategy::Pipeline => ReplicatedDesign::single(full, dse::explore(tm, hb, hs)),
+        Strategy::Exhaustive => {
+            let pt = dse::explore_budget(tm, full).context("empty pipeline design space")?;
+            ReplicatedDesign::single(full, pt)
+        }
+        Strategy::Replicated { max_replicas, exact } => {
+            anyhow::ensure!(max_replicas >= 1, "need at least one replica");
+            if exact {
+                dse::explore_exact(tm, hb, hs, max_replicas).with_context(|| {
+                    format!("no {max_replicas}-replica design fits on {hb}B+{hs}s")
+                })?
+            } else {
+                dse::explore_replicated(tm, hb, hs, max_replicas)
+            }
+        }
+        Strategy::Energy { min_throughput, mem_intensity } => {
+            let e = dse::explore_energy(tm, power, hb, hs, min_throughput, mem_intensity)
+                .with_context(|| {
+                    format!("no configuration reaches the {min_throughput:.2} imgs/s floor")
+                })?;
+            ReplicatedDesign::single(full, e.point)
+        }
+    })
+}
+
+/// Materialize a searched design's replicas with their Eq. 10 stage-time
+/// profiles under `tm`.
+fn replicas_from_design(tm: &TimeMatrix, design: &ReplicatedDesign) -> Vec<PlanReplica> {
+    design
+        .replicas
+        .iter()
+        .map(|r| PlanReplica {
+            big: r.budget.big,
+            small: r.budget.small,
+            pipeline: r.point.pipeline.to_string(),
+            allocation: r.point.allocation.ranges.clone(),
+            stage_times: dse::stage_times(tm, &r.point.pipeline, &r.point.allocation),
+            throughput: r.point.throughput,
+        })
+        .collect()
 }
 
 fn replica_from_json(i: usize, j: &Json) -> Result<PlanReplica> {
@@ -722,7 +833,6 @@ impl PlanSpec {
             ),
         };
         let w = tm.num_layers();
-        let full = CoreBudget::new(hb, hs);
 
         let design = if let Some(spec) = &self.fixed_pipeline {
             let p = PipelineConfig::parse(spec)?;
@@ -741,67 +851,14 @@ impl PlanSpec {
                 DsePoint { pipeline: p, allocation: a, throughput: tp },
             )
         } else {
-            match self.strategy {
-                Strategy::Serial => {
-                    let p = PipelineConfig::new(vec![StageConfig::new(CoreType::Big, hb)]);
-                    let a = Allocation { ranges: vec![(0, w)] };
-                    let tp = dse::pipeline_throughput(&tm, &p, &a);
-                    ReplicatedDesign::single(
-                        CoreBudget::new(hb, 0),
-                        DsePoint { pipeline: p, allocation: a, throughput: tp },
-                    )
-                }
-                Strategy::Pipeline => {
-                    ReplicatedDesign::single(full, dse::explore(&tm, hb, hs))
-                }
-                Strategy::Exhaustive => {
-                    let pt = dse::explore_budget(&tm, full)
-                        .context("empty pipeline design space")?;
-                    ReplicatedDesign::single(full, pt)
-                }
-                Strategy::Replicated { max_replicas, exact } => {
-                    anyhow::ensure!(max_replicas >= 1, "need at least one replica");
-                    if exact {
-                        dse::explore_exact(&tm, hb, hs, max_replicas).with_context(|| {
-                            format!("no {max_replicas}-replica design fits on {hb}B+{hs}s")
-                        })?
-                    } else {
-                        dse::explore_replicated(&tm, hb, hs, max_replicas)
-                    }
-                }
-                Strategy::Energy { min_throughput, mem_intensity } => {
-                    let e = dse::explore_energy(
-                        &tm,
-                        &self.config.power,
-                        hb,
-                        hs,
-                        min_throughput,
-                        mem_intensity,
-                    )
-                    .with_context(|| {
-                        format!("no configuration reaches the {min_throughput:.2} imgs/s floor")
-                    })?;
-                    ReplicatedDesign::single(full, e.point)
-                }
-            }
+            search_design(&tm, hb, hs, self.strategy, &self.config.power)?
         };
         anyhow::ensure!(
             design.throughput.is_finite() && design.throughput > 0.0,
             "search produced a non-finite throughput"
         );
 
-        let replicas = design
-            .replicas
-            .iter()
-            .map(|r| PlanReplica {
-                big: r.budget.big,
-                small: r.budget.small,
-                pipeline: r.point.pipeline.to_string(),
-                allocation: r.point.allocation.ranges.clone(),
-                stage_times: dse::stage_times(&tm, &r.point.pipeline, &r.point.allocation),
-                throughput: r.point.throughput,
-            })
-            .collect();
+        let replicas = replicas_from_design(&tm, &design);
         Ok(Plan {
             network: net.name.clone(),
             platform: platform.name.clone(),
@@ -1117,6 +1174,81 @@ mod tests {
                 .is_err(),
             "9 replicas cannot fit on 8 cores"
         );
+    }
+
+    #[test]
+    fn replan_on_same_matrix_reproduces_the_design() {
+        let cfg = Config::default();
+        let net = zoo::by_name("squeezenet").unwrap();
+        let tm = TimeMatrix::measured(&cfg.platform, &net);
+        let plan = PlanSpec::new("squeezenet").compile().unwrap();
+        let again = plan.replan_on_matrix(&tm, &cfg.power).unwrap();
+        assert_eq!(plan, again, "replanning on the compile-time matrix must be a no-op");
+    }
+
+    #[test]
+    fn replan_on_throttled_matrix_matches_a_fresh_search() {
+        let cfg = Config::default();
+        let net = zoo::by_name("alexnet").unwrap();
+        let mut tm = TimeMatrix::measured(&cfg.platform, &net);
+        tm.scale_core(CoreType::Big, 2.0);
+        let plan = PlanSpec::new("alexnet").compile().unwrap();
+        let replanned = plan.replan_on_matrix(&tm, &cfg.power).unwrap();
+        let fresh = dse::explore(&tm, 4, 4);
+        assert_eq!(replanned.replicas[0].pipeline, fresh.pipeline.to_string());
+        assert_eq!(replanned.replicas[0].allocation, fresh.allocation.ranges);
+        assert!((replanned.throughput - fresh.throughput).abs() < 1e-12);
+        // The plan identity survives the re-plan.
+        assert_eq!(replanned.network, plan.network);
+        assert_eq!(replanned.strategy, plan.strategy);
+        assert_eq!(replanned.time_source, plan.time_source);
+    }
+
+    #[test]
+    fn replan_rejects_a_matrix_for_another_network() {
+        let cfg = Config::default();
+        let other = zoo::by_name("mobilenet").unwrap();
+        let tm = TimeMatrix::measured(&cfg.platform, &other);
+        let plan = PlanSpec::new("alexnet").compile().unwrap();
+        let err = plan.replan_on_matrix(&tm, &cfg.power).unwrap_err();
+        assert!(err.to_string().contains("alexnet"), "{err}");
+    }
+
+    #[test]
+    fn load_names_the_offending_field_on_schema_mismatch() {
+        let plan = PlanSpec::new("alexnet").compile().unwrap();
+        let good = plan.to_json();
+
+        // Schema-version mismatch must name the version field, not default.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".to_string(), Json::num(99.0));
+        }
+        let err = Plan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("\"version\""), "{err}");
+        assert!(err.contains("99"), "{err}");
+
+        // Unknown strategy tag must name strategy.kind, not fall back to a
+        // default strategy.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "strategy".to_string(),
+                Json::obj(vec![("kind", Json::str("magic"))]),
+            );
+        }
+        let err = Plan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("strategy.kind"), "{err}");
+        assert!(err.contains("magic"), "{err}");
+
+        // Unknown time-source tag must name its field too.
+        let mut j = good;
+        if let Json::Obj(m) = &mut j {
+            m.insert("time_source".to_string(), Json::str("vibes"));
+        }
+        let err = Plan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("time_source"), "{err}");
+        assert!(err.contains("vibes"), "{err}");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::coordinator::{FleetReport, RunReport};
 use crate::simulator::pipeline_sim::FleetSimReport;
+use crate::util::json::Json;
 use crate::util::stats::{self, Summary};
 
 use super::plan::Plan;
@@ -62,6 +63,41 @@ pub struct ReplicaReport {
     pub stages: Vec<StageReport>,
 }
 
+/// One plan hot-swap performed by the online-adaptation controller
+/// ([`crate::adapt`]) during a serve: what drifted, when, and what the
+/// fleet was rebalanced to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptationEvent {
+    /// Clock time of the swap, seconds from serving start (simulated time
+    /// for DES runs, wall time for synthetic deploys).
+    pub at_s: f64,
+    /// Items that had completed before the swap.
+    pub after_images: usize,
+    /// Human-readable disturbance classification from the drift detector
+    /// (e.g. `big-cluster slowdown x2.00`).
+    pub disturbance: String,
+    /// Partition display before the swap (`B4-s2-s2`, `B4 | s4`, …).
+    pub from: String,
+    /// Partition display after the swap.
+    pub to: String,
+    /// The new plan's predicted aggregate Eq. 12 throughput (imgs/s) on the
+    /// recalibrated time matrix.
+    pub predicted_throughput: f64,
+}
+
+impl AdaptationEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_s", Json::num(self.at_s)),
+            ("after_images", Json::num(self.after_images as f64)),
+            ("disturbance", Json::str(&self.disturbance)),
+            ("from", Json::str(&self.from)),
+            ("to", Json::str(&self.to)),
+            ("predicted_throughput", Json::num(self.predicted_throughput)),
+        ])
+    }
+}
+
 /// Unified result of serving a [`Plan`] through any backend.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
@@ -79,6 +115,11 @@ pub struct ServeReport {
     pub predicted_throughput: f64,
     pub latency: Option<LatencyReport>,
     pub replicas: Vec<ReplicaReport>,
+    /// Plan hot-swaps performed mid-run by the adaptation controller, in
+    /// order; empty for non-adaptive serves. When non-empty, `replicas`
+    /// describes the final (post-swap) partition while `images`/`wall_s`/
+    /// `throughput` cover the whole run.
+    pub adaptations: Vec<AdaptationEvent>,
 }
 
 fn latency_from(s: &Summary) -> Option<LatencyReport> {
@@ -127,6 +168,7 @@ impl ServeReport {
             predicted_throughput: plan.throughput,
             latency: latency_from(&fleet.latencies),
             replicas,
+            adaptations: Vec::new(),
         }
     }
 
@@ -169,6 +211,7 @@ impl ServeReport {
             predicted_throughput: plan.throughput,
             latency: latency_from(&report.latencies),
             replicas: vec![replica],
+            adaptations: Vec::new(),
         }
     }
 
@@ -220,6 +263,107 @@ impl ServeReport {
             predicted_throughput: plan.throughput,
             latency,
             replicas,
+            adaptations: Vec::new(),
         }
+    }
+
+    /// JSON shape of the unified report — what `serve --metrics-out`
+    /// captures, including per-stage accounting and the adaptation log.
+    pub fn to_json(&self) -> Json {
+        let mode = match self.mode {
+            ServeMode::Des => Json::obj(vec![("kind", Json::str("des"))]),
+            ServeMode::Synthetic { time_scale } => Json::obj(vec![
+                ("kind", Json::str("synthetic")),
+                ("time_scale", Json::num(time_scale)),
+            ]),
+            ServeMode::Pjrt { serial } => Json::obj(vec![
+                ("kind", Json::str("pjrt")),
+                ("serial", Json::Bool(serial)),
+            ]),
+        };
+        let latency = match &self.latency {
+            None => Json::Null,
+            Some(l) => Json::obj(vec![
+                ("p50", Json::num(l.p50)),
+                ("p95", Json::num(l.p95)),
+                ("p99", Json::num(l.p99)),
+            ]),
+        };
+        let replicas = Json::Arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    let stages = Json::Arr(
+                        r.stages
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("name", Json::str(&s.name)),
+                                    ("items", Json::num(s.items as f64)),
+                                    ("busy_s", Json::num(s.busy_s)),
+                                    ("utilization", Json::num(s.utilization)),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    Json::obj(vec![
+                        ("pipeline", Json::str(&r.pipeline)),
+                        ("allocation", Json::str(&r.allocation)),
+                        ("dispatched", Json::num(r.dispatched as f64)),
+                        ("throughput", Json::num(r.throughput)),
+                        ("utilization", Json::num(r.utilization)),
+                        (
+                            "bottleneck",
+                            r.bottleneck.map_or(Json::Null, |b| Json::num(b as f64)),
+                        ),
+                        ("stages", stages),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("mode", mode),
+            ("network", Json::str(&self.network)),
+            ("images", Json::num(self.images as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("throughput", Json::num(self.throughput)),
+            ("predicted_throughput", Json::num(self.predicted_throughput)),
+            ("latency", latency),
+            ("replicas", replicas),
+            (
+                "adaptations",
+                Json::Arr(self.adaptations.iter().map(AdaptationEvent::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::PlanSpec;
+
+    #[test]
+    fn serve_report_json_is_parseable_and_complete() {
+        let plan = PlanSpec::new("squeezenet").compile().unwrap();
+        let mut report = plan.simulate(100, 2).unwrap();
+        report.adaptations.push(AdaptationEvent {
+            at_s: 1.5,
+            after_images: 40,
+            disturbance: "big-cluster slowdown x2.00".into(),
+            from: "B4-s2-s2".into(),
+            to: "B2-s4".into(),
+            predicted_throughput: 12.0,
+        });
+        let text = report.to_json().to_string();
+        let j = Json::parse(&text).expect("serve report JSON reparses");
+        assert_eq!(j.req("network").unwrap().as_str(), Some("squeezenet"));
+        assert_eq!(j.req("mode").unwrap().req("kind").unwrap().as_str(), Some("des"));
+        let adap = j.req("adaptations").unwrap().as_arr().unwrap();
+        assert_eq!(adap.len(), 1);
+        assert_eq!(adap[0].req("to").unwrap().as_str(), Some("B2-s4"));
+        assert!(!j.req("replicas").unwrap().as_arr().unwrap().is_empty());
+        let rep = &j.req("replicas").unwrap().as_arr().unwrap()[0];
+        assert!(rep.req("stages").unwrap().as_arr().is_some());
     }
 }

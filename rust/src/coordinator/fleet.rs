@@ -23,7 +23,7 @@
 //! [`crate::api::Plan::deploy`], and [`FleetReport`] converts into the
 //! unified [`crate::api::ServeReport`] shape.
 //!
-//! Each replica is an ordinary [`run_pipeline`] chain built from the same
+//! Each replica is an ordinary [`run_pipeline`](crate::coordinator::run_pipeline) chain built from the same
 //! [`StageSpec`] machinery as single-pipeline serving; the dispatcher
 //! tracks per-replica outstanding items (dispatched minus completed, the
 //! completion observed by wrapping the replica's last stage) and routes
@@ -56,10 +56,11 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
-use super::metrics::RunReport;
-use super::pipeline::{run_pipeline, Ready, SetupFailGuard, StageSpec};
+use super::metrics::{summary_to_json, RunReport, StageObserver};
+use super::pipeline::{run_pipeline_observed, Ready, SetupFailGuard, StageSpec};
 use super::queue::bounded;
 
 /// Fleet-level run report: merged aggregates plus the per-replica
@@ -70,7 +71,7 @@ pub struct FleetReport {
     pub images: usize,
     /// Wall-clock time from when every replica finished stage setup (PJRT
     /// client creation + executable compilation is excluded, exactly as in
-    /// [`run_pipeline`]'s report) until every replica drained.
+    /// [`run_pipeline`](crate::coordinator::run_pipeline)'s report) until every replica drained.
     pub wall: Duration,
     /// Per-image latencies merged across replicas. Each latency is measured
     /// from the moment the item entered its replica's pipeline; time spent
@@ -110,6 +111,25 @@ impl FleetReport {
                     .fold(0.0, f64::max)
             })
             .collect()
+    }
+
+    /// JSON shape of the fleet report (aggregates plus nested per-replica
+    /// [`RunReport::to_json`] blocks) — what `serve --metrics-out` captures.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("images", Json::num(self.images as f64)),
+            ("wall_s", Json::num(self.wall.as_secs_f64())),
+            ("throughput", Json::num(self.throughput())),
+            (
+                "dispatched",
+                Json::Arr(self.dispatched.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("latency", summary_to_json(&self.latencies)),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(RunReport::to_json).collect()),
+            ),
+        ])
     }
 
     /// Human-readable fleet summary followed by indented per-replica blocks.
@@ -235,7 +255,7 @@ fn instrument_setup<T: Send + 'static>(
 /// Run `source` items through a fleet of replicated pipelines.
 ///
 /// * `replicas` — one stage list per replica (each spec's factory runs
-///   inside its own stage thread, exactly as in [`run_pipeline`]).
+///   inside its own stage thread, exactly as in [`run_pipeline`](crate::coordinator::run_pipeline)).
 /// * `queue_cap` — inter-stage buffer capacity inside every replica.
 /// * `admission_cap` — capacity of the shared admission queue; when every
 ///   replica is saturated this bounds how much work the fleet accepts
@@ -248,12 +268,31 @@ fn instrument_setup<T: Send + 'static>(
 /// # Panics
 ///
 /// Panics if `replicas` is empty, any replica has no stages, or a stage
-/// thread panics (mirroring [`run_pipeline`]).
+/// thread panics (mirroring [`run_pipeline`](crate::coordinator::run_pipeline)).
 pub fn run_fleet<T, I>(
     replicas: Vec<Vec<StageSpec<T>>>,
     queue_cap: usize,
     admission_cap: usize,
     source: I,
+) -> (Vec<T>, FleetReport)
+where
+    T: Send + 'static,
+    I: IntoIterator<Item = T>,
+{
+    run_fleet_observed(replicas, queue_cap, admission_cap, source, None)
+}
+
+/// [`run_fleet`] with a per-item service-time tap: every stage worker of
+/// every replica reports each item's measured service time to the observer
+/// under its replica index, exactly as in
+/// [`run_pipeline_observed`](crate::coordinator::run_pipeline_observed).
+/// `None` behaves exactly like [`run_fleet`].
+pub fn run_fleet_observed<T, I>(
+    replicas: Vec<Vec<StageSpec<T>>>,
+    queue_cap: usize,
+    admission_cap: usize,
+    source: I,
+    observer: Option<Arc<dyn StageObserver>>,
 ) -> (Vec<T>, FleetReport)
 where
     T: Send + 'static,
@@ -286,10 +325,15 @@ where
             &setup,
         );
         let setup = setup.clone();
+        let obs = observer.clone().map(|o| (o, i));
         let handle = thread::spawn(move || {
             let mut guard = SetupFailGuard { ready: setup, armed: true };
-            let result =
-                run_pipeline(stages, queue_cap, std::iter::from_fn(move || rx.recv()));
+            let result = run_pipeline_observed(
+                stages,
+                queue_cap,
+                std::iter::from_fn(move || rx.recv()),
+                obs,
+            );
             // run_pipeline returning means every stage completed setup.
             guard.armed = false;
             result

@@ -1,9 +1,40 @@
 //! Run metrics: throughput, per-image latency distribution, per-stage
-//! utilization — what the paper reports per experiment (§VII).
+//! utilization — what the paper reports per experiment (§VII) — plus the
+//! [`StageObserver`] hook that streams per-item service times out of the
+//! stage workers (consumed by the online-adaptation telemetry,
+//! [`crate::adapt::Telemetry`]) and JSON serialization for all report
+//! shapes (`serve --metrics-out`).
 
 use std::time::Duration;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Observer of per-item stage service times, called by the stage worker
+/// thread after each processed item. Implementations must be cheap and
+/// non-blocking relative to stage service times — the call sits on the
+/// pipeline's hot path ([`crate::coordinator::run_pipeline_observed`]).
+pub trait StageObserver: Send + Sync {
+    /// `service_s` is the item's measured service time in seconds on stage
+    /// `stage` of replica `replica` (0 for single-pipeline runs).
+    fn on_item(&self, replica: usize, stage: usize, service_s: f64);
+}
+
+/// JSON shape for a latency [`Summary`]: `{count}` when empty, otherwise
+/// `{count, mean, p50, p95, p99, max}` (seconds).
+pub fn summary_to_json(s: &Summary) -> Json {
+    if s.count() == 0 {
+        return Json::obj(vec![("count", Json::num(0.0))]);
+    }
+    Json::obj(vec![
+        ("count", Json::num(s.count() as f64)),
+        ("mean", Json::num(s.mean())),
+        ("p50", Json::num(s.p50())),
+        ("p95", Json::num(s.p95())),
+        ("p99", Json::num(s.p99())),
+        ("max", Json::num(s.max())),
+    ])
+}
 
 /// Per-stage accounting, filled by the stage worker thread.
 #[derive(Debug, Clone, Default)]
@@ -24,6 +55,16 @@ impl StageMetrics {
         }
         self.busy.as_secs_f64() / wall.as_secs_f64()
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("items", Json::num(self.items as f64)),
+            ("busy_s", Json::num(self.busy.as_secs_f64())),
+            ("idle_in_s", Json::num(self.idle_in.as_secs_f64())),
+            ("blocked_out_s", Json::num(self.blocked_out.as_secs_f64())),
+        ])
+    }
 }
 
 /// Whole-run report.
@@ -38,6 +79,20 @@ pub struct RunReport {
 impl RunReport {
     pub fn throughput(&self) -> f64 {
         self.images as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let tp = if self.wall.is_zero() { 0.0 } else { self.throughput() };
+        Json::obj(vec![
+            ("images", Json::num(self.images as f64)),
+            ("wall_s", Json::num(self.wall.as_secs_f64())),
+            ("throughput", Json::num(tp)),
+            ("latency", summary_to_json(&self.latencies)),
+            (
+                "stages",
+                Json::Arr(self.stages.iter().map(StageMetrics::to_json).collect()),
+            ),
+        ])
     }
 
     pub fn render(&self) -> String {
@@ -99,5 +154,45 @@ mod tests {
         let s = r.render();
         assert!(s.contains("throughput=2.00"));
         assert!(s.contains("stage0"));
+    }
+
+    #[test]
+    fn run_report_serializes_to_parseable_json() {
+        let mut lat = Summary::new();
+        lat.record(0.010);
+        let r = RunReport {
+            images: 1,
+            wall: Duration::from_secs(2),
+            latencies: lat,
+            stages: vec![StageMetrics {
+                name: "s0".into(),
+                items: 1,
+                busy: Duration::from_millis(10),
+                ..Default::default()
+            }],
+        };
+        let text = r.to_json().to_string();
+        let j = Json::parse(&text).expect("report JSON reparses");
+        assert_eq!(j.req("images").unwrap().as_usize(), Some(1));
+        assert!((j.req("wall_s").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+        assert_eq!(j.req("latency").unwrap().req("count").unwrap().as_usize(), Some(1));
+        let stages = j.req("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages[0].req("name").unwrap().as_str(), Some("s0"));
+    }
+
+    #[test]
+    fn zero_wall_report_serializes_finite_numbers() {
+        let r = RunReport {
+            images: 0,
+            wall: Duration::ZERO,
+            latencies: Summary::new(),
+            stages: Vec::new(),
+        };
+        let j = r.to_json();
+        assert_eq!(j.req("throughput").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.req("latency").unwrap().req("count").unwrap().as_usize(), Some(0));
+        // An empty-latency summary must not leak non-finite stats (inf/nan
+        // are not representable in JSON).
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 }

@@ -24,9 +24,12 @@ pub mod server;
 pub mod stream;
 
 pub use batcher::{Batcher, Job};
-pub use fleet::{run_fleet, synthetic_fleet, FleetReport};
-pub use metrics::{RunReport, StageMetrics};
-pub use pipeline::{run_pipeline, run_serial, StageFactory, StageSpec};
+pub use fleet::{run_fleet, run_fleet_observed, synthetic_fleet, FleetReport};
+pub use metrics::{summary_to_json, RunReport, StageMetrics, StageObserver};
+pub use pipeline::{
+    run_pipeline, run_pipeline_observed, run_serial, PipelineObserver, StageFactory,
+    StageSpec,
+};
 pub use server::{
     balance_by_macs, balance_by_times, profile_layer_times, serve_fleet,
     serve_layerwise_serial, serve_pipelined, serve_serial,

@@ -15,8 +15,14 @@ use std::time::Instant;
 
 use crate::util::stats::Summary;
 
-use super::metrics::{RunReport, StageMetrics};
+use super::metrics::{RunReport, StageMetrics, StageObserver};
 use super::queue::{bounded, Receiver};
+
+/// Optional per-item service-time tap for a pipeline run: the observer plus
+/// the replica index it should be reported under (0 for standalone
+/// pipelines; [`crate::coordinator::run_fleet_observed`] passes each
+/// replica's position).
+pub type PipelineObserver = Option<(Arc<dyn StageObserver>, usize)>;
 
 /// Readiness latch for stage setup (also used fleet-wide by
 /// `coordinator::fleet`). Unlike `std::sync::Barrier`, it can be poisoned:
@@ -131,6 +137,25 @@ where
     T: Send + 'static,
     I: IntoIterator<Item = T>,
 {
+    run_pipeline_observed(stages, queue_cap, source, None)
+}
+
+/// [`run_pipeline`] with a per-item service-time tap: after each processed
+/// item, the stage worker reports the item's measured service time to the
+/// observer (`observer.0`) under replica index `observer.1`. This is how
+/// the online-adaptation telemetry ([`crate::adapt::Telemetry`]) sees the
+/// live per-stage times without the executor knowing anything about
+/// adaptation. `None` behaves exactly like [`run_pipeline`].
+pub fn run_pipeline_observed<T, I>(
+    stages: Vec<StageSpec<T>>,
+    queue_cap: usize,
+    source: I,
+    observer: PipelineObserver,
+) -> (Vec<T>, RunReport)
+where
+    T: Send + 'static,
+    I: IntoIterator<Item = T>,
+{
     assert!(!stages.is_empty());
     let n = stages.len();
 
@@ -152,6 +177,7 @@ where
         let rx_in: Receiver<Tagged<T>> = prev_rx;
         let is_last = i == n - 1;
         let ready = ready.clone();
+        let obs = observer.clone();
         let handle = thread::spawn(move || -> StageMetrics {
             let mut guard = SetupFailGuard { ready: ready.clone(), armed: true };
             let mut f = (stage.factory)();
@@ -166,8 +192,12 @@ where
 
                 let t1 = Instant::now();
                 let out = f(tagged.item);
-                m.busy += t1.elapsed();
+                let service = t1.elapsed();
+                m.busy += service;
                 m.items += 1;
+                if let Some((o, replica)) = &obs {
+                    o.on_item(*replica, i, service.as_secs_f64());
+                }
 
                 let t2 = Instant::now();
                 if tx.send(Tagged { item: out, admitted: tagged.admitted }).is_err() {
@@ -325,6 +355,29 @@ mod tests {
         let (out, report) = run_pipeline(vec![sleep_stage("a", 1)], 1, Vec::<u64>::new());
         assert!(out.is_empty());
         assert_eq!(report.images, 0);
+    }
+
+    #[test]
+    fn observer_sees_every_item_on_every_stage() {
+        use super::super::metrics::StageObserver;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Counter(Vec<AtomicUsize>);
+        impl StageObserver for Counter {
+            fn on_item(&self, replica: usize, stage: usize, service_s: f64) {
+                assert_eq!(replica, 3);
+                assert!(service_s >= 0.0);
+                self.0[stage].fetch_add(1, Ordering::SeqCst);
+            }
+        }
+
+        let counter = Arc::new(Counter(vec![AtomicUsize::new(0), AtomicUsize::new(0)]));
+        let obs: Arc<dyn StageObserver> = counter.clone();
+        let stages = vec![sleep_stage("a", 0), sleep_stage("b", 0)];
+        let (_, report) = run_pipeline_observed(stages, 2, 0..12u64, Some((obs, 3)));
+        assert_eq!(report.images, 12);
+        assert_eq!(counter.0[0].load(Ordering::SeqCst), 12);
+        assert_eq!(counter.0[1].load(Ordering::SeqCst), 12);
     }
 
     #[test]

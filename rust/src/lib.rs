@@ -26,13 +26,18 @@
 //! [`api`] facade: a [`api::PlanSpec`] compiles to a serializable
 //! [`api::Plan`] artifact that can be simulated ([`api::Plan::simulate`])
 //! or deployed ([`api::Plan::deploy`]) anywhere, and the CLI subcommands
-//! (`pipeit plan / serve / simulate`) are thin wrappers over it.
+//! (`pipeit plan / serve / simulate`) are thin wrappers over it. At
+//! runtime the [`adapt`] subsystem closes the loop: per-stage telemetry
+//! from the running fleet feeds a drift detector that recalibrates the
+//! time matrix and hot-swaps the partition when the hardware stops
+//! behaving like the model (`pipeit serve --adapt`).
 //!
 //! Architecture details live in `DESIGN.md`; the quickstart and the
 //! paper-to-module map live in `README.md`.
 
 #![deny(rustdoc::broken_intra_doc_links)]
 
+pub mod adapt;
 pub mod api;
 pub mod baselines;
 pub mod cnn;

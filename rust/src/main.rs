@@ -12,13 +12,16 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use pipeit::adapt::{self, AdaptOptions, ClusterThrottle, DriftConfig};
 use pipeit::api::{DeployOptions, Plan, PlanSpec, Strategy, TimeSource};
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::dse;
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
 use pipeit::reports::{render_serve, Reporter};
+use pipeit::simulator::platform::CoreType;
 use pipeit::util::cli::Args;
+use pipeit::util::json::Json;
 use pipeit::util::table::{f, Table};
 
 const USAGE: &str = "\
@@ -44,17 +47,26 @@ USAGE: pipeit <plan|serve|simulate|explore|predict|count|tables> [options]
   count      [--net N] [--max-replicas 4]      design-space sizes (Eq. 1-2 + fleet)
   serve      --net N [--replicas 1] [--images 60] [--queue-cap 2]
              [--time-scale 0.1]                simulated-time fleet serving
+  serve      --net N|--plan plan.json --adapt [--adapt-interval 50]
+             [--drift-threshold 0.35] [--throttle AT:FACTOR[:big|small][,..]]
+                                               closed-loop adaptive serving:
+                                               telemetry -> drift -> recalibrate
+                                               -> re-plan -> hot-swap; --throttle
+                                               without --adapt = baseline run
+                                               under the same disturbance
   serve      --artifacts artifacts/pipenet_tiny [--replicas 1] [--images 50]
              [--batch 1] [--stages 3] [--queue-cap 2] [--serial] [--seed 7]
                                                real PJRT serving (needs --features pjrt)
   tables     [--platform F]                    regenerate every paper table & figure
+
+every serve/simulate form also takes --metrics-out metrics.json
 
 networks: alexnet googlenet mobilenet resnet50 squeezenet";
 
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["predicted", "serial", "measured", "replicated", "profile"],
+        &["predicted", "serial", "measured", "replicated", "profile", "adapt"],
     )?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
@@ -92,6 +104,7 @@ fn main() -> Result<()> {
             print!("{}", plan.summary());
             let report = plan.simulate(images, cap)?;
             print!("{}", render_serve(&report));
+            write_metrics(&args, &report.to_json())?;
         }
         "count" => count(&args, &cfg)?,
         "serve" => {
@@ -100,10 +113,15 @@ fn main() -> Result<()> {
             if let Some(path) = args.get("plan") {
                 reject_compile_flags(&args)?;
                 let plan = Plan::load(Path::new(path))?;
-                print!("{}", plan.summary());
-                let report = plan.deploy(&deploy_opts(&args)?)?;
-                println!();
-                print!("{}", render_serve(&report));
+                if args.has_flag("adapt") || args.get("throttle").is_some() {
+                    run_adaptive(plan, &cfg, &args)?;
+                } else {
+                    print!("{}", plan.summary());
+                    let report = plan.deploy(&deploy_opts(&args)?)?;
+                    println!();
+                    print!("{}", render_serve(&report));
+                    write_metrics(&args, &report.to_json())?;
+                }
             } else if args.get("artifacts").is_some() {
                 serve_artifacts(&args, replicas)?;
             } else if args.get("net").is_some() {
@@ -145,6 +163,108 @@ fn reject_compile_flags(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Write a metrics JSON artifact when `--metrics-out` was given.
+fn write_metrics(args: &Args, json: &Json) -> Result<()> {
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, format!("{json}\n"))
+            .with_context(|| format!("writing {path}"))?;
+        println!("metrics    : {path}");
+    }
+    Ok(())
+}
+
+/// `--throttle AT:FACTOR[:big|small][,...]` — scripted disturbances.
+fn parse_throttles(args: &Args) -> Result<Vec<ClusterThrottle>> {
+    args.get_list("throttle")
+        .into_iter()
+        .map(ClusterThrottle::parse)
+        .collect()
+}
+
+/// Closed-loop adaptive serving (`serve --adapt`), and — with `--throttle`
+/// but no `--adapt` — the non-adaptive baseline under the same disturbance
+/// (the comparison the throttle-recovery acceptance criterion is stated
+/// against).
+fn run_adaptive(plan: Plan, cfg: &Config, args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        plan.artifacts.is_none(),
+        "--adapt/--throttle apply to big.LITTLE plans (zoo networks); artifact \
+         serving has no cluster time matrix to re-plan from"
+    );
+    anyhow::ensure!(
+        plan.platform == cfg.platform.name
+            && plan.big == cfg.platform.big.cores
+            && plan.small == cfg.platform.small.cores,
+        "plan was compiled for {} ({}B+{}s) but the current platform is {} \
+         ({}B+{}s); pass the matching --platform file",
+        plan.platform,
+        plan.big,
+        plan.small,
+        cfg.platform.name,
+        cfg.platform.big.cores,
+        cfg.platform.small.cores
+    );
+    let net = zoo::by_name(&plan.network)
+        .with_context(|| format!("unknown network {:?}", plan.network))?;
+    let tm = match plan.time_source {
+        TimeSource::Measured => TimeMatrix::measured(&cfg.platform, &net),
+        TimeSource::Predicted => {
+            let model = PerfModel::fit(&cfg.platform);
+            TimeMatrix::predicted(&cfg.platform, &model, &net)
+        }
+        TimeSource::ProfiledArtifacts => anyhow::bail!(
+            "--adapt applies to zoo-network plans (measured or predicted times)"
+        ),
+    };
+    let script = parse_throttles(args)?;
+    let adapt_enabled = args.has_flag("adapt");
+    let defaults = AdaptOptions::default();
+    let threshold = args.get_f64("drift-threshold", defaults.drift.threshold)?;
+    let opts = AdaptOptions {
+        interval: args.get_usize("adapt-interval", defaults.interval)?,
+        drift: DriftConfig {
+            // Baseline (--throttle without --adapt): a threshold no honest
+            // ratio reaches, so the detector never confirms a swap.
+            threshold: if adapt_enabled { threshold } else { 1e12 },
+            ..defaults.drift
+        },
+        ..defaults
+    };
+    let deploy = deploy_opts(args)?;
+
+    print!("{}", plan.summary());
+    for t in &script {
+        println!(
+            "throttle   : t={:.2}s {}-cluster x{:.2}",
+            t.at,
+            if t.core == CoreType::Big { "big" } else { "small" },
+            t.factor
+        );
+    }
+    if !adapt_enabled {
+        println!("adaptation : disabled (baseline run; pass --adapt to close the loop)");
+    }
+    let out = adapt::deploy_adaptive(&plan, &tm, &cfg.power, &script, &opts, &deploy)?;
+    println!();
+    print!("{}", render_serve(&out.report));
+    println!("adaptations: {}", out.report.adaptations.len());
+    if !out.report.adaptations.is_empty() {
+        println!(
+            "post-swap  : {:.2} imgs/s sustained over {} imgs on {}",
+            out.post_swap_throughput(),
+            out.post_swap_images,
+            out.final_plan.partition_display()
+        );
+    }
+    write_metrics(
+        args,
+        &Json::obj(vec![
+            ("serve", out.report.to_json()),
+            ("telemetry", out.final_snapshot.to_json()),
+        ]),
+    )
 }
 
 /// Deploy knobs shared by every `serve` form.
@@ -336,6 +456,9 @@ fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
         .platform(cfg.clone())
         .strategy(Strategy::Replicated { max_replicas: replicas, exact: true })
         .compile()?;
+    if args.has_flag("adapt") || args.get("throttle").is_some() {
+        return run_adaptive(plan, cfg, args);
+    }
     println!(
         "simulated-time serving: {} on {} ({}B+{}s), {} replicas",
         plan.network, cfg.platform.name, hb, hs, replicas
@@ -350,12 +473,17 @@ fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
         "predicted  : {:.2} imgs/s aggregate (DES, unscaled Eq. 10 times)",
         sim.throughput
     );
+    write_metrics(args, &report.to_json())?;
     Ok(())
 }
 
 /// Real PJRT serving over AOT artifacts (requires `--features pjrt`).
 fn serve_artifacts(args: &Args, replicas: usize) -> Result<()> {
     let dir = args.get("artifacts").context("--artifacts is required")?;
+    anyhow::ensure!(
+        !args.has_flag("adapt") && args.get("throttle").is_none(),
+        "--adapt/--throttle apply to --net or --plan serving (big.LITTLE plans)"
+    );
     if args.has_flag("serial") {
         anyhow::ensure!(
             replicas == 1,
@@ -383,5 +511,6 @@ fn serve_artifacts(args: &Args, replicas: usize) -> Result<()> {
     };
     let report = plan.deploy(&opts)?;
     print!("{}", render_serve(&report));
+    write_metrics(args, &report.to_json())?;
     Ok(())
 }

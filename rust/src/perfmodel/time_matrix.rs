@@ -75,6 +75,43 @@ impl TimeMatrix {
             .map(|ci| self.range(0, self.num_layers(), ci) / self.num_layers() as f64)
             .collect()
     }
+
+    // ---- online recalibration (crate::adapt) ----------------------------
+
+    /// Multiply every layer's time on the `(core, count)` configuration by
+    /// `factor` — online recalibration of a single stage configuration from
+    /// observed service times ([`crate::adapt::Calibration`]). Returns
+    /// `false` (and changes nothing) when the platform has no such config.
+    pub fn scale_config(&mut self, core: CoreType, count: usize, factor: f64) -> bool {
+        assert!(factor.is_finite() && factor > 0.0, "scale factor must be positive");
+        let Some(ci) = self.config_index(core, count) else {
+            return false;
+        };
+        for row in &mut self.t {
+            row[ci] *= factor;
+        }
+        true
+    }
+
+    /// Multiply every layer's time on every `core`-cluster configuration by
+    /// `factor` — a whole-cluster disturbance (thermal throttling, DVFS
+    /// governor) observed at runtime, or the injected ground truth in
+    /// throttle-recovery tests.
+    pub fn scale_core(&mut self, core: CoreType, factor: f64) {
+        assert!(factor.is_finite() && factor > 0.0, "scale factor must be positive");
+        let cols: Vec<usize> = self
+            .configs
+            .iter()
+            .enumerate()
+            .filter(|(_, &(c, _))| c == core)
+            .map(|(ci, _)| ci)
+            .collect();
+        for row in &mut self.t {
+            for &ci in &cols {
+                row[ci] *= factor;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +145,39 @@ mod tests {
         let manual: f64 = (2..5).map(|j| tm.layer(j, 0)).sum();
         assert!((tm.range(2, 5, 0) - manual).abs() < 1e-15);
         assert_eq!(tm.range(3, 3, 0), 0.0);
+    }
+
+    #[test]
+    fn scale_config_touches_only_that_column() {
+        let (p, _) = &*SETUP;
+        let net = zoo::squeezenet();
+        let mut tm = TimeMatrix::measured(p, &net);
+        let base = tm.clone();
+        assert!(tm.scale_config(CoreType::Big, 2, 1.5));
+        let b2 = tm.config_index(CoreType::Big, 2).unwrap();
+        for j in 0..tm.num_layers() {
+            for ci in 0..tm.configs.len() {
+                let expect = if ci == b2 { 1.5 * base.layer(j, ci) } else { base.layer(j, ci) };
+                assert!((tm.layer(j, ci) - expect).abs() < 1e-15);
+            }
+        }
+        // Unknown config: untouched, reported.
+        assert!(!tm.scale_config(CoreType::Big, 99, 2.0));
+    }
+
+    #[test]
+    fn scale_core_scales_every_cluster_column() {
+        let (p, _) = &*SETUP;
+        let net = zoo::alexnet();
+        let mut tm = TimeMatrix::measured(p, &net);
+        let base = tm.clone();
+        tm.scale_core(CoreType::Small, 2.0);
+        for j in 0..tm.num_layers() {
+            for (ci, &(core, _)) in base.configs.iter().enumerate() {
+                let f = if core == CoreType::Small { 2.0 } else { 1.0 };
+                assert!((tm.layer(j, ci) - f * base.layer(j, ci)).abs() < 1e-15);
+            }
+        }
     }
 
     #[test]

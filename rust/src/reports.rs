@@ -63,6 +63,15 @@ pub fn render_serve(r: &ServeReport) -> String {
             l.p99 * 1e3,
         ));
     }
+    for a in &r.adaptations {
+        s.push_str(&format!(
+            "adapt      : t={:.2}s after {} imgs  {}  {} -> {}  (pred {:.2} imgs/s)\n",
+            a.at_s, a.after_images, a.disturbance, a.from, a.to, a.predicted_throughput,
+        ));
+    }
+    if !r.adaptations.is_empty() {
+        s.push_str("(replica detail below describes the final partition)\n");
+    }
     for (i, rep) in r.replicas.iter().enumerate() {
         let bottleneck = rep
             .bottleneck

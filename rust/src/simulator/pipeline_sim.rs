@@ -10,6 +10,12 @@
 //! replicated pipelines behind a shared least-outstanding-work dispatcher,
 //! mirroring [`crate::coordinator::run_fleet`] so that design-time
 //! predictions and wall-clock fleet runs stay comparable.
+//!
+//! The *disturbance layer* ([`ThrottleEvent`], [`simulate_disturbed`],
+//! [`simulate_replicated_disturbed`]) injects scripted service-time shifts
+//! — e.g. a thermal throttle scaling one cluster's stages by 2× at time `t`
+//! — so the online-adaptation control loop ([`crate::adapt`]) is testable
+//! deterministically in the DES before it ever touches wall-clock threads.
 
 /// Result of simulating a stream through a pipeline.
 #[derive(Debug, Clone)]
@@ -37,15 +43,84 @@ pub struct SimReport {
 ///
 /// where `d[i][s]` is the departure time of item `i` from stage `s`.
 pub fn simulate(stage_times: &[f64], images: usize, queue_cap: usize) -> SimReport {
+    // The undisturbed run is exactly the disturbed recurrence with no
+    // events active (the empty factor product is 1.0 and `t * 1.0 == t`
+    // bitwise), so one implementation serves both.
+    simulate_disturbed(stage_times, images, queue_cap, &[], 0.0, 0, |_, _| {})
+}
+
+/// Closed-form steady-state throughput (paper Eq. 12).
+pub fn steady_state_throughput(stage_times: &[f64]) -> f64 {
+    1.0 / stage_times.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// A scripted service-time disturbance: from simulation time `at` onward,
+/// the service times of the stages in `scope` are multiplied by `factor`.
+/// Events compose multiplicatively (two active 2× events make 4×); a
+/// `factor < 1.0` models a throttle being lifted or a frequency boost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThrottleEvent {
+    /// Absolute simulation time (s) at which the factor takes effect. An
+    /// item's service time is scaled iff the item *starts* the stage at or
+    /// after `at` (service is not preempted mid-item, matching how DVFS
+    /// transitions land between kernel invocations on the board).
+    pub at: f64,
+    /// Multiplier applied to affected service times from `at` onward.
+    pub factor: f64,
+    /// Affected `(replica, stage)` pairs; an empty scope means every stage
+    /// of every replica (a machine-wide disturbance).
+    pub scope: Vec<(usize, usize)>,
+}
+
+impl ThrottleEvent {
+    fn applies(&self, replica: usize, stage: usize) -> bool {
+        self.scope.is_empty() || self.scope.contains(&(replica, stage))
+    }
+}
+
+/// Combined multiplier over `events` active at absolute time `t` for stage
+/// `stage` of replica `replica`.
+fn disturbance_factor(events: &[ThrottleEvent], replica: usize, stage: usize, t: f64) -> f64 {
+    events
+        .iter()
+        .filter(|e| e.at <= t && e.applies(replica, stage))
+        .map(|e| e.factor)
+        .product()
+}
+
+/// [`simulate`] with scripted disturbances: the pipeline starts at absolute
+/// simulation time `t0` (events carry absolute times, so chunked callers
+/// can resume mid-script) and item service times are scaled by the events
+/// active when the item starts its stage. `replica` selects which scope
+/// entries apply (0 for a standalone pipeline). `on_service(stage,
+/// service_s)` is called once per item per stage with the *disturbed*
+/// service time — the DES analogue of
+/// [`crate::coordinator::StageObserver`], feeding adaptation telemetry.
+///
+/// With no events this reproduces [`simulate`] exactly. `bottleneck` and
+/// `steady_state_throughput` in the report are computed from the *base*
+/// times (the design-time belief); `utilization` reflects actual disturbed
+/// busy time.
+pub fn simulate_disturbed(
+    stage_times: &[f64],
+    images: usize,
+    queue_cap: usize,
+    events: &[ThrottleEvent],
+    t0: f64,
+    replica: usize,
+    mut on_service: impl FnMut(usize, f64),
+) -> SimReport {
     assert!(!stage_times.is_empty());
     assert!(queue_cap >= 1);
     assert!(images >= 1);
     let p = stage_times.len();
 
-    // dep[s] holds departure times of the last items per stage; we keep the
-    // full history for latency/utilization accounting (images are small in
-    // every experiment: 50-10k).
+    // dep[s] holds departure times per stage; full history kept for
+    // latency/utilization accounting (images are small in every
+    // experiment: 50-10k).
     let mut dep = vec![vec![0.0f64; images]; p];
+    let mut svc0 = vec![0.0f64; images];
+    let mut busy = vec![0.0f64; p];
     for i in 0..images {
         for s in 0..p {
             let arrive = if s == 0 {
@@ -63,28 +138,26 @@ pub fn simulate(stage_times: &[f64], images: usize, queue_cap: usize) -> SimRepo
             } else {
                 0.0
             };
-            let start = if s == 0 {
-                arrive.max(unblock)
-            } else {
-                arrive.max(unblock)
-            };
-            dep[s][i] = start + stage_times[s];
+            let start = arrive.max(unblock);
+            let service =
+                stage_times[s] * disturbance_factor(events, replica, s, t0 + start);
+            if s == 0 {
+                svc0[i] = service;
+            }
+            busy[s] += service;
+            on_service(s, service);
+            dep[s][i] = start + service;
         }
     }
 
     let makespan = dep[p - 1][images - 1];
     let latencies: Vec<f64> = (0..images)
         .map(|i| {
-            let enter = if i == 0 { 0.0 } else { dep[0][i - 1] - stage_times[0] };
+            let enter = if i == 0 { 0.0 } else { dep[0][i - 1] - svc0[i - 1] };
             dep[p - 1][i] - enter.max(0.0)
         })
         .collect();
-
-    let utilization: Vec<f64> = stage_times
-        .iter()
-        .map(|t| (t * images as f64) / makespan)
-        .collect();
-
+    let utilization: Vec<f64> = busy.iter().map(|b| b / makespan).collect();
     let (bottleneck, bt) = stage_times
         .iter()
         .enumerate()
@@ -100,11 +173,6 @@ pub fn simulate(stage_times: &[f64], images: usize, queue_cap: usize) -> SimRepo
         utilization,
         latencies,
     }
-}
-
-/// Closed-form steady-state throughput (paper Eq. 12).
-pub fn steady_state_throughput(stage_times: &[f64]) -> f64 {
-    1.0 / stage_times.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
 /// Result of simulating a stream through a *replicated* fleet of pipelines
@@ -181,6 +249,29 @@ pub fn simulate_replicated(
     images: usize,
     queue_cap: usize,
 ) -> FleetSimReport {
+    // As with `simulate`, the undisturbed fleet is the disturbed one with
+    // no events active — one dispatch + recurrence implementation.
+    simulate_replicated_disturbed(replica_stage_times, images, queue_cap, &[], 0.0, |_, _, _| {})
+}
+
+/// [`simulate_replicated`] with scripted disturbances — the DES testbed of
+/// the online-adaptation loop ([`crate::adapt::simulate_adaptive`]).
+///
+/// Dispatch uses the *base* cycle times (the dispatcher has no oracle view
+/// of future throttles, matching the wall-clock fleet's
+/// least-outstanding-work policy); each replica's stream is then simulated
+/// with [`simulate_disturbed`] starting at absolute time `t0`.
+/// `on_service(replica, stage, service_s)` is called once per item per
+/// stage with the disturbed service time. With no events this reproduces
+/// [`simulate_replicated`] exactly.
+pub fn simulate_replicated_disturbed(
+    replica_stage_times: &[Vec<f64>],
+    images: usize,
+    queue_cap: usize,
+    events: &[ThrottleEvent],
+    t0: f64,
+    mut on_service: impl FnMut(usize, usize, f64),
+) -> FleetSimReport {
     assert!(!replica_stage_times.is_empty());
     assert!(images >= 1);
     let r = replica_stage_times.len();
@@ -203,11 +294,14 @@ pub fn simulate_replicated(
     let per_replica: Vec<SimReport> = replica_stage_times
         .iter()
         .zip(&dispatched)
-        .map(|(times, &n)| {
+        .enumerate()
+        .map(|(i, (times, &n))| {
             if n == 0 {
                 idle_sim_report(times)
             } else {
-                simulate(times, n, queue_cap)
+                simulate_disturbed(times, n, queue_cap, events, t0, i, |s, dt| {
+                    on_service(i, s, dt)
+                })
             }
         })
         .collect();
@@ -364,6 +458,83 @@ mod tests {
             (fleet / solo - 2.0).abs() < 0.05,
             "fleet {fleet:.2} vs solo {solo:.2}"
         );
+    }
+
+    #[test]
+    fn disturbed_without_events_matches_simulate_exactly() {
+        let times = [0.03, 0.05, 0.02];
+        let plain = simulate(&times, 300, 2);
+        let mut observed = 0usize;
+        let disturbed =
+            simulate_disturbed(&times, 300, 2, &[], 0.0, 0, |_, _| observed += 1);
+        assert!((plain.makespan - disturbed.makespan).abs() < 1e-12);
+        assert!((plain.throughput - disturbed.throughput).abs() < 1e-12);
+        assert_eq!(plain.bottleneck, disturbed.bottleneck);
+        assert_eq!(observed, 300 * 3, "one observation per item per stage");
+        for (a, b) in plain.latencies.iter().zip(&disturbed.latencies) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for (a, b) in plain.utilization.iter().zip(&disturbed.utilization) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn throttle_from_time_zero_halves_throughput() {
+        let ev = ThrottleEvent { at: 0.0, factor: 2.0, scope: Vec::new() };
+        let r = simulate_disturbed(&[0.01], 500, 1, &[ev], 0.0, 0, |_, _| {});
+        assert!((r.throughput - 50.0).abs() < 0.5, "tp={}", r.throughput);
+    }
+
+    #[test]
+    fn mid_run_throttle_lands_between_bounds() {
+        // 2x throttle halfway: makespan must sit between the undisturbed
+        // and the fully-throttled runs.
+        let times = [0.02, 0.04];
+        let clean = simulate(&times, 400, 2).makespan;
+        let full = simulate(&[0.04, 0.08], 400, 2).makespan;
+        let ev = ThrottleEvent { at: clean / 2.0, factor: 2.0, scope: Vec::new() };
+        let mid = simulate_disturbed(&times, 400, 2, &[ev], 0.0, 0, |_, _| {}).makespan;
+        assert!(mid > clean && mid < full, "clean={clean} mid={mid} full={full}");
+    }
+
+    #[test]
+    fn throttle_scope_spares_other_replicas_and_stages() {
+        // Slow only replica 1's stage 0; replica 0 keeps its clean rate.
+        let replicas = vec![vec![0.02], vec![0.02]];
+        let ev = ThrottleEvent { at: 0.0, factor: 3.0, scope: vec![(1, 0)] };
+        let fleet =
+            simulate_replicated_disturbed(&replicas, 600, 2, &[ev], 0.0, |_, _, _| {});
+        // Dispatch was based on base cycles (even split), so the throttled
+        // replica's makespan is ~3x the clean one's.
+        let m0 = fleet.per_replica[0].makespan;
+        let m1 = fleet.per_replica[1].makespan;
+        assert!(m1 > 2.5 * m0, "m0={m0} m1={m1}");
+    }
+
+    #[test]
+    fn chunked_disturbed_runs_respect_absolute_event_time() {
+        // An event at t=1.0 must not affect a chunk simulated at t0=2.0 the
+        // same way it affects one at t0=0.0 (the factor is already active).
+        let times = [0.01];
+        let ev = ThrottleEvent { at: 1.0, factor: 2.0, scope: Vec::new() };
+        let early = simulate_disturbed(&times, 50, 1, &[ev.clone()], 0.0, 0, |_, _| {});
+        let late = simulate_disturbed(&times, 50, 1, &[ev], 2.0, 0, |_, _| {});
+        // At t0=0 the event is in the future: clean 0.5 s makespan.
+        assert!((early.makespan - 0.5).abs() < 1e-9, "{}", early.makespan);
+        // At t0=2 the event is already active: 1.0 s makespan.
+        assert!((late.makespan - 1.0).abs() < 1e-9, "{}", late.makespan);
+    }
+
+    #[test]
+    fn disturbed_fleet_without_events_matches_replicated() {
+        let replicas = vec![vec![0.01, 0.02], vec![0.03]];
+        let plain = simulate_replicated(&replicas, 300, 2);
+        let disturbed =
+            simulate_replicated_disturbed(&replicas, 300, 2, &[], 0.0, |_, _, _| {});
+        assert_eq!(plain.dispatched, disturbed.dispatched);
+        assert!((plain.makespan - disturbed.makespan).abs() < 1e-12);
+        assert!((plain.throughput - disturbed.throughput).abs() < 1e-12);
     }
 
     /// The satellite property: fleet aggregate throughput equals the sum of

@@ -80,6 +80,15 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Comma-separated list form of an option: `--throttle 1:2,5:0.5` →
+    /// `["1:2", "5:0.5"]`. A missing key yields an empty list; empty items
+    /// (trailing commas) are dropped.
+    pub fn get_list(&self, key: &str) -> Vec<&str> {
+        self.get(key)
+            .map(|v| v.split(',').filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +157,14 @@ mod tests {
         let a = parse("x --measured --images 5");
         assert!(a.has_flag("measured"));
         assert_eq!(a.get_usize("images", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn get_list_splits_on_commas() {
+        let a = parse("x --throttle 1:2:big,5:0.5");
+        assert_eq!(a.get_list("throttle"), vec!["1:2:big", "5:0.5"]);
+        assert_eq!(a.get_list("missing"), Vec::<&str>::new());
+        let b = parse("x --throttle 1:2,");
+        assert_eq!(b.get_list("throttle"), vec!["1:2"]);
     }
 }

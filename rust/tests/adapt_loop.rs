@@ -1,0 +1,190 @@
+//! Throttle-recovery acceptance tests for the online-adaptation subsystem
+//! (DESIGN.md §9): a scripted cluster slowdown injected mid-run under
+//! adaptation must be detected, recalibrated, and re-planned, with
+//! post-swap sustained throughput within 10% of a plan explored directly on
+//! the throttled time matrix — and strictly better than the non-adaptive
+//! run under the same disturbance.
+//!
+//! Everything here runs in the discrete-event simulator: deterministic, no
+//! threads, no wall-clock sensitivity.
+
+use pipeit::adapt::{simulate_adaptive, AdaptOptions, ClusterThrottle, DriftConfig};
+use pipeit::api::{Plan, PlanSpec, Strategy};
+use pipeit::cnn::zoo;
+use pipeit::config::Config;
+use pipeit::perfmodel::TimeMatrix;
+use pipeit::simulator::platform::CoreType;
+
+fn setup(net: &str, strategy: Strategy) -> (Config, TimeMatrix, Plan) {
+    let cfg = Config::default();
+    let network = zoo::by_name(net).unwrap();
+    let tm = TimeMatrix::measured(&cfg.platform, &network);
+    let plan = PlanSpec::new(net).strategy(strategy).compile().unwrap();
+    (cfg, tm, plan)
+}
+
+/// Open-loop twin: same disturbance script, but a drift threshold no honest
+/// ratio reaches, so the controller never swaps.
+fn baseline_opts(opts: &AdaptOptions) -> AdaptOptions {
+    AdaptOptions {
+        drift: DriftConfig { threshold: 1e12, ..opts.drift },
+        ..*opts
+    }
+}
+
+#[test]
+fn throttle_recovery_meets_the_acceptance_criteria() {
+    let (cfg, base, plan) = setup("alexnet", Strategy::Pipeline);
+    let images = 600;
+    let queue_cap = 2;
+    // Windows are cleared per control period, so by the time per-stage
+    // hysteresis confirms (>= one full period after onset) every window
+    // holds only post-throttle samples: the estimated factor is exact and
+    // the re-plan lands on the oracle design. interval 100 keeps the
+    // per-period pipeline fill/drain transient under ~7% even for the
+    // deepest 8-stage pipelines.
+    let opts = AdaptOptions { interval: 100, ..AdaptOptions::default() };
+
+    // Scripted 2x big-cluster slowdown roughly a quarter into the run.
+    let throttle_at = 0.25 * images as f64 / plan.throughput;
+    let script =
+        [ClusterThrottle { at: throttle_at, core: CoreType::Big, factor: 2.0 }];
+
+    let out = simulate_adaptive(
+        &plan, &base, &cfg.power, &script, &opts, images, queue_cap,
+    )
+    .unwrap();
+
+    // Exactly one re-plan, correctly classified; no items lost.
+    assert_eq!(
+        out.report.adaptations.len(),
+        1,
+        "expected exactly one swap: {:?}",
+        out.report.adaptations
+    );
+    assert_eq!(out.report.images, images, "items lost across the hot-swap");
+    let event = &out.report.adaptations[0];
+    assert!(
+        event.disturbance.contains("big-cluster slowdown"),
+        "misclassified disturbance: {}",
+        event.disturbance
+    );
+    assert!(event.at_s > throttle_at, "swap cannot precede the disturbance");
+
+    // Recovery: post-swap sustained throughput within 10% of the oracle —
+    // the same strategy search run directly on the truly throttled matrix.
+    let mut throttled = base.clone();
+    throttled.scale_core(CoreType::Big, 2.0);
+    let oracle = plan.replan_on_matrix(&throttled, &cfg.power).unwrap();
+    let post = out.post_swap_throughput();
+    assert!(
+        post >= 0.9 * oracle.throughput,
+        "post-swap {post:.3} imgs/s below 90% of the oracle's {:.3} imgs/s",
+        oracle.throughput
+    );
+
+    // Strictly better than the non-adaptive run under the same disturbance.
+    let baseline = simulate_adaptive(
+        &plan,
+        &base,
+        &cfg.power,
+        &script,
+        &baseline_opts(&opts),
+        images,
+        queue_cap,
+    )
+    .unwrap();
+    assert!(baseline.report.adaptations.is_empty());
+    assert_eq!(baseline.report.images, images);
+    assert!(
+        out.report.throughput > baseline.report.throughput,
+        "adaptive {:.3} imgs/s must beat non-adaptive {:.3} imgs/s",
+        out.report.throughput,
+        baseline.report.throughput
+    );
+    // And the sustained post-swap rate beats the baseline's post-throttle
+    // steady state (the stale design's Eq. 12 rate on the throttled matrix).
+    let stale = plan.replicas[0].stage_times.clone();
+    let stale_throttled: f64 = {
+        // Big stages doubled: recompute the stale bottleneck under truth.
+        let pipe = pipeit::dse::PipelineConfig::parse(&plan.replicas[0].pipeline).unwrap();
+        let times = pipeit::dse::stage_times(&throttled, &pipe, &plan.allocation_of(0));
+        assert_eq!(times.len(), stale.len());
+        1.0 / times.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    };
+    assert!(
+        post > stale_throttled,
+        "post-swap {post:.3} must beat the stale design's throttled rate {stale_throttled:.3}"
+    );
+}
+
+#[test]
+fn replicated_fleet_recovers_from_small_cluster_throttle() {
+    let (cfg, base, plan) =
+        setup("squeezenet", Strategy::Replicated { max_replicas: 2, exact: false });
+    let images = 800;
+    // Replicas split each period's items by dispatch share; windows are
+    // cleared per period, so even the slowest replica's window is pure
+    // post-throttle data by confirmation time.
+    let opts = AdaptOptions { interval: 100, ..AdaptOptions::default() };
+
+    let throttle_at = 0.2 * images as f64 / plan.throughput;
+    let script =
+        [ClusterThrottle { at: throttle_at, core: CoreType::Small, factor: 3.0 }];
+
+    let out =
+        simulate_adaptive(&plan, &base, &cfg.power, &script, &opts, images, 2).unwrap();
+    let baseline = simulate_adaptive(
+        &plan,
+        &base,
+        &cfg.power,
+        &script,
+        &baseline_opts(&opts),
+        images,
+        2,
+    )
+    .unwrap();
+
+    assert_eq!(out.report.images, images, "items lost across the hot-swap");
+    // The fleet uses the small cluster (replicated squeezenet always does),
+    // so the throttle must be seen and acted on exactly once.
+    assert_eq!(out.report.adaptations.len(), 1, "{:?}", out.report.adaptations);
+    assert!(
+        out.report.throughput > baseline.report.throughput,
+        "adaptive {:.3} vs baseline {:.3}",
+        out.report.throughput,
+        baseline.report.throughput
+    );
+}
+
+#[test]
+fn adaptation_log_serializes_with_the_report() {
+    let (cfg, base, plan) = setup("mobilenet", Strategy::Pipeline);
+    let throttle_at = 0.2 * 400.0 / plan.throughput;
+    let script =
+        [ClusterThrottle { at: throttle_at, core: CoreType::Big, factor: 2.5 }];
+    let out = simulate_adaptive(
+        &plan,
+        &base,
+        &cfg.power,
+        &script,
+        &AdaptOptions::default(),
+        400,
+        2,
+    )
+    .unwrap();
+    assert!(!out.report.adaptations.is_empty());
+    let text = out.report.to_json().to_string();
+    let j = pipeit::util::json::Json::parse(&text).expect("metrics JSON parses");
+    let adap = j.req("adaptations").unwrap().as_arr().unwrap();
+    assert_eq!(adap.len(), out.report.adaptations.len());
+    assert!(adap[0]
+        .req("disturbance")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("slowdown"));
+    // The rendered report shows the swap too.
+    let rendered = pipeit::reports::render_serve(&out.report);
+    assert!(rendered.contains("adapt      :"), "{rendered}");
+}

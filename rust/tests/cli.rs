@@ -157,6 +157,78 @@ fn serve_missing_plan_file_fails_cleanly() {
 }
 
 #[test]
+fn serve_adapt_runs_clean_without_disturbance() {
+    // Drift threshold far above scheduler jitter: the adaptive loop must
+    // pass everything through with zero swaps.
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "squeezenet", "--adapt", "--images", "24",
+        "--adapt-interval", "8", "--time-scale", "0.02", "--drift-threshold", "9",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("adaptations: 0"), "{text}");
+    assert!(text.contains("aggregate"), "{text}");
+}
+
+#[test]
+fn serve_throttle_without_adapt_is_a_baseline_run() {
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "squeezenet", "--throttle", "9999:2:big", "--images", "12",
+        "--adapt-interval", "6", "--time-scale", "0.02",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("adaptation : disabled"), "{text}");
+    assert!(text.contains("throttle   :"), "{text}");
+}
+
+#[test]
+fn serve_rejects_malformed_throttle_spec() {
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "squeezenet", "--adapt", "--throttle", "garbage",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("throttle"), "{text}");
+}
+
+#[test]
+fn serve_adapt_rejects_artifact_serving() {
+    let (ok, text) = pipeit(&[
+        "serve", "--artifacts", "artifacts/pipenet_tiny", "--adapt",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--adapt"), "{text}");
+}
+
+#[test]
+fn serve_metrics_out_writes_the_report_json() {
+    let path = std::env::temp_dir().join("pipeit_cli_metrics_test.json");
+    let path_s = path.to_str().unwrap();
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "squeezenet", "--images", "10", "--time-scale", "0.02",
+        "--metrics-out", path_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("metrics    :"), "{text}");
+    let json = std::fs::read_to_string(&path).expect("metrics file written");
+    assert!(json.contains("\"throughput\""), "{json}");
+    assert!(json.contains("\"replicas\""), "{json}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn simulate_metrics_out_writes_des_report() {
+    let path = std::env::temp_dir().join("pipeit_cli_metrics_sim_test.json");
+    let path_s = path.to_str().unwrap();
+    let (ok, text) = pipeit(&[
+        "simulate", "--net", "alexnet", "--pipeline", "B4-s4", "--images", "50",
+        "--metrics-out", path_s,
+    ]);
+    assert!(ok, "{text}");
+    let json = std::fs::read_to_string(&path).expect("metrics file written");
+    assert!(json.contains("\"des\""), "{json}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn serve_serial_on_artifacts() {
     // Only when artifacts exist (built by `make artifacts`).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
