@@ -48,7 +48,6 @@ use crate::perfmodel::TimeMatrix;
 use crate::simulator::pipeline_sim::{self, ThrottleEvent};
 use crate::simulator::platform::CoreType;
 use crate::simulator::power::PowerModel;
-use crate::util::stats;
 
 use super::calibrate::Calibration;
 use super::drift::{DriftConfig, DriftDetector, DriftStatus};
@@ -282,14 +281,7 @@ impl EpochStats {
 }
 
 fn latency_report(latencies: &[f64]) -> Option<LatencyReport> {
-    if latencies.is_empty() {
-        return None;
-    }
-    Some(LatencyReport {
-        p50: stats::percentile(latencies, 50.0),
-        p95: stats::percentile(latencies, 95.0),
-        p99: stats::percentile(latencies, 99.0),
-    })
+    LatencyReport::from_latencies(latencies)
 }
 
 /// Closed-loop adaptive serving in the discrete-event simulator.

@@ -605,6 +605,36 @@ impl Plan {
         })
     }
 
+    /// Build a plan directly from an already-searched design. This is the
+    /// constructor the multi-tenant joint DSE ([`crate::tenancy`]) uses:
+    /// it searches core *splits across networks*, so the per-tenant design
+    /// arrives from outside [`PlanSpec::compile`]'s single-network
+    /// dispatch, but the artifact it embeds must be an ordinary [`Plan`]
+    /// (same schema, same simulate/deploy backends).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_design(
+        network: &str,
+        platform: &str,
+        big: usize,
+        small: usize,
+        time_source: TimeSource,
+        strategy: Strategy,
+        tm: &TimeMatrix,
+        design: &ReplicatedDesign,
+    ) -> Plan {
+        Plan {
+            network: network.to_string(),
+            platform: platform.to_string(),
+            big,
+            small,
+            time_source,
+            strategy,
+            throughput: design.throughput,
+            replicas: replicas_from_design(tm, design),
+            artifacts: None,
+        }
+    }
+
     fn deploy_synthetic(&self, opts: &DeployOptions) -> Result<ServeReport> {
         anyhow::ensure!(opts.images >= 1, "need at least one image");
         anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
@@ -622,9 +652,10 @@ impl Plan {
 }
 
 /// Run `strategy`'s design-space search against `tm` on an `hb`B + `hs`s
-/// core budget — the strategy dispatch shared by [`PlanSpec::compile`] and
-/// [`Plan::replan_on_matrix`] (DESIGN.md §8 table).
-fn search_design(
+/// core budget — the strategy dispatch shared by [`PlanSpec::compile`],
+/// [`Plan::replan_on_matrix`], and the multi-tenant joint DSE
+/// ([`crate::tenancy`]) (DESIGN.md §8 table).
+pub(crate) fn search_design(
     tm: &TimeMatrix,
     hb: usize,
     hs: usize,
@@ -670,7 +701,7 @@ fn search_design(
 
 /// Materialize a searched design's replicas with their Eq. 10 stage-time
 /// profiles under `tm`.
-fn replicas_from_design(tm: &TimeMatrix, design: &ReplicatedDesign) -> Vec<PlanReplica> {
+pub(crate) fn replicas_from_design(tm: &TimeMatrix, design: &ReplicatedDesign) -> Vec<PlanReplica> {
     design
         .replicas
         .iter()

@@ -35,6 +35,22 @@ pub struct LatencyReport {
     pub p99: f64,
 }
 
+impl LatencyReport {
+    /// Summarize raw per-item latencies; `None` when nothing completed.
+    /// The ONE percentile-triple builder shared by every backend (DES
+    /// co-sim, wall-clock deploys, the adaptation controller).
+    pub fn from_latencies(latencies: &[f64]) -> Option<LatencyReport> {
+        if latencies.is_empty() {
+            return None;
+        }
+        Some(LatencyReport {
+            p50: stats::percentile(latencies, 50.0),
+            p95: stats::percentile(latencies, 95.0),
+            p99: stats::percentile(latencies, 99.0),
+        })
+    }
+}
+
 /// Per-stage accounting within one replica.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageReport {

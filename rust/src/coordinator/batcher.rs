@@ -113,5 +113,45 @@ mod tests {
     fn empty_stream_yields_nothing() {
         let jobs: Vec<Job> = Batcher::new(imgs(0).into_iter(), vec![1, 4]).collect();
         assert!(jobs.is_empty());
+        // And stays empty: the iterator is fused in practice.
+        let mut b = Batcher::new(imgs(0).into_iter(), vec![1, 4]);
+        assert!(b.next().is_none());
+        assert!(b.next().is_none());
+    }
+
+    #[test]
+    fn schedule_exhaustion_falls_through_every_exported_size() {
+        // 11 images against sizes {8, 4, 1}: one 8, then the remaining 3
+        // exhaust both 8 and 4 and must fall through to singletons.
+        let jobs: Vec<Job> = Batcher::new(imgs(11).into_iter(), vec![8, 4, 1]).collect();
+        let sizes: Vec<usize> = jobs.iter().map(|j| j.tensors.len()).collect();
+        assert_eq!(sizes, vec![8, 1, 1, 1]);
+        assert_eq!(jobs.iter().map(|j| j.seq).collect::<Vec<_>>(), vec![0, 8, 9, 10]);
+    }
+
+    #[test]
+    fn remainder_batch_uses_largest_size_that_fits_exactly() {
+        // 6 left at the tail with sizes {4, 2, 1}: remainder is 4 + 2, and
+        // the seq numbering stays contiguous across the remainder batches.
+        let jobs: Vec<Job> = Batcher::new(imgs(14).into_iter(), vec![1, 2, 4]).collect();
+        let sizes: Vec<usize> = jobs.iter().map(|j| j.tensors.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 4, 2]);
+        let seqs: Vec<usize> = jobs.iter().map(|j| j.seq).collect();
+        assert_eq!(seqs, vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_remainder() {
+        let jobs: Vec<Job> = Batcher::new(imgs(8).into_iter(), vec![1, 4]).collect();
+        let sizes: Vec<usize> = jobs.iter().map(|j| j.tensors.len()).collect();
+        assert_eq!(sizes, vec![4, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch sizes must include 1")]
+    fn schedule_without_batch1_is_rejected() {
+        // Without size 1 the tail could strand images; construction fails
+        // loudly instead.
+        let _ = Batcher::new(imgs(3).into_iter(), vec![2, 4]);
     }
 }

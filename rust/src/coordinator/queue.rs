@@ -113,6 +113,14 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
 
+/// Error returned by [`Sender::try_send`]: the queue was full (shed the
+/// item) or closed (stop producing). Either way the item comes back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    Full(T),
+    Closed(T),
+}
+
 impl<T> Sender<T> {
     /// Blocking send; applies backpressure when the buffer is full.
     /// Returns the item back if the queue was closed.
@@ -129,6 +137,25 @@ impl<T> Sender<T> {
             }
             st = self.0.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking send: `Ok` when the item was enqueued, `Err` with the
+    /// item back when the buffer is full or the queue is closed — the
+    /// admission primitive behind shed-on-full front doors
+    /// ([`crate::tenancy::deploy_multi`]): a full queue means the tenant is
+    /// over its admission budget and the item is dropped (counted), never
+    /// blocking the shared arrival thread.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.0.q.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.items.len() >= self.0.cap {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        self.0.not_empty.notify_one();
+        Ok(())
     }
 
     /// Close the queue: receivers drain remaining items then see `None`.
@@ -250,6 +277,22 @@ mod tests {
         let (tx, _rx) = bounded(2);
         tx.close();
         assert_eq!(tx.send(42), Err(SendError(42)));
+    }
+
+    #[test]
+    fn try_send_sheds_on_full_and_reports_close() {
+        let (tx, rx) = bounded(2);
+        assert_eq!(tx.try_send(1), Ok(()));
+        assert_eq!(tx.try_send(2), Ok(()));
+        // Full: the item comes straight back, nothing blocks.
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(tx.try_send(3), Ok(()));
+        tx.close();
+        assert_eq!(tx.try_send(4), Err(TrySendError::Closed(4)));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+        assert_eq!(rx.recv(), None);
     }
 
     #[test]

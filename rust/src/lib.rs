@@ -30,7 +30,11 @@
 //! runtime the [`adapt`] subsystem closes the loop: per-stage telemetry
 //! from the running fleet feeds a drift detector that recalibrates the
 //! time matrix and hot-swaps the partition when the hardware stops
-//! behaving like the model (`pipeit serve --adapt`).
+//! behaving like the model (`pipeit serve --adapt`). The [`tenancy`]
+//! subsystem co-serves several networks on one board: a joint cross-network
+//! DSE splits the core budget across tenants and a shared SLA-aware front
+//! door admits (or sheds) each tenant's Poisson arrivals
+//! (`pipeit plan-multi / serve-multi / simulate-multi`).
 //!
 //! Architecture details live in `DESIGN.md`; the quickstart and the
 //! paper-to-module map live in `README.md`.
@@ -48,4 +52,5 @@ pub mod perfmodel;
 pub mod reports;
 pub mod runtime;
 pub mod simulator;
+pub mod tenancy;
 pub mod util;

@@ -18,8 +18,12 @@ use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::dse;
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
-use pipeit::reports::{render_serve, Reporter};
+use pipeit::reports::{render_multi_serve, render_serve, Reporter};
+use pipeit::simulator::arrivals::ArrivalSpec;
 use pipeit::simulator::platform::CoreType;
+use pipeit::tenancy::{
+    parse_duration_s, predict_p99, MultiPlan, MultiServeOptions, TenantPlan, TenantSpec,
+};
 use pipeit::util::cli::Args;
 use pipeit::util::json::Json;
 use pipeit::util::table::{f, Table};
@@ -27,7 +31,7 @@ use pipeit::util::table::{f, Table};
 const USAGE: &str = "\
 pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
 
-USAGE: pipeit <plan|serve|simulate|explore|predict|count|tables> [options]
+USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|explore|predict|count|tables> [options]
 
   plan       --net N [--predicted] [--platform F] [--out plan.json]
              [--strategy serial|pipeline|replicated|exhaustive|energy]
@@ -57,6 +61,25 @@ USAGE: pipeit <plan|serve|simulate|explore|predict|count|tables> [options]
   serve      --artifacts artifacts/pipenet_tiny [--replicas 1] [--images 50]
              [--batch 1] [--stages 3] [--queue-cap 2] [--serial] [--seed 7]
                                                real PJRT serving (needs --features pjrt)
+  serve      --net N|--plan P --arrival poisson:RATE[:SEED]|uniform:RATE
+             [--p99 80ms] [--admission-cap 8]  open-loop wall-clock serving:
+                                               paced arrivals, bounded admission,
+                                               shed-on-full
+  simulate   --net N --pipeline S|--plan P --arrival poisson:RATE[:SEED]|uniform:RATE
+             [--p99 80ms] [--admission-cap 8]  open-loop DES (reproducible seed)
+  plan-multi --tenant net=alexnet,rate=30 --tenant net=squeezenet,rate=60,p99=80ms
+             [--predicted] [--platform F] [--max-replicas 4] [--out mp.json]
+                                               joint cross-network DSE: split the
+                                               core budget across tenants, maximize
+                                               weighted SLA-feasible throughput
+                                               (tenant keys: net|plan,rate,p99,
+                                               weight,seed,name)
+  serve-multi    --plan mp.json | --tenant ... [--images 300] [--queue-cap 2]
+             [--admission-cap 8] [--time-scale 0.05] [--seed 7]
+                                               wall-clock co-serving: per-tenant
+                                               fleets + shared shed-on-full front door
+  simulate-multi --plan mp.json | --tenant ... [--images 2000] [--queue-cap 2]
+             [--admission-cap 8] [--seed 7]    DES co-simulation of the same board
   tables     [--platform F]                    regenerate every paper table & figure
 
 every serve/simulate form also takes --metrics-out metrics.json
@@ -101,9 +124,50 @@ fn main() -> Result<()> {
                 let net = args.get("net").context("--net is required")?;
                 PlanSpec::new(net).platform(cfg).pipeline(spec).compile()?
             };
-            print!("{}", plan.summary());
-            let report = plan.simulate(images, cap)?;
-            print!("{}", render_serve(&report));
+            if args.get("arrival").is_some() {
+                run_open_loop(plan, &args, false)?;
+            } else {
+                print!("{}", plan.summary());
+                let report = plan.simulate(images, cap)?;
+                print!("{}", render_serve(&report));
+                write_metrics(&args, &report.to_json())?;
+            }
+        }
+        "plan-multi" => {
+            let specs = tenant_specs_from_args(&args)?;
+            let mp =
+                MultiPlan::compile(&specs, &cfg, args.get_usize("max-replicas", 4)?)?;
+            print!("{}", mp.summary());
+            if let Some(out) = args.get("out") {
+                mp.save(Path::new(out))?;
+                println!("plan saved : {out}");
+            }
+        }
+        "serve-multi" | "simulate-multi" => {
+            let mp = if let Some(path) = args.get("plan") {
+                for key in ["tenant", "max-replicas"] {
+                    anyhow::ensure!(
+                        args.get(key).is_none(),
+                        "--{key} is a plan-compile option; the plan file fixes the \
+                         design (recompile with `pipeit plan-multi --{key} ...`)"
+                    );
+                }
+                anyhow::ensure!(
+                    !args.has_flag("predicted"),
+                    "--predicted is a plan-compile option; the plan file fixes the \
+                     time source (recompile with `pipeit plan-multi --predicted ...`)"
+                );
+                MultiPlan::load(Path::new(path))?
+            } else {
+                let specs = tenant_specs_from_args(&args)?;
+                MultiPlan::compile(&specs, &cfg, args.get_usize("max-replicas", 4)?)?
+            };
+            let deploy = cmd == "serve-multi";
+            let opts = multi_opts(&args, if deploy { 300 } else { 2000 })?;
+            print!("{}", mp.summary());
+            let report = if deploy { mp.deploy(&opts)? } else { mp.simulate(&opts)? };
+            println!();
+            print!("{}", render_multi_serve(&report));
             write_metrics(&args, &report.to_json())?;
         }
         "count" => count(&args, &cfg)?,
@@ -113,7 +177,14 @@ fn main() -> Result<()> {
             if let Some(path) = args.get("plan") {
                 reject_compile_flags(&args)?;
                 let plan = Plan::load(Path::new(path))?;
-                if args.has_flag("adapt") || args.get("throttle").is_some() {
+                if args.get("arrival").is_some() {
+                    anyhow::ensure!(
+                        !args.has_flag("adapt") && args.get("throttle").is_none(),
+                        "--arrival (open-loop serving) cannot be combined with \
+                         --adapt/--throttle"
+                    );
+                    run_open_loop(plan, &args, true)?;
+                } else if args.has_flag("adapt") || args.get("throttle").is_some() {
                     run_adaptive(plan, &cfg, &args)?;
                 } else {
                     print!("{}", plan.summary());
@@ -125,7 +196,24 @@ fn main() -> Result<()> {
             } else if args.get("artifacts").is_some() {
                 serve_artifacts(&args, replicas)?;
             } else if args.get("net").is_some() {
-                serve_simulated(&args, &cfg, replicas)?;
+                if args.get("arrival").is_some() {
+                    anyhow::ensure!(
+                        !args.has_flag("adapt") && args.get("throttle").is_none(),
+                        "--arrival (open-loop serving) cannot be combined with \
+                         --adapt/--throttle"
+                    );
+                    let net = args.get("net").context("--net is required")?;
+                    let plan = PlanSpec::new(net)
+                        .platform(cfg.clone())
+                        .strategy(Strategy::Replicated {
+                            max_replicas: replicas,
+                            exact: true,
+                        })
+                        .compile()?;
+                    run_open_loop(plan, &args, true)?;
+                } else {
+                    serve_simulated(&args, &cfg, replicas)?;
+                }
             } else {
                 anyhow::bail!(
                     "serve needs --plan plan.json, --net N (simulated-time fleet), \
@@ -265,6 +353,90 @@ fn run_adaptive(plan: Plan, cfg: &Config, args: &Args) -> Result<()> {
             ("telemetry", out.final_snapshot.to_json()),
         ]),
     )
+}
+
+/// Parse every `--tenant` occurrence into [`TenantSpec`]s; `--predicted`
+/// switches all tenants to the fitted-predictor time matrix.
+fn tenant_specs_from_args(args: &Args) -> Result<Vec<TenantSpec>> {
+    let vals = args.get_all("tenant");
+    anyhow::ensure!(
+        !vals.is_empty(),
+        "need at least one --tenant net=NAME,rate=HZ[,p99=80ms][,weight=W] spec \
+         (or --plan mp.json)\n\n{USAGE}"
+    );
+    let mut specs = TenantSpec::parse_all(&vals)?;
+    if args.has_flag("predicted") {
+        for s in &mut specs {
+            s.time_source = TimeSource::Predicted;
+        }
+    }
+    Ok(specs)
+}
+
+/// Runtime knobs shared by the multi-tenant serve/simulate forms and the
+/// single-tenant open-loop (`--arrival`) forms.
+fn multi_opts(args: &Args, default_images: usize) -> Result<MultiServeOptions> {
+    let d = MultiServeOptions::default();
+    Ok(MultiServeOptions {
+        images: args.get_usize("images", default_images)?,
+        queue_cap: args.get_usize("queue-cap", d.queue_cap)?,
+        admission_cap: args.get_usize("admission-cap", d.admission_cap)?,
+        seed: args.get_usize("seed", d.seed as usize)? as u64,
+        time_scale: args.get_f64("time-scale", d.time_scale)?,
+        uniform_arrivals: false,
+    })
+}
+
+/// Open-loop (arrival-driven) serving of ONE plan: wrap it as a
+/// single-tenant [`MultiPlan`] so the `--arrival` forms run through the
+/// same admission/shedding engine and render through the same
+/// [`render_multi_serve`] path as true co-serving.
+fn run_open_loop(plan: Plan, args: &Args, deploy: bool) -> Result<()> {
+    anyhow::ensure!(
+        plan.artifacts.is_none(),
+        "--arrival applies to big.LITTLE plans (zoo networks)"
+    );
+    let spec = ArrivalSpec::parse(args.get("arrival").context("--arrival is required")?)?;
+    let p99 = args.get("p99").map(parse_duration_s).transpose()?;
+    let mut opts = multi_opts(args, if deploy { 60 } else { 500 })?;
+    opts.uniform_arrivals = matches!(spec, ArrivalSpec::Uniform { .. });
+    let pinned_seed = match spec {
+        ArrivalSpec::Poisson { seed, .. } => seed,
+        ArrivalSpec::Uniform { .. } => None,
+    };
+    let rate = spec.rate_hz();
+    let stage_times: Vec<Vec<f64>> =
+        plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
+    anyhow::ensure!(
+        stage_times.iter().all(|t| !t.is_empty()),
+        "plan for {:?} carries no stage-time profile; open-loop serving needs \
+         Eq. 10 times",
+        plan.network
+    );
+    let pred_p99 = predict_p99(&stage_times, plan.throughput, rate);
+    let tenant = TenantPlan {
+        name: plan.network.clone(),
+        rate_hz: rate,
+        p99_sla_s: p99,
+        weight: 1.0,
+        seed: pinned_seed,
+        predicted_served: rate.min(plan.throughput),
+        predicted_p99: pred_p99.is_finite().then_some(pred_p99),
+        plan: plan.clone(),
+    };
+    let mp = MultiPlan {
+        platform: plan.platform.clone(),
+        big: plan.big,
+        small: plan.small,
+        weighted_throughput: tenant.predicted_served,
+        tenants: vec![tenant],
+    };
+    print!("{}", plan.summary());
+    println!("arrival    : {spec} (open loop, admission cap {})", opts.admission_cap);
+    let report = if deploy { mp.deploy(&opts)? } else { mp.simulate(&opts)? };
+    println!();
+    print!("{}", render_multi_serve(&report));
+    write_metrics(args, &report.to_json())
 }
 
 /// Deploy knobs shared by every `serve` form.
@@ -483,6 +655,10 @@ fn serve_artifacts(args: &Args, replicas: usize) -> Result<()> {
     anyhow::ensure!(
         !args.has_flag("adapt") && args.get("throttle").is_none(),
         "--adapt/--throttle apply to --net or --plan serving (big.LITTLE plans)"
+    );
+    anyhow::ensure!(
+        args.get("arrival").is_none(),
+        "--arrival applies to --net or --plan serving (big.LITTLE plans)"
     );
     if args.has_flag("serial") {
         anyhow::ensure!(

@@ -6,6 +6,7 @@
 
 use crate::api::{ServeMode, ServeReport};
 use crate::baselines;
+use crate::tenancy::{MultiServeMode, MultiServeReport};
 use crate::cnn::layer::LayerKind;
 use crate::cnn::zoo;
 use crate::config::Config;
@@ -92,6 +93,69 @@ pub fn render_serve(r: &ServeReport) -> String {
                 st.items,
                 st.busy_s,
                 100.0 * st.utilization,
+            ));
+        }
+    }
+    s
+}
+
+/// Render the unified [`MultiServeReport`] — the ONE print shape for
+/// multi-tenant co-serving, shared by the DES co-simulation
+/// (`simulate-multi`, single-tenant `--arrival` runs) and the wall-clock
+/// deploy (`serve-multi`).
+pub fn render_multi_serve(r: &MultiServeReport) -> String {
+    let mode = match r.mode {
+        MultiServeMode::Des => "DES".to_string(),
+        MultiServeMode::Synthetic { time_scale } => {
+            format!("wall-clock, time-scale {time_scale}, normalized")
+        }
+    };
+    let mut s = format!(
+        "co-serving : {} tenants, served={} shed={} wall={:.3}s ({mode})\n",
+        r.tenants.len(),
+        r.images,
+        r.shed,
+        r.wall_s
+    );
+    s.push_str(&format!(
+        "objective  : {:.2} weighted imgs/s observed\n",
+        r.weighted_throughput
+    ));
+    let (met, declared) = r.sla_counts();
+    if declared > 0 {
+        s.push_str(&format!("SLAs       : {met}/{declared} met\n"));
+    }
+    s.push_str(&format!(
+        "board util : {:.0}% busy core-seconds\n",
+        100.0 * r.board_utilization
+    ));
+    for t in &r.tenants {
+        s.push_str(&format!(
+            "tenant {:<12} {:<6} {}  rate={:.1}/s w={:.1}\n",
+            t.name, t.budget, t.pipeline, t.rate_hz, t.weight
+        ));
+        s.push_str(&format!(
+            "  served {:.2}/s (cap {:.2} eq12)  admitted={} shed={} util={:.0}%\n",
+            t.throughput,
+            t.capacity,
+            t.admitted,
+            t.shed,
+            100.0 * t.utilization
+        ));
+        if let Some(l) = t.latency {
+            let sla = match (t.p99_sla_s, t.sla_ok) {
+                (Some(sla), Some(ok)) => format!(
+                    "  SLA p99<={:.0}ms: {}",
+                    sla * 1e3,
+                    if ok { "OK" } else { "VIOLATED" }
+                ),
+                _ => String::new(),
+            };
+            s.push_str(&format!(
+                "  latency p50={:.1}ms p95={:.1}ms p99={:.1}ms{sla}\n",
+                l.p50 * 1e3,
+                l.p95 * 1e3,
+                l.p99 * 1e3
             ));
         }
     }
@@ -869,6 +933,26 @@ mod tests {
         let s = render_serve(&single.simulate(200, 2).unwrap());
         assert!(s.contains("fleet: 1 replicas"), "{s}");
         assert!(s.contains("replica 0:"), "{s}");
+    }
+
+    #[test]
+    fn render_multi_serve_unifies_both_backends() {
+        use crate::config::Config;
+        use crate::tenancy::{MultiPlan, MultiServeOptions, TenantSpec};
+        let specs = [
+            TenantSpec::new("alexnet", 4.0).with_sla(10.0),
+            TenantSpec::new("squeezenet", 8.0),
+        ];
+        let mp = MultiPlan::compile(&specs, &Config::default(), 2).unwrap();
+        let opts = MultiServeOptions { images: 50, ..Default::default() };
+        let s = render_multi_serve(&mp.simulate(&opts).unwrap());
+        assert!(s.contains("co-serving : 2 tenants"), "{s}");
+        assert!(s.contains("(DES)"), "{s}");
+        assert!(s.contains("tenant alexnet"), "{s}");
+        assert!(s.contains("tenant squeezenet"), "{s}");
+        assert!(s.contains("SLAs       : 1/1 met"), "{s}");
+        assert!(s.contains("board util"), "{s}");
+        assert!(s.contains("SLA p99<=10000ms: OK"), "{s}");
     }
 
     #[test]

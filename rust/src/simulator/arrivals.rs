@@ -3,6 +3,8 @@
 //! arrive at a camera rate and the metric is latency/SLO attainment rather
 //! than peak throughput (the paper's §I continuous-vision motivation).
 
+use std::fmt;
+
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -17,6 +19,78 @@ pub struct OpenLoopReport {
     pub max_queue_wait: f64,
     /// Fraction of images whose end-to-end latency met the deadline.
     pub slo_attainment: f64,
+}
+
+/// A parsed `--arrival` CLI spec: which arrival process drives an open-loop
+/// run, at what rate, and (for Poisson) under which stream seed — so
+/// open-loop serve/simulate runs are reproducible from the command line.
+///
+/// Grammar: `poisson:RATE[:SEED]` or `uniform:RATE` (RATE in images/s).
+/// A Poisson spec without an explicit seed falls back to the run's
+/// `--seed` through [`ArrivalSpec::generate`]'s `default_seed`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// One image every `1/rate_hz` seconds ([`uniform_arrivals`]).
+    Uniform { rate_hz: f64 },
+    /// Exponential inter-arrival gaps at `rate_hz` ([`poisson_arrivals`]).
+    Poisson { rate_hz: f64, seed: Option<u64> },
+}
+
+impl ArrivalSpec {
+    /// Parse `poisson:RATE[:SEED]` / `uniform:RATE`.
+    pub fn parse(s: &str) -> anyhow::Result<ArrivalSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || {
+            anyhow::anyhow!(
+                "bad arrival spec {s:?} (expected poisson:RATE[:SEED] or uniform:RATE)"
+            )
+        };
+        let rate = |txt: &str| -> anyhow::Result<f64> {
+            let r: f64 = txt.parse().map_err(|_| bad())?;
+            anyhow::ensure!(r.is_finite() && r > 0.0, "arrival rate must be positive, got {txt:?}");
+            Ok(r)
+        };
+        match parts.as_slice() {
+            ["uniform", r] => Ok(ArrivalSpec::Uniform { rate_hz: rate(*r)? }),
+            ["poisson", r] => Ok(ArrivalSpec::Poisson { rate_hz: rate(*r)?, seed: None }),
+            ["poisson", r, seed] => Ok(ArrivalSpec::Poisson {
+                rate_hz: rate(*r)?,
+                seed: Some(seed.parse().map_err(|_| bad())?),
+            }),
+            _ => Err(bad()),
+        }
+    }
+
+    /// The spec's arrival rate in images/s.
+    pub fn rate_hz(&self) -> f64 {
+        match self {
+            ArrivalSpec::Uniform { rate_hz } | ArrivalSpec::Poisson { rate_hz, .. } => *rate_hz,
+        }
+    }
+
+    /// Materialize `count` arrival times. Poisson specs without their own
+    /// seed use `default_seed` (the CLI's `--seed`), so runs stay
+    /// reproducible either way.
+    pub fn generate(&self, count: usize, default_seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalSpec::Uniform { rate_hz } => uniform_arrivals(*rate_hz, count),
+            ArrivalSpec::Poisson { rate_hz, seed } => {
+                poisson_arrivals(*rate_hz, count, seed.unwrap_or(default_seed))
+            }
+        }
+    }
+}
+
+impl fmt::Display for ArrivalSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArrivalSpec::Uniform { rate_hz } => write!(f, "uniform:{rate_hz}"),
+            ArrivalSpec::Poisson { rate_hz, seed: None } => write!(f, "poisson:{rate_hz}"),
+            ArrivalSpec::Poisson { rate_hz, seed: Some(s) } => {
+                write!(f, "poisson:{rate_hz}:{s}")
+            }
+        }
+    }
 }
 
 /// Deterministic-rate arrivals: one image every `1/rate` seconds.
@@ -112,6 +186,30 @@ mod tests {
         assert!(r.p99_latency > r.p50_latency);
         assert!(r.slo_attainment < 0.5);
         assert!(r.max_queue_wait > 1.0);
+    }
+
+    #[test]
+    fn arrival_spec_parses_and_generates() {
+        let p = ArrivalSpec::parse("poisson:30").unwrap();
+        assert_eq!(p, ArrivalSpec::Poisson { rate_hz: 30.0, seed: None });
+        let ps = ArrivalSpec::parse("poisson:30:123").unwrap();
+        assert_eq!(ps, ArrivalSpec::Poisson { rate_hz: 30.0, seed: Some(123) });
+        let u = ArrivalSpec::parse("uniform:12.5").unwrap();
+        assert_eq!(u, ArrivalSpec::Uniform { rate_hz: 12.5 });
+        assert_eq!(u.rate_hz(), 12.5);
+        // The spec's own seed wins; the default only fills the gap.
+        assert_eq!(ps.generate(50, 7), poisson_arrivals(30.0, 50, 123));
+        assert_eq!(p.generate(50, 7), poisson_arrivals(30.0, 50, 7));
+        assert_eq!(u.generate(4, 0), uniform_arrivals(12.5, 4));
+        assert_eq!(format!("{ps}"), "poisson:30:123");
+    }
+
+    #[test]
+    fn arrival_spec_rejects_malformed_input() {
+        for bad in ["", "poisson", "poisson:", "poisson:0", "poisson:-3",
+                    "uniform:abc", "uniform:30:1", "burst:9", "poisson:30:x"] {
+            assert!(ArrivalSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
     }
 
     #[test]

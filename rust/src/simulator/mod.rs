@@ -10,7 +10,9 @@ pub mod pipeline_sim;
 pub mod platform;
 pub mod power;
 
-pub use arrivals::{poisson_arrivals, simulate_open_loop, uniform_arrivals, OpenLoopReport};
+pub use arrivals::{
+    poisson_arrivals, simulate_open_loop, uniform_arrivals, ArrivalSpec, OpenLoopReport,
+};
 pub use gemm::{
     layer_time, layer_time_1core, layer_time_hmp, layer_time_hmp_ratio, layers_time,
     mean_layer_time, network_time, network_time_hmp, throughput,

@@ -1,0 +1,392 @@
+//! Discrete-event co-simulation of a multi-tenant board: merged per-tenant
+//! Poisson arrival streams ([`crate::simulator::arrivals::poisson_arrivals`])
+//! over each tenant's replicated-pipeline recurrence, with a bounded
+//! per-tenant admission queue that sheds on overflow.
+//!
+//! Because the joint DSE assigns *disjoint* core slices, tenants never
+//! contend for compute — the merged-stream co-simulation factorizes into
+//! one exact open-loop simulation per tenant (this is precisely why the
+//! planner partitions cores instead of time-sharing them). What remains
+//! shared is the accounting: one clock, one report, one board-utilization
+//! figure ([`MultiServeReport`]).
+//!
+//! The per-tenant engine ([`simulate_tenant_fleet`]) extends the tandem
+//! recurrence of [`crate::simulator::pipeline_sim`] with arrival times,
+//! join-earliest-start dispatch across replicas, and front-door admission:
+//! an arrival finding `admission_cap` admitted-but-unstarted items ahead of
+//! it is shed (counted), exactly mirroring the wall-clock front door's
+//! `try_send` ([`crate::tenancy::deploy_multi`]).
+
+use anyhow::{Context, Result};
+
+use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
+
+use crate::api::LatencyReport;
+
+use super::multiplan::MultiPlan;
+use super::report::{
+    core_seconds, MultiServeMode, MultiServeOptions, MultiServeReport, TenantReport,
+};
+
+/// Raw result of one tenant's open-loop fleet simulation.
+#[derive(Debug, Clone)]
+pub struct TenantSimOutcome {
+    /// Arrivals offered at the front door.
+    pub offered: usize,
+    /// Arrivals admitted (offered − shed); all admitted items complete.
+    pub admitted: usize,
+    /// Arrivals dropped because the admission queue was full.
+    pub shed: usize,
+    /// Time of the last departure (0.0 when nothing was admitted).
+    pub makespan: f64,
+    /// Per-admitted-item end-to-end latency (arrival → last departure).
+    pub latencies: Vec<f64>,
+    /// Items routed to each replica.
+    pub dispatched: Vec<usize>,
+    /// Per-replica per-stage busy seconds.
+    pub busy: Vec<Vec<f64>>,
+}
+
+/// Simulate one tenant's replicated fleet under timed arrivals with a
+/// bounded front-door admission queue.
+///
+/// * `replica_stage_times[r]` — replica `r`'s deterministic per-stage
+///   service times (Eq. 10).
+/// * `arrivals` — non-decreasing arrival times (e.g. Poisson).
+/// * `queue_cap` — inter-stage buffer capacity inside each replica.
+/// * `admission_cap` — how many admitted items may wait for service
+///   (admitted but not yet started at their replica's first stage) before
+///   the front door sheds new arrivals.
+///
+/// Dispatch is join-earliest-start: each admitted arrival goes to the
+/// replica whose first stage can take it soonest (ties to the lowest
+/// index), the deterministic analogue of the wall-clock fleet's
+/// least-outstanding-work policy. Each replica's stream then follows the
+/// exact blocking tandem-queue recurrence of
+/// [`crate::simulator::pipeline_sim::simulate`], with the item's arrival
+/// time replacing the saturated source.
+pub fn simulate_tenant_fleet(
+    replica_stage_times: &[Vec<f64>],
+    arrivals: &[f64],
+    queue_cap: usize,
+    admission_cap: usize,
+) -> TenantSimOutcome {
+    assert!(!replica_stage_times.is_empty(), "tenant needs at least one replica");
+    assert!(replica_stage_times.iter().all(|t| !t.is_empty()));
+    assert!(queue_cap >= 1);
+    assert!(admission_cap >= 1);
+    let r = replica_stage_times.len();
+
+    // dep[q][s][k]: departure time of replica q's k-th item from stage s.
+    let mut dep: Vec<Vec<Vec<f64>>> = replica_stage_times
+        .iter()
+        .map(|t| vec![Vec::new(); t.len()])
+        .collect();
+    // Stage-0 start times of every admitted item (front-door occupancy).
+    let mut start0_all: Vec<f64> = Vec::new();
+    let mut latencies = Vec::new();
+    let mut dispatched = vec![0usize; r];
+    let mut shed = 0usize;
+
+    for &a in arrivals {
+        // Front door: count admitted items still waiting to start service.
+        let waiting = start0_all.iter().filter(|&&t| t > a).count();
+        if waiting >= admission_cap {
+            shed += 1;
+            continue;
+        }
+        // Join-earliest-start dispatch (estimate ignores downstream
+        // blocking, which only delays starts further on loaded replicas).
+        let pick = (0..r)
+            .min_by(|&x, &y| {
+                let ex = dep[x][0].last().copied().unwrap_or(0.0).max(a);
+                let ey = dep[y][0].last().copied().unwrap_or(0.0).max(a);
+                ex.total_cmp(&ey)
+            })
+            .expect("nonempty fleet");
+
+        let times = &replica_stage_times[pick];
+        let p = times.len();
+        let k = dep[pick][0].len();
+        let mut prev_stage_dep = 0.0;
+        for s in 0..p {
+            let arrive = if s == 0 {
+                let prev = if k == 0 { 0.0 } else { dep[pick][0][k - 1] };
+                a.max(prev)
+            } else {
+                let prev = if k == 0 { 0.0 } else { dep[pick][s][k - 1] };
+                prev_stage_dep.max(prev)
+            };
+            let unblock = if s + 1 < p && k > queue_cap {
+                dep[pick][s + 1][k - queue_cap - 1]
+            } else {
+                0.0
+            };
+            let start = arrive.max(unblock);
+            if s == 0 {
+                start0_all.push(start);
+            }
+            prev_stage_dep = start + times[s];
+            dep[pick][s].push(prev_stage_dep);
+        }
+        latencies.push(prev_stage_dep - a);
+        dispatched[pick] += 1;
+    }
+
+    let makespan = dep
+        .iter()
+        .map(|stages| stages.last().and_then(|d| d.last()).copied().unwrap_or(0.0))
+        .fold(0.0, f64::max);
+    let busy: Vec<Vec<f64>> = replica_stage_times
+        .iter()
+        .zip(&dispatched)
+        .map(|(times, &n)| times.iter().map(|t| t * n as f64).collect())
+        .collect();
+
+    TenantSimOutcome {
+        offered: arrivals.len(),
+        admitted: latencies.len(),
+        shed,
+        makespan,
+        latencies,
+        dispatched,
+        busy,
+    }
+}
+
+/// One tenant's arrival stream under `opts`: Poisson by default (seeded by
+/// [`MultiServeOptions::tenant_seed`]), uniform when the run asked for it.
+/// Shared with the wall-clock front door so both twins pace identically.
+pub(crate) fn tenant_arrivals(
+    rate_hz: f64,
+    pinned_seed: Option<u64>,
+    idx: usize,
+    opts: &MultiServeOptions,
+) -> Vec<f64> {
+    if opts.uniform_arrivals {
+        uniform_arrivals(rate_hz, opts.images)
+    } else {
+        poisson_arrivals(rate_hz, opts.images, opts.tenant_seed(pinned_seed, idx))
+    }
+}
+
+/// Tenant-level utilization: the busiest stage's busy fraction over the
+/// tenant's makespan (0.0 for an idle tenant).
+fn tenant_utilization(out: &TenantSimOutcome) -> f64 {
+    if out.makespan <= 0.0 {
+        return 0.0;
+    }
+    out.busy
+        .iter()
+        .flat_map(|stages| stages.iter())
+        .fold(0.0f64, |m, b| m.max(b / out.makespan))
+}
+
+/// DES co-simulation of a compiled [`MultiPlan`]: generate each tenant's
+/// Poisson stream, run the per-tenant fleet recurrence, and merge the
+/// outcome into one [`MultiServeReport`].
+pub fn simulate_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiServeReport> {
+    anyhow::ensure!(opts.images >= 1, "need at least one arrival per tenant");
+    anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
+    anyhow::ensure!(opts.admission_cap >= 1, "admission capacity must be >= 1");
+
+    let mut tenants = Vec::with_capacity(mp.tenants.len());
+    let mut outcomes = Vec::with_capacity(mp.tenants.len());
+    for (i, t) in mp.tenants.iter().enumerate() {
+        let times: Vec<Vec<f64>> =
+            t.plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
+        let arrivals = tenant_arrivals(t.rate_hz, t.seed, i, opts);
+        let out =
+            simulate_tenant_fleet(&times, &arrivals, opts.queue_cap, opts.admission_cap);
+        let latency = LatencyReport::from_latencies(&out.latencies);
+        let throughput =
+            if out.makespan > 0.0 { out.admitted as f64 / out.makespan } else { 0.0 };
+        tenants.push(TenantReport {
+            name: t.name.clone(),
+            network: t.plan.network.clone(),
+            budget: format!("{}B+{}s", t.plan.big, t.plan.small),
+            pipeline: t.partition_display(),
+            rate_hz: t.rate_hz,
+            weight: t.weight,
+            offered: out.offered,
+            admitted: out.admitted,
+            shed: out.shed,
+            throughput,
+            capacity: t.plan.throughput,
+            latency,
+            p99_sla_s: t.p99_sla_s,
+            sla_ok: t
+                .p99_sla_s
+                .map(|sla| latency.map_or(false, |l| l.p99 <= sla)),
+            utilization: tenant_utilization(&out),
+        });
+        outcomes.push(out);
+    }
+
+    let wall_s = outcomes.iter().map(|o| o.makespan).fold(0.0, f64::max);
+    let mut busy_core_s = 0.0;
+    for (t, out) in mp.tenants.iter().zip(&outcomes) {
+        busy_core_s += core_seconds(&t.plan, &out.busy)
+            .with_context(|| format!("tenant {:?}", t.name))?;
+    }
+    let total_cores = (mp.big + mp.small) as f64;
+    let board_utilization =
+        if wall_s > 0.0 { busy_core_s / (total_cores * wall_s) } else { 0.0 };
+    let weighted_throughput =
+        tenants.iter().map(|t| t.weight * t.throughput).sum();
+
+    Ok(MultiServeReport {
+        mode: MultiServeMode::Des,
+        wall_s,
+        images: tenants.iter().map(|t| t.admitted).sum(),
+        shed: tenants.iter().map(|t| t.shed).sum(),
+        weighted_throughput,
+        board_utilization,
+        tenants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::arrivals::uniform_arrivals;
+    use crate::simulator::pipeline_sim;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    #[test]
+    fn underloaded_tenant_sheds_nothing_and_sees_service_latency() {
+        // One 2-stage replica at 50/s capacity, offered 5/s: every item
+        // admitted, latency == service time.
+        let times = vec![vec![0.01, 0.02]];
+        let arr = uniform_arrivals(5.0, 100);
+        let out = simulate_tenant_fleet(&times, &arr, 2, 4);
+        assert_eq!(out.shed, 0);
+        assert_eq!(out.admitted, 100);
+        for l in &out.latencies {
+            assert!((l - 0.03).abs() < 1e-12, "latency {l}");
+        }
+    }
+
+    #[test]
+    fn overloaded_tenant_sheds_but_bounds_latency() {
+        // Offered 4x capacity: the bounded front door sheds the excess and
+        // admitted items wait at most ~cap service times.
+        let times = vec![vec![0.02]];
+        let arr = uniform_arrivals(200.0, 400);
+        let out = simulate_tenant_fleet(&times, &arr, 2, 4);
+        assert!(out.shed > 200, "shed {}", out.shed);
+        assert_eq!(out.admitted + out.shed, 400);
+        let worst = out.latencies.iter().copied().fold(0.0, f64::max);
+        assert!(
+            worst <= 0.02 * 6.0 + 1e-9,
+            "bounded queue must bound latency, got {worst}"
+        );
+    }
+
+    #[test]
+    fn saturating_arrivals_reach_fleet_capacity() {
+        // Arrivals far above capacity: served rate approaches the Eq. 12
+        // sum of replica rates.
+        let times = vec![vec![0.02, 0.01], vec![0.04]];
+        let cap_rate = 1.0 / 0.02 + 1.0 / 0.04;
+        let arr = uniform_arrivals(1000.0, 3000);
+        let out = simulate_tenant_fleet(&times, &arr, 2, 8);
+        let rate = out.admitted as f64 / out.makespan;
+        assert!(
+            (rate - cap_rate).abs() / cap_rate < 0.05,
+            "served {rate:.1} vs capacity {cap_rate:.1}"
+        );
+    }
+
+    #[test]
+    fn single_replica_with_loose_door_matches_open_loop_recurrence() {
+        // With an admission cap no arrival ever hits, the per-tenant engine
+        // must reproduce the plain open-loop recurrence exactly.
+        let times = [0.015, 0.03, 0.01];
+        let arr = crate::simulator::arrivals::poisson_arrivals(20.0, 300, 5);
+        let open = crate::simulator::arrivals::simulate_open_loop(&times, &arr, 2, 1.0);
+        let out = simulate_tenant_fleet(&[times.to_vec()], &arr, 2, usize::MAX / 2);
+        assert_eq!(out.shed, 0);
+        let p50 = stats::percentile(&out.latencies, 50.0);
+        let p99 = stats::percentile(&out.latencies, 99.0);
+        assert!((p50 - open.p50_latency).abs() < 1e-9, "{p50} vs {}", open.p50_latency);
+        assert!((p99 - open.p99_latency).abs() < 1e-9, "{p99} vs {}", open.p99_latency);
+        assert!((out.makespan - open.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturated_fleet_matches_closed_loop_steady_state() {
+        // All arrivals at t=0 with a huge admission cap ~ the saturated
+        // closed-loop fleet: throughput must match the Eq. 12 sum closely.
+        let replicas = vec![vec![0.01, 0.02], vec![0.03]];
+        let arr = vec![0.0; 2000];
+        let out = simulate_tenant_fleet(&replicas, &arr, 2, usize::MAX / 2);
+        let closed = pipeline_sim::simulate_replicated(&replicas, 2000, 2);
+        let rate = out.admitted as f64 / out.makespan;
+        let rel = (rate - closed.throughput).abs() / closed.throughput;
+        assert!(rel < 0.05, "open {rate:.2} vs closed {:.2}", closed.throughput);
+    }
+
+    #[test]
+    fn dispatch_is_rate_proportional_under_load() {
+        let replicas = vec![vec![0.01], vec![0.03]];
+        let arr = uniform_arrivals(500.0, 2000);
+        let out = simulate_tenant_fleet(&replicas, &arr, 2, 6);
+        let share = out.dispatched[0] as f64 / out.dispatched[1].max(1) as f64;
+        assert!((2.0..4.5).contains(&share), "share {share:.2} ({:?})", out.dispatched);
+    }
+
+    #[test]
+    fn property_conservation_and_latency_floor() {
+        check(60, |rng| {
+            let r = 1 + rng.index(3);
+            let replicas: Vec<Vec<f64>> = (0..r)
+                .map(|_| {
+                    let p = 1 + rng.index(3);
+                    (0..p).map(|_| rng.range_f64(0.002, 0.03)).collect()
+                })
+                .collect();
+            let rate = rng.range_f64(5.0, 300.0);
+            let n = 50 + rng.index(300);
+            let arr = poisson_arrivals(rate, n, rng.next_u64());
+            let cap = 1 + rng.index(3);
+            let adm = 1 + rng.index(8);
+            let out = simulate_tenant_fleet(&replicas, &arr, cap, adm);
+            crate::prop_assert!(
+                out.admitted + out.shed == n,
+                "conservation: {} + {} != {n}",
+                out.admitted,
+                out.shed
+            );
+            crate::prop_assert!(
+                out.dispatched.iter().sum::<usize>() == out.admitted,
+                "dispatch mismatch"
+            );
+            let min_service: f64 = replicas
+                .iter()
+                .map(|t| t.iter().sum::<f64>())
+                .fold(f64::INFINITY, f64::min);
+            for l in &out.latencies {
+                crate::prop_assert!(
+                    *l >= min_service - 1e-9,
+                    "latency {l} below fastest service path {min_service}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn determinism_same_seed_same_outcome() {
+        let mut rng = Rng::new(9);
+        let replicas = vec![vec![0.01, 0.02]];
+        let arr = poisson_arrivals(40.0, 500, rng.next_u64());
+        let a = simulate_tenant_fleet(&replicas, &arr, 2, 4);
+        let b = simulate_tenant_fleet(&replicas, &arr, 2, 4);
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.dispatched, b.dispatched);
+    }
+}

@@ -1,0 +1,279 @@
+//! Wall-clock multi-tenant co-serving: one real thread fleet per tenant on
+//! its disjoint core slice, behind a shared front door that paces the
+//! merged per-tenant Poisson arrival streams and applies per-tenant
+//! admission control — a bounded queue per tenant, shed-on-full counted
+//! per tenant ([`crate::coordinator::queue::Sender::try_send`]).
+//!
+//! Topology (DESIGN.md §10):
+//!
+//! ```text
+//! merged arrival schedule ──▶ front door ──try_send──▶ [tenant 0 queue] ─▶ fleet 0
+//!  (per-tenant Poisson,        (single thread,         [tenant 1 queue] ─▶ fleet 1
+//!   sorted by time)             shed on full)          ...
+//! ```
+//!
+//! Each tenant fleet is an ordinary [`crate::coordinator::run_fleet`] over
+//! synthetic sleep stages scaled by `time_scale` (exactly like the
+//! single-tenant `Plan::deploy` synthetic backend); items carry their
+//! admission `Instant` so the final stage records true arrival→completion
+//! latency, including front-door queueing. Reported latencies and
+//! throughputs are normalized back by `time_scale` so they compare
+//! directly with the DES twin ([`crate::tenancy::simulate_multi`]) and
+//! with the declared SLAs.
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::queue::{bounded, TrySendError};
+use crate::coordinator::{run_fleet, StageSpec};
+
+use crate::api::LatencyReport;
+
+use super::multiplan::MultiPlan;
+use super::report::{
+    core_seconds, MultiServeMode, MultiServeOptions, MultiServeReport, TenantReport,
+};
+
+/// Build one tenant's synthetic fleet: every stage sleeps for its Eq. 10
+/// service time scaled by `scale`; the last stage of each replica records
+/// the item's arrival→completion latency into `sink`.
+fn tenant_stages(
+    replica_times: &[Vec<f64>],
+    scale: f64,
+    sink: &Arc<Mutex<Vec<f64>>>,
+) -> Vec<Vec<StageSpec<(usize, Instant)>>> {
+    replica_times
+        .iter()
+        .enumerate()
+        .map(|(r, times)| {
+            let p = times.len();
+            times
+                .iter()
+                .enumerate()
+                .map(|(s, &t)| {
+                    let dt = Duration::from_secs_f64(t * scale);
+                    let last = s + 1 == p;
+                    let sink = sink.clone();
+                    StageSpec::new(
+                        &format!("r{r}s{s}"),
+                        Box::new(move || {
+                            Box::new(move |x: (usize, Instant)| {
+                                thread::sleep(dt);
+                                if last {
+                                    sink.lock()
+                                        .unwrap()
+                                        .push(x.1.elapsed().as_secs_f64());
+                                }
+                                x
+                            })
+                        }),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Deploy a [`MultiPlan`] on real threads: per-tenant fleets plus the
+/// shared admission front door. See the module docs for the topology and
+/// the normalization convention.
+pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiServeReport> {
+    anyhow::ensure!(opts.images >= 1, "need at least one arrival per tenant");
+    anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
+    anyhow::ensure!(opts.admission_cap >= 1, "admission capacity must be >= 1");
+    anyhow::ensure!(opts.time_scale > 0.0, "time_scale must be positive");
+    let n_tenants = mp.tenants.len();
+
+    // Merged arrival schedule: (scaled arrival time, tenant), time-sorted.
+    let mut schedule: Vec<(f64, usize)> = Vec::with_capacity(n_tenants * opts.images);
+    let mut offered = vec![0usize; n_tenants];
+    for (i, t) in mp.tenants.iter().enumerate() {
+        for a in super::cosim::tenant_arrivals(t.rate_hz, t.seed, i, opts) {
+            schedule.push((a * opts.time_scale, i));
+        }
+        offered[i] = opts.images;
+    }
+    schedule.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+    // Per-tenant plumbing: shed queue -> fleet thread.
+    let mut front_txs = Vec::with_capacity(n_tenants);
+    let mut sinks = Vec::with_capacity(n_tenants);
+    let mut handles = Vec::with_capacity(n_tenants);
+    for t in &mp.tenants {
+        let times: Vec<Vec<f64>> =
+            t.plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let stages = tenant_stages(&times, opts.time_scale, &sink);
+        let (tx, rx) = bounded::<(usize, Instant)>(opts.admission_cap);
+        let queue_cap = opts.queue_cap;
+        let handle = thread::spawn(move || {
+            run_fleet(stages, queue_cap, 1, std::iter::from_fn(move || rx.recv()))
+        });
+        front_txs.push(tx);
+        sinks.push(sink);
+        handles.push(handle);
+    }
+
+    // Shared front door: pace the merged schedule in real (scaled) time;
+    // a full tenant queue sheds the arrival, a closed one (fleet died)
+    // stops feeding that tenant.
+    let mut shed = vec![0usize; n_tenants];
+    let mut alive = vec![true; n_tenants];
+    let board_start = Instant::now();
+    for (seq, &(at, tenant)) in schedule.iter().enumerate() {
+        let now = board_start.elapsed().as_secs_f64();
+        if at > now {
+            thread::sleep(Duration::from_secs_f64(at - now));
+        }
+        if !alive[tenant] {
+            shed[tenant] += 1;
+            continue;
+        }
+        match front_txs[tenant].try_send((seq, Instant::now())) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => shed[tenant] += 1,
+            Err(TrySendError::Closed(_)) => {
+                alive[tenant] = false;
+                shed[tenant] += 1;
+            }
+        }
+    }
+    drop(front_txs); // closes every tenant queue; fleets drain and finish
+
+    let mut tenants = Vec::with_capacity(n_tenants);
+    let mut busy_core_s = 0.0;
+    for (i, (t, handle)) in mp.tenants.iter().zip(handles).enumerate() {
+        let (_, fleet) = handle.join().expect("tenant fleet panicked");
+        anyhow::ensure!(
+            fleet.images + shed[i] == offered[i],
+            "tenant {:?}: {} served + {} shed != {} offered",
+            t.name,
+            fleet.images,
+            shed[i],
+            offered[i]
+        );
+        // Normalize scaled wall-clock numbers back to model time.
+        let latencies: Vec<f64> = sinks[i]
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|l| l / opts.time_scale)
+            .collect();
+        let latency = LatencyReport::from_latencies(&latencies);
+        let throughput = fleet.throughput() * opts.time_scale;
+        let busy: Vec<Vec<f64>> = fleet
+            .replicas
+            .iter()
+            .map(|r| {
+                r.stages
+                    .iter()
+                    .map(|s| s.busy.as_secs_f64() / opts.time_scale)
+                    .collect()
+            })
+            .collect();
+        busy_core_s += core_seconds(&t.plan, &busy)
+            .with_context(|| format!("tenant {:?}", t.name))?;
+        let wall = fleet.wall.as_secs_f64() / opts.time_scale;
+        let utilization = if wall > 0.0 {
+            busy.iter()
+                .flat_map(|stages| stages.iter())
+                .fold(0.0f64, |m, b| m.max(b / wall))
+        } else {
+            0.0
+        };
+        tenants.push(TenantReport {
+            name: t.name.clone(),
+            network: t.plan.network.clone(),
+            budget: format!("{}B+{}s", t.plan.big, t.plan.small),
+            pipeline: t.partition_display(),
+            rate_hz: t.rate_hz,
+            weight: t.weight,
+            offered: offered[i],
+            admitted: fleet.images,
+            shed: shed[i],
+            throughput,
+            capacity: t.plan.throughput,
+            latency,
+            p99_sla_s: t.p99_sla_s,
+            sla_ok: t
+                .p99_sla_s
+                .map(|sla| latency.map_or(false, |l| l.p99 <= sla)),
+            utilization,
+        });
+    }
+    let wall_s = board_start.elapsed().as_secs_f64() / opts.time_scale;
+    let total_cores = (mp.big + mp.small) as f64;
+    let board_utilization =
+        if wall_s > 0.0 { busy_core_s / (total_cores * wall_s) } else { 0.0 };
+    let weighted_throughput: f64 =
+        tenants.iter().map(|t| t.weight * t.throughput).sum();
+
+    Ok(MultiServeReport {
+        mode: MultiServeMode::Synthetic { time_scale: opts.time_scale },
+        wall_s,
+        images: tenants.iter().map(|t| t.admitted).sum(),
+        shed: tenants.iter().map(|t| t.shed).sum(),
+        weighted_throughput,
+        board_utilization,
+        tenants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::tenancy::TenantSpec;
+
+    fn small_multiplan(rate_a: f64, rate_b: f64) -> MultiPlan {
+        let specs = [
+            TenantSpec::new("alexnet", rate_a),
+            TenantSpec::new("squeezenet", rate_b),
+        ];
+        MultiPlan::compile(&specs, &Config::default(), 2).unwrap()
+    }
+
+    #[test]
+    fn deploy_conserves_arrivals_and_reports_both_tenants() {
+        let mp = small_multiplan(4.0, 8.0);
+        let opts = MultiServeOptions {
+            images: 12,
+            time_scale: 0.02,
+            ..MultiServeOptions::default()
+        };
+        let report = mp.deploy(&opts).unwrap();
+        assert_eq!(report.tenants.len(), 2);
+        for t in &report.tenants {
+            assert_eq!(t.offered, 12);
+            assert_eq!(t.admitted + t.shed, t.offered);
+        }
+        assert_eq!(
+            report.images + report.shed,
+            24,
+            "front door must account for every arrival"
+        );
+        assert!(report.wall_s > 0.0);
+    }
+
+    #[test]
+    fn underloaded_deploy_sheds_nothing() {
+        // Offered rates far below any slice capacity: nothing sheds and
+        // every admitted item completes.
+        let mp = small_multiplan(1.0, 2.0);
+        let opts = MultiServeOptions {
+            images: 6,
+            admission_cap: 16,
+            time_scale: 0.02,
+            ..MultiServeOptions::default()
+        };
+        let report = mp.deploy(&opts).unwrap();
+        assert_eq!(report.shed, 0, "{report:?}");
+        assert_eq!(report.images, 12);
+        for t in &report.tenants {
+            assert!(t.latency.is_some());
+        }
+    }
+}

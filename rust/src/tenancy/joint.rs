@@ -1,0 +1,335 @@
+//! Joint cross-network design-space exploration: split one big.LITTLE core
+//! budget across several tenants, each of which then gets its own
+//! replicated-pipeline search inside its slice.
+//!
+//! The single-network searches ([`crate::dse`]) answer "what is the best
+//! design for THIS network on THIS budget"; co-serving adds the outer
+//! question "how many cores does each network deserve". Static equal
+//! splits leave throughput on the table whenever the tenants' load or
+//! compute-efficiency is asymmetric (the PICO / dynamic-distribution
+//! observation, arXiv 2206.08662 / 2107.05828). Because every candidate is
+//! scored by the same Eq. 10/12 TimeMatrix predictions, the outer search
+//! is fully analytic: enumerate every ordered split of `(hb, hs)` into one
+//! non-empty slice per tenant ([`splits`]), reuse the replicated search
+//! ([`crate::dse::explore_replicated`], i.e.
+//! [`partitions`](crate::dse::replicated::partitions) ×
+//! [`explore_budget`](crate::dse::explore_budget)) inside each slice, and
+//! rank splits by the joint objective.
+//!
+//! **Objective** (DESIGN.md §10): lexicographic — (1) most declared p99
+//! SLAs predicted feasible, (2) highest weighted served rate
+//! `Σ_t w_t · min(λ_t, μ_t)` where `μ_t` is the slice's Eq. 12 aggregate
+//! capacity, (3) highest capacity sum as the tie-break. SLA feasibility is
+//! predicted with an M/D/1-style tail bound ([`predict_p99`]); the DES
+//! co-simulation ([`crate::tenancy::simulate_multi`]) is the ground truth
+//! the prediction is tested against.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::dse::{self, CoreBudget, ReplicatedDesign};
+use crate::perfmodel::TimeMatrix;
+
+use super::spec::TenantSpec;
+
+/// Guard against planning a tenant at (or beyond) its slice's capacity:
+/// above this utilization the queueing tail blows up and no finite p99 is
+/// predicted.
+pub const MAX_UTILIZATION: f64 = 0.95;
+
+/// All ordered assignments of the full `(hb, hs)` budget to `tenants`
+/// slices, every slice getting at least one core and every core being
+/// assigned (more cores never hurt under the monotone Eq. 12 model).
+/// Ordered, not canonical: tenants are distinct, so `(3B, 1B+4s)` and
+/// `(1B+4s, 3B)` are different designs.
+pub fn splits(hb: usize, hs: usize, tenants: usize) -> Vec<Vec<CoreBudget>> {
+    fn rec(
+        hb: usize,
+        hs: usize,
+        left: usize,
+        cur: &mut Vec<CoreBudget>,
+        out: &mut Vec<Vec<CoreBudget>>,
+    ) {
+        if left == 1 {
+            if hb + hs >= 1 {
+                cur.push(CoreBudget::new(hb, hs));
+                out.push(cur.clone());
+                cur.pop();
+            }
+            return;
+        }
+        for b in 0..=hb {
+            for s in 0..=hs {
+                if b + s == 0 {
+                    continue;
+                }
+                if (hb - b) + (hs - s) < left - 1 {
+                    continue; // not enough cores left for the remaining tenants
+                }
+                cur.push(CoreBudget::new(b, s));
+                rec(hb - b, hs - s, left - 1, cur, out);
+                cur.pop();
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    if tenants >= 1 && hb + hs >= tenants {
+        let mut cur = Vec::new();
+        rec(hb, hs, tenants, &mut cur, &mut out);
+    }
+    out
+}
+
+/// Analytic p99 end-to-end latency of a replicated fleet under Poisson
+/// arrivals at `rate_hz` — the feasibility predicate of the joint search.
+///
+/// Per replica: pipeline service latency (the sum of its Eq. 10 stage
+/// times) plus an M/D/1-style queueing tail. Least-outstanding-work
+/// dispatch routes arrivals rate-proportionally, so every replica sees the
+/// same utilization `ρ = λ/μ`; the mean M/D/1 wait is `ρ·c/(2(1−ρ))` for
+/// cycle time `c`, and the exponential-tail p99 multiplies it by `ln 100`.
+/// Returns `f64::INFINITY` when `ρ ≥` [`MAX_UTILIZATION`] (no finite
+/// prediction near saturation).
+pub fn predict_p99(stage_times: &[Vec<f64>], capacity_hz: f64, rate_hz: f64) -> f64 {
+    if capacity_hz <= 0.0 {
+        return f64::INFINITY;
+    }
+    let rho = rate_hz / capacity_hz;
+    if rho >= MAX_UTILIZATION {
+        return f64::INFINITY;
+    }
+    let mut worst: f64 = 0.0;
+    for times in stage_times {
+        let service: f64 = times.iter().sum();
+        let cycle = times.iter().copied().fold(0.0, f64::max);
+        let wait_p99 = 100f64.ln() * rho * cycle / (2.0 * (1.0 - rho));
+        worst = worst.max(service + wait_p99);
+    }
+    worst
+}
+
+/// One tenant's slice of a joint design.
+#[derive(Debug, Clone)]
+pub struct TenantDesign {
+    /// Cores this tenant owns (disjoint from every other tenant's).
+    pub budget: CoreBudget,
+    /// The replicated design chosen inside the slice.
+    pub design: ReplicatedDesign,
+    /// Slice capacity: the design's Eq. 12 aggregate rate (imgs/s).
+    pub capacity: f64,
+    /// Predicted served rate `min(λ, μ)` (imgs/s).
+    pub served: f64,
+    /// Analytic p99 latency prediction ([`predict_p99`]); infinite when
+    /// the slice cannot absorb the offered rate.
+    pub predicted_p99: f64,
+    /// `Some(feasible)` when the tenant declared an SLA, else `None`.
+    pub sla_ok: Option<bool>,
+}
+
+/// The chosen joint design: one [`TenantDesign`] per tenant, in spec order.
+#[derive(Debug, Clone)]
+pub struct JointDesign {
+    pub tenants: Vec<TenantDesign>,
+    /// The objective value: `Σ_t w_t · min(λ_t, μ_t)`.
+    pub weighted_throughput: f64,
+    /// Declared SLAs predicted feasible / declared in total.
+    pub sla_met: usize,
+    pub sla_declared: usize,
+}
+
+fn tenant_design(
+    spec: &TenantSpec,
+    tm: &TimeMatrix,
+    budget: CoreBudget,
+    max_replicas: usize,
+    memo: &mut HashMap<(usize, CoreBudget), ReplicatedDesign>,
+    class: usize,
+) -> TenantDesign {
+    let design = memo
+        .entry((class, budget))
+        .or_insert_with(|| {
+            let r = max_replicas.min(budget.cores()).max(1);
+            dse::explore_replicated(tm, budget.big, budget.small, r)
+        })
+        .clone();
+    let capacity = design.throughput;
+    let served = spec.rate_hz.min(capacity);
+    let predicted_p99 = predict_p99(&design.stage_times(tm), capacity, spec.rate_hz);
+    let sla_ok = spec.p99_sla_s.map(|sla| predicted_p99 <= sla);
+    TenantDesign { budget, design, capacity, served, predicted_p99, sla_ok }
+}
+
+/// Search every core split of the platform across `specs` and return the
+/// joint design maximizing the lexicographic objective (SLAs met, weighted
+/// served rate, capacity). `max_replicas` caps the per-tenant replica
+/// count inside each slice.
+///
+/// # Example
+///
+/// ```
+/// use pipeit::config::Config;
+/// use pipeit::tenancy::{explore_joint, TenantSpec};
+///
+/// let specs = [TenantSpec::new("alexnet", 10.0), TenantSpec::new("squeezenet", 20.0)];
+/// let joint = explore_joint(&specs, &Config::default(), 4).unwrap();
+/// assert_eq!(joint.tenants.len(), 2);
+/// let cores: usize = joint.tenants.iter().map(|t| t.budget.cores()).sum();
+/// assert_eq!(cores, 8); // every core assigned
+/// ```
+pub fn explore_joint(
+    specs: &[TenantSpec],
+    cfg: &Config,
+    max_replicas: usize,
+) -> Result<JointDesign> {
+    anyhow::ensure!(!specs.is_empty(), "need at least one tenant");
+    anyhow::ensure!(max_replicas >= 1, "need at least one replica per tenant");
+    let (hb, hs) = (cfg.platform.big.cores, cfg.platform.small.cores);
+    anyhow::ensure!(
+        specs.len() <= hb + hs,
+        "{} tenants cannot each own a core on {}B+{}s",
+        specs.len(),
+        hb,
+        hs
+    );
+    let tms: Vec<TimeMatrix> =
+        specs.iter().map(|s| s.time_matrix(cfg)).collect::<Result<_>>()?;
+    let sla_declared = specs.iter().filter(|s| s.p99_sla_s.is_some()).count();
+
+    // Tenants serving the same network under the same time source share a
+    // design class, so duplicate tenants hit the memo instead of re-running
+    // the per-budget replicated search.
+    let class: Vec<usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            specs[..i]
+                .iter()
+                .position(|o| o.network == s.network && o.time_source == s.time_source)
+                .unwrap_or(i)
+        })
+        .collect();
+
+    let mut memo: HashMap<(usize, CoreBudget), ReplicatedDesign> = HashMap::new();
+    let mut best: Option<JointDesign> = None;
+    for split in splits(hb, hs, specs.len()) {
+        let tenants: Vec<TenantDesign> = specs
+            .iter()
+            .zip(&split)
+            .enumerate()
+            .map(|(i, (spec, &budget))| {
+                tenant_design(spec, &tms[i], budget, max_replicas, &mut memo, class[i])
+            })
+            .collect();
+        let sla_met =
+            tenants.iter().filter(|t| t.sla_ok == Some(true)).count();
+        let weighted: f64 = specs
+            .iter()
+            .zip(&tenants)
+            .map(|(s, t)| s.weight * t.served)
+            .sum();
+        let capacity: f64 = tenants.iter().map(|t| t.capacity).sum();
+        let candidate =
+            JointDesign { tenants, weighted_throughput: weighted, sla_met, sla_declared };
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                let b_capacity: f64 = b.tenants.iter().map(|t| t.capacity).sum();
+                candidate.sla_met > b.sla_met
+                    || (candidate.sla_met == b.sla_met
+                        && candidate.weighted_throughput > b.weighted_throughput + 1e-12)
+                    || (candidate.sla_met == b.sla_met
+                        && (candidate.weighted_throughput - b.weighted_throughput).abs()
+                            <= 1e-12
+                        && capacity > b_capacity + 1e-12)
+            }
+        };
+        if better {
+            best = Some(candidate);
+        }
+    }
+    best.context("empty joint design space (fewer cores than tenants?)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::simulator::platform::Platform;
+
+    #[test]
+    fn splits_cover_the_budget_and_respect_tenancy() {
+        for (hb, hs, t) in [(4, 4, 2), (2, 6, 3), (1, 1, 2), (4, 4, 1)] {
+            let all = splits(hb, hs, t);
+            assert!(!all.is_empty(), "({hb},{hs},{t})");
+            for split in &all {
+                assert_eq!(split.len(), t);
+                assert_eq!(split.iter().map(|b| b.big).sum::<usize>(), hb);
+                assert_eq!(split.iter().map(|b| b.small).sum::<usize>(), hs);
+                assert!(split.iter().all(|b| b.cores() >= 1));
+            }
+        }
+        // Ordered: (1,0),(0,1) and (0,1),(1,0) are both present.
+        let two = splits(1, 1, 2);
+        assert_eq!(two.len(), 2);
+        // More tenants than cores: no split.
+        assert!(splits(1, 1, 3).is_empty());
+    }
+
+    #[test]
+    fn single_tenant_split_is_the_whole_board() {
+        let all = splits(4, 4, 1);
+        assert_eq!(all, vec![vec![CoreBudget::new(4, 4)]]);
+    }
+
+    #[test]
+    fn predict_p99_grows_with_load_and_diverges_at_saturation() {
+        let stages = vec![vec![0.01, 0.02]]; // capacity 50/s
+        let light = predict_p99(&stages, 50.0, 5.0);
+        let heavy = predict_p99(&stages, 50.0, 40.0);
+        assert!(light >= 0.03, "at least the service latency: {light}");
+        assert!(heavy > light, "more load, more tail: {light} vs {heavy}");
+        assert!(predict_p99(&stages, 50.0, 49.0).is_infinite());
+        assert!(predict_p99(&stages, 50.0, 500.0).is_infinite());
+    }
+
+    #[test]
+    fn single_tenant_joint_matches_the_replicated_search() {
+        let cfg = Config::default();
+        let spec = TenantSpec::new("alexnet", 1e9); // saturating
+        let joint = explore_joint(&[spec], &cfg, 4).unwrap();
+        let tm = TimeMatrix::measured(&Platform::hikey970(), &zoo::alexnet());
+        let direct = dse::explore_replicated(&tm, 4, 4, 4);
+        assert!((joint.tenants[0].capacity - direct.throughput).abs() < 1e-9);
+        assert_eq!(joint.sla_declared, 0);
+    }
+
+    #[test]
+    fn loaded_tenant_attracts_more_cores_than_an_idle_one() {
+        // One saturating tenant, one nearly idle: the saturated tenant must
+        // end up with most of the board.
+        let cfg = Config::default();
+        let specs = [
+            TenantSpec::new("squeezenet", 1e9),
+            TenantSpec::new("alexnet", 0.01),
+        ];
+        let joint = explore_joint(&specs, &cfg, 4).unwrap();
+        assert!(
+            joint.tenants[0].budget.cores() > joint.tenants[1].budget.cores(),
+            "{:?}",
+            joint.tenants.iter().map(|t| t.budget).collect::<Vec<_>>()
+        );
+        // The idle tenant's demand is still met.
+        assert!(joint.tenants[1].served >= 0.01 - 1e-9);
+    }
+
+    #[test]
+    fn more_tenants_than_cores_is_an_error() {
+        let cfg = Config::default();
+        let specs: Vec<TenantSpec> =
+            (0..9).map(|_| TenantSpec::new("alexnet", 1.0)).collect();
+        assert!(explore_joint(&specs, &cfg, 4).is_err());
+    }
+}

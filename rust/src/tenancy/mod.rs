@@ -1,0 +1,64 @@
+//! Multi-tenant co-serving (DESIGN.md §10): several CNNs sharing one
+//! big.LITTLE board under joint planning and SLA-aware admission.
+//!
+//! Pipe-it plans one network per board, but a production edge node serves
+//! several at once — e.g. a detector and a classifier sharing the same 4+4
+//! cluster budget. Static per-network partitioning of heterogeneous
+//! resources leaves throughput on the table whenever load or compute
+//! efficiency is asymmetric (PICO, arXiv 2206.08662; dynamic distribution
+//! of edge intelligence, arXiv 2107.05828). Because every candidate design
+//! is scored by the same TimeMatrix-driven Eq. 10/12 predictions, the
+//! joint partition search is analytic — no profiling loop required:
+//!
+//! * [`TenantSpec`] — one tenant's workload and contract: network (or an
+//!   existing plan artifact), Poisson arrival rate, optional p99 SLA,
+//!   weight.
+//! * [`explore_joint`] — the joint DSE: enumerate core-budget splits
+//!   across tenants ([`joint::splits`]), reuse the replicated-pipeline
+//!   search ([`crate::dse::explore_replicated`]) inside each slice, rank
+//!   by (SLAs met, weighted served rate, capacity).
+//! * [`MultiPlan`] — the schema-versioned serializable artifact embedding
+//!   one ordinary [`Plan`](crate::api::Plan) per tenant; save → load →
+//!   simulate is lossless.
+//! * [`simulate_multi`] / [`deploy_multi`] — the execution twins: a DES
+//!   co-simulation of the merged Poisson streams with per-tenant bounded
+//!   admission ([`simulate_tenant_fleet`]), and a wall-clock deploy running
+//!   each tenant's fleet behind a shared shed-on-full front door. Both
+//!   return one [`MultiServeReport`], rendered by
+//!   [`crate::reports::render_multi_serve`].
+//!
+//! The CLI surface is `pipeit plan-multi / serve-multi / simulate-multi`.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::config::Config;
+//! use pipeit::tenancy::{MultiPlan, MultiServeOptions, TenantSpec};
+//!
+//! let specs = [
+//!     TenantSpec::new("alexnet", 5.0),
+//!     TenantSpec::new("squeezenet", 10.0).with_sla(2.0),
+//! ];
+//! let mp = MultiPlan::compile(&specs, &Config::default(), 4).unwrap();
+//! let report = mp
+//!     .simulate(&MultiServeOptions { images: 200, ..Default::default() })
+//!     .unwrap();
+//! assert_eq!(report.tenants.len(), 2);
+//! assert!(report.weighted_throughput > 0.0);
+//! ```
+
+pub mod cosim;
+pub mod deploy;
+pub mod joint;
+pub mod multiplan;
+pub mod report;
+pub mod spec;
+
+pub use cosim::{simulate_multi, simulate_tenant_fleet, TenantSimOutcome};
+pub use deploy::deploy_multi;
+pub use joint::{explore_joint, predict_p99, JointDesign, TenantDesign};
+pub use multiplan::{MultiPlan, TenantPlan, MULTI_PLAN_VERSION};
+pub use report::{
+    MultiServeMode, MultiServeOptions, MultiServeReport, TenantReport,
+};
+pub use spec::{parse_duration_s, TenantSpec};

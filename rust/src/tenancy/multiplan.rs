@@ -1,0 +1,444 @@
+//! The multi-tenant serving artifact: a schema-versioned, serializable
+//! [`MultiPlan`] embedding one ordinary [`Plan`] per tenant (via
+//! [`Plan::to_json`] / [`Plan::from_json`]) plus each tenant's service
+//! contract. Like the single-tenant [`Plan`], a saved artifact reloads and
+//! behaves identically — no search re-runs at deploy time, and the DES /
+//! wall-clock twins ([`MultiPlan::simulate`] / [`MultiPlan::deploy`]) read
+//! only what the artifact carries.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::api::{Plan, Strategy};
+use crate::config::Config;
+use crate::util::json::Json;
+
+use super::deploy::deploy_multi;
+use super::joint::explore_joint;
+use super::report::{MultiServeOptions, MultiServeReport};
+use super::spec::TenantSpec;
+
+/// MultiPlan schema version written by [`MultiPlan::save`] and required by
+/// [`MultiPlan::load`].
+pub const MULTI_PLAN_VERSION: usize = 1;
+
+/// One tenant's slot in a [`MultiPlan`]: the embedded per-tenant [`Plan`]
+/// (whose `big`/`small` are the tenant's disjoint core slice) plus the
+/// service contract the joint DSE scored it against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantPlan {
+    pub name: String,
+    /// Offered Poisson arrival rate (images/s).
+    pub rate_hz: f64,
+    /// Declared p99 end-to-end latency SLA in seconds, if any.
+    pub p99_sla_s: Option<f64>,
+    /// Weight in the joint objective.
+    pub weight: f64,
+    /// Pinned arrival-stream seed; `None` derives from the run seed.
+    pub seed: Option<u64>,
+    /// Predicted served rate `min(λ, μ)` at plan time (imgs/s).
+    pub predicted_served: f64,
+    /// Analytic p99 prediction at plan time; `None` when the slice cannot
+    /// absorb the offered rate (infinite tail).
+    pub predicted_p99: Option<f64>,
+    /// The tenant's compiled design on its core slice.
+    pub plan: Plan,
+}
+
+impl TenantPlan {
+    /// `B2-s1 | s3` style display of the tenant's fleet.
+    pub fn partition_display(&self) -> String {
+        self.plan.partition_display()
+    }
+}
+
+/// A compiled, serializable multi-tenant co-serving plan: disjoint core
+/// slices, one replicated design per tenant, and the joint objective value
+/// — ready to [`simulate`](MultiPlan::simulate) (DES co-simulation) or
+/// [`deploy`](MultiPlan::deploy) (wall-clock fleets behind a shared
+/// admission front door).
+///
+/// # Example
+///
+/// ```
+/// use pipeit::config::Config;
+/// use pipeit::tenancy::{MultiPlan, TenantSpec};
+///
+/// let specs = [TenantSpec::new("alexnet", 5.0), TenantSpec::new("squeezenet", 10.0)];
+/// let mp = MultiPlan::compile(&specs, &Config::default(), 4).unwrap();
+/// assert_eq!(mp.tenants.len(), 2);
+/// let path = std::env::temp_dir().join("pipeit_doc_multiplan.json");
+/// mp.save(&path).unwrap();
+/// let loaded = MultiPlan::load(&path).unwrap();
+/// assert_eq!(mp, loaded); // the artifact round-trips losslessly
+/// std::fs::remove_file(&path).ok();
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiPlan {
+    /// Platform name the plan was compiled for.
+    pub platform: String,
+    /// Board-wide big-cluster core budget.
+    pub big: usize,
+    /// Board-wide small-cluster core budget.
+    pub small: usize,
+    /// The joint objective value: `Σ_t w_t · min(λ_t, μ_t)` (imgs/s).
+    pub weighted_throughput: f64,
+    pub tenants: Vec<TenantPlan>,
+}
+
+impl MultiPlan {
+    /// Run the joint DSE ([`explore_joint`]) over `specs` and materialize
+    /// the winning split as a serializable artifact. `max_replicas` caps
+    /// the per-tenant replica count inside each slice.
+    pub fn compile(specs: &[TenantSpec], cfg: &Config, max_replicas: usize) -> Result<MultiPlan> {
+        let joint = explore_joint(specs, cfg, max_replicas)?;
+        let mut tenants = Vec::with_capacity(specs.len());
+        for (spec, td) in specs.iter().zip(&joint.tenants) {
+            let tm = spec.time_matrix(cfg)?;
+            let plan = Plan::from_design(
+                &spec.network,
+                &cfg.platform.name,
+                td.budget.big,
+                td.budget.small,
+                spec.time_source,
+                Strategy::Replicated { max_replicas, exact: false },
+                &tm,
+                &td.design,
+            );
+            tenants.push(TenantPlan {
+                name: spec.name.clone(),
+                rate_hz: spec.rate_hz,
+                p99_sla_s: spec.p99_sla_s,
+                weight: spec.weight,
+                seed: spec.seed,
+                predicted_served: td.served,
+                predicted_p99: td.predicted_p99.is_finite().then_some(td.predicted_p99),
+                plan,
+            });
+        }
+        Ok(MultiPlan {
+            platform: cfg.platform.name.clone(),
+            big: cfg.platform.big.cores,
+            small: cfg.platform.small.cores,
+            weighted_throughput: joint.weighted_throughput,
+            tenants,
+        })
+    }
+
+    pub fn num_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Structural invariants shared by [`MultiPlan::compile`] results and
+    /// loaded artifacts: tenant budgets partition the board, names are
+    /// unique, contracts are sane, and every tenant plan is a simulable
+    /// big.LITTLE plan (stage-time profiles present, no artifact binding).
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.tenants.is_empty(), "multi-plan has no tenants");
+        let (mut big, mut small) = (0usize, 0usize);
+        for (i, t) in self.tenants.iter().enumerate() {
+            anyhow::ensure!(
+                t.rate_hz.is_finite() && t.rate_hz > 0.0,
+                "tenant {i} ({}): rate must be positive",
+                t.name
+            );
+            anyhow::ensure!(
+                t.weight.is_finite() && t.weight >= 0.0,
+                "tenant {i} ({}): weight must be >= 0",
+                t.name
+            );
+            if let Some(sla) = t.p99_sla_s {
+                anyhow::ensure!(
+                    sla.is_finite() && sla > 0.0,
+                    "tenant {i} ({}): p99 SLA must be positive",
+                    t.name
+                );
+            }
+            if let Some(seed) = t.seed {
+                anyhow::ensure!(
+                    seed < (1u64 << 53),
+                    "tenant {i} ({}): seed {seed} exceeds 2^53 and cannot \
+                     round-trip through the JSON artifact losslessly",
+                    t.name
+                );
+            }
+            anyhow::ensure!(
+                t.plan.artifacts.is_none(),
+                "tenant {i} ({}): artifact-bound plans cannot be co-served",
+                t.name
+            );
+            for (r, rep) in t.plan.replicas.iter().enumerate() {
+                anyhow::ensure!(
+                    !rep.stage_times.is_empty(),
+                    "tenant {i} ({}): replica {r} carries no stage-time profile",
+                    t.name
+                );
+            }
+            anyhow::ensure!(
+                self.tenants.iter().skip(i + 1).all(|o| o.name != t.name),
+                "duplicate tenant name {:?}",
+                t.name
+            );
+            big += t.plan.big;
+            small += t.plan.small;
+        }
+        anyhow::ensure!(
+            big == self.big && small == self.small,
+            "tenant budgets ({big}B+{small}s) must partition the board \
+             ({}B+{}s)",
+            self.big,
+            self.small
+        );
+        Ok(())
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let tenants = Json::Arr(
+            self.tenants
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("name", Json::str(&t.name)),
+                        ("rate_hz", Json::num(t.rate_hz)),
+                        (
+                            "p99_sla_s",
+                            t.p99_sla_s.map_or(Json::Null, Json::num),
+                        ),
+                        ("weight", Json::num(t.weight)),
+                        ("seed", t.seed.map_or(Json::Null, |s| Json::num(s as f64))),
+                        ("predicted_served", Json::num(t.predicted_served)),
+                        (
+                            "predicted_p99",
+                            t.predicted_p99.map_or(Json::Null, Json::num),
+                        ),
+                        ("plan", t.plan.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("version", Json::num(MULTI_PLAN_VERSION as f64)),
+            (
+                "platform",
+                Json::obj(vec![
+                    ("name", Json::str(&self.platform)),
+                    ("big", Json::num(self.big as f64)),
+                    ("small", Json::num(self.small as f64)),
+                ]),
+            ),
+            ("weighted_throughput", Json::num(self.weighted_throughput)),
+            ("tenants", tenants),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MultiPlan> {
+        let version = j.req("version")?.as_usize().context("version")?;
+        anyhow::ensure!(
+            version == MULTI_PLAN_VERSION,
+            "multi-plan schema version {version} is not supported (field \
+             \"version\"; this build reads version {MULTI_PLAN_VERSION})"
+        );
+        let platform = j.req("platform")?;
+        let mut tenants = Vec::new();
+        for (i, tj) in j.req("tenants")?.as_arr().context("tenants array")?.iter().enumerate() {
+            let opt_num = |key: &str| -> Result<Option<f64>> {
+                match tj.req(key)? {
+                    Json::Null => Ok(None),
+                    v => Ok(Some(v.as_f64().with_context(|| format!("tenant {i} {key}"))?)),
+                }
+            };
+            let seed = match tj.req("seed")? {
+                Json::Null => None,
+                v => Some(v.as_usize().with_context(|| format!("tenant {i} seed"))? as u64),
+            };
+            tenants.push(TenantPlan {
+                name: tj
+                    .req("name")?
+                    .as_str()
+                    .with_context(|| format!("tenant {i} name"))?
+                    .to_string(),
+                rate_hz: tj
+                    .req("rate_hz")?
+                    .as_f64()
+                    .with_context(|| format!("tenant {i} rate_hz"))?,
+                p99_sla_s: opt_num("p99_sla_s")?,
+                weight: tj
+                    .req("weight")?
+                    .as_f64()
+                    .with_context(|| format!("tenant {i} weight"))?,
+                seed,
+                predicted_served: tj
+                    .req("predicted_served")?
+                    .as_f64()
+                    .with_context(|| format!("tenant {i} predicted_served"))?,
+                predicted_p99: opt_num("predicted_p99")?,
+                plan: Plan::from_json(tj.req("plan")?)
+                    .with_context(|| format!("tenant {i} embedded plan"))?,
+            });
+        }
+        let mp = MultiPlan {
+            platform: platform.req("name")?.as_str().context("platform name")?.to_string(),
+            big: platform.req("big")?.as_usize().context("platform big")?,
+            small: platform.req("small")?.as_usize().context("platform small")?,
+            weighted_throughput: j
+                .req("weighted_throughput")?
+                .as_f64()
+                .context("weighted_throughput")?,
+            tenants,
+        };
+        mp.validate()?;
+        Ok(mp)
+    }
+
+    /// Write the multi-plan as a JSON artifact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a multi-plan saved by [`MultiPlan::save`].
+    pub fn load(path: &Path) -> Result<MultiPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        MultiPlan::from_json(&j)
+            .with_context(|| format!("parsing multi-plan {}", path.display()))
+    }
+
+    // ---- display ---------------------------------------------------------
+
+    /// Human-readable plan description (the `pipeit plan-multi` output).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "co-serving : {} tenants on {} ({}B+{}s)\n",
+            self.tenants.len(),
+            self.platform,
+            self.big,
+            self.small
+        ));
+        for t in &self.tenants {
+            let sla = match t.p99_sla_s {
+                Some(sla) => format!("  p99<={:.0}ms", sla * 1e3),
+                None => String::new(),
+            };
+            let p99 = match t.predicted_p99 {
+                Some(p) => format!("  pred p99 {:.1}ms", p * 1e3),
+                None => "  pred p99 unbounded".to_string(),
+            };
+            s.push_str(&format!(
+                "tenant {:<12} {}B+{}s  {}  rate={:.1}/s  w={:.1}  served {:.2}/s \
+                 (cap {:.2}){sla}{p99}\n",
+                t.name,
+                t.plan.big,
+                t.plan.small,
+                t.partition_display(),
+                t.rate_hz,
+                t.weight,
+                t.predicted_served,
+                t.plan.throughput,
+            ));
+        }
+        s.push_str(&format!(
+            "objective  : {:.2} weighted imgs/s (Eq. 12, SLA-aware joint DSE)\n",
+            self.weighted_throughput
+        ));
+        s
+    }
+
+    // ---- execution backends ---------------------------------------------
+
+    /// DES co-simulation of the whole board: merged per-tenant Poisson
+    /// streams, per-tenant bounded admission with shed-on-full, each
+    /// tenant's replicated fleet on its disjoint slice — the design-time
+    /// twin of [`MultiPlan::deploy`].
+    pub fn simulate(&self, opts: &MultiServeOptions) -> Result<MultiServeReport> {
+        super::cosim::simulate_multi(self, opts)
+    }
+
+    /// Wall-clock co-serving: one real thread fleet per tenant plus a
+    /// shared front door pacing the merged arrival streams with per-tenant
+    /// shed-on-full admission.
+    pub fn deploy(&self, opts: &MultiServeOptions) -> Result<MultiServeReport> {
+        deploy_multi(self, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec::new("alexnet", 8.0),
+            TenantSpec::new("squeezenet", 16.0).with_sla(0.5),
+        ]
+    }
+
+    fn roundtrip(mp: &MultiPlan) -> MultiPlan {
+        let text = mp.to_json().to_string();
+        let j = Json::parse(&text).expect("multi-plan JSON reparses");
+        MultiPlan::from_json(&j).expect("multi-plan JSON deserializes")
+    }
+
+    #[test]
+    fn compiled_multiplan_roundtrips_through_json() {
+        let mp = MultiPlan::compile(&two_tenants(), &Config::default(), 4).unwrap();
+        assert_eq!(mp, roundtrip(&mp));
+    }
+
+    #[test]
+    fn compile_assigns_every_core_once() {
+        let mp = MultiPlan::compile(&two_tenants(), &Config::default(), 4).unwrap();
+        let big: usize = mp.tenants.iter().map(|t| t.plan.big).sum();
+        let small: usize = mp.tenants.iter().map(|t| t.plan.small).sum();
+        assert_eq!((big, small), (mp.big, mp.small));
+        assert!(mp.weighted_throughput > 0.0);
+    }
+
+    #[test]
+    fn from_json_rejects_schema_and_structure_violations() {
+        let mp = MultiPlan::compile(&two_tenants(), &Config::default(), 4).unwrap();
+        let good = mp.to_json();
+
+        // Wrong version names the field.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".to_string(), Json::num(99.0));
+        }
+        let err = MultiPlan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("\"version\"") && err.contains("99"), "{err}");
+
+        // A tenant budget that no longer partitions the board.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(ts)) = m.get_mut("tenants") {
+                if let Json::Obj(t0) = &mut ts[0] {
+                    if let Some(Json::Obj(p)) = t0.get_mut("plan") {
+                        if let Some(Json::Obj(pf)) = p.get_mut("platform") {
+                            pf.insert("big".to_string(), Json::num(9.0));
+                        }
+                    }
+                }
+            }
+        }
+        let err = format!("{:?}", MultiPlan::from_json(&j).unwrap_err());
+        assert!(err.contains("partition the board"), "{err}");
+
+        // Duplicate tenant names are rejected.
+        let mut j = good;
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(ts)) = m.get_mut("tenants") {
+                let name = ts[0].req("name").unwrap().as_str().unwrap().to_string();
+                if let Json::Obj(t1) = &mut ts[1] {
+                    t1.insert("name".to_string(), Json::str(&name));
+                }
+            }
+        }
+        let err = format!("{:?}", MultiPlan::from_json(&j).unwrap_err());
+        assert!(err.contains("duplicate tenant name"), "{err}");
+    }
+}

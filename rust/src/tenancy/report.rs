@@ -1,0 +1,257 @@
+//! The unified multi-tenant serving report: one shape for the DES
+//! co-simulation ([`crate::tenancy::simulate_multi`]) and the wall-clock
+//! deploy ([`crate::tenancy::deploy_multi`]), rendered by one path
+//! ([`crate::reports::render_multi_serve`]) and serialized for
+//! `--metrics-out`.
+
+use anyhow::{Context, Result};
+
+use crate::api::{LatencyReport, Plan};
+use crate::dse::PipelineConfig;
+use crate::util::json::Json;
+
+/// Runtime knobs shared by both multi-tenant execution backends; the
+/// [`MultiPlan`](crate::tenancy::MultiPlan) itself fixes every design
+/// decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MultiServeOptions {
+    /// Arrivals generated per tenant.
+    pub images: usize,
+    /// Inter-stage queue capacity inside each replica.
+    pub queue_cap: usize,
+    /// Front-door admission queue capacity per tenant; arrivals beyond it
+    /// are shed (counted per tenant), never queued unboundedly.
+    pub admission_cap: usize,
+    /// Base arrival seed; tenant `i` without a pinned seed draws its
+    /// Poisson stream from `seed + 7919·i`.
+    pub seed: u64,
+    /// Wall-clock deploys sleep for `stage_time * time_scale` per item
+    /// (ignored by the DES).
+    pub time_scale: f64,
+    /// Replace every tenant's Poisson stream with a deterministic uniform
+    /// stream at the same rate (the CLI's `--arrival uniform:RATE` form).
+    pub uniform_arrivals: bool,
+}
+
+impl Default for MultiServeOptions {
+    fn default() -> MultiServeOptions {
+        MultiServeOptions {
+            images: 300,
+            queue_cap: 2,
+            admission_cap: 8,
+            seed: 7,
+            time_scale: 0.05,
+            uniform_arrivals: false,
+        }
+    }
+}
+
+impl MultiServeOptions {
+    /// Arrival seed for tenant `idx`: its pinned seed, or a deterministic
+    /// derivation from the run seed that keeps the streams distinct.
+    pub fn tenant_seed(&self, pinned: Option<u64>, idx: usize) -> u64 {
+        pinned.unwrap_or_else(|| self.seed.wrapping_add(7919 * idx as u64))
+    }
+}
+
+/// Which backend produced a [`MultiServeReport`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MultiServeMode {
+    /// Discrete-event co-simulation.
+    Des,
+    /// Wall-clock thread fleets over synthetic sleep stages; latencies and
+    /// throughputs in the report are normalized back by `time_scale` so
+    /// they compare directly with the DES and the SLAs.
+    Synthetic { time_scale: f64 },
+}
+
+/// One tenant's slice of a co-serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantReport {
+    pub name: String,
+    pub network: String,
+    /// `3B+1s` display of the tenant's core slice.
+    pub budget: String,
+    /// `B2-s1 | s3` display of the tenant's fleet.
+    pub pipeline: String,
+    pub rate_hz: f64,
+    pub weight: f64,
+    /// Arrivals offered / admitted / shed at the front door
+    /// (`offered == admitted + shed`).
+    pub offered: usize,
+    pub admitted: usize,
+    pub shed: usize,
+    /// Served rate over the tenant's busy horizon (imgs/s).
+    pub throughput: f64,
+    /// The plan's Eq. 12 slice capacity (imgs/s).
+    pub capacity: f64,
+    /// End-to-end latency percentiles (arrival → completion), `None` when
+    /// nothing was admitted.
+    pub latency: Option<LatencyReport>,
+    /// Declared p99 SLA, if any.
+    pub p99_sla_s: Option<f64>,
+    /// `Some(met)` when an SLA was declared: observed p99 ≤ SLA.
+    pub sla_ok: Option<bool>,
+    /// Busiest stage's busy fraction across the tenant's replicas.
+    pub utilization: f64,
+}
+
+/// Unified result of co-serving a [`MultiPlan`](crate::tenancy::MultiPlan)
+/// through either backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiServeReport {
+    pub mode: MultiServeMode,
+    /// Board wall-clock (or simulated-clock) duration in seconds.
+    pub wall_s: f64,
+    /// Items served across all tenants.
+    pub images: usize,
+    /// Items shed across all tenants.
+    pub shed: usize,
+    /// `Σ_t w_t · observed_throughput_t` (imgs/s) — the objective the
+    /// joint DSE optimized, measured.
+    pub weighted_throughput: f64,
+    /// Busy core-seconds over available core-seconds for the whole board.
+    pub board_utilization: f64,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl MultiServeReport {
+    /// Every declared SLA that was met, over every declared SLA.
+    pub fn sla_counts(&self) -> (usize, usize) {
+        let declared = self.tenants.iter().filter(|t| t.sla_ok.is_some()).count();
+        let met = self.tenants.iter().filter(|t| t.sla_ok == Some(true)).count();
+        (met, declared)
+    }
+
+    /// JSON shape of the report — what `serve-multi --metrics-out`
+    /// captures.
+    pub fn to_json(&self) -> Json {
+        let mode = match self.mode {
+            MultiServeMode::Des => Json::obj(vec![("kind", Json::str("des"))]),
+            MultiServeMode::Synthetic { time_scale } => Json::obj(vec![
+                ("kind", Json::str("synthetic")),
+                ("time_scale", Json::num(time_scale)),
+            ]),
+        };
+        let tenants = Json::Arr(
+            self.tenants
+                .iter()
+                .map(|t| {
+                    let latency = match &t.latency {
+                        None => Json::Null,
+                        Some(l) => Json::obj(vec![
+                            ("p50", Json::num(l.p50)),
+                            ("p95", Json::num(l.p95)),
+                            ("p99", Json::num(l.p99)),
+                        ]),
+                    };
+                    Json::obj(vec![
+                        ("name", Json::str(&t.name)),
+                        ("network", Json::str(&t.network)),
+                        ("budget", Json::str(&t.budget)),
+                        ("pipeline", Json::str(&t.pipeline)),
+                        ("rate_hz", Json::num(t.rate_hz)),
+                        ("weight", Json::num(t.weight)),
+                        ("offered", Json::num(t.offered as f64)),
+                        ("admitted", Json::num(t.admitted as f64)),
+                        ("shed", Json::num(t.shed as f64)),
+                        ("throughput", Json::num(t.throughput)),
+                        ("capacity", Json::num(t.capacity)),
+                        ("latency", latency),
+                        ("p99_sla_s", t.p99_sla_s.map_or(Json::Null, Json::num)),
+                        (
+                            "sla_ok",
+                            t.sla_ok.map_or(Json::Null, Json::Bool),
+                        ),
+                        ("utilization", Json::num(t.utilization)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("mode", mode),
+            ("wall_s", Json::num(self.wall_s)),
+            ("images", Json::num(self.images as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("weighted_throughput", Json::num(self.weighted_throughput)),
+            ("board_utilization", Json::num(self.board_utilization)),
+            ("tenants", tenants),
+        ])
+    }
+}
+
+/// Busy core-seconds of one tenant's fleet: `Σ_r Σ_s busy[r][s] ·
+/// cores(stage s)`, with stage core counts recovered from the plan's
+/// pipeline notation. The board-utilization numerator both backends share.
+pub(crate) fn core_seconds(plan: &Plan, busy: &[Vec<f64>]) -> Result<f64> {
+    let mut total = 0.0;
+    for (r, replica) in plan.replicas.iter().enumerate() {
+        let p = PipelineConfig::parse(&replica.pipeline).with_context(|| {
+            format!("replica {r} pipeline {:?} is not a core-notation pipeline", replica.pipeline)
+        })?;
+        anyhow::ensure!(
+            p.num_stages() == busy[r].len(),
+            "replica {r}: {} stages in the pipeline, {} busy entries",
+            p.num_stages(),
+            busy[r].len()
+        );
+        for (s, b) in busy[r].iter().enumerate() {
+            total += b * p.stages[s].count as f64;
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_seconds_weighs_stages_by_core_count() {
+        let plan = crate::api::PlanSpec::new("alexnet")
+            .pipeline("B2-s2")
+            .compile()
+            .unwrap();
+        // 2 cores busy 3 s + 2 cores busy 1 s = 8 core-seconds.
+        let cs = core_seconds(&plan, &[vec![3.0, 1.0]]).unwrap();
+        assert!((cs - 8.0).abs() < 1e-12);
+        // Mismatched stage count is an error, not a silent truncation.
+        assert!(core_seconds(&plan, &[vec![3.0]]).is_err());
+    }
+
+    #[test]
+    fn report_json_is_parseable() {
+        let report = MultiServeReport {
+            mode: MultiServeMode::Des,
+            wall_s: 10.0,
+            images: 500,
+            shed: 3,
+            weighted_throughput: 51.5,
+            board_utilization: 0.83,
+            tenants: vec![TenantReport {
+                name: "alexnet".into(),
+                network: "alexnet".into(),
+                budget: "3B+1s".into(),
+                pipeline: "B2-s1 | B1".into(),
+                rate_hz: 30.0,
+                weight: 1.0,
+                offered: 300,
+                admitted: 298,
+                shed: 2,
+                throughput: 29.6,
+                capacity: 41.0,
+                latency: Some(LatencyReport { p50: 0.02, p95: 0.04, p99: 0.05 }),
+                p99_sla_s: Some(0.08),
+                sla_ok: Some(true),
+                utilization: 0.71,
+            }],
+        };
+        let text = report.to_json().to_string();
+        let j = Json::parse(&text).expect("multi report JSON reparses");
+        assert_eq!(j.req("mode").unwrap().req("kind").unwrap().as_str(), Some("des"));
+        let t = &j.req("tenants").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t.req("sla_ok").unwrap().as_bool(), Some(true));
+        assert_eq!(t.req("shed").unwrap().as_usize(), Some(2));
+        assert_eq!(report.sla_counts(), (1, 1));
+    }
+}

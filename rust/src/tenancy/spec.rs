@@ -1,0 +1,279 @@
+//! Tenant descriptions: what each co-served network demands of the board.
+//!
+//! A [`TenantSpec`] pairs a workload (a zoo network, or the network behind
+//! an existing [`Plan`](crate::api::Plan) artifact) with its service
+//! contract: the offered arrival rate, an optional p99 latency SLA, and a
+//! weight expressing how much the operator values this tenant's throughput
+//! in the joint objective ([`crate::tenancy::explore_joint`]). The CLI form
+//! is a repeatable `--tenant key=value,...` option parsed by
+//! [`TenantSpec::parse`].
+
+use anyhow::{Context, Result};
+
+use crate::api::{Plan, TimeSource};
+use crate::cnn::zoo;
+use crate::config::Config;
+use crate::perfmodel::{PerfModel, TimeMatrix};
+
+/// Parse a human duration into seconds: `80ms`, `1.5s`, or a bare number
+/// (seconds).
+pub fn parse_duration_s(s: &str) -> Result<f64> {
+    let (txt, scale) = if let Some(ms) = s.strip_suffix("ms") {
+        (ms, 1e-3)
+    } else if let Some(sec) = s.strip_suffix('s') {
+        (sec, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = txt
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration {s:?} (expected e.g. 80ms, 0.08, 1.5s)"))?;
+    anyhow::ensure!(v.is_finite() && v > 0.0, "duration must be positive, got {s:?}");
+    Ok(v * scale)
+}
+
+/// One tenant of a co-served board: workload + service contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Display name; defaults to the network name (auto-suffixed `#k` when
+    /// several tenants serve the same network).
+    pub name: String,
+    /// Zoo network this tenant serves.
+    pub network: String,
+    /// Offered Poisson arrival rate (images/s).
+    pub rate_hz: f64,
+    /// Optional p99 end-to-end latency SLA in seconds.
+    pub p99_sla_s: Option<f64>,
+    /// Weight of this tenant's served rate in the joint objective (>= 0).
+    pub weight: f64,
+    /// Arrival-stream seed; `None` derives one from the run's `--seed` and
+    /// the tenant index, so streams stay reproducible but distinct.
+    pub seed: Option<u64>,
+    /// Which layer times the joint DSE scores this tenant with.
+    pub time_source: TimeSource,
+}
+
+impl TenantSpec {
+    /// A measured-times tenant with unit weight and no SLA.
+    pub fn new(network: &str, rate_hz: f64) -> TenantSpec {
+        TenantSpec {
+            name: network.to_string(),
+            network: network.to_string(),
+            rate_hz,
+            p99_sla_s: None,
+            weight: 1.0,
+            seed: None,
+            time_source: TimeSource::Measured,
+        }
+    }
+
+    pub fn with_sla(mut self, p99_s: f64) -> TenantSpec {
+        self.p99_sla_s = Some(p99_s);
+        self
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> TenantSpec {
+        self.weight = weight;
+        self
+    }
+
+    /// Parse one `--tenant` value: comma-separated `key=value` pairs.
+    ///
+    /// Keys: `net=NAME` or `plan=FILE` (exactly one; a plan artifact
+    /// contributes its network and time source — the *design* is re-searched
+    /// inside the tenant's core slice by the joint DSE), `rate=HZ`
+    /// (required), `p99=DUR` (e.g. `80ms`), `weight=W`, `seed=N`,
+    /// `name=LABEL`.
+    pub fn parse(s: &str) -> Result<TenantSpec> {
+        let mut net: Option<String> = None;
+        let mut time_source = TimeSource::Measured;
+        let mut rate: Option<f64> = None;
+        let mut p99 = None;
+        let mut weight = 1.0;
+        let mut seed = None;
+        let mut name: Option<String> = None;
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("bad tenant field {part:?} (expected key=value)"))?;
+            if matches!(k, "net" | "plan") {
+                anyhow::ensure!(
+                    net.is_none(),
+                    "tenant spec {s:?} names its workload twice (net= and plan= are \
+                     mutually exclusive, each given at most once)"
+                );
+            }
+            match k {
+                "net" => net = Some(v.to_string()),
+                "plan" => {
+                    let plan = Plan::load(std::path::Path::new(v))?;
+                    anyhow::ensure!(
+                        plan.artifacts.is_none(),
+                        "tenant plan {v:?} is artifact-bound; co-serving drives \
+                         big.LITTLE zoo plans"
+                    );
+                    anyhow::ensure!(
+                        plan.time_source != TimeSource::ProfiledArtifacts,
+                        "tenant plan {v:?} carries profiled-artifact times"
+                    );
+                    time_source = plan.time_source;
+                    net = Some(plan.network);
+                }
+                "rate" => {
+                    let r: f64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad tenant rate {v:?}"))?;
+                    anyhow::ensure!(
+                        r.is_finite() && r > 0.0,
+                        "tenant rate must be positive, got {v:?}"
+                    );
+                    rate = Some(r);
+                }
+                "p99" => p99 = Some(parse_duration_s(v)?),
+                "weight" => {
+                    let w: f64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad tenant weight {v:?}"))?;
+                    anyhow::ensure!(
+                        w.is_finite() && w >= 0.0,
+                        "tenant weight must be >= 0, got {v:?}"
+                    );
+                    weight = w;
+                }
+                "seed" => {
+                    let n: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad tenant seed {v:?}"))?;
+                    // MultiPlan serializes seeds as JSON numbers (f64):
+                    // anything past 2^53 would round silently on save/load.
+                    anyhow::ensure!(
+                        n < (1u64 << 53),
+                        "tenant seed {n} exceeds 2^53 and would lose precision \
+                         in the plan artifact"
+                    );
+                    seed = Some(n);
+                }
+                "name" => name = Some(v.to_string()),
+                other => anyhow::bail!(
+                    "unknown tenant field {other:?} (net|plan|rate|p99|weight|seed|name)"
+                ),
+            }
+        }
+        let network = net.context("tenant needs net=NAME or plan=FILE")?;
+        anyhow::ensure!(
+            zoo::by_name(&network).is_some(),
+            "unknown network {network:?} in tenant spec {s:?}"
+        );
+        let rate_hz = rate.context("tenant needs rate=HZ (offered images/s)")?;
+        Ok(TenantSpec {
+            name: name.unwrap_or_else(|| network.clone()),
+            network,
+            rate_hz,
+            p99_sla_s: p99,
+            weight,
+            seed,
+            time_source,
+        })
+    }
+
+    /// Parse every `--tenant` occurrence, de-duplicating default names
+    /// (`alexnet`, `alexnet#2`, …). Explicitly colliding `name=` labels are
+    /// an error.
+    pub fn parse_all(values: &[&str]) -> Result<Vec<TenantSpec>> {
+        anyhow::ensure!(!values.is_empty(), "need at least one --tenant spec");
+        let mut out: Vec<TenantSpec> = Vec::with_capacity(values.len());
+        for v in values {
+            let mut spec = TenantSpec::parse(v)?;
+            let explicit = spec.name != spec.network;
+            let mut k = 1;
+            while out.iter().any(|t| t.name == spec.name) {
+                anyhow::ensure!(
+                    !explicit,
+                    "duplicate tenant name {:?} (give each tenant a unique name=)",
+                    spec.name
+                );
+                k += 1;
+                spec.name = format!("{}#{k}", spec.network);
+            }
+            out.push(spec);
+        }
+        Ok(out)
+    }
+
+    /// The layer-time matrix the joint DSE scores this tenant with.
+    pub fn time_matrix(&self, cfg: &Config) -> Result<TimeMatrix> {
+        let net = zoo::by_name(&self.network)
+            .with_context(|| format!("unknown network {:?}", self.network))?;
+        match self.time_source {
+            TimeSource::Measured => Ok(TimeMatrix::measured(&cfg.platform, &net)),
+            TimeSource::Predicted => {
+                let model = PerfModel::fit(&cfg.platform);
+                Ok(TimeMatrix::predicted(&cfg.platform, &model, &net))
+            }
+            TimeSource::ProfiledArtifacts => anyhow::bail!(
+                "tenant {:?}: profiled-artifact times have no big.LITTLE matrix",
+                self.name
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_examples() {
+        let a = TenantSpec::parse("net=alexnet,rate=30").unwrap();
+        assert_eq!(a.name, "alexnet");
+        assert_eq!(a.rate_hz, 30.0);
+        assert_eq!(a.p99_sla_s, None);
+        assert_eq!(a.weight, 1.0);
+
+        let s = TenantSpec::parse("net=squeezenet,rate=60,p99=80ms,weight=2,seed=5").unwrap();
+        assert_eq!(s.network, "squeezenet");
+        assert_eq!(s.rate_hz, 60.0);
+        assert!((s.p99_sla_s.unwrap() - 0.080).abs() < 1e-12);
+        assert_eq!(s.weight, 2.0);
+        assert_eq!(s.seed, Some(5));
+    }
+
+    #[test]
+    fn duration_forms() {
+        assert!((parse_duration_s("80ms").unwrap() - 0.08).abs() < 1e-12);
+        assert!((parse_duration_s("1.5s").unwrap() - 1.5).abs() < 1e-12);
+        assert!((parse_duration_s("0.25").unwrap() - 0.25).abs() < 1e-12);
+        assert!(parse_duration_s("-3ms").is_err());
+        assert!(parse_duration_s("fast").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(TenantSpec::parse("rate=30").is_err(), "missing net");
+        assert!(TenantSpec::parse("net=alexnet").is_err(), "missing rate");
+        assert!(TenantSpec::parse("net=vgg19,rate=30").is_err(), "unknown net");
+        assert!(TenantSpec::parse("net=alexnet,rate=0").is_err(), "zero rate");
+        assert!(TenantSpec::parse("net=alexnet,rate=30,p99=never").is_err());
+        assert!(TenantSpec::parse("net=alexnet,rate=30,turbo=1").is_err(), "unknown key");
+        assert!(TenantSpec::parse("net=alexnet,rate=30,weight=-1").is_err());
+        // net= and plan= are mutually exclusive, in either order.
+        let err = TenantSpec::parse("net=alexnet,net=squeezenet,rate=5").unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
+        assert!(TenantSpec::parse("net=alexnet,plan=x.json,rate=5").is_err());
+        assert!(TenantSpec::parse("plan=x.json,net=alexnet,rate=5").is_err());
+    }
+
+    #[test]
+    fn parse_all_suffixes_duplicate_default_names() {
+        let specs =
+            TenantSpec::parse_all(&["net=alexnet,rate=10", "net=alexnet,rate=20"]).unwrap();
+        assert_eq!(specs[0].name, "alexnet");
+        assert_eq!(specs[1].name, "alexnet#2");
+        let err = TenantSpec::parse_all(&[
+            "net=alexnet,rate=10,name=x",
+            "net=squeezenet,rate=20,name=x",
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate tenant name"), "{err}");
+    }
+}

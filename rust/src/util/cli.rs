@@ -8,7 +8,11 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
+    /// Last occurrence of each option (the lookup map behind [`Args::get`]).
     pub options: BTreeMap<String, String>,
+    /// Every `(key, value)` occurrence in argv order — what repeatable
+    /// options like `--tenant` read through [`Args::get_all`].
+    pub occurrences: Vec<(String, String)>,
     pub flags: Vec<String>,
 }
 
@@ -28,6 +32,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(body) = a.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
+                    out.occurrences.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else if bool_flags.contains(&body) {
                     out.flags.push(body.to_string());
@@ -35,6 +40,7 @@ impl Args {
                     match it.peek() {
                         Some(v) if !v.starts_with("--") => {
                             let v = it.next().expect("peeked value");
+                            out.occurrences.push((body.to_string(), v.clone()));
                             out.options.insert(body.to_string(), v);
                         }
                         Some(v) => anyhow::bail!(
@@ -88,6 +94,17 @@ impl Args {
         self.get(key)
             .map(|v| v.split(',').filter(|s| !s.is_empty()).collect())
             .unwrap_or_default()
+    }
+
+    /// Every occurrence of a repeatable option, in argv order — the form
+    /// `pipeit plan-multi --tenant ... --tenant ...` reads. [`Args::get`]
+    /// keeps only the last occurrence; this returns them all.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 }
 
@@ -157,6 +174,32 @@ mod tests {
         let a = parse("x --measured --images 5");
         assert!(a.has_flag("measured"));
         assert_eq!(a.get_usize("images", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn get_all_returns_every_occurrence_in_order() {
+        let a = parse("plan-multi --tenant net=alexnet,rate=30 --tenant net=squeezenet,rate=60");
+        assert_eq!(
+            a.get_all("tenant"),
+            vec!["net=alexnet,rate=30", "net=squeezenet,rate=60"]
+        );
+        // `get` keeps the last occurrence, as before.
+        assert_eq!(a.get("tenant"), Some("net=squeezenet,rate=60"));
+        assert_eq!(a.get_all("missing"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn get_all_mixes_equals_and_space_forms() {
+        let a = parse("x --t=first --other 1 --t second --t=third");
+        assert_eq!(a.get_all("t"), vec!["first", "second", "third"]);
+        assert_eq!(a.get("other"), Some("1"));
+    }
+
+    #[test]
+    fn get_all_single_occurrence_matches_get() {
+        let a = parse("x --net alexnet");
+        assert_eq!(a.get_all("net"), vec!["alexnet"]);
+        assert_eq!(a.get("net"), Some("alexnet"));
     }
 
     #[test]

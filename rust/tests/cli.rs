@@ -229,6 +229,134 @@ fn simulate_metrics_out_writes_des_report() {
 }
 
 #[test]
+fn plan_multi_saves_and_simulate_multi_loads() {
+    let path = std::env::temp_dir().join("pipeit_cli_multiplan_test.json");
+    let path_s = path.to_str().unwrap();
+    let (ok, text) = pipeit(&[
+        "plan-multi",
+        "--tenant", "net=alexnet,rate=4",
+        "--tenant", "net=squeezenet,rate=8,p99=5s,weight=2",
+        "--out", path_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("co-serving : 2 tenants"), "{text}");
+    assert!(text.contains("tenant alexnet"), "{text}");
+    assert!(text.contains("p99<=5000ms"), "{text}");
+    assert!(text.contains("plan saved"), "{text}");
+
+    let (ok, text) = pipeit(&["simulate-multi", "--plan", path_s, "--images", "200"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("(DES)"), "{text}");
+    assert!(text.contains("SLAs"), "{text}");
+    assert!(text.contains("board util"), "{text}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serve_multi_runs_wall_clock_fleets() {
+    let (ok, text) = pipeit(&[
+        "serve-multi",
+        "--tenant", "net=alexnet,rate=6",
+        "--tenant", "net=squeezenet,rate=12",
+        "--images", "6", "--time-scale", "0.02",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wall-clock"), "{text}");
+    assert!(text.contains("tenant squeezenet"), "{text}");
+    assert!(text.contains("served"), "{text}");
+}
+
+#[test]
+fn simulate_multi_metrics_out_writes_json() {
+    let path = std::env::temp_dir().join("pipeit_cli_multi_metrics_test.json");
+    let path_s = path.to_str().unwrap();
+    let (ok, text) = pipeit(&[
+        "simulate-multi",
+        "--tenant", "net=alexnet,rate=5",
+        "--tenant", "net=squeezenet,rate=10,p99=5s",
+        "--images", "150", "--metrics-out", path_s,
+    ]);
+    assert!(ok, "{text}");
+    let json = std::fs::read_to_string(&path).expect("metrics file written");
+    assert!(json.contains("\"weighted_throughput\""), "{json}");
+    assert!(json.contains("\"sla_ok\""), "{json}");
+    assert!(json.contains("\"shed\""), "{json}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn plan_multi_rejects_malformed_tenant() {
+    let (ok, text) = pipeit(&["plan-multi", "--tenant", "net=alexnet"]);
+    assert!(!ok);
+    assert!(text.contains("rate"), "{text}");
+    let (ok, text) = pipeit(&["plan-multi", "--tenant", "net=vgg19,rate=5"]);
+    assert!(!ok);
+    assert!(text.contains("unknown network"), "{text}");
+    let (ok, text) = pipeit(&["serve-multi"]);
+    assert!(!ok);
+    assert!(text.contains("--tenant"), "{text}");
+}
+
+#[test]
+fn serve_multi_plan_rejects_compile_options() {
+    let path = std::env::temp_dir().join("pipeit_cli_multi_reject_test.json");
+    let path_s = path.to_str().unwrap();
+    let (ok, text) = pipeit(&[
+        "plan-multi", "--tenant", "net=squeezenet,rate=8", "--out", path_s,
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = pipeit(&[
+        "simulate-multi", "--plan", path_s, "--tenant", "net=alexnet,rate=4",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("plan-compile option"), "{text}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn simulate_open_loop_arrival_is_reproducible() {
+    let run = || {
+        pipeit(&[
+            "simulate", "--net", "alexnet", "--pipeline", "B4-s4",
+            "--arrival", "poisson:4:123", "--images", "80", "--p99", "10s",
+        ])
+    };
+    let (ok, text) = run();
+    assert!(ok, "{text}");
+    assert!(text.contains("arrival    : poisson:4:123"), "{text}");
+    assert!(text.contains("co-serving : 1 tenants"), "{text}");
+    assert!(text.contains("SLA p99<=10000ms"), "{text}");
+    let (ok2, text2) = run();
+    assert!(ok2);
+    assert_eq!(text, text2, "seeded open-loop runs must be byte-identical");
+}
+
+#[test]
+fn serve_open_loop_arrival_wall_clock() {
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "squeezenet", "--arrival", "uniform:8",
+        "--images", "6", "--time-scale", "0.02",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("arrival    : uniform:8"), "{text}");
+    assert!(text.contains("wall-clock"), "{text}");
+}
+
+#[test]
+fn arrival_rejects_bad_spec_and_adapt_combination() {
+    let (ok, text) = pipeit(&[
+        "simulate", "--net", "alexnet", "--pipeline", "B4-s4", "--arrival", "burst:9",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("bad arrival spec"), "{text}");
+    let (ok, text) = pipeit(&[
+        "serve", "--net", "alexnet", "--arrival", "poisson:5", "--adapt",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--arrival"), "{text}");
+}
+
+#[test]
 fn serve_serial_on_artifacts() {
     // Only when artifacts exist (built by `make artifacts`).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

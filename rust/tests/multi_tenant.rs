@@ -1,0 +1,259 @@
+//! Acceptance suite for multi-tenant co-serving (DESIGN.md §10):
+//!
+//! For two zoo networks co-served in the DES, the `explore_joint` split
+//! (a) meets every declared SLA when one is feasible, (b) achieves ≥ 90%
+//! of the sum of each tenant's isolated full-board throughput scaled by
+//! its core share, and (c) strictly beats a naive equal-split baseline on
+//! weighted throughput for at least one asymmetric rate mix. A saved
+//! `MultiPlan` reloads byte-identically in reported per-tenant pipelines,
+//! allocations, and predicted throughput, and simulates identically.
+//!
+//! Everything here is deterministic: measured time matrices, seeded
+//! Poisson streams, and an exact DES recurrence.
+
+use pipeit::cnn::zoo;
+use pipeit::config::Config;
+use pipeit::dse;
+use pipeit::perfmodel::TimeMatrix;
+use pipeit::tenancy::{MultiPlan, MultiServeOptions, TenantSpec};
+
+const NET_A: &str = "alexnet";
+const NET_B: &str = "squeezenet";
+
+fn isolated_full_board(net: &str) -> f64 {
+    let cfg = Config::default();
+    let tm = TimeMatrix::measured(&cfg.platform, &zoo::by_name(net).unwrap());
+    dse::explore_replicated(&tm, 4, 4, 8).throughput
+}
+
+fn des_opts(images: usize) -> MultiServeOptions {
+    MultiServeOptions { images, queue_cap: 2, admission_cap: 8, ..Default::default() }
+}
+
+/// (a) Declare SLAs calibrated from an undeclared pre-run (2.5x the
+/// observed p99): the joint DSE must produce a split whose DES co-serving
+/// meets every declared SLA.
+#[test]
+fn joint_split_meets_every_declared_sla_when_feasible() {
+    let cfg = Config::default();
+    let (tp_a, tp_b) = (isolated_full_board(NET_A), isolated_full_board(NET_B));
+    let rates = [0.35 * tp_a, 0.35 * tp_b];
+
+    // Pre-run without SLAs to observe achievable p99s under this load.
+    let specs0 = [
+        TenantSpec::new(NET_A, rates[0]),
+        TenantSpec::new(NET_B, rates[1]),
+    ];
+    let mp0 = MultiPlan::compile(&specs0, &cfg, 4).unwrap();
+    let pre = mp0.simulate(&des_opts(1500)).unwrap();
+    let slas: Vec<f64> = pre
+        .tenants
+        .iter()
+        .map(|t| 2.5 * t.latency.expect("admitted items").p99)
+        .collect();
+    assert!(slas.iter().all(|s| s.is_finite() && *s > 0.0));
+
+    // Re-plan with the SLAs declared; the co-simulation must meet them all.
+    let specs1 = [
+        TenantSpec::new(NET_A, rates[0]).with_sla(slas[0]),
+        TenantSpec::new(NET_B, rates[1]).with_sla(slas[1]),
+    ];
+    let mp1 = MultiPlan::compile(&specs1, &cfg, 4).unwrap();
+    let report = mp1.simulate(&des_opts(1500)).unwrap();
+    let (met, declared) = report.sla_counts();
+    assert_eq!(declared, 2);
+    for (t, sla) in report.tenants.iter().zip(&slas) {
+        let p99 = t.latency.expect("admitted items").p99;
+        assert!(
+            p99 <= *sla,
+            "tenant {}: DES p99 {:.1}ms violates its declared SLA {:.1}ms",
+            t.name,
+            p99 * 1e3,
+            sla * 1e3
+        );
+    }
+    assert_eq!(met, declared, "render/report must agree with the raw latencies");
+}
+
+/// (b) Under saturating demand, the joint split's aggregate capacity stays
+/// within 90% of each tenant's isolated full-board throughput scaled by
+/// its core share — splitting the board loses at most the quantization
+/// slack, and the DES corroborates the predicted capacities.
+#[test]
+fn joint_capacity_is_at_least_90pct_of_share_scaled_isolated() {
+    let cfg = Config::default();
+    let saturating = 1e9;
+    let specs = [
+        TenantSpec::new(NET_A, saturating),
+        TenantSpec::new(NET_B, saturating),
+    ];
+    let mp = MultiPlan::compile(&specs, &cfg, 4).unwrap();
+
+    let isolated = [isolated_full_board(NET_A), isolated_full_board(NET_B)];
+    let total_cores = (mp.big + mp.small) as f64;
+    let mut bound = 0.0;
+    let mut capacity = 0.0;
+    for (t, iso) in mp.tenants.iter().zip(&isolated) {
+        let share = (t.plan.big + t.plan.small) as f64 / total_cores;
+        bound += iso * share;
+        capacity += t.plan.throughput;
+    }
+    assert!(
+        capacity >= 0.9 * bound,
+        "joint capacity {capacity:.2} imgs/s below 90% of the share-scaled \
+         isolated sum {bound:.2}"
+    );
+
+    // DES corroboration: with a wide-open front door the observed served
+    // rate approaches the predicted capacity.
+    let opts = MultiServeOptions {
+        images: 2000,
+        admission_cap: 100_000,
+        ..Default::default()
+    };
+    let report = mp.simulate(&opts).unwrap();
+    let observed: f64 = report.tenants.iter().map(|t| t.throughput).sum();
+    assert!(
+        observed >= 0.9 * capacity,
+        "DES served {observed:.2} imgs/s far below predicted capacity {capacity:.2}"
+    );
+}
+
+/// (c) For at least one asymmetric rate mix, the joint split strictly
+/// beats the naive equal split (half the board per tenant) on weighted
+/// served throughput.
+#[test]
+fn joint_strictly_beats_naive_equal_split_on_an_asymmetric_mix() {
+    let cfg = Config::default();
+    let (tp_a, tp_b) = (isolated_full_board(NET_A), isolated_full_board(NET_B));
+    let equal_cap = |net: &str| {
+        let tm = TimeMatrix::measured(&cfg.platform, &zoo::by_name(net).unwrap());
+        dse::explore_replicated(&tm, 2, 2, 4).throughput
+    };
+    let (eq_a, eq_b) = (equal_cap(NET_A), equal_cap(NET_B));
+
+    let mut strict_win = false;
+    for (fa, fb) in [(0.1, 1.5), (1.5, 0.1), (0.2, 2.0), (2.0, 0.2)] {
+        let rates = [fa * tp_a, fb * tp_b];
+        let specs = [
+            TenantSpec::new(NET_A, rates[0]),
+            TenantSpec::new(NET_B, rates[1]),
+        ];
+        let mp = MultiPlan::compile(&specs, &cfg, 4).unwrap();
+        let naive = rates[0].min(eq_a) + rates[1].min(eq_b);
+        assert!(
+            mp.weighted_throughput >= naive - 1e-9,
+            "mix ({fa},{fb}): joint {:.2} lost to the equal split {naive:.2}",
+            mp.weighted_throughput
+        );
+        if mp.weighted_throughput > naive + 1e-6 {
+            strict_win = true;
+        }
+    }
+    assert!(
+        strict_win,
+        "no asymmetric mix produced a strict win over the equal split"
+    );
+}
+
+/// `MultiPlan` save → load → simulate: the reloaded artifact is identical
+/// in per-tenant pipelines, allocations, and predicted throughput, and its
+/// co-simulation reproduces the original bit for bit.
+#[test]
+fn multiplan_save_load_simulate_is_identical() {
+    let cfg = Config::default();
+    let specs = [
+        TenantSpec::new(NET_A, 6.0).with_sla(5.0),
+        TenantSpec::new(NET_B, 12.0).with_weight(2.0),
+    ];
+    let mp = MultiPlan::compile(&specs, &cfg, 4).unwrap();
+
+    let path = std::env::temp_dir().join("pipeit_multi_tenant_accept.json");
+    mp.save(&path).unwrap();
+    let loaded = MultiPlan::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(mp, loaded, "the artifact must round-trip losslessly");
+    for (a, b) in mp.tenants.iter().zip(&loaded.tenants) {
+        assert_eq!(a.partition_display(), b.partition_display());
+        for (ra, rb) in a.plan.replicas.iter().zip(&b.plan.replicas) {
+            assert_eq!(ra.pipeline, rb.pipeline);
+            assert_eq!(ra.allocation, rb.allocation);
+            assert_eq!(ra.stage_times, rb.stage_times, "stage times must be exact");
+        }
+        assert_eq!(a.plan.throughput, b.plan.throughput, "predicted throughput exact");
+    }
+    assert_eq!(mp.weighted_throughput, loaded.weighted_throughput);
+
+    let opts = des_opts(600);
+    let r1 = mp.simulate(&opts).unwrap();
+    let r2 = loaded.simulate(&opts).unwrap();
+    assert_eq!(r1, r2, "simulating the reloaded plan must be identical");
+}
+
+/// The joint DSE assigns every core exactly once, and a single tenant
+/// degenerates to the whole board.
+#[test]
+fn joint_split_is_a_partition_of_the_board() {
+    let cfg = Config::default();
+    let specs = [
+        TenantSpec::new(NET_A, 5.0),
+        TenantSpec::new(NET_B, 10.0),
+    ];
+    let mp = MultiPlan::compile(&specs, &cfg, 4).unwrap();
+    let big: usize = mp.tenants.iter().map(|t| t.plan.big).sum();
+    let small: usize = mp.tenants.iter().map(|t| t.plan.small).sum();
+    assert_eq!((big, small), (mp.big, mp.small));
+    assert!(mp.tenants.iter().all(|t| t.plan.big + t.plan.small >= 1));
+
+    let solo = MultiPlan::compile(&[TenantSpec::new(NET_B, 1e9)], &cfg, 4).unwrap();
+    assert_eq!(solo.tenants[0].plan.big, cfg.platform.big.cores);
+    assert_eq!(solo.tenants[0].plan.small, cfg.platform.small.cores);
+    let tm = TimeMatrix::measured(&cfg.platform, &zoo::by_name(NET_B).unwrap());
+    let direct = dse::explore_replicated(&tm, 4, 4, 4);
+    assert!((solo.tenants[0].plan.throughput - direct.throughput).abs() < 1e-9);
+}
+
+/// Overload sheds at the per-tenant front door but never silently loses
+/// an arrival, and the bounded queue keeps admitted latency bounded.
+#[test]
+fn overload_sheds_per_tenant_and_conserves_arrivals() {
+    let cfg = Config::default();
+    let (tp_a, tp_b) = (isolated_full_board(NET_A), isolated_full_board(NET_B));
+    // Tenant A offered 4x what the whole board could give it; B modest.
+    let specs = [
+        TenantSpec::new(NET_A, 4.0 * tp_a),
+        TenantSpec::new(NET_B, 0.2 * tp_b),
+    ];
+    let mp = MultiPlan::compile(&specs, &cfg, 4).unwrap();
+    let report = mp.simulate(&des_opts(1200)).unwrap();
+    for t in &report.tenants {
+        assert_eq!(t.admitted + t.shed, t.offered, "tenant {}", t.name);
+    }
+    let a = &report.tenants[0];
+    let b = &report.tenants[1];
+    assert!(
+        a.shed * 2 > a.offered,
+        "the 4x-overloaded tenant must shed most arrivals: {a:?}"
+    );
+    assert!(
+        b.shed * 10 < b.offered,
+        "the within-capacity tenant must shed at most a small fraction: {b:?}"
+    );
+    // Shedding bounds the admitted items' latency: the overloaded tenant's
+    // p99 stays within (admission_cap + 2) service times of its slowest
+    // replica rather than growing with the backlog.
+    let worst_service: f64 = a.capacity.recip() * (des_opts(0).admission_cap + 2) as f64
+        + mp.tenants[0]
+            .plan
+            .replicas
+            .iter()
+            .map(|r| r.stage_times.iter().sum::<f64>())
+            .fold(0.0, f64::max);
+    assert!(
+        a.latency.unwrap().p99 <= worst_service * 4.0,
+        "p99 {:.2}s not bounded (budget {:.2}s)",
+        a.latency.unwrap().p99,
+        worst_service * 4.0
+    );
+}
