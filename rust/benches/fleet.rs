@@ -1,4 +1,5 @@
-//! `cargo bench --bench fleet` — replicated-pipeline serving benchmarks:
+//! `cargo bench --bench fleet` — replicated-pipeline serving benchmarks,
+//! as a thin wrapper over the in-tree harness ([`pipeit::harness`]):
 //!
 //!   * the replicated DSE (core partitions x per-budget pipelines) per CNN
 //!   * the fleet discrete-event simulation at stream scale
@@ -6,15 +7,16 @@
 //!
 //! Also prints the replicated-vs-single report table, so `cargo bench`
 //! output shows where replication pays (the PICO-style scaling story).
+//! Set `BENCH_OUT=file.json` to capture the run as a comparable artifact.
 
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::coordinator::{run_fleet, StageSpec};
 use pipeit::dse;
+use pipeit::harness::{black_box, HostBench};
 use pipeit::perfmodel::TimeMatrix;
 use pipeit::reports::Reporter;
 use pipeit::simulator::pipeline_sim;
-use pipeit::util::bench::{black_box, Bencher};
 
 fn noop_replica(stages: usize) -> Vec<StageSpec<u64>> {
     (0..stages)
@@ -33,36 +35,39 @@ fn main() {
     println!("================ REPLICATED SERVING (fleet) ================\n");
     Reporter::new(Config::default()).replicated().print();
 
-    let mut b = Bencher::default();
+    let mut b = HostBench::new();
     let nets = zoo::all_networks();
     let tms: Vec<TimeMatrix> =
         nets.iter().map(|n| TimeMatrix::measured(&cfg.platform, n)).collect();
 
     for (net, tm) in nets.iter().zip(&tms) {
-        b.bench(&format!("explore_replicated_r4_{}", net.name), || {
+        b.time(&format!("explore_replicated_r4_{}", net.name), || {
             black_box(dse::explore_replicated(tm, 4, 4, 4));
         });
     }
 
     let fleet = dse::explore_replicated(&tms[3], 4, 4, 4); // resnet50
     let times = fleet.stage_times(&tms[3]);
-    b.bench("fleet_des_10k_images_resnet50", || {
+    b.time("fleet_des_10k_images_resnet50", || {
         black_box(pipeline_sim::simulate_replicated(&times, 10_000, 2));
     });
 
-    b.bench("partitions_enumeration_4_4_r4", || {
+    b.time("partitions_enumeration_4_4_r4", || {
         black_box(dse::replicated::partitions(4, 4, 4));
     });
 
     // Dispatcher hot path: 2 replicas x 2 no-op stages, 512 items per
     // iteration — measures admission + least-outstanding-work routing +
     // thread fleet setup/teardown, not stage compute.
-    let mut quick = Bencher::quick();
-    quick.bench("run_fleet_dispatch_2x2_512_items", || {
+    let mut quick = HostBench::quick();
+    quick.time("run_fleet_dispatch_2x2_512_items", || {
         let replicas = vec![noop_replica(2), noop_replica(2)];
         let (out, _) = run_fleet(replicas, 2, 4, 0..512u64);
         black_box(out);
     });
+
+    b.results.extend(quick.results);
+    b.finish("fleet").expect("bench epilogue");
 
     println!("\nnote: the replicated DSE spans every core partition (R<=4) of the");
     println!("4+4 budget and still completes in milliseconds per network.");

@@ -1,5 +1,5 @@
-//! `cargo bench --bench hotpath` — micro-benchmarks of the L3 hot paths
-//! (the §Perf optimization targets in EXPERIMENTS.md):
+//! `cargo bench --bench hotpath` — micro-benchmarks of the L3 hot paths,
+//! as a thin wrapper over the in-tree harness ([`pipeit::harness`]):
 //!
 //!   * perfmodel fit (one-time cost, paper's alternative is hours on-board)
 //!   * time-matrix construction
@@ -8,21 +8,24 @@
 //!   * bounded-queue hot path (send/recv cycle)
 //!
 //! Paper context: exhaustive search is "hundreds of days"; Pipe-it's whole
-//! point is that the DSE is effectively free. These benches quantify that.
+//! point is that the DSE is effectively free. These benches quantify that,
+//! with the harness's robust statistics (median / MAD rejection /
+//! bootstrap CI). Set `BENCH_OUT=file.json` to capture the run as a
+//! `BENCH_<n>.json` artifact comparable via `pipeit bench --compare`.
 
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::coordinator::queue;
 use pipeit::dse;
+use pipeit::harness::{black_box, HostBench};
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
 use pipeit::simulator::pipeline_sim;
-use pipeit::util::bench::{black_box, Bencher};
 
 fn main() {
     let cfg = Config::default();
-    let mut b = Bencher::default();
+    let mut b = HostBench::new();
 
-    b.bench("perfmodel_fit_both_clusters", || {
+    b.time("perfmodel_fit_both_clusters", || {
         black_box(PerfModel::fit(&cfg.platform));
     });
 
@@ -30,7 +33,7 @@ fn main() {
     let nets = zoo::all_networks();
 
     for net in &nets {
-        b.bench(&format!("time_matrix_predicted_{}", net.name), || {
+        b.time(&format!("time_matrix_predicted_{}", net.name), || {
             black_box(TimeMatrix::predicted(&cfg.platform, &model, net));
         });
     }
@@ -39,27 +42,27 @@ fn main() {
         nets.iter().map(|n| TimeMatrix::measured(&cfg.platform, n)).collect();
 
     for (net, tm) in nets.iter().zip(&tms) {
-        b.bench(&format!("work_flow_B4s2s2_{}", net.name), || {
+        b.time(&format!("work_flow_B4s2s2_{}", net.name), || {
             let p = dse::PipelineConfig::parse("B4-s2-s2").unwrap();
             black_box(dse::work_flow(tm, &p, tm.num_layers()));
         });
     }
 
     for (net, tm) in nets.iter().zip(&tms) {
-        b.bench(&format!("explore_64_pipelines_{}", net.name), || {
+        b.time(&format!("explore_64_pipelines_{}", net.name), || {
             black_box(dse::explore(tm, 4, 4));
         });
     }
 
-    b.bench("merge_stage_eq14_resnet50", || {
+    b.time("merge_stage_eq14_resnet50", || {
         black_box(dse::merge_stage_eq14(&tms[3], 4, 4));
     });
 
-    b.bench("des_simulate_3stage_10k_images", || {
+    b.time("des_simulate_3stage_10k_images", || {
         black_box(pipeline_sim::simulate(&[0.03, 0.05, 0.02], 10_000, 2));
     });
 
-    b.bench("bounded_queue_send_recv_1k", || {
+    b.time("bounded_queue_send_recv_1k", || {
         let (tx, rx) = queue::bounded(64);
         for i in 0..1000u32 {
             tx.send(i).unwrap();
@@ -71,10 +74,12 @@ fn main() {
         black_box(());
     });
 
-    b.bench("exhaustive_two_stage_alexnet", || {
+    b.time("exhaustive_two_stage_alexnet", || {
         let p = dse::PipelineConfig::parse("B4-s4").unwrap();
         black_box(dse::exhaustive::best_allocation(&tms[0], &p));
     });
+
+    b.finish("hotpath").expect("bench epilogue");
 
     println!("\nnote: the paper estimates exhaustive search at hundreds of days;");
     println!("explore() above covers the same pipeline space in microseconds-milliseconds.");

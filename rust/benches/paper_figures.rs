@@ -3,8 +3,8 @@
 //! same rows/series the paper plots, and times the generating sweeps.
 
 use pipeit::config::Config;
+use pipeit::harness::{black_box, HostBench};
 use pipeit::reports::Reporter;
-use pipeit::util::bench::{black_box, Bencher};
 use pipeit::{baselines, cnn::zoo};
 
 fn main() {
@@ -44,21 +44,23 @@ fn main() {
     println!("================ timing the sweeps ================\n");
     let cfg = Config::default();
     let nets = zoo::all_networks();
-    let mut b = Bencher::default();
-    b.bench("fig3_core_sweep_all_nets", || {
+    let mut b = HostBench::new();
+    b.time("fig3_core_sweep_all_nets", || {
         for net in &nets {
             black_box(baselines::core_sweep(&cfg.platform, net));
         }
     });
-    b.bench("fig5_ratio_sweep_all_nets", || {
+    b.time("fig5_ratio_sweep_all_nets", || {
         for net in &nets {
             black_box(baselines::ratio_sweep(&cfg.platform, net, 20));
         }
     });
-    b.bench("fig8_two_stage_sweeps", || {
+    b.time("fig8_two_stage_sweeps", || {
         black_box(rep.fig8());
     });
-    b.bench("fig9_resnet_surface", || {
+    b.time("fig9_resnet_surface", || {
         black_box(rep.fig9());
     });
+
+    b.finish("paper_figures").expect("bench epilogue");
 }

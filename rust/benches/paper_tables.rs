@@ -4,8 +4,8 @@
 //! paths with the in-tree bench harness.
 
 use pipeit::config::Config;
+use pipeit::harness::{black_box, HostBench};
 use pipeit::reports::Reporter;
-use pipeit::util::bench::{black_box, Bencher};
 
 fn main() {
     let rep = Reporter::new(Config::default());
@@ -38,14 +38,16 @@ fn main() {
     rep.ablation().print();
 
     println!("================ timing the generators ================\n");
-    let mut b = Bencher::default();
-    b.bench("table4_full_dse_all_nets", || {
+    let mut b = HostBench::new();
+    b.time("table4_full_dse_all_nets", || {
         black_box(rep.table4_rows());
     });
-    b.bench("table3_prediction_error", || {
+    b.time("table3_prediction_error", || {
         black_box(rep.table3());
     });
-    b.bench("table7_power_model", || {
+    b.time("table7_power_model", || {
         black_box(rep.table7());
     });
+
+    b.finish("paper_tables").expect("bench epilogue");
 }

@@ -38,15 +38,25 @@ pub struct LatencyReport {
 impl LatencyReport {
     /// Summarize raw per-item latencies; `None` when nothing completed.
     /// The ONE percentile-triple builder shared by every backend (DES
-    /// co-sim, wall-clock deploys, the adaptation controller).
+    /// co-sim, wall-clock deploys, fleet summaries, the adaptation
+    /// controller).
+    ///
+    /// Total on every input: an empty set (reachable — a tenant whose
+    /// arrivals are all shed at the front door admits nothing) is `None`,
+    /// never a panic or an index past the end; a single element yields
+    /// `p50 == p95 == p99 == x`. The triple is always monotone
+    /// (`p50 <= p95 <= p99`) because the percentiles interpolate one
+    /// sorted copy.
     pub fn from_latencies(latencies: &[f64]) -> Option<LatencyReport> {
         if latencies.is_empty() {
             return None;
         }
+        let mut sorted = latencies.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Some(LatencyReport {
-            p50: stats::percentile(latencies, 50.0),
-            p95: stats::percentile(latencies, 95.0),
-            p99: stats::percentile(latencies, 99.0),
+            p50: stats::percentile_sorted(&sorted, 50.0),
+            p95: stats::percentile_sorted(&sorted, 95.0),
+            p99: stats::percentile_sorted(&sorted, 99.0),
         })
     }
 }
@@ -139,10 +149,7 @@ pub struct ServeReport {
 }
 
 fn latency_from(s: &Summary) -> Option<LatencyReport> {
-    if s.count() == 0 {
-        return None;
-    }
-    Some(LatencyReport { p50: s.p50(), p95: s.p95(), p99: s.p99() })
+    LatencyReport::from_latencies(s.samples())
 }
 
 impl ServeReport {
@@ -233,16 +240,7 @@ impl ServeReport {
 
     /// Convert a replicated discrete-event simulation.
     pub fn from_des(plan: &Plan, sim: &FleetSimReport) -> ServeReport {
-        let merged = sim.merged_latencies();
-        let latency = if merged.is_empty() {
-            None
-        } else {
-            Some(LatencyReport {
-                p50: stats::percentile(&merged, 50.0),
-                p95: stats::percentile(&merged, 95.0),
-                p99: stats::percentile(&merged, 99.0),
-            })
-        };
+        let latency = LatencyReport::from_latencies(&sim.merged_latencies());
         let util = sim.replica_utilization();
         let replicas = plan
             .replicas
@@ -358,6 +356,37 @@ impl ServeReport {
 mod tests {
     use super::*;
     use crate::api::PlanSpec;
+
+    /// Regression (ISSUE 5 satellite): the percentile-triple builder must
+    /// be total on empty and single-element latency sets — the empty case
+    /// is reachable via a zero-admitted tenant under full shedding.
+    #[test]
+    fn from_latencies_empty_and_single_are_well_defined() {
+        assert_eq!(LatencyReport::from_latencies(&[]), None);
+        let one = LatencyReport::from_latencies(&[0.042]).unwrap();
+        assert_eq!(one.p50, 0.042);
+        assert_eq!(one.p95, 0.042);
+        assert_eq!(one.p99, 0.042);
+    }
+
+    #[test]
+    fn from_latencies_triple_is_monotone_on_unsorted_input() {
+        let l = LatencyReport::from_latencies(&[0.9, 0.1, 0.5, 0.3, 0.7]).unwrap();
+        assert!(l.p50 <= l.p95 && l.p95 <= l.p99, "{l:?}");
+        assert_eq!(l.p50, 0.5);
+        // p99 interpolates between the two largest samples: 0.7..0.9.
+        assert!((l.p99 - 0.892).abs() < 1e-9, "interpolated tail, got {}", l.p99);
+    }
+
+    #[test]
+    fn empty_summary_yields_no_latency_report() {
+        let s = Summary::new();
+        assert_eq!(latency_from(&s), None);
+        let mut one = Summary::new();
+        one.record(1.5);
+        let l = latency_from(&one).unwrap();
+        assert_eq!((l.p50, l.p95, l.p99), (1.5, 1.5, 1.5));
+    }
 
     #[test]
     fn serve_report_json_is_parseable_and_complete() {

@@ -1,0 +1,212 @@
+//! The regression gate: classify each scenario of two bench artifacts as
+//! improved / regressed / unchanged by CONFIDENCE-INTERVAL OVERLAP, not
+//! point deltas.
+//!
+//! A point-delta gate flags every noisy wobble; a CI gate only speaks when
+//! the two runs' bootstrap intervals are disjoint AND the median moved by
+//! more than a floor (`min_rel_delta`, guarding against spuriously tight
+//! zero-width intervals on deterministic scenarios). Direction respects
+//! each entry's metric: lower is worse for throughput, higher is worse for
+//! time-like micro benches.
+
+use std::fmt;
+
+use super::report::{BenchReport, ScenarioResult};
+
+/// Default relative-median floor below which a disjoint-CI shift is still
+/// called unchanged (1%): deterministic DES scenarios have zero-width
+/// intervals, so without a floor a 1e-15 wobble would gate a merge.
+pub const DEFAULT_MIN_REL_DELTA: f64 = 0.01;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Improved,
+    Regressed,
+    Unchanged,
+}
+
+impl fmt::Display for Verdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Verdict::Improved => write!(f, "improved"),
+            Verdict::Regressed => write!(f, "REGRESSED"),
+            Verdict::Unchanged => write!(f, "unchanged"),
+        }
+    }
+}
+
+/// One matched scenario's classification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioDiff {
+    pub name: String,
+    pub mode: String,
+    pub backend: String,
+    pub unit: String,
+    pub old_median: f64,
+    pub new_median: f64,
+    /// `(new - old) / old`; 0.0 when the old median is 0.
+    pub rel_delta: f64,
+    pub verdict: Verdict,
+}
+
+/// Result of comparing two bench artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchComparison {
+    /// Matched scenarios in the OLD report's order.
+    pub diffs: Vec<ScenarioDiff>,
+    /// Keys present only in the new report (no baseline — never a gate).
+    pub added: Vec<String>,
+    /// Keys present only in the old report (dropped scenarios — reported,
+    /// never a gate).
+    pub removed: Vec<String>,
+}
+
+impl BenchComparison {
+    pub fn count(&self, v: Verdict) -> usize {
+        self.diffs.iter().filter(|d| d.verdict == v).count()
+    }
+
+    /// The exit-code question: did anything get worse?
+    pub fn has_regressions(&self) -> bool {
+        self.count(Verdict::Regressed) > 0
+    }
+}
+
+fn classify(old: &ScenarioResult, new: &ScenarioResult, min_rel_delta: f64) -> (f64, Verdict) {
+    let rel = if old.stats.median != 0.0 {
+        (new.stats.median - old.stats.median) / old.stats.median
+    } else {
+        0.0
+    };
+    // Disjoint intervals are the significance test; the floor keeps
+    // zero-width (deterministic) intervals from gating on float dust.
+    let below = new.stats.ci_hi < old.stats.ci_lo;
+    let above = new.stats.ci_lo > old.stats.ci_hi;
+    if rel.abs() <= min_rel_delta || (!below && !above) {
+        return (rel, Verdict::Unchanged);
+    }
+    let worse = if old.higher_is_better { below } else { above };
+    (rel, if worse { Verdict::Regressed } else { Verdict::Improved })
+}
+
+/// Compare two artifacts, matching entries by `backend/name` key. Suites
+/// need not be identical: unmatched keys land in `added` / `removed` and
+/// never trip the gate — only a matched scenario that got significantly
+/// worse does.
+pub fn compare(old: &BenchReport, new: &BenchReport, min_rel_delta: f64) -> BenchComparison {
+    let mut diffs = Vec::new();
+    let mut removed = Vec::new();
+    for o in &old.scenarios {
+        match new.find(&o.key()) {
+            Some(n) => {
+                let (rel_delta, verdict) = classify(o, n, min_rel_delta);
+                diffs.push(ScenarioDiff {
+                    name: o.name.clone(),
+                    mode: o.mode.clone(),
+                    backend: o.backend.clone(),
+                    unit: o.unit.clone(),
+                    old_median: o.stats.median,
+                    new_median: n.stats.median,
+                    rel_delta,
+                    verdict,
+                });
+            }
+            None => removed.push(o.key()),
+        }
+    }
+    let added = new
+        .scenarios
+        .iter()
+        .filter(|n| old.find(&n.key()).is_none())
+        .map(|n| n.key())
+        .collect();
+    BenchComparison { diffs, added, removed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::report::SampleStats;
+
+    fn entry(name: &str, samples: &[f64], higher_is_better: bool) -> ScenarioResult {
+        ScenarioResult {
+            name: name.to_string(),
+            mode: "pipelined".into(),
+            backend: "des".into(),
+            unit: if higher_is_better { "imgs/s" } else { "s" }.into(),
+            higher_is_better,
+            samples: samples.to_vec(),
+            stats: SampleStats::from_samples(samples, 3.5, 0.95, 150, 11),
+            host_s: 0.0,
+        }
+    }
+
+    fn report(entries: Vec<ScenarioResult>) -> BenchReport {
+        BenchReport { suite: "quick".into(), seed: 7, warmup: 0, reps: 3, scenarios: entries }
+    }
+
+    #[test]
+    fn identical_runs_are_all_unchanged() {
+        let a = report(vec![entry("x", &[10.0, 10.0, 10.0], true)]);
+        let c = compare(&a, &a.clone(), DEFAULT_MIN_REL_DELTA);
+        assert_eq!(c.count(Verdict::Unchanged), 1);
+        assert!(!c.has_regressions());
+        assert!(c.added.is_empty() && c.removed.is_empty());
+    }
+
+    #[test]
+    fn ten_percent_throughput_drop_is_a_regression() {
+        let old = report(vec![entry("x", &[10.0, 10.0, 10.0], true)]);
+        let new = report(vec![entry("x", &[9.0, 9.0, 9.0], true)]);
+        let c = compare(&old, &new, DEFAULT_MIN_REL_DELTA);
+        assert_eq!(c.diffs[0].verdict, Verdict::Regressed);
+        assert!((c.diffs[0].rel_delta + 0.1).abs() < 1e-12);
+        assert!(c.has_regressions());
+    }
+
+    #[test]
+    fn direction_flips_for_time_like_metrics() {
+        // A lower time is an improvement, a higher time a regression.
+        let old = report(vec![entry("t", &[1.0, 1.0, 1.0], false)]);
+        let faster = report(vec![entry("t", &[0.8, 0.8, 0.8], false)]);
+        let slower = report(vec![entry("t", &[1.3, 1.3, 1.3], false)]);
+        assert_eq!(
+            compare(&old, &faster, DEFAULT_MIN_REL_DELTA).diffs[0].verdict,
+            Verdict::Improved
+        );
+        assert_eq!(
+            compare(&old, &slower, DEFAULT_MIN_REL_DELTA).diffs[0].verdict,
+            Verdict::Regressed
+        );
+    }
+
+    #[test]
+    fn overlapping_intervals_stay_unchanged_even_with_big_deltas() {
+        // Wide, noisy samples whose CIs overlap: no verdict either way.
+        let old = report(vec![entry("n", &[8.0, 12.0, 10.0, 9.0, 11.0], true)]);
+        let new = report(vec![entry("n", &[7.5, 11.5, 9.5, 8.5, 10.5], true)]);
+        let c = compare(&old, &new, DEFAULT_MIN_REL_DELTA);
+        assert_eq!(c.diffs[0].verdict, Verdict::Unchanged);
+    }
+
+    #[test]
+    fn sub_floor_shifts_are_unchanged_despite_disjoint_intervals() {
+        // Deterministic zero-width CIs, 0.5% drift: below the 1% floor.
+        let old = report(vec![entry("d", &[100.0, 100.0, 100.0], true)]);
+        let new = report(vec![entry("d", &[99.5, 99.5, 99.5], true)]);
+        let c = compare(&old, &new, DEFAULT_MIN_REL_DELTA);
+        assert_eq!(c.diffs[0].verdict, Verdict::Unchanged);
+        assert!(!c.has_regressions());
+    }
+
+    #[test]
+    fn added_and_removed_scenarios_never_gate() {
+        let old = report(vec![entry("kept", &[5.0], true), entry("gone", &[5.0], true)]);
+        let new = report(vec![entry("kept", &[5.0], true), entry("fresh", &[5.0], true)]);
+        let c = compare(&old, &new, DEFAULT_MIN_REL_DELTA);
+        assert_eq!(c.removed, vec!["des/gone".to_string()]);
+        assert_eq!(c.added, vec!["des/fresh".to_string()]);
+        assert!(!c.has_regressions());
+        assert_eq!(c.diffs.len(), 1);
+    }
+}

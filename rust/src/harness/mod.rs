@@ -1,0 +1,52 @@
+//! Benchmark orchestration (DESIGN.md §11): a scenario registry spanning
+//! every serving mode, a runner with warmup/repetition control and robust
+//! statistics, a schema-versioned perf artifact, and a CI-overlap
+//! regression gate — the machinery behind `pipeit bench`.
+//!
+//! Pipe-it's value claim is quantitative (the paper's +39% throughput
+//! headline), so the repo must be able to measure itself and notice when a
+//! refactor costs performance. The pieces, in data-flow order:
+//!
+//! * [`registry`] / [`Suite`] — named scenarios covering serial,
+//!   pipelined, replicated-fleet, adaptive-under-throttle, and
+//!   multi-tenant serving, each runnable on both execution twins
+//!   ([`Backend::Des`] and [`Backend::Wall`]). The differential
+//!   conformance suite (`tests/des_wallclock_diff.rs`) pins the twins to
+//!   each other per scenario.
+//! * [`run_suite`] / [`RunnerOptions`] — warmup + repetitions per entry,
+//!   per-repetition derived seeds, then median / MAD outlier rejection /
+//!   seeded bootstrap CI ([`SampleStats`], in the spirit of robust
+//!   benchmarking harnesses like `bencher`).
+//! * [`BenchReport`] — the schema-versioned `BENCH_<n>.json` artifact
+//!   ([`BENCH_VERSION`]), rendered by [`crate::reports::render_bench`].
+//! * [`compare()`] — classify each scenario improved / regressed / unchanged
+//!   by CI overlap (never point deltas); `pipeit bench --compare` exits
+//!   non-zero on any regression, and CI's determinism gate asserts two
+//!   same-seed quick runs compare as all-unchanged.
+//! * [`HostBench`] — the same statistics for `cargo bench` micro-timings;
+//!   the `benches/*.rs` targets are thin wrappers over it.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::harness::{compare, run_suite, RunnerOptions, Suite};
+//!
+//! let opts = RunnerOptions { reps: 1, warmup: 0, ..Default::default() };
+//! let report = run_suite(Suite::Quick, &opts).unwrap();
+//! assert!(report.scenarios.len() >= 8);
+//! // A report never regresses against itself — the determinism gate's
+//! // two same-seed runs are bit-identical, so neither does a re-run.
+//! assert!(!compare(&report, &report, 0.01).has_regressions());
+//! ```
+
+pub mod compare;
+pub mod report;
+pub mod runner;
+pub mod scenario;
+
+pub use compare::{
+    compare, BenchComparison, ScenarioDiff, Verdict, DEFAULT_MIN_REL_DELTA,
+};
+pub use report::{BenchReport, SampleStats, ScenarioResult, BENCH_VERSION};
+pub use runner::{black_box, run_suite, save_if_requested, HostBench, RunnerOptions};
+pub use scenario::{registry, suite_entries, Backend, Scenario, Suite, SuiteEntry};

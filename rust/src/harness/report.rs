@@ -1,0 +1,304 @@
+//! The schema-versioned benchmark artifact: [`BenchReport`] — what
+//! `pipeit bench --out BENCH_<n>.json` writes and `pipeit bench --compare`
+//! reads. One [`ScenarioResult`] per (scenario, backend) entry, carrying
+//! the raw metric samples plus the robust statistics the regression gate
+//! classifies on ([`SampleStats`]): median after MAD outlier rejection and
+//! a seeded bootstrap confidence interval of the median.
+//!
+//! The JSON schema is documented in `DESIGN.md` §11; as with
+//! [`crate::api::Plan`], a report saved with [`BenchReport::save`] reloads
+//! losslessly with [`BenchReport::load`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Bench schema version written by [`BenchReport::save`] and required by
+/// [`BenchReport::load`].
+pub const BENCH_VERSION: usize = 1;
+
+/// Robust summary of one scenario's metric samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleStats {
+    /// Samples kept after MAD outlier rejection.
+    pub n: usize,
+    /// Samples dropped by the rejection pass.
+    pub rejected: usize,
+    /// Median of the kept samples — the value the regression gate compares.
+    pub median: f64,
+    pub mean: f64,
+    /// Raw (unscaled) median absolute deviation of the kept samples.
+    pub mad: f64,
+    /// Bootstrap confidence interval of the median (contains `median`).
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+}
+
+impl SampleStats {
+    /// Reject outliers ([`stats::mad_filter`] at `mad_k`), then summarize
+    /// with a `confidence`-level bootstrap CI of the median drawn from the
+    /// deterministic stream of `seed` — same samples + same seed give
+    /// bit-identical stats, which is what makes the CI determinism gate
+    /// exact.
+    pub fn from_samples(
+        samples: &[f64],
+        mad_k: f64,
+        confidence: f64,
+        resamples: usize,
+        seed: u64,
+    ) -> SampleStats {
+        let kept = stats::mad_filter(samples, mad_k);
+        let (ci_lo, ci_hi) = stats::bootstrap_ci_median(&kept, confidence, resamples, seed);
+        SampleStats {
+            n: kept.len(),
+            rejected: samples.len() - kept.len(),
+            median: stats::median(&kept),
+            mean: stats::mean(&kept),
+            mad: stats::mad(&kept),
+            ci_lo,
+            ci_hi,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("median", Json::num(self.median)),
+            ("mean", Json::num(self.mean)),
+            ("mad", Json::num(self.mad)),
+            ("ci_lo", Json::num(self.ci_lo)),
+            ("ci_hi", Json::num(self.ci_hi)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SampleStats> {
+        Ok(SampleStats {
+            n: j.req("n")?.as_usize().context("stats n")?,
+            rejected: j.req("rejected")?.as_usize().context("stats rejected")?,
+            median: j.req("median")?.as_f64().context("stats median")?,
+            mean: j.req("mean")?.as_f64().context("stats mean")?,
+            mad: j.req("mad")?.as_f64().context("stats mad")?,
+            ci_lo: j.req("ci_lo")?.as_f64().context("stats ci_lo")?,
+            ci_hi: j.req("ci_hi")?.as_f64().context("stats ci_hi")?,
+        })
+    }
+}
+
+/// One (scenario, backend) entry of a bench run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioResult {
+    /// Scenario name from the registry (`pipelined/alexnet`).
+    pub name: String,
+    /// Serving mode (`serial`, `pipelined`, `replicated`, `adaptive`,
+    /// `multi-tenant`) or `micro` for host micro-benchmarks.
+    pub mode: String,
+    /// Which twin produced the samples: `des`, `wall`, or `host`.
+    pub backend: String,
+    /// Metric unit: `imgs/s` for serving scenarios, `s` for micro benches.
+    pub unit: String,
+    /// Regression direction: true when a smaller metric is a regression
+    /// (throughput); false for time-like metrics.
+    pub higher_is_better: bool,
+    /// Raw metric samples in repetition order, BEFORE outlier rejection
+    /// (micro benches store stats only — their sample counts are large).
+    pub samples: Vec<f64>,
+    pub stats: SampleStats,
+    /// Host seconds spent producing this entry (warmup + all repetitions).
+    /// Informational only: never compared, and not deterministic.
+    pub host_s: f64,
+}
+
+impl ScenarioResult {
+    /// The identity `--compare` matches entries by.
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.backend, self.name)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("mode", Json::str(&self.mode)),
+            ("backend", Json::str(&self.backend)),
+            ("unit", Json::str(&self.unit)),
+            ("higher_is_better", Json::Bool(self.higher_is_better)),
+            ("samples", Json::Arr(self.samples.iter().map(|&x| Json::num(x)).collect())),
+            ("stats", self.stats.to_json()),
+            ("host_s", Json::num(self.host_s)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ScenarioResult> {
+        Ok(ScenarioResult {
+            name: j.req("name")?.as_str().context("scenario name")?.to_string(),
+            mode: j.req("mode")?.as_str().context("scenario mode")?.to_string(),
+            backend: j.req("backend")?.as_str().context("scenario backend")?.to_string(),
+            unit: j.req("unit")?.as_str().context("scenario unit")?.to_string(),
+            higher_is_better: j
+                .req("higher_is_better")?
+                .as_bool()
+                .context("higher_is_better")?,
+            samples: j.req("samples")?.f64_arr().context("samples array")?,
+            stats: SampleStats::from_json(j.req("stats")?)?,
+            host_s: j.req("host_s")?.as_f64().context("host_s")?,
+        })
+    }
+}
+
+/// A full bench run: the machine-readable perf artifact
+/// (`BENCH_<n>.json`). Rendered for humans by
+/// [`crate::reports::render_bench`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Suite the run executed (`quick`, `full`, or a bench target's name).
+    pub suite: String,
+    /// Base seed every scenario's repetition seeds derive from.
+    pub seed: u64,
+    /// Warmup runs discarded per scenario.
+    pub warmup: usize,
+    /// Measured repetitions per scenario.
+    pub reps: usize,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl BenchReport {
+    /// Look up an entry by its `backend/name` key.
+    pub fn find(&self, key: &str) -> Option<&ScenarioResult> {
+        self.scenarios.iter().find(|s| s.key() == key)
+    }
+
+    /// Distinct serving modes covered by the run.
+    pub fn modes(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for s in &self.scenarios {
+            if !out.contains(&s.mode.as_str()) {
+                out.push(&s.mode);
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(BENCH_VERSION as f64)),
+            ("suite", Json::str(&self.suite)),
+            ("seed", Json::num(self.seed as f64)),
+            ("warmup", Json::num(self.warmup as f64)),
+            ("reps", Json::num(self.reps as f64)),
+            (
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(ScenarioResult::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchReport> {
+        let version = j.req("version")?.as_usize().context("version")?;
+        anyhow::ensure!(
+            version == BENCH_VERSION,
+            "bench schema version {version} is not supported (field \"version\"; \
+             this build reads version {BENCH_VERSION})"
+        );
+        let mut scenarios = Vec::new();
+        for (i, sj) in j.req("scenarios")?.as_arr().context("scenarios array")?.iter().enumerate()
+        {
+            scenarios.push(
+                ScenarioResult::from_json(sj).with_context(|| format!("scenario {i}"))?,
+            );
+        }
+        Ok(BenchReport {
+            suite: j.req("suite")?.as_str().context("suite")?.to_string(),
+            seed: j.req("seed")?.as_f64().context("seed")?.max(0.0) as u64,
+            warmup: j.req("warmup")?.as_usize().context("warmup")?,
+            reps: j.req("reps")?.as_usize().context("reps")?,
+            scenarios,
+        })
+    }
+
+    /// Write the artifact (`BENCH_<n>.json`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load an artifact saved by [`BenchReport::save`].
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        BenchReport::from_json(&j)
+            .with_context(|| format!("parsing bench report {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        let samples = vec![10.0, 10.2, 9.8, 10.1, 60.0];
+        BenchReport {
+            suite: "quick".into(),
+            seed: 7,
+            warmup: 1,
+            reps: 5,
+            scenarios: vec![ScenarioResult {
+                name: "pipelined/alexnet".into(),
+                mode: "pipelined".into(),
+                backend: "des".into(),
+                unit: "imgs/s".into(),
+                higher_is_better: true,
+                samples: samples.clone(),
+                stats: SampleStats::from_samples(&samples, 3.5, 0.95, 200, 99),
+                host_s: 0.25,
+            }],
+        }
+    }
+
+    #[test]
+    fn stats_reject_the_outlier_and_bracket_the_median() {
+        let s = SampleStats::from_samples(&[10.0, 10.2, 9.8, 10.1, 60.0], 3.5, 0.95, 200, 1);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.rejected, 1);
+        assert!((s.median - 10.05).abs() < 1e-9, "median {}", s.median);
+        assert!(s.ci_lo <= s.median && s.median <= s.ci_hi);
+    }
+
+    #[test]
+    fn stats_are_deterministic_given_seed() {
+        let xs = [5.0, 5.1, 4.9, 5.2, 4.8, 5.05];
+        let a = SampleStats::from_samples(&xs, 3.5, 0.95, 300, 17);
+        let b = SampleStats::from_samples(&xs, 3.5, 0.95, 300, 17);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn report_json_roundtrips_losslessly() {
+        let r = sample_report();
+        let text = r.to_json().to_string();
+        let j = Json::parse(&text).expect("bench JSON reparses");
+        assert_eq!(BenchReport::from_json(&j).expect("deserializes"), r);
+    }
+
+    #[test]
+    fn load_rejects_wrong_version_naming_the_field() {
+        let mut j = sample_report().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".to_string(), Json::num(99.0));
+        }
+        let err = BenchReport::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("\"version\""), "{err}");
+        assert!(err.contains("99"), "{err}");
+    }
+
+    #[test]
+    fn find_uses_backend_qualified_keys() {
+        let r = sample_report();
+        assert!(r.find("des/pipelined/alexnet").is_some());
+        assert!(r.find("wall/pipelined/alexnet").is_none());
+        assert_eq!(r.modes(), vec!["pipelined"]);
+    }
+}

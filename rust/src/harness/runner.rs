@@ -1,0 +1,348 @@
+//! The bench runner: warmup + repetition control over the scenario
+//! registry, robust statistics per entry, one [`BenchReport`] out.
+//!
+//! Two front ends share the machinery:
+//!
+//! * [`run_suite`] — the `pipeit bench` path: run every (scenario,
+//!   backend) entry of a [`Suite`] `reps` times (after `warmup` discarded
+//!   runs), summarize each sample set with MAD outlier rejection and a
+//!   seeded bootstrap CI ([`SampleStats::from_samples`]).
+//! * [`HostBench`] — the `cargo bench` path: a criterion-style
+//!   micro-benchmark timer (calibrated iteration counts against a time
+//!   budget) that emits the same [`ScenarioResult`] shape, so the bench
+//!   targets are thin wrappers over this module and print through
+//!   [`crate::reports::render_bench`].
+//!
+//! Determinism: repetition `r` of a scenario runs with seed
+//! `base_seed + r`, and the bootstrap is seeded from `base_seed` XOR a
+//! stable FNV-1a hash of the entry key — so two runs of the same suite at
+//! the same seed produce bit-identical samples AND bit-identical
+//! confidence intervals, which is exactly what the CI determinism gate
+//! (`--compare` reporting all-unchanged) relies on.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::report::{BenchReport, SampleStats, ScenarioResult};
+use super::scenario::{suite_entries, Suite};
+
+/// Knobs for [`run_suite`]; the defaults are what `pipeit bench` uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunnerOptions {
+    /// Discarded runs per entry before sampling starts.
+    pub warmup: usize,
+    /// Measured repetitions per entry.
+    pub reps: usize,
+    /// Base seed: repetition `r` runs with `seed + r`.
+    pub seed: u64,
+    /// MAD outlier-rejection multiplier ([`crate::util::stats::mad_filter`]).
+    pub mad_k: f64,
+    /// Bootstrap CI confidence level.
+    pub confidence: f64,
+    /// Bootstrap resamples.
+    pub resamples: usize,
+}
+
+impl Default for RunnerOptions {
+    fn default() -> RunnerOptions {
+        RunnerOptions {
+            warmup: 1,
+            reps: 5,
+            seed: 7,
+            mad_k: 3.5,
+            confidence: 0.95,
+            resamples: 200,
+        }
+    }
+}
+
+/// Stable 64-bit FNV-1a — the bootstrap-seed hash must not depend on the
+/// standard library's unspecified default hasher.
+pub(crate) fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run every entry of `suite` and produce the serializable artifact.
+/// Entries run sequentially in suite order (wall-clock scenarios spawn
+/// their own thread fleets; overlapping them would contaminate timings).
+pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
+    anyhow::ensure!(opts.reps >= 1, "need at least one repetition");
+    let mut scenarios = Vec::new();
+    for e in suite_entries(suite) {
+        let started = Instant::now();
+        for _ in 0..opts.warmup {
+            e.scenario.run(e.backend, opts.seed)?;
+        }
+        let mut samples = Vec::with_capacity(opts.reps);
+        for rep in 0..opts.reps {
+            samples.push(e.scenario.run(e.backend, opts.seed.wrapping_add(rep as u64))?);
+        }
+        let key = format!("{}/{}", e.backend.key(), e.scenario.name);
+        let stats = SampleStats::from_samples(
+            &samples,
+            opts.mad_k,
+            opts.confidence,
+            opts.resamples,
+            opts.seed ^ fnv1a(&key),
+        );
+        scenarios.push(ScenarioResult {
+            name: e.scenario.name.clone(),
+            mode: e.scenario.mode.to_string(),
+            backend: e.backend.key().to_string(),
+            unit: "imgs/s".to_string(),
+            higher_is_better: true,
+            samples,
+            stats,
+            host_s: started.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(BenchReport {
+        suite: suite.name().to_string(),
+        seed: opts.seed,
+        warmup: opts.warmup,
+        reps: opts.reps,
+        scenarios,
+    })
+}
+
+/// Opaque value sink that defeats dead-code elimination in benched
+/// closures (std's `black_box`, wrapped so bench code reads uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Criterion-style micro-benchmark runner (criterion is not in the offline
+/// vendor set): calibrates an iteration count against a time budget during
+/// warmup, then measures per-iteration latency and summarizes it with the
+/// same robust statistics as the scenario runner. The `cargo bench`
+/// targets are thin wrappers over this.
+pub struct HostBench {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    mad_k: f64,
+    confidence: f64,
+    resamples: usize,
+    pub results: Vec<ScenarioResult>,
+}
+
+impl Default for HostBench {
+    fn default() -> HostBench {
+        HostBench::with_budget(Duration::from_millis(100), Duration::from_millis(600), 10_000)
+    }
+}
+
+impl HostBench {
+    pub fn new() -> HostBench {
+        HostBench::default()
+    }
+
+    /// Tiny budget for unit-ish benches in CI.
+    pub fn quick() -> HostBench {
+        HostBench::with_budget(Duration::from_millis(10), Duration::from_millis(80), 1000)
+    }
+
+    pub fn with_budget(warmup: Duration, budget: Duration, max_iters: usize) -> HostBench {
+        HostBench {
+            warmup,
+            budget,
+            max_iters,
+            mad_k: 3.5,
+            confidence: 0.95,
+            resamples: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`: warmup until the warmup budget elapses (calibrating the
+    /// iteration count), then measure per-iteration seconds. Host timing is
+    /// inherently noisy — this is precisely what the MAD rejection and the
+    /// bootstrap CI are for. Prints a one-line summary and records the
+    /// result (unit `s`, lower is better; raw samples are not retained —
+    /// iteration counts are large).
+    pub fn time<F: FnMut()>(&mut self, name: &str, mut f: F) -> &ScenarioResult {
+        let started = Instant::now();
+        let mut warm_iters = 0usize;
+        while started.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = started.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let stats = SampleStats::from_samples(
+            &samples,
+            self.mad_k,
+            self.confidence,
+            self.resamples,
+            fnv1a(name),
+        );
+        println!(
+            "bench {:<44} n={:<6} median={:>12?} ci95=[{:?}, {:?}] mad={:?}",
+            name,
+            stats.n,
+            Duration::from_secs_f64(stats.median),
+            Duration::from_secs_f64(stats.ci_lo),
+            Duration::from_secs_f64(stats.ci_hi),
+            Duration::from_secs_f64(stats.mad),
+        );
+        self.results.push(ScenarioResult {
+            name: name.to_string(),
+            mode: "micro".to_string(),
+            backend: "host".to_string(),
+            unit: "s".to_string(),
+            higher_is_better: false,
+            samples: Vec::new(),
+            stats,
+            host_s: started.elapsed().as_secs_f64(),
+        });
+        self.results.last().expect("just pushed")
+    }
+
+    /// Package the recorded results as a [`BenchReport`] (suite = the bench
+    /// target's name). Seed 0: host timings are not reproducible anyway.
+    pub fn into_report(self, suite: &str) -> BenchReport {
+        BenchReport {
+            suite: suite.to_string(),
+            seed: 0,
+            warmup: 0,
+            reps: 0,
+            scenarios: self.results,
+        }
+    }
+
+    /// The shared epilogue of every `cargo bench` target: package, render
+    /// through [`crate::reports::render_bench`], persist when `BENCH_OUT`
+    /// is set, and hand the report back.
+    pub fn finish(self, suite: &str) -> Result<BenchReport> {
+        let report = self.into_report(suite);
+        println!();
+        print!("{}", crate::reports::render_bench(&report));
+        save_if_requested(&report)?;
+        Ok(report)
+    }
+}
+
+/// Honor `BENCH_OUT=<path>`: the bench targets call this so any `cargo
+/// bench` run can be captured as a machine-readable artifact.
+pub fn save_if_requested(report: &BenchReport) -> Result<()> {
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        report.save(std::path::Path::new(&path))?;
+        println!("bench saved : {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::compare::{self, Verdict};
+
+    #[test]
+    fn fnv1a_is_stable_and_discriminates() {
+        // Pinned value: the bootstrap seed derivation must never drift
+        // between builds, or historical artifacts stop being comparable.
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a("des/pipelined/alexnet"), fnv1a("wall/pipelined/alexnet"));
+    }
+
+    #[test]
+    fn host_bench_runs_and_records_robust_stats() {
+        let mut b = HostBench::quick();
+        let r = b.time("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.stats.n >= 5);
+        assert!(r.stats.median > 0.0);
+        assert!(r.stats.ci_lo <= r.stats.median && r.stats.median <= r.stats.ci_hi);
+        assert!(!r.higher_is_better);
+        let report = b.into_report("hotpath");
+        assert_eq!(report.suite, "hotpath");
+        assert_eq!(report.scenarios.len(), 1);
+    }
+
+    #[test]
+    fn host_bench_slower_code_measures_slower() {
+        let mut b = HostBench::quick();
+        let fast = b
+            .time("fast", || {
+                black_box((0..10u64).sum::<u64>());
+            })
+            .stats
+            .median;
+        let slow = b
+            .time("slow", || {
+                // black_box on the bound + accumulator defeats
+                // const-folding in release builds.
+                let n = black_box(200_000u64);
+                let mut acc = 0u64;
+                for i in 0..n {
+                    acc = acc.wrapping_add(black_box(i).wrapping_mul(3));
+                }
+                black_box(acc);
+            })
+            .stats
+            .median;
+        assert!(slow > fast);
+    }
+
+    /// The acceptance loop in miniature, without the CLI: two same-seed
+    /// quick-suite runs compare as all-unchanged; a synthetic 10% slowdown
+    /// on one scenario is flagged as a regression. The full-size version
+    /// (real suite, real binary) lives in `tests/bench_harness.rs`; this
+    /// one uses hand-built reports so `cargo test` stays fast.
+    #[test]
+    fn compare_contract_on_hand_built_reports() {
+        let samples = vec![20.0, 20.0, 20.0];
+        let entry = |median_scale: f64| {
+            let scaled: Vec<f64> = samples.iter().map(|x| x * median_scale).collect();
+            ScenarioResult {
+                name: "pipelined/alexnet".into(),
+                mode: "pipelined".into(),
+                backend: "des".into(),
+                unit: "imgs/s".into(),
+                higher_is_better: true,
+                stats: SampleStats::from_samples(&scaled, 3.5, 0.95, 100, 3),
+                samples: scaled,
+                host_s: 0.1,
+            }
+        };
+        let report = |scale: f64| BenchReport {
+            suite: "quick".into(),
+            seed: 7,
+            warmup: 0,
+            reps: 3,
+            scenarios: vec![entry(scale)],
+        };
+        let base = report(1.0);
+        let same = compare::compare(&base, &report(1.0), 0.01);
+        assert!(!same.has_regressions());
+        assert!(same.diffs.iter().all(|d| d.verdict == Verdict::Unchanged));
+
+        let slow = compare::compare(&base, &report(0.9), 0.01);
+        assert!(slow.has_regressions());
+        assert_eq!(slow.diffs[0].verdict, Verdict::Regressed);
+
+        let fast = compare::compare(&base, &report(1.1), 0.01);
+        assert!(!fast.has_regressions());
+        assert_eq!(fast.diffs[0].verdict, Verdict::Improved);
+    }
+}

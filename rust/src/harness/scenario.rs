@@ -1,0 +1,423 @@
+//! The scenario registry: every serving mode shipped so far, each runnable
+//! on BOTH execution twins — the discrete-event simulator and the
+//! wall-clock thread executor — through one [`Scenario::run`] entry point.
+//!
+//! A scenario is a *workload*, not a backend: `pipelined/alexnet` names the
+//! paper's single-pipeline design serving a saturated stream, and the
+//! [`Backend`] chooses whether the metric comes from the DES recurrence or
+//! from real threads sleeping the (time-scaled) Eq. 10 service times. This
+//! pairing is what the differential conformance suite
+//! (`tests/des_wallclock_diff.rs`) keeps honest: for every scenario the two
+//! twins must agree within the scenario's declared [`Scenario::tolerance`],
+//! and neither may exceed its Eq. 12 capacity ([`Scenario::capacity`]).
+//!
+//! Suites pick which (scenario, backend) entries a bench run executes:
+//! [`Suite::Quick`] is DES-only — pure deterministic computation, the CI
+//! determinism gate — while [`Suite::Full`] adds every wall-clock twin.
+
+use anyhow::{Context, Result};
+
+use crate::adapt::{self, AdaptOptions, ClusterThrottle};
+use crate::api::{DeployOptions, Plan, PlanSpec, Strategy};
+use crate::cnn::zoo;
+use crate::config::Config;
+use crate::perfmodel::TimeMatrix;
+use crate::simulator::platform::CoreType;
+use crate::tenancy::{MultiPlan, MultiServeOptions, TenantSpec};
+
+/// Which execution twin produces the metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Discrete-event simulation: exact, threadless, bit-deterministic.
+    Des,
+    /// The real thread executor over synthetic sleep stages, normalized by
+    /// the scenario's time scale back to model seconds.
+    Wall,
+}
+
+impl Backend {
+    /// Stable key used in bench artifacts (`des`, `wall`).
+    pub fn key(self) -> &'static str {
+        match self {
+            Backend::Des => "des",
+            Backend::Wall => "wall",
+        }
+    }
+}
+
+/// What the scenario actually runs (private: the registry is the API).
+#[derive(Debug, Clone)]
+enum Spec {
+    /// A compiled [`Plan`] serving a saturated stream (serial, pipelined,
+    /// or replicated — the strategy decides).
+    Plan { net: &'static str, strategy: Strategy },
+    /// Closed-loop adaptive serving under a scripted big-cluster throttle
+    /// ([`adapt::simulate_adaptive`] / [`adapt::deploy_adaptive`]).
+    Adaptive { net: &'static str, throttle_at: f64, factor: f64 },
+    /// Multi-tenant co-serving of seeded Poisson streams through the joint
+    /// plan's per-tenant fleets; the metric is the weighted served rate.
+    Multi { tenants: &'static [(&'static str, f64)], max_replicas: usize },
+}
+
+/// One registry entry: a named workload runnable on either backend.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Registry name (`mode/network[...]`), unique across the registry.
+    pub name: String,
+    /// Serving mode: `serial`, `pipelined`, `replicated`, `adaptive`, or
+    /// `multi-tenant`.
+    pub mode: &'static str,
+    /// Stream length (items per run; arrivals per tenant for multi-tenant).
+    pub images: usize,
+    /// Inter-stage queue capacity.
+    pub queue_cap: usize,
+    /// Wall twin time scale: threads sleep `stage_time * time_scale`.
+    pub time_scale: f64,
+    /// Declared relative tolerance for DES-vs-wall agreement — the bound
+    /// the differential conformance suite enforces per scenario.
+    pub tolerance: f64,
+    spec: Spec,
+}
+
+impl Scenario {
+    /// Run the scenario on `backend` and return its throughput metric in
+    /// model imgs/s (weighted imgs/s for multi-tenant) — wall-clock results
+    /// are normalized by the time scale so both twins are comparable.
+    ///
+    /// `seed` drives stochastic inputs (arrival streams); scenarios without
+    /// stochastic inputs ignore it. DES runs are bit-deterministic given
+    /// `seed`.
+    pub fn run(&self, backend: Backend, seed: u64) -> Result<f64> {
+        match &self.spec {
+            Spec::Plan { net, strategy } => {
+                let plan = self.compile_plan(net, *strategy)?;
+                match backend {
+                    Backend::Des => {
+                        Ok(plan.simulate(self.images, self.queue_cap)?.throughput)
+                    }
+                    Backend::Wall => {
+                        let report = plan.deploy(&self.deploy_opts(seed))?;
+                        Ok(report.throughput * self.time_scale)
+                    }
+                }
+            }
+            Spec::Adaptive { net, throttle_at, factor } => {
+                let cfg = Config::default();
+                let network = zoo::by_name(net)
+                    .with_context(|| format!("unknown network {net:?}"))?;
+                let tm = TimeMatrix::measured(&cfg.platform, &network);
+                let plan = PlanSpec::new(net).platform(cfg.clone()).compile()?;
+                let opts = AdaptOptions::default();
+                match backend {
+                    Backend::Des => {
+                        let script = [ClusterThrottle {
+                            at: *throttle_at,
+                            core: CoreType::Big,
+                            factor: *factor,
+                        }];
+                        let out = adapt::simulate_adaptive(
+                            &plan,
+                            &tm,
+                            &cfg.power,
+                            &script,
+                            &opts,
+                            self.images,
+                            self.queue_cap,
+                        )?;
+                        Ok(out.report.throughput)
+                    }
+                    Backend::Wall => {
+                        // Throttle times are simulated seconds; the wall
+                        // twin's clock runs at `time_scale` of model time.
+                        let script = [ClusterThrottle {
+                            at: *throttle_at * self.time_scale,
+                            core: CoreType::Big,
+                            factor: *factor,
+                        }];
+                        let out = adapt::deploy_adaptive(
+                            &plan,
+                            &tm,
+                            &cfg.power,
+                            &script,
+                            &opts,
+                            &self.deploy_opts(seed),
+                        )?;
+                        Ok(out.report.throughput * self.time_scale)
+                    }
+                }
+            }
+            Spec::Multi { tenants, max_replicas } => {
+                let mp = self.compile_multi(tenants, *max_replicas)?;
+                let opts = MultiServeOptions {
+                    images: self.images,
+                    queue_cap: self.queue_cap,
+                    admission_cap: 8,
+                    seed,
+                    time_scale: self.time_scale,
+                    uniform_arrivals: false,
+                };
+                let report = match backend {
+                    Backend::Des => mp.simulate(&opts)?,
+                    Backend::Wall => mp.deploy(&opts)?,
+                };
+                Ok(report.weighted_throughput)
+            }
+        }
+    }
+
+    /// The Eq. 12 upper bound on the scenario's metric: the plan's
+    /// predicted aggregate capacity (weighted capacity sum for
+    /// multi-tenant). Throttled scenarios report the *clean* capacity,
+    /// which still bounds the throttled run from above.
+    pub fn capacity(&self) -> Result<f64> {
+        match &self.spec {
+            Spec::Plan { net, strategy } => {
+                Ok(self.compile_plan(net, *strategy)?.throughput)
+            }
+            Spec::Adaptive { net, .. } => {
+                Ok(PlanSpec::new(net).platform(Config::default()).compile()?.throughput)
+            }
+            Spec::Multi { tenants, max_replicas } => {
+                let mp = self.compile_multi(tenants, *max_replicas)?;
+                Ok(mp.tenants.iter().map(|t| t.weight * t.plan.throughput).sum())
+            }
+        }
+    }
+
+    fn compile_plan(&self, net: &str, strategy: Strategy) -> Result<Plan> {
+        PlanSpec::new(net).platform(Config::default()).strategy(strategy).compile()
+    }
+
+    fn compile_multi(
+        &self,
+        tenants: &[(&str, f64)],
+        max_replicas: usize,
+    ) -> Result<MultiPlan> {
+        let specs: Vec<TenantSpec> =
+            tenants.iter().map(|(n, r)| TenantSpec::new(n, *r)).collect();
+        MultiPlan::compile(&specs, &Config::default(), max_replicas)
+    }
+
+    fn deploy_opts(&self, seed: u64) -> DeployOptions {
+        DeployOptions {
+            images: self.images,
+            queue_cap: self.queue_cap,
+            time_scale: self.time_scale,
+            batch: 1,
+            seed,
+        }
+    }
+}
+
+fn scenario(
+    name: &str,
+    mode: &'static str,
+    images: usize,
+    tolerance: f64,
+    spec: Spec,
+) -> Scenario {
+    Scenario {
+        name: name.to_string(),
+        mode,
+        images,
+        queue_cap: 2,
+        time_scale: 0.05,
+        tolerance,
+        spec,
+    }
+}
+
+/// Tenant mixes are `&'static` so scenarios stay `Clone` without owning
+/// allocations per entry.
+static MULTI_MIX: [(&str, f64); 2] = [("alexnet", 30.0), ("squeezenet", 60.0)];
+
+/// Every benchmark scenario: one per (serving mode, network) pair worth
+/// tracking, spanning all five serving modes shipped so far. Names are
+/// unique; each runs on both backends.
+pub fn registry() -> Vec<Scenario> {
+    vec![
+        scenario(
+            "serial/alexnet",
+            "serial",
+            80,
+            0.25,
+            Spec::Plan { net: "alexnet", strategy: Strategy::Serial },
+        ),
+        scenario(
+            "serial/squeezenet",
+            "serial",
+            80,
+            0.25,
+            Spec::Plan { net: "squeezenet", strategy: Strategy::Serial },
+        ),
+        scenario(
+            "pipelined/alexnet",
+            "pipelined",
+            120,
+            0.35,
+            Spec::Plan { net: "alexnet", strategy: Strategy::Pipeline },
+        ),
+        scenario(
+            "pipelined/squeezenet",
+            "pipelined",
+            160,
+            0.35,
+            Spec::Plan { net: "squeezenet", strategy: Strategy::Pipeline },
+        ),
+        scenario(
+            "pipelined/mobilenet",
+            "pipelined",
+            160,
+            0.35,
+            Spec::Plan { net: "mobilenet", strategy: Strategy::Pipeline },
+        ),
+        scenario(
+            "replicated/alexnet",
+            "replicated",
+            120,
+            0.35,
+            Spec::Plan {
+                net: "alexnet",
+                strategy: Strategy::Replicated { max_replicas: 4, exact: false },
+            },
+        ),
+        scenario(
+            "replicated/squeezenet",
+            "replicated",
+            200,
+            0.35,
+            Spec::Plan {
+                net: "squeezenet",
+                strategy: Strategy::Replicated { max_replicas: 4, exact: false },
+            },
+        ),
+        scenario(
+            "adaptive/squeezenet-throttle2x",
+            "adaptive",
+            300,
+            0.50,
+            Spec::Adaptive { net: "squeezenet", throttle_at: 4.0, factor: 2.0 },
+        ),
+        scenario(
+            "multi/alexnet30+squeezenet60",
+            "multi-tenant",
+            120,
+            0.35,
+            Spec::Multi { tenants: &MULTI_MIX, max_replicas: 2 },
+        ),
+    ]
+}
+
+/// Which (scenario, backend) entries a bench run executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    /// Every scenario on the DES twin only: pure deterministic computation
+    /// (same seed, same binary, bit-identical samples) — the CI
+    /// determinism gate runs this.
+    Quick,
+    /// The quick suite plus every wall-clock twin (real threads, real
+    /// sleeps; the robust statistics exist for these).
+    Full,
+}
+
+impl Suite {
+    pub fn parse(s: &str) -> Result<Suite> {
+        match s {
+            "quick" => Ok(Suite::Quick),
+            "full" => Ok(Suite::Full),
+            other => Err(anyhow::anyhow!("unknown suite {other:?} (quick|full)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Suite::Quick => "quick",
+            Suite::Full => "full",
+        }
+    }
+}
+
+/// One unit of bench work: a scenario pinned to a backend.
+#[derive(Debug, Clone)]
+pub struct SuiteEntry {
+    pub scenario: Scenario,
+    pub backend: Backend,
+}
+
+/// The suite's entries in a stable order (registry order, DES before wall).
+pub fn suite_entries(suite: Suite) -> Vec<SuiteEntry> {
+    let reg = registry();
+    let wall: Vec<SuiteEntry> = if suite == Suite::Full {
+        reg.iter()
+            .cloned()
+            .map(|scenario| SuiteEntry { scenario, backend: Backend::Wall })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut out: Vec<SuiteEntry> = reg
+        .into_iter()
+        .map(|scenario| SuiteEntry { scenario, backend: Backend::Des })
+        .collect();
+    out.extend(wall);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_the_issue_floor() {
+        let reg = registry();
+        assert!(reg.len() >= 8, "only {} scenarios", reg.len());
+        let mut modes: Vec<&str> = reg.iter().map(|s| s.mode).collect();
+        modes.sort_unstable();
+        modes.dedup();
+        assert!(modes.len() >= 4, "only {} modes: {modes:?}", modes.len());
+        let mut names: Vec<&String> = reg.iter().map(|s| &s.name).collect();
+        names.sort();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate scenario names");
+        for s in &reg {
+            assert!(s.tolerance > 0.0 && s.tolerance < 1.0);
+            assert!(s.images >= 1 && s.time_scale > 0.0);
+        }
+    }
+
+    #[test]
+    fn quick_suite_is_des_only_and_full_extends_it() {
+        let quick = suite_entries(Suite::Quick);
+        assert!(quick.iter().all(|e| e.backend == Backend::Des));
+        assert_eq!(quick.len(), registry().len());
+        let full = suite_entries(Suite::Full);
+        assert_eq!(full.len(), 2 * quick.len());
+        for (q, f) in quick.iter().zip(&full) {
+            assert_eq!(q.scenario.name, f.scenario.name, "full must extend quick");
+        }
+    }
+
+    #[test]
+    fn suite_parse_roundtrips_and_rejects_garbage() {
+        assert_eq!(Suite::parse("quick").unwrap(), Suite::Quick);
+        assert_eq!(Suite::parse("full").unwrap(), Suite::Full);
+        assert_eq!(Suite::Quick.name(), "quick");
+        assert!(Suite::parse("nightly").is_err());
+    }
+
+    #[test]
+    fn des_run_is_deterministic_and_capacity_bounded() {
+        // One representative per spec kind (full coverage lives in the
+        // differential suite, which also runs the wall twin).
+        for name in ["pipelined/alexnet", "multi/alexnet30+squeezenet60"] {
+            let s = registry().into_iter().find(|s| s.name == name).unwrap();
+            let a = s.run(Backend::Des, 7).unwrap();
+            let b = s.run(Backend::Des, 7).unwrap();
+            assert_eq!(a, b, "{name}: DES must be bit-deterministic");
+            assert!(a > 0.0, "{name}: zero metric");
+            let cap = s.capacity().unwrap();
+            assert!(a <= cap * 1.05, "{name}: metric {a} above capacity {cap}");
+        }
+    }
+}

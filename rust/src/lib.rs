@@ -36,6 +36,11 @@
 //! door admits (or sheds) each tenant's Poisson arrivals
 //! (`pipeit plan-multi / serve-multi / simulate-multi`).
 //!
+//! The [`harness`] subsystem keeps all of the above measurable: a scenario
+//! registry spanning every serving mode (each in its DES and wall-clock
+//! twin), robust statistics, and a schema-versioned `BENCH_<n>.json`
+//! artifact with a CI-overlap regression gate (`pipeit bench`).
+//!
 //! Architecture details live in `DESIGN.md`; the quickstart and the
 //! paper-to-module map live in `README.md`.
 
@@ -48,6 +53,7 @@ pub mod cnn;
 pub mod config;
 pub mod coordinator;
 pub mod dse;
+pub mod harness;
 pub mod perfmodel;
 pub mod reports;
 pub mod runtime;

@@ -17,8 +17,11 @@ use pipeit::api::{DeployOptions, Plan, PlanSpec, Strategy, TimeSource};
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::dse;
+use pipeit::harness::{self, BenchReport, RunnerOptions, Suite};
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
-use pipeit::reports::{render_multi_serve, render_serve, Reporter};
+use pipeit::reports::{
+    render_bench, render_bench_compare, render_multi_serve, render_serve, Reporter,
+};
 use pipeit::simulator::arrivals::ArrivalSpec;
 use pipeit::simulator::platform::CoreType;
 use pipeit::tenancy::{
@@ -31,7 +34,7 @@ use pipeit::util::table::{f, Table};
 const USAGE: &str = "\
 pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
 
-USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|explore|predict|count|tables> [options]
+USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|bench|explore|predict|count|tables> [options]
 
   plan       --net N [--predicted] [--platform F] [--out plan.json]
              [--strategy serial|pipeline|replicated|exhaustive|energy]
@@ -80,6 +83,18 @@ USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|explore
                                                fleets + shared shed-on-full front door
   simulate-multi --plan mp.json | --tenant ... [--images 2000] [--queue-cap 2]
              [--admission-cap 8] [--seed 7]    DES co-simulation of the same board
+  bench      [--suite quick|full] [--seed 7] [--reps 5] [--warmup 1]
+             [--out BENCH_0.json]              run the benchmark harness: every
+                                               serving mode x execution twin,
+                                               robust stats (median, MAD
+                                               rejection, bootstrap CI), and a
+                                               schema-versioned perf artifact;
+                                               quick = DES only (deterministic),
+                                               full adds the wall-clock twins
+  bench      --compare old.json new.json [--min-delta 0.01]
+                                               classify each scenario improved/
+                                               REGRESSED/unchanged by CI overlap;
+                                               exits non-zero on any regression
   tables     [--platform F]                    regenerate every paper table & figure
 
 every serve/simulate form also takes --metrics-out metrics.json
@@ -170,6 +185,7 @@ fn main() -> Result<()> {
             print!("{}", render_multi_serve(&report));
             write_metrics(&args, &report.to_json())?;
         }
+        "bench" => bench(&args)?,
         "count" => count(&args, &cfg)?,
         "serve" => {
             let replicas = args.get_usize("replicas", 1)?;
@@ -225,6 +241,61 @@ fn main() -> Result<()> {
             println!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);
         }
+    }
+    Ok(())
+}
+
+/// `bench`: run the benchmark harness and write the `BENCH_<n>.json` perf
+/// artifact, or — with `--compare old.json new.json` — classify each
+/// scenario by confidence-interval overlap and exit non-zero on any
+/// regression (the CI perf gate).
+fn bench(args: &Args) -> Result<()> {
+    if let Some(old_path) = args.get("compare") {
+        let new_path = args.positional.get(1).map(|s| s.as_str()).context(
+            "bench --compare takes two artifacts: --compare old.json new.json",
+        )?;
+        for key in ["suite", "out", "seed", "reps", "warmup"] {
+            anyhow::ensure!(
+                args.get(key).is_none(),
+                "--{key} runs a new bench; --compare reads two existing artifacts"
+            );
+        }
+        let old = BenchReport::load(Path::new(old_path))?;
+        let new = BenchReport::load(Path::new(new_path))?;
+        let min_delta = args.get_f64("min-delta", harness::DEFAULT_MIN_REL_DELTA)?;
+        anyhow::ensure!(min_delta >= 0.0, "--min-delta must be >= 0");
+        let cmp = harness::compare(&old, &new, min_delta);
+        print!("{}", render_bench_compare(&cmp));
+        if cmp.has_regressions() {
+            std::process::exit(3);
+        }
+        return Ok(());
+    }
+    anyhow::ensure!(
+        args.get("min-delta").is_none(),
+        "--min-delta applies to --compare (the regression-gate floor)"
+    );
+    let suite = Suite::parse(args.get_or("suite", "quick"))?;
+    let d = RunnerOptions::default();
+    let opts = RunnerOptions {
+        warmup: args.get_usize("warmup", d.warmup)?,
+        reps: args.get_usize("reps", d.reps)?,
+        seed: args.get_usize("seed", d.seed as usize)? as u64,
+        ..d
+    };
+    anyhow::ensure!(opts.reps >= 1, "--reps must be >= 1");
+    // Seeds ride through the JSON artifact as an f64: cap them where the
+    // mantissa ends so save -> load can never round one silently (same
+    // contract as tenant seeds).
+    anyhow::ensure!(
+        opts.seed < (1u64 << 53),
+        "--seed must be below 2^53 (seeds are stored in the JSON artifact)"
+    );
+    let report = harness::run_suite(suite, &opts)?;
+    print!("{}", render_bench(&report));
+    if let Some(out) = args.get("out") {
+        report.save(Path::new(out))?;
+        println!("bench saved : {out}");
     }
     Ok(())
 }

@@ -6,6 +6,7 @@
 
 use crate::api::{ServeMode, ServeReport};
 use crate::baselines;
+use crate::harness::{BenchComparison, BenchReport, Verdict};
 use crate::tenancy::{MultiServeMode, MultiServeReport};
 use crate::cnn::layer::LayerKind;
 use crate::cnn::zoo;
@@ -159,6 +160,93 @@ pub fn render_multi_serve(r: &MultiServeReport) -> String {
             ));
         }
     }
+    s
+}
+
+/// Format a metric in its unit: throughput with two decimals, time-like
+/// micro-bench values in engineering notation.
+fn fmt_metric(x: f64, unit: &str) -> String {
+    if unit == "s" {
+        format!("{x:.3e}")
+    } else {
+        f(x, 2)
+    }
+}
+
+/// Render a [`BenchReport`] — the ONE table shape for `pipeit bench` runs
+/// and the `cargo bench` micro-benchmark targets (both emit the same
+/// artifact). Columns show the robust statistics the regression gate
+/// classifies on: median after MAD outlier rejection, and the seeded
+/// bootstrap CI of the median.
+pub fn render_bench(r: &BenchReport) -> String {
+    let mut s = format!(
+        "bench suite: {} ({} scenarios)  seed={} reps={} warmup={}\n",
+        r.suite,
+        r.scenarios.len(),
+        r.seed,
+        r.reps,
+        r.warmup
+    );
+    let mut t = Table::new(
+        "Benchmark results (median / MAD / bootstrap CI after outlier rejection)",
+        &["scenario", "mode", "backend", "unit", "n", "median", "ci95", "mad"],
+    );
+    for sc in &r.scenarios {
+        let n = if sc.stats.rejected > 0 {
+            format!("{}(-{})", sc.stats.n, sc.stats.rejected)
+        } else {
+            sc.stats.n.to_string()
+        };
+        t.row(vec![
+            sc.name.clone(),
+            sc.mode.clone(),
+            sc.backend.clone(),
+            sc.unit.clone(),
+            n,
+            fmt_metric(sc.stats.median, &sc.unit),
+            format!(
+                "[{}, {}]",
+                fmt_metric(sc.stats.ci_lo, &sc.unit),
+                fmt_metric(sc.stats.ci_hi, &sc.unit)
+            ),
+            fmt_metric(sc.stats.mad, &sc.unit),
+        ]);
+    }
+    s.push_str(&t.render());
+    s
+}
+
+/// Render a [`BenchComparison`] — the `pipeit bench --compare` output.
+/// The trailing `verdicts` line is stable and machine-greppable; CI's
+/// determinism gate asserts it reads `0 improved, 0 regressed`.
+pub fn render_bench_compare(c: &BenchComparison) -> String {
+    let mut t = Table::new(
+        "Benchmark comparison (CI-overlap classification, not point deltas)",
+        &["scenario", "backend", "old median", "new median", "delta", "verdict"],
+    );
+    for d in &c.diffs {
+        t.row(vec![
+            d.name.clone(),
+            d.backend.clone(),
+            fmt_metric(d.old_median, &d.unit),
+            fmt_metric(d.new_median, &d.unit),
+            format!("{:+.1}%", 100.0 * d.rel_delta),
+            d.verdict.to_string(),
+        ]);
+    }
+    let mut s = t.render();
+    for a in &c.added {
+        s.push_str(&format!("added      : {a} (no baseline)\n"));
+    }
+    for r in &c.removed {
+        s.push_str(&format!("removed    : {r} (not in the new run)\n"));
+    }
+    s.push_str(&format!(
+        "verdicts   : {} improved, {} regressed, {} unchanged\n",
+        c.count(Verdict::Improved),
+        c.count(Verdict::Regressed),
+        c.count(Verdict::Unchanged),
+    ));
     s
 }
 
@@ -953,6 +1041,40 @@ mod tests {
         assert!(s.contains("SLAs       : 1/1 met"), "{s}");
         assert!(s.contains("board util"), "{s}");
         assert!(s.contains("SLA p99<=10000ms: OK"), "{s}");
+    }
+
+    #[test]
+    fn render_bench_and_compare_shapes() {
+        use crate::harness::{compare, BenchReport, SampleStats, ScenarioResult};
+        let entry = |median: f64, unit: &str, higher: bool| ScenarioResult {
+            name: "pipelined/alexnet".into(),
+            mode: "pipelined".into(),
+            backend: if unit == "s" { "host" } else { "des" }.into(),
+            unit: unit.into(),
+            higher_is_better: higher,
+            samples: vec![median; 3],
+            stats: SampleStats::from_samples(&[median; 3], 3.5, 0.95, 50, 1),
+            host_s: 0.0,
+        };
+        let report = |m: f64| BenchReport {
+            suite: "quick".into(),
+            seed: 7,
+            warmup: 1,
+            reps: 3,
+            scenarios: vec![entry(m, "imgs/s", true), entry(0.00125, "s", false)],
+        };
+        let s = render_bench(&report(16.0));
+        assert!(s.contains("bench suite: quick (2 scenarios)  seed=7 reps=3 warmup=1"), "{s}");
+        assert!(s.contains("16.00"), "{s}");
+        assert!(s.contains("1.250e-3"), "time metrics use engineering notation: {s}");
+
+        let c = compare(&report(16.0), &report(14.4), 0.01);
+        let s = render_bench_compare(&c);
+        assert!(s.contains("-10.0%"), "{s}");
+        assert!(s.contains("REGRESSED"), "{s}");
+        // One regression (throughput down 10%); the time-like entry is
+        // unchanged (same samples both sides).
+        assert!(s.contains("verdicts   : 0 improved, 1 regressed, 1 unchanged"), "{s}");
     }
 
     #[test]

@@ -378,6 +378,25 @@ mod tests {
         });
     }
 
+    /// Regression (ISSUE 5 satellite): a tenant that admits nothing — the
+    /// fully-shed extreme — must produce a well-defined outcome and a
+    /// `None` latency report, not a panic or an index past the end.
+    #[test]
+    fn zero_admitted_tenant_is_well_defined() {
+        let out = simulate_tenant_fleet(&[vec![0.01, 0.02]], &[], 2, 1);
+        assert_eq!(out.offered, 0);
+        assert_eq!(out.admitted, 0);
+        assert_eq!(out.shed, 0);
+        assert_eq!(out.makespan, 0.0);
+        assert!(out.latencies.is_empty());
+        assert_eq!(out.dispatched, vec![0]);
+        assert_eq!(LatencyReport::from_latencies(&out.latencies), None);
+        assert_eq!(tenant_utilization(&out), 0.0);
+        let throughput =
+            if out.makespan > 0.0 { out.admitted as f64 / out.makespan } else { 0.0 };
+        assert_eq!(throughput, 0.0);
+    }
+
     #[test]
     fn determinism_same_seed_same_outcome() {
         let mut rng = Rng::new(9);

@@ -91,6 +91,10 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    pub fn f64_arr(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
     // ---- builders --------------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -395,5 +399,13 @@ mod tests {
         assert_eq!(v.get("f").unwrap().as_usize(), None);
         assert_eq!(v.get("neg").unwrap().as_usize(), None);
         assert_eq!(v.get("shape").unwrap().usize_arr(), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn f64_arr_accessor() {
+        let v = Json::parse(r#"{"xs": [1.5, -2, 3e2], "bad": [1, "x"]}"#).unwrap();
+        assert_eq!(v.get("xs").unwrap().f64_arr(), Some(vec![1.5, -2.0, 300.0]));
+        assert_eq!(v.get("bad").unwrap().f64_arr(), None);
+        assert_eq!(Json::parse("[]").unwrap().f64_arr(), Some(Vec::new()));
     }
 }

@@ -1,8 +1,8 @@
 //! In-tree substrates: the offline build environment vendors only the `xla`
-//! crate's dependency closure, so JSON, RNG, linear algebra, CLI parsing,
-//! the bench harness and property testing are implemented here.
+//! crate's dependency closure, so JSON, RNG, linear algebra, CLI parsing
+//! and property testing are implemented here. (Micro-benchmark timing
+//! moved into [`crate::harness`], which owns all benchmark machinery.)
 
-pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod linalg;

@@ -1,4 +1,15 @@
-//! Summary statistics and a fixed-capacity latency histogram for metrics.
+//! Summary statistics for metrics and the benchmark harness: percentiles,
+//! and the robust trio the bench runner gates regressions on — median,
+//! MAD-based outlier rejection ([`mad_filter`]), and a seeded bootstrap
+//! confidence interval of the median ([`bootstrap_ci_median`]).
+//!
+//! Every helper is total on empty and single-element inputs (no panics, no
+//! indexing past the end): empty slices yield 0.0-style neutral values and
+//! singletons yield the element itself. The latency-report builders in
+//! [`crate::api`] rely on this — a fully-shed tenant produces an empty
+//! latency set.
+
+use crate::util::rng::Rng;
 
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -18,13 +29,14 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile via linear interpolation on a sorted copy. `q` in [0, 100].
-pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+/// Percentile on an ALREADY ascending-sorted slice via linear
+/// interpolation; `q` in [0, 100]. 0.0 for empty input; the single element
+/// for singletons. Monotone in `q` by construction (the interpolant of a
+/// sorted sequence is nondecreasing), so p50 <= p95 <= p99 always holds.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.total_cmp(b));
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -34,6 +46,106 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         let frac = pos - lo as f64;
         v[lo] * (1.0 - frac) + v[hi] * frac
     }
+}
+
+/// Percentile via linear interpolation on a sorted copy. `q` in [0, 100].
+/// Use [`percentile_sorted`] to amortize the sort across several queries.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&v, q)
+}
+
+/// Median (p50). 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Median absolute deviation (raw, unscaled). 0.0 for empty input.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&dev)
+}
+
+/// Consistency factor making MAD comparable to a standard deviation under
+/// normality (1 / Phi^-1(3/4)).
+pub const MAD_NORMAL_SCALE: f64 = 1.4826;
+
+/// MAD-based outlier rejection, iterated to a fixpoint: repeatedly drop
+/// points with `|x - median| > k * 1.4826 * MAD` until a pass removes
+/// nothing. Requires `k >= 1` so every pass keeps at least the half of the
+/// sample whose deviations are at or below the MAD — the filter can never
+/// empty a non-empty sample, and the fixpoint makes it exactly idempotent
+/// (`mad_filter(&mad_filter(xs, k), k)` returns its input unchanged).
+///
+/// Samples with fewer than 3 points, or a zero MAD (majority already at
+/// the median), are returned unchanged — there is no robust scale to
+/// reject against.
+pub fn mad_filter(xs: &[f64], k: f64) -> Vec<f64> {
+    assert!(k >= 1.0, "mad_filter needs k >= 1 (got {k})");
+    let mut cur = xs.to_vec();
+    loop {
+        if cur.len() < 3 {
+            return cur;
+        }
+        let m = median(&cur);
+        let d = mad(&cur);
+        if d <= 0.0 {
+            return cur;
+        }
+        let bound = k * MAD_NORMAL_SCALE * d;
+        let next: Vec<f64> =
+            cur.iter().copied().filter(|x| (x - m).abs() <= bound).collect();
+        if next.len() == cur.len() {
+            return cur;
+        }
+        cur = next;
+    }
+}
+
+/// Seeded percentile-bootstrap confidence interval of the MEDIAN:
+/// `resamples` bootstrap resamples (drawn with the deterministic SplitMix64
+/// stream of `seed`), interval = the central `confidence` mass of the
+/// resampled medians, widened if necessary to contain the sample median
+/// (the point estimate is always inside its own interval). Returns
+/// `(0.0, 0.0)` for empty input and a degenerate `(m, m)` for singletons.
+pub fn bootstrap_ci_median(
+    xs: &[f64],
+    confidence: f64,
+    resamples: usize,
+    seed: u64,
+) -> (f64, f64) {
+    assert!(
+        confidence > 0.0 && confidence < 1.0,
+        "confidence must be in (0, 1), got {confidence}"
+    );
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = median(xs);
+    if xs.len() == 1 || resamples == 0 {
+        return (m, m);
+    }
+    let mut rng = Rng::new(seed);
+    let mut meds: Vec<f64> = (0..resamples)
+        .map(|_| {
+            let resample: Vec<f64> =
+                (0..xs.len()).map(|_| xs[rng.index(xs.len())]).collect();
+            median(&resample)
+        })
+        .collect();
+    meds.sort_by(|a, b| a.total_cmp(b));
+    let alpha = (1.0 - confidence) / 2.0;
+    let lo = percentile_sorted(&meds, 100.0 * alpha);
+    let hi = percentile_sorted(&meds, 100.0 * (1.0 - alpha));
+    (lo.min(m), hi.max(m))
 }
 
 /// Mean absolute percentage error — the paper's Table III metric.
@@ -85,8 +197,10 @@ impl Summary {
         percentile(&self.samples, 99.0)
     }
 
+    /// Largest recorded sample; 0.0 for an empty summary (a report that
+    /// never saw an item must stay printable, not `-inf`).
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        self.samples.iter().copied().fold(0.0, f64::max)
     }
 
     /// Absorb another summary's samples (fleet-level report merging: the
@@ -145,6 +259,142 @@ mod tests {
         assert_eq!(a.count(), 3);
         assert_eq!(a.max(), 10.0);
         assert_eq!(a.samples(), &[1.0, 2.0, 10.0]);
+    }
+
+    #[test]
+    fn percentile_empty_and_single_are_well_defined() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mad(&[]), 0.0);
+        assert_eq!(mad(&[3.0]), 0.0);
+        assert_eq!(bootstrap_ci_median(&[], 0.95, 100, 1), (0.0, 0.0));
+        assert_eq!(bootstrap_ci_median(&[4.0], 0.95, 100, 1), (4.0, 4.0));
+    }
+
+    #[test]
+    fn median_of_known_samples() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((median(&[1.0, 2.0, 3.0, 4.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_of_known_sample() {
+        // median 2, deviations [1, 0, 1, 2, 7] -> sorted [0,1,1,2,7], MAD 1.
+        assert_eq!(mad(&[1.0, 2.0, 3.0, 4.0, 9.0]), 1.0);
+    }
+
+    #[test]
+    fn mad_filter_drops_the_gross_outlier() {
+        let xs = [10.0, 10.1, 9.9, 10.05, 9.95, 1000.0];
+        let kept = mad_filter(&xs, 3.5);
+        assert_eq!(kept.len(), 5);
+        assert!(!kept.contains(&1000.0));
+    }
+
+    #[test]
+    fn mad_filter_keeps_constant_and_tiny_samples() {
+        assert_eq!(mad_filter(&[5.0, 5.0, 5.0, 9.0], 1.0), vec![5.0, 5.0, 5.0, 9.0]);
+        assert_eq!(mad_filter(&[1.0, 100.0], 1.0), vec![1.0, 100.0]);
+        assert_eq!(mad_filter(&[], 1.0), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn bootstrap_ci_is_deterministic_by_seed() {
+        let xs: Vec<f64> = (0..40).map(|i| (i as f64 * 0.37).sin() + 10.0).collect();
+        let a = bootstrap_ci_median(&xs, 0.95, 300, 42);
+        let b = bootstrap_ci_median(&xs, 0.95, 300, 42);
+        assert_eq!(a, b);
+        assert!(a.0 <= a.1);
+    }
+
+    /// Satellite property: percentiles are monotone in q (p50 <= p95 <= p99)
+    /// on arbitrary samples, pinned seeds via `util::proptest`.
+    #[test]
+    fn property_percentile_monotone_in_q() {
+        use crate::util::proptest::check;
+        check(200, |rng| {
+            let n = 1 + rng.index(50);
+            let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(-50.0, 50.0)).collect();
+            let p50 = percentile(&xs, 50.0);
+            let p95 = percentile(&xs, 95.0);
+            let p99 = percentile(&xs, 99.0);
+            crate::prop_assert!(
+                p50 <= p95 && p95 <= p99,
+                "percentiles not monotone: p50={p50} p95={p95} p99={p99} on {xs:?}"
+            );
+            let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+            let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            crate::prop_assert!(
+                p50 >= lo - 1e-12 && p99 <= hi + 1e-12,
+                "percentiles escape the sample range"
+            );
+            Ok(())
+        });
+    }
+
+    /// Satellite property: the bootstrap CI always contains the sample
+    /// median, at every sample size >= 1.
+    #[test]
+    fn property_bootstrap_ci_contains_sample_median() {
+        use crate::util::proptest::check;
+        check(150, |rng| {
+            let n = 1 + rng.index(30);
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.normal_with(5.0, 2.0)).collect();
+            let m = median(&xs);
+            let (lo, hi) = bootstrap_ci_median(&xs, 0.95, 120, rng.next_u64());
+            crate::prop_assert!(
+                lo <= m && m <= hi,
+                "CI [{lo}, {hi}] misses the sample median {m} (n={n})"
+            );
+            Ok(())
+        });
+    }
+
+    /// Satellite property: MAD outlier rejection is idempotent and never
+    /// empties a non-empty sample.
+    #[test]
+    fn property_mad_filter_idempotent_never_empty() {
+        use crate::util::proptest::check;
+        check(150, |rng| {
+            let n = 1 + rng.index(40);
+            let mut xs: Vec<f64> =
+                (0..n).map(|_| rng.normal_with(20.0, 1.0)).collect();
+            // Mix in occasional gross outliers.
+            for _ in 0..rng.index(4) {
+                xs.push(rng.range_f64(-500.0, 500.0));
+            }
+            let k = 1.0 + rng.range_f64(0.0, 4.0);
+            let once = mad_filter(&xs, k);
+            crate::prop_assert!(
+                !once.is_empty(),
+                "filter emptied a {}-point sample (k={k})",
+                xs.len()
+            );
+            crate::prop_assert!(
+                once.len() <= xs.len(),
+                "filter grew the sample"
+            );
+            let twice = mad_filter(&once, k);
+            crate::prop_assert!(
+                once == twice,
+                "filter not idempotent: {once:?} vs {twice:?} (k={k})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_summary_is_well_defined() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.max(), 0.0, "empty summary must not report -inf");
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Acceptance suite for the benchmark harness (ISSUE 5): the quick suite
+//! is deterministic (two same-seed runs compare as all-unchanged), covers
+//! >= 8 scenarios across >= 4 serving modes, the artifact round-trips, and
+//! `--compare` flags an artificially injected 10% slowdown as a regression
+//! while passing the no-change case — including the CLI exit codes.
+
+use std::path::Path;
+use std::process::Command;
+
+use pipeit::harness::{
+    compare, run_suite, BenchReport, RunnerOptions, SampleStats, Suite, Verdict,
+    DEFAULT_MIN_REL_DELTA,
+};
+
+fn quick_opts() -> RunnerOptions {
+    RunnerOptions { reps: 2, warmup: 0, seed: 7, ..Default::default() }
+}
+
+/// Scale one scenario's metric by `factor`, recomputing its stats from the
+/// scaled samples — the "artificially injected slowdown" of the acceptance
+/// criterion.
+fn inject(report: &BenchReport, key: &str, factor: f64) -> BenchReport {
+    let mut out = report.clone();
+    let entry = out
+        .scenarios
+        .iter_mut()
+        .find(|s| s.key() == key)
+        .unwrap_or_else(|| panic!("scenario {key} not in the report"));
+    for x in &mut entry.samples {
+        *x *= factor;
+    }
+    entry.stats = SampleStats::from_samples(&entry.samples, 3.5, 0.95, 200, 7);
+    out
+}
+
+#[test]
+fn quick_suite_is_deterministic_and_covers_the_floor() {
+    let a = run_suite(Suite::Quick, &quick_opts()).expect("first run");
+    let b = run_suite(Suite::Quick, &quick_opts()).expect("second run");
+
+    // Acceptance floor: >= 8 scenarios across >= 4 serving modes.
+    assert!(a.scenarios.len() >= 8, "only {} scenarios", a.scenarios.len());
+    assert!(a.modes().len() >= 4, "only modes {:?}", a.modes());
+    for s in &a.scenarios {
+        assert!(s.stats.median > 0.0, "{}: zero metric", s.key());
+        assert!(
+            s.stats.ci_lo <= s.stats.median && s.stats.median <= s.stats.ci_hi,
+            "{}: CI does not bracket the median",
+            s.key()
+        );
+    }
+
+    // Determinism: bit-identical samples and stats, all-unchanged compare.
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.samples, y.samples, "{}: samples differ across runs", x.key());
+        assert_eq!(x.stats, y.stats, "{}: stats differ across runs", x.key());
+    }
+    let cmp = compare(&a, &b, DEFAULT_MIN_REL_DELTA);
+    assert!(!cmp.has_regressions());
+    assert_eq!(cmp.count(Verdict::Unchanged), a.scenarios.len());
+    assert_eq!(cmp.count(Verdict::Improved), 0);
+}
+
+#[test]
+fn injected_slowdown_is_flagged_and_isolated() {
+    let base = run_suite(Suite::Quick, &quick_opts()).expect("bench run");
+    let key = base.scenarios[0].key();
+    let slowed = inject(&base, &key, 0.9);
+    let cmp = compare(&base, &slowed, DEFAULT_MIN_REL_DELTA);
+    assert!(cmp.has_regressions(), "10% slowdown must gate");
+    assert_eq!(cmp.count(Verdict::Regressed), 1, "only the injected scenario");
+    let diff = cmp.diffs.iter().find(|d| d.verdict == Verdict::Regressed).unwrap();
+    assert_eq!(format!("{}/{}", diff.backend, diff.name), key);
+    assert!(
+        (diff.rel_delta + 0.1).abs() < 1e-9,
+        "delta should be -10%, got {}",
+        diff.rel_delta
+    );
+}
+
+#[test]
+fn bench_report_roundtrips_through_the_artifact_file() {
+    let report = run_suite(Suite::Quick, &quick_opts()).expect("bench run");
+    let path = std::env::temp_dir().join("pipeit_bench_roundtrip_test.json");
+    report.save(&path).expect("artifact written");
+    let loaded = BenchReport::load(&path).expect("artifact reloads");
+    assert_eq!(report, loaded, "BENCH artifact must round-trip losslessly");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---- CLI end-to-end (the acceptance criterion verbatim) -----------------
+
+fn pipeit(args: &[&str]) -> (std::process::ExitStatus, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pipeit"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status, text)
+}
+
+#[test]
+fn cli_bench_twice_same_seed_compares_all_unchanged_and_gates_a_slowdown() {
+    let dir = std::env::temp_dir();
+    let f1 = dir.join("pipeit_BENCH_cli_a.json");
+    let f2 = dir.join("pipeit_BENCH_cli_b.json");
+    let f3 = dir.join("pipeit_BENCH_cli_slow.json");
+    let (f1s, f2s, f3s) =
+        (f1.to_str().unwrap(), f2.to_str().unwrap(), f3.to_str().unwrap());
+
+    // Two same-seed quick runs (reps trimmed to keep the test fast).
+    for out in [f1s, f2s] {
+        let (status, text) = pipeit(&[
+            "bench", "--suite", "quick", "--seed", "7", "--reps", "2", "--warmup",
+            "0", "--out", out,
+        ]);
+        assert!(status.success(), "{text}");
+        assert!(text.contains("bench suite: quick"), "{text}");
+        assert!(text.contains("bench saved"), "{text}");
+    }
+
+    // Determinism gate: all-unchanged, exit 0.
+    let (status, text) = pipeit(&["bench", "--compare", f1s, f2s]);
+    assert!(status.success(), "no-change compare must exit 0:\n{text}");
+    assert!(text.contains("0 improved, 0 regressed"), "{text}");
+
+    // Inject a 10% slowdown into one scenario and re-compare: REGRESSED,
+    // non-zero exit.
+    let base = BenchReport::load(Path::new(f1s)).expect("artifact reloads");
+    let slowed = inject(&base, &base.scenarios[0].key(), 0.9);
+    slowed.save(&f3).expect("tampered artifact written");
+    let (status, text) = pipeit(&["bench", "--compare", f1s, f3s]);
+    assert!(!status.success(), "regression must exit non-zero:\n{text}");
+    assert!(text.contains("REGRESSED"), "{text}");
+    assert!(text.contains("1 regressed"), "{text}");
+
+    for f in [&f1, &f2, &f3] {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+#[test]
+fn cli_bench_rejects_bad_inputs() {
+    let (status, text) = pipeit(&["bench", "--suite", "nightly"]);
+    assert!(!status.success());
+    assert!(text.contains("unknown suite"), "{text}");
+
+    // Seeds ride through the f64-backed JSON artifact: 2^53 and above
+    // would round silently, so the CLI rejects them up front.
+    let (status, text) = pipeit(&["bench", "--seed", "9007199254740993"]);
+    assert!(!status.success());
+    assert!(text.contains("2^53"), "{text}");
+
+    // Run-only and compare-only knobs must not be silently dropped.
+    let (status, text) = pipeit(&["bench", "--suite", "quick", "--min-delta", "0.05"]);
+    assert!(!status.success());
+    assert!(text.contains("--min-delta"), "{text}");
+    let (status, text) =
+        pipeit(&["bench", "--compare", "a.json", "b.json", "--reps", "9"]);
+    assert!(!status.success());
+    assert!(text.contains("--reps"), "{text}");
+
+    let (status, text) = pipeit(&["bench", "--compare", "/nonexistent/a.json"]);
+    assert!(!status.success());
+    assert!(text.contains("two artifacts"), "{text}");
+
+    let (status, text) =
+        pipeit(&["bench", "--compare", "/nonexistent/a.json", "/nonexistent/b.json"]);
+    assert!(!status.success());
+    assert!(text.contains("a.json"), "{text}");
+}

@@ -1,0 +1,86 @@
+//! Differential DES / wall-clock conformance suite (ISSUE 5 satellite):
+//! for EVERY scenario in the harness registry, the discrete-event twin and
+//! the wall-clock (simulated-time thread executor) twin must agree on the
+//! throughput metric within the scenario's declared tolerance, and neither
+//! may exceed the design's Eq. 12 capacity. This is the standing oracle
+//! that keeps the twins honest as the codebase keeps being refactored: a
+//! change that drifts one executor away from the other fails here, not in
+//! a paper table three PRs later.
+
+use pipeit::harness::{registry, Backend};
+
+/// Headroom over the Eq. 12 bound: the metric is measured over a finite
+/// stream (fill/drain transients only LOWER it), so anything beyond a few
+/// percent above capacity is a conservation bug, not noise.
+const CAPACITY_HEADROOM: f64 = 1.05;
+
+#[test]
+fn every_scenario_des_and_wall_twins_agree_within_declared_tolerance() {
+    let mut failures = Vec::new();
+    for s in registry() {
+        let des = s
+            .run(Backend::Des, 7)
+            .unwrap_or_else(|e| panic!("{}: DES run failed: {e:#}", s.name));
+        let wall = s
+            .run(Backend::Wall, 7)
+            .unwrap_or_else(|e| panic!("{}: wall run failed: {e:#}", s.name));
+        assert!(des > 0.0, "{}: DES metric must be positive", s.name);
+        assert!(wall > 0.0, "{}: wall metric must be positive", s.name);
+        let rel = (wall - des).abs() / des;
+        if rel > s.tolerance {
+            failures.push(format!(
+                "{}: DES {des:.2} vs wall {wall:.2} imgs/s (rel {rel:.3} > tolerance {})",
+                s.name, s.tolerance
+            ));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "twins disagree beyond declared tolerances:\n{}",
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn every_scenario_respects_eq12_capacity_on_both_twins() {
+    for s in registry() {
+        let cap = s
+            .capacity()
+            .unwrap_or_else(|e| panic!("{}: capacity failed: {e:#}", s.name));
+        assert!(cap > 0.0, "{}: capacity must be positive", s.name);
+        let des = s.run(Backend::Des, 7).expect("DES run");
+        assert!(
+            des <= cap * CAPACITY_HEADROOM,
+            "{}: DES {des:.2} imgs/s exceeds Eq. 12 capacity {cap:.2}",
+            s.name
+        );
+        let wall = s.run(Backend::Wall, 7).expect("wall run");
+        assert!(
+            wall <= cap * CAPACITY_HEADROOM,
+            "{}: wall {wall:.2} imgs/s exceeds Eq. 12 capacity {cap:.2}",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn registry_spans_the_required_modes_and_is_twin_complete() {
+    let reg = registry();
+    assert!(reg.len() >= 8, "registry shrank to {} scenarios", reg.len());
+    let mut modes: Vec<&str> = reg.iter().map(|s| s.mode).collect();
+    modes.sort_unstable();
+    modes.dedup();
+    for required in ["serial", "pipelined", "replicated", "adaptive", "multi-tenant"] {
+        assert!(modes.contains(&required), "mode {required:?} missing from {modes:?}");
+    }
+    // Twin-complete: every scenario declares a finite positive tolerance —
+    // the contract the differential assertions above enforce.
+    for s in &reg {
+        assert!(
+            s.tolerance > 0.0 && s.tolerance < 1.0,
+            "{}: tolerance {} is not a usable bound",
+            s.name,
+            s.tolerance
+        );
+    }
+}

@@ -1,0 +1,239 @@
+//! Golden snapshot tests for report rendering (ISSUE 5 satellite):
+//! `render_serve`, `render_multi_serve`, `render_bench` and
+//! `render_bench_compare` are compared against checked-in fixtures under
+//! `tests/golden/`, so any table-format drift is a reviewed diff instead
+//! of silent churn. Regenerate intentionally with
+//! `UPDATE_GOLDEN=1 cargo test --test render_golden`.
+//!
+//! Inputs are hand-built literals (no searches, no RNG beyond degenerate
+//! bootstrap inputs), so the rendered bytes depend only on the format
+//! strings under test.
+
+use std::path::PathBuf;
+
+use pipeit::api::{
+    AdaptationEvent, LatencyReport, ReplicaReport, ServeMode, ServeReport, StageReport,
+};
+use pipeit::harness::{
+    BenchComparison, BenchReport, SampleStats, ScenarioDiff, ScenarioResult, Verdict,
+};
+use pipeit::reports::{
+    render_bench, render_bench_compare, render_multi_serve, render_serve,
+};
+use pipeit::tenancy::{MultiServeMode, MultiServeReport, TenantReport};
+
+fn assert_golden(name: &str, actual: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join(name);
+    if std::env::var_os("UPDATE_GOLDEN").is_some() {
+        std::fs::write(&path, actual).expect("golden fixture written");
+        return;
+    }
+    let expected = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {name}: {e}"));
+    assert_eq!(
+        expected, actual,
+        "rendered output drifted from tests/golden/{name}; if the change is \
+         intentional, regenerate with UPDATE_GOLDEN=1 and review the diff"
+    );
+}
+
+#[test]
+fn render_serve_matches_golden() {
+    let report = ServeReport {
+        mode: ServeMode::Des,
+        network: "alexnet".into(),
+        images: 200,
+        wall_s: 12.5,
+        throughput: 16.0,
+        predicted_throughput: 16.4,
+        latency: Some(LatencyReport { p50: 0.12, p95: 0.15, p99: 0.18 }),
+        replicas: vec![ReplicaReport {
+            pipeline: "B4-s4".into(),
+            allocation: "[1,9] - [10,11]".into(),
+            dispatched: 200,
+            throughput: 16.0,
+            utilization: 0.8,
+            bottleneck: Some(0),
+            stages: vec![
+                StageReport {
+                    name: "stage0".into(),
+                    items: 200,
+                    busy_s: 10.0,
+                    utilization: 0.8,
+                },
+                StageReport {
+                    name: "stage1".into(),
+                    items: 200,
+                    busy_s: 5.0,
+                    utilization: 0.4,
+                },
+            ],
+        }],
+        adaptations: vec![AdaptationEvent {
+            at_s: 3.25,
+            after_images: 80,
+            disturbance: "big-cluster slowdown x2.00".into(),
+            from: "B4-s4".into(),
+            to: "B2-s4".into(),
+            predicted_throughput: 12.5,
+        }],
+    };
+    assert_golden("render_serve.txt", &render_serve(&report));
+}
+
+#[test]
+fn render_multi_serve_matches_golden() {
+    let report = MultiServeReport {
+        mode: MultiServeMode::Des,
+        wall_s: 10.0,
+        images: 298,
+        shed: 202,
+        weighted_throughput: 29.6,
+        board_utilization: 0.83,
+        tenants: vec![
+            TenantReport {
+                name: "alexnet".into(),
+                network: "alexnet".into(),
+                budget: "3B+1s".into(),
+                pipeline: "B2-s1 | B1".into(),
+                rate_hz: 30.0,
+                weight: 1.0,
+                offered: 300,
+                admitted: 298,
+                shed: 2,
+                throughput: 29.6,
+                capacity: 41.0,
+                latency: Some(LatencyReport { p50: 0.02, p95: 0.04, p99: 0.05 }),
+                p99_sla_s: Some(0.08),
+                sla_ok: Some(true),
+                utilization: 0.71,
+            },
+            // The fully-shed extreme: zero admitted, no latency evidence.
+            TenantReport {
+                name: "squeezenet".into(),
+                network: "squeezenet".into(),
+                budget: "1B+3s".into(),
+                pipeline: "s3".into(),
+                rate_hz: 60.0,
+                weight: 2.0,
+                offered: 200,
+                admitted: 0,
+                shed: 200,
+                throughput: 0.0,
+                capacity: 18.75,
+                latency: None,
+                p99_sla_s: None,
+                sla_ok: None,
+                utilization: 0.0,
+            },
+        ],
+    };
+    assert_golden("render_multi_serve.txt", &render_multi_serve(&report));
+}
+
+fn bench_fixture() -> BenchReport {
+    BenchReport {
+        suite: "quick".into(),
+        seed: 7,
+        warmup: 1,
+        reps: 5,
+        scenarios: vec![
+            ScenarioResult {
+                name: "pipelined/alexnet".into(),
+                mode: "pipelined".into(),
+                backend: "des".into(),
+                unit: "imgs/s".into(),
+                higher_is_better: true,
+                samples: vec![16.0; 4],
+                stats: SampleStats {
+                    n: 4,
+                    rejected: 0,
+                    median: 16.0,
+                    mean: 16.0,
+                    mad: 0.0,
+                    ci_lo: 16.0,
+                    ci_hi: 16.0,
+                },
+                host_s: 0.2,
+            },
+            ScenarioResult {
+                name: "multi/alexnet30+squeezenet60".into(),
+                mode: "multi-tenant".into(),
+                backend: "wall".into(),
+                unit: "imgs/s".into(),
+                higher_is_better: true,
+                // 6 raw samples; MAD rejection drops the 99.0 outlier, so
+                // n=5(-1), median 12.34 and MAD 0.16 are the true stats of
+                // the kept subset (the snapshot is a reachable state).
+                samples: vec![12.1, 12.34, 12.6, 12.5, 12.2, 99.0],
+                stats: SampleStats {
+                    n: 5,
+                    rejected: 1,
+                    median: 12.34,
+                    mean: 12.348,
+                    mad: 0.16,
+                    ci_lo: 12.1,
+                    ci_hi: 12.6,
+                },
+                host_s: 1.5,
+            },
+            ScenarioResult {
+                name: "explore_64_pipelines_alexnet".into(),
+                mode: "micro".into(),
+                backend: "host".into(),
+                unit: "s".into(),
+                higher_is_better: false,
+                samples: Vec::new(),
+                stats: SampleStats {
+                    n: 200,
+                    rejected: 3,
+                    median: 0.00125,
+                    mean: 0.0013,
+                    mad: 0.00005,
+                    ci_lo: 0.0012,
+                    ci_hi: 0.0013,
+                },
+                host_s: 0.7,
+            },
+        ],
+    }
+}
+
+#[test]
+fn render_bench_matches_golden() {
+    assert_golden("render_bench.txt", &render_bench(&bench_fixture()));
+}
+
+#[test]
+fn render_bench_compare_matches_golden() {
+    let cmp = BenchComparison {
+        diffs: vec![
+            ScenarioDiff {
+                name: "pipelined/alexnet".into(),
+                mode: "pipelined".into(),
+                backend: "des".into(),
+                unit: "imgs/s".into(),
+                old_median: 16.0,
+                new_median: 14.4,
+                rel_delta: -0.1,
+                verdict: Verdict::Regressed,
+            },
+            ScenarioDiff {
+                name: "multi/alexnet30+squeezenet60".into(),
+                mode: "multi-tenant".into(),
+                backend: "wall".into(),
+                unit: "imgs/s".into(),
+                old_median: 12.34,
+                new_median: 12.34,
+                rel_delta: 0.0,
+                verdict: Verdict::Unchanged,
+            },
+        ],
+        added: vec!["des/replicated/squeezenet".into()],
+        removed: vec!["host/explore_64_pipelines_alexnet".into()],
+    };
+    assert_golden("render_bench_compare.txt", &render_bench_compare(&cmp));
+}
