@@ -1,0 +1,576 @@
+//! Deterministic DES co-simulation of a whole cluster: seeded per-board
+//! arrival streams merged at the front door, routed by a
+//! [`Router`](super::router::Router) over per-board bounded admission
+//! queues, each board running the exact blocking tandem-queue recurrence of
+//! [`crate::tenancy::simulate_tenant_fleet`].
+//!
+//! The per-board engine is re-implemented in *streaming* form — bounded
+//! departure rings plus admission/completion heaps instead of full
+//! per-item history — so state is O(boards · stages · queue_cap) and a run
+//! costs O(arrivals · log) time. That is what makes ≥1M-arrival cluster
+//! runs practical where the tenancy reference engine's O(n²) front-door
+//! scan is not; a unit test pins the two engines to bit-identical results
+//! on a single board.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use anyhow::Result;
+
+use crate::api::LatencyReport;
+use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
+
+use super::plan::ClusterPlan;
+use super::report::{
+    BoardServeReport, ClusterServeMode, ClusterServeOptions, ClusterServeReport,
+};
+use super::router::{DispatchPolicy, Router};
+
+/// Total-order f64 wrapper so event times can live in a [`BinaryHeap`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct F(f64);
+
+impl Eq for F {}
+
+impl PartialOrd for F {
+    fn partial_cmp(&self, other: &F) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F {
+    fn cmp(&self, other: &F) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// A min-heap of event times: push instants, then discard everything at or
+/// before "now" — the live count is what remains.
+#[derive(Debug, Default)]
+struct EventHeap(BinaryHeap<Reverse<F>>);
+
+impl EventHeap {
+    fn push(&mut self, t: f64) {
+        self.0.push(Reverse(F(t)));
+    }
+
+    /// Drop every event at or before `now`, then return the live count.
+    fn live_after(&mut self, now: f64) -> usize {
+        while let Some(&Reverse(F(t))) = self.0.peek() {
+            if t <= now {
+                self.0.pop();
+            } else {
+                break;
+            }
+        }
+        self.0.len()
+    }
+}
+
+/// One replica's tail of departure history: per stage, the last
+/// `queue_cap + 1` departure times — exactly the window the blocking
+/// recurrence reads (`dep[s][k-1]` at the back, `dep[s+1][k-queue_cap-1]`
+/// at the front once the ring is full).
+#[derive(Debug)]
+struct ReplicaState {
+    dep: Vec<VecDeque<f64>>,
+    /// Items dispatched to this replica so far (the recurrence's `k`).
+    count: usize,
+}
+
+/// One (board, workload) fleet: its replicas plus the fleet's bounded
+/// front-door admission queue (stage-0 start times of admitted items).
+#[derive(Debug)]
+struct FleetState {
+    replicas: Vec<ReplicaState>,
+    waiting: EventHeap,
+}
+
+/// What one board did during a cluster DES run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardSimOutcome {
+    /// Arrivals whose first-choice board was this one.
+    pub offered: usize,
+    /// Items served here (first-choice or fallback admissions).
+    pub admitted: usize,
+    /// Sheds charged here (first choice here, every up board full).
+    pub shed: usize,
+    /// Last departure on this board (0.0 when idle all run).
+    pub makespan: f64,
+    /// Per-admitted-item end-to-end latency, in admission order.
+    pub latencies: Vec<f64>,
+    /// Items dispatched to each `[fleet][replica]`.
+    pub dispatched: Vec<Vec<usize>>,
+}
+
+/// Run the cluster DES over an explicit merged arrival schedule.
+///
+/// * `board_fleets[b][f][r]` — board `b`, workload-fleet `f`, replica `r`'s
+///   per-stage service times (what [`ClusterPlan`]'s `fleet_stage_times`
+///   yields; every board must carry the same number of fleets).
+/// * `weights[b]` — board capacities (router drain denominators / p2c
+///   sampling weights).
+/// * `up[b]` — boards in rotation; down boards never receive work.
+/// * `arrivals` — the merged schedule: `(time, workload)` pairs in
+///   non-decreasing time order.
+/// * `run_seed` — the run seed; only the router's p2c sampling stream draws
+///   from it (XOR [`super::router::DISPATCH_SALT`]).
+///
+/// Admission walks the router's preference order and admits at the first
+/// board whose fleet-`t` admission queue has space; an arrival is shed only
+/// when every up board is full, and the shed is charged to the first-choice
+/// board. Exposed (not just an internal of [`simulate_cluster`]) so tests
+/// can drive synthetic service-time matrices directly.
+pub fn simulate_cluster_streams(
+    board_fleets: &[Vec<Vec<Vec<f64>>>],
+    weights: &[f64],
+    up: &[bool],
+    arrivals: &[(f64, usize)],
+    policy: DispatchPolicy,
+    queue_cap: usize,
+    admission_cap: usize,
+    run_seed: u64,
+) -> Result<Vec<BoardSimOutcome>> {
+    let n = board_fleets.len();
+    anyhow::ensure!(n >= 1, "cluster DES needs at least one board");
+    anyhow::ensure!(weights.len() == n && up.len() == n, "board vectors disagree on length");
+    anyhow::ensure!(up.iter().any(|&u| u), "cluster DES needs at least one board up");
+    anyhow::ensure!(queue_cap >= 1, "queue_cap must be >= 1");
+    anyhow::ensure!(admission_cap >= 1, "admission_cap must be >= 1");
+    let fleets = board_fleets[0].len();
+    for (b, bf) in board_fleets.iter().enumerate() {
+        anyhow::ensure!(
+            bf.len() == fleets,
+            "board {b} has {} fleets, board 0 has {fleets}",
+            bf.len()
+        );
+        for (f, reps) in bf.iter().enumerate() {
+            anyhow::ensure!(!reps.is_empty(), "board {b} fleet {f} has no replicas");
+            anyhow::ensure!(
+                reps.iter().all(|t| !t.is_empty()),
+                "board {b} fleet {f} has an empty stage-time vector"
+            );
+        }
+    }
+
+    let mut router = Router::new(policy, weights.to_vec(), run_seed)?;
+    let mut boards: Vec<Vec<FleetState>> = board_fleets
+        .iter()
+        .map(|bf| {
+            bf.iter()
+                .map(|reps| FleetState {
+                    replicas: reps
+                        .iter()
+                        .map(|t| ReplicaState {
+                            dep: vec![VecDeque::with_capacity(queue_cap + 1); t.len()],
+                            count: 0,
+                        })
+                        .collect(),
+                    waiting: EventHeap::default(),
+                })
+                .collect()
+        })
+        .collect();
+    let mut completions: Vec<EventHeap> = (0..n).map(|_| EventHeap::default()).collect();
+    let mut out: Vec<BoardSimOutcome> = board_fleets
+        .iter()
+        .map(|bf| BoardSimOutcome {
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            makespan: 0.0,
+            latencies: Vec::new(),
+            dispatched: bf.iter().map(|reps| vec![0usize; reps.len()]).collect(),
+        })
+        .collect();
+    let mut outstanding = vec![0.0f64; n];
+
+    for &(a, t) in arrivals {
+        anyhow::ensure!(t < fleets, "arrival for workload {t}, cluster has {fleets}");
+        for (b, heap) in completions.iter_mut().enumerate() {
+            outstanding[b] = heap.live_after(a) as f64;
+        }
+        let prefs = router.preference(&outstanding, up);
+        let first = prefs[0];
+        out[first].offered += 1;
+
+        let admit = prefs
+            .iter()
+            .copied()
+            .find(|&b| boards[b][t].waiting.live_after(a) < admission_cap);
+        let Some(b) = admit else {
+            out[first].shed += 1;
+            continue;
+        };
+
+        // Join-earliest-start dispatch within the chosen fleet, then the
+        // exact blocking recurrence of `simulate_tenant_fleet` over the
+        // bounded departure rings.
+        let fleet = &mut boards[b][t];
+        let q = (0..fleet.replicas.len())
+            .min_by(|&x, &y| {
+                let ex = fleet.replicas[x].dep[0].back().copied().unwrap_or(0.0).max(a);
+                let ey = fleet.replicas[y].dep[0].back().copied().unwrap_or(0.0).max(a);
+                ex.total_cmp(&ey)
+            })
+            .expect("nonempty fleet");
+        let times = &board_fleets[b][t][q];
+        let p = times.len();
+        let rep = &mut fleet.replicas[q];
+        let k = rep.count;
+        let mut prev_stage_dep = 0.0;
+        for s in 0..p {
+            let prev_same = rep.dep[s].back().copied().unwrap_or(0.0);
+            let arrive =
+                if s == 0 { a.max(prev_same) } else { prev_stage_dep.max(prev_same) };
+            let unblock = if s + 1 < p && rep.dep[s + 1].len() == queue_cap + 1 {
+                *rep.dep[s + 1].front().expect("full ring")
+            } else {
+                0.0
+            };
+            let start = arrive.max(unblock);
+            if s == 0 {
+                fleet.waiting.push(start);
+            }
+            prev_stage_dep = start + times[s];
+            if rep.dep[s].len() == queue_cap + 1 {
+                rep.dep[s].pop_front();
+            }
+            rep.dep[s].push_back(prev_stage_dep);
+        }
+        rep.count = k + 1;
+        out[b].dispatched[t][q] += 1;
+        out[b].admitted += 1;
+        out[b].latencies.push(prev_stage_dep - a);
+        out[b].makespan = out[b].makespan.max(prev_stage_dep);
+        completions[b].push(prev_stage_dep);
+    }
+
+    debug_assert_eq!(
+        out.iter().map(|o| o.admitted + o.shed).sum::<usize>(),
+        arrivals.len(),
+        "cluster DES lost items"
+    );
+    Ok(out)
+}
+
+/// Integer apportionment by largest remainder: split `total` across
+/// `shares` (summing to ~1) so the parts sum to exactly `total`.
+fn apportion(total: usize, shares: &[f64]) -> Vec<usize> {
+    let mut parts: Vec<usize> = shares.iter().map(|s| (total as f64 * s) as usize).collect();
+    let mut order: Vec<usize> = (0..shares.len()).collect();
+    order.sort_by(|&x, &y| {
+        let fx = total as f64 * shares[x] - parts[x] as f64;
+        let fy = total as f64 * shares[y] - parts[y] as f64;
+        fy.total_cmp(&fx).then(x.cmp(&y))
+    });
+    let assigned: usize = parts.iter().sum();
+    for &i in order.iter().take(total.saturating_sub(assigned)) {
+        parts[i] += 1;
+    }
+    parts
+}
+
+/// The cluster's merged front-door schedule: per workload, one seeded
+/// Poisson component stream per board at `rate · share_b` (their
+/// superposition is again Poisson at the full rate), merged and sorted.
+/// Board `b`'s components draw from `board_seed(b) + t` — the same
+/// distinct-stream scheme as tenant seeds. Disabled boards still
+/// contribute their components: taking a board out of rotation must not
+/// change the offered traffic.
+pub fn cluster_arrivals(cp: &ClusterPlan, opts: &ClusterServeOptions) -> Vec<(f64, usize)> {
+    let shares: Vec<f64> = cp.boards.iter().map(|b| b.rate_share).collect();
+    let mut merged: Vec<(f64, usize)> = Vec::with_capacity(opts.images * cp.workloads.len());
+    for (t, w) in cp.workloads.iter().enumerate() {
+        let counts = apportion(opts.images, &shares);
+        for (b, (entry, &count)) in cp.boards.iter().zip(&counts).enumerate() {
+            if count == 0 {
+                continue;
+            }
+            let rate = w.rate_hz * shares[b];
+            let stream = if opts.uniform_arrivals {
+                uniform_arrivals(rate, count)
+            } else {
+                let seed = opts.board_seed(entry.seed, b).wrapping_add(t as u64);
+                poisson_arrivals(rate, count, seed)
+            };
+            merged.extend(stream.into_iter().map(|a| (a, t)));
+        }
+    }
+    merged.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+    merged
+}
+
+/// DES-serve a [`ClusterPlan`]: generate the merged seeded schedule, run
+/// the streaming engine, and assemble the unified [`ClusterServeReport`].
+pub fn simulate_cluster(
+    cp: &ClusterPlan,
+    opts: &ClusterServeOptions,
+) -> Result<ClusterServeReport> {
+    anyhow::ensure!(opts.images >= 1, "need at least one image per workload");
+    for d in &opts.disabled {
+        anyhow::ensure!(
+            cp.boards.iter().any(|b| &b.name == d),
+            "cannot disable unknown board {d:?}"
+        );
+    }
+    let up: Vec<bool> =
+        cp.boards.iter().map(|b| !opts.disabled.contains(&b.name)).collect();
+    anyhow::ensure!(up.iter().any(|&u| u), "every board is disabled");
+
+    let board_fleets: Vec<Vec<Vec<Vec<f64>>>> =
+        cp.boards.iter().map(|b| b.plan.fleet_stage_times()).collect();
+    let weights: Vec<f64> = cp.boards.iter().map(|b| b.plan.capacity()).collect();
+    let arrivals = cluster_arrivals(cp, opts);
+    let outcomes = simulate_cluster_streams(
+        &board_fleets,
+        &weights,
+        &up,
+        &arrivals,
+        opts.policy,
+        opts.queue_cap,
+        opts.admission_cap,
+        opts.seed,
+    )?;
+
+    let stats = outcomes
+        .into_iter()
+        .zip(&board_fleets)
+        .map(|(o, fleets)| {
+            // Busiest stage's busy fraction over this board's horizon: each
+            // stage's busy time is its dispatch count times its Eq. 10
+            // service time.
+            let utilization = if o.makespan > 0.0 {
+                fleets
+                    .iter()
+                    .zip(&o.dispatched)
+                    .flat_map(|(reps, counts)| {
+                        reps.iter().zip(counts).flat_map(|(times, &count)| {
+                            times.iter().map(move |t| t * count as f64 / o.makespan)
+                        })
+                    })
+                    .fold(0.0, f64::max)
+            } else {
+                0.0
+            };
+            BoardStats {
+                offered: o.offered,
+                admitted: o.admitted,
+                shed: o.shed,
+                makespan: o.makespan,
+                latencies: o.latencies,
+                utilization,
+            }
+        })
+        .collect();
+    Ok(assemble_report(cp, &up, stats, ClusterServeMode::Des, opts.policy))
+}
+
+/// Backend-neutral per-board tallies, all in *model* seconds (the wall
+/// twin normalizes by `time_scale` before assembly).
+pub(crate) struct BoardStats {
+    pub offered: usize,
+    pub admitted: usize,
+    pub shed: usize,
+    pub makespan: f64,
+    pub latencies: Vec<f64>,
+    pub utilization: f64,
+}
+
+/// Shared report assembly for both execution twins: merge per-board
+/// tallies over the cluster horizon into one [`ClusterServeReport`].
+pub(crate) fn assemble_report(
+    cp: &ClusterPlan,
+    up: &[bool],
+    stats: Vec<BoardStats>,
+    mode: ClusterServeMode,
+    policy: DispatchPolicy,
+) -> ClusterServeReport {
+    let wall_s = stats.iter().map(|o| o.makespan).fold(0.0, f64::max);
+    let rate = |count: usize| if wall_s > 0.0 { count as f64 / wall_s } else { 0.0 };
+    let mut all_latencies = Vec::new();
+    let boards: Vec<BoardServeReport> = cp
+        .boards
+        .iter()
+        .zip(up)
+        .zip(stats)
+        .map(|((entry, &up), o)| {
+            all_latencies.extend_from_slice(&o.latencies);
+            BoardServeReport {
+                name: entry.name.clone(),
+                platform: entry.plan.platform().to_string(),
+                budget: entry.plan.budget_display(),
+                pipeline: entry.plan.partition_display(),
+                capacity: entry.plan.capacity(),
+                rate_share: entry.rate_share,
+                up,
+                offered: o.offered,
+                admitted: o.admitted,
+                shed: o.shed,
+                throughput: rate(o.admitted),
+                latency: LatencyReport::from_latencies(&o.latencies),
+                utilization: o.utilization,
+            }
+        })
+        .collect();
+
+    let images: usize = boards.iter().map(|b| b.admitted).sum();
+    let shed: usize = boards.iter().map(|b| b.shed).sum();
+    ClusterServeReport {
+        mode,
+        policy,
+        wall_s,
+        images,
+        shed,
+        throughput: rate(images),
+        capacity: cp.capacity(),
+        latency: LatencyReport::from_latencies(&all_latencies),
+        boards,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tenancy::simulate_tenant_fleet;
+
+    /// One board, one fleet: `[replica][stage]` times.
+    fn single_board(reps: Vec<Vec<f64>>) -> Vec<Vec<Vec<Vec<f64>>>> {
+        vec![vec![reps]]
+    }
+
+    #[test]
+    fn single_board_matches_the_tenancy_reference_engine_bit_for_bit() {
+        // A loaded two-replica fleet with unequal stages, arrivals fast
+        // enough to exercise blocking, waiting, and shedding.
+        let reps = vec![vec![0.03, 0.01], vec![0.05]];
+        let arrivals: Vec<f64> = poisson_arrivals(60.0, 500, 42);
+        let reference = simulate_tenant_fleet(&reps, &arrivals, 2, 3);
+        let schedule: Vec<(f64, usize)> = arrivals.iter().map(|&a| (a, 0)).collect();
+        let outcomes = simulate_cluster_streams(
+            &single_board(reps),
+            &[30.0],
+            &[true],
+            &schedule,
+            DispatchPolicy::LeastOutstanding,
+            2,
+            3,
+            7,
+        )
+        .unwrap();
+        let o = &outcomes[0];
+        assert_eq!(o.admitted, reference.admitted);
+        assert_eq!(o.shed, reference.shed);
+        assert_eq!(o.latencies, reference.latencies, "recurrences diverged");
+        assert_eq!(o.dispatched[0], reference.dispatched);
+        assert_eq!(o.makespan, reference.makespan);
+        assert!(o.shed > 0, "test should exercise the admission bound");
+    }
+
+    #[test]
+    fn same_seed_runs_are_bit_identical_and_conserve_items() {
+        let boards = vec![
+            vec![vec![vec![0.02, 0.01]]],
+            vec![vec![vec![0.04]]],
+            vec![vec![vec![0.03, 0.03]]],
+        ];
+        let arrivals: Vec<(f64, usize)> =
+            poisson_arrivals(90.0, 2_000, 11).into_iter().map(|a| (a, 0)).collect();
+        let run = || {
+            simulate_cluster_streams(
+                &boards,
+                &[33.0, 25.0, 16.0],
+                &[true; 3],
+                &arrivals,
+                DispatchPolicy::PowerOfTwo,
+                2,
+                4,
+                7,
+            )
+            .unwrap()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same-seed cluster DES must be bit-identical");
+        let offered: usize = a.iter().map(|o| o.offered).sum();
+        let settled: usize = a.iter().map(|o| o.admitted + o.shed).sum();
+        assert_eq!(offered, arrivals.len());
+        assert_eq!(settled, arrivals.len());
+    }
+
+    #[test]
+    fn fallback_admission_sheds_only_when_every_up_board_is_full() {
+        // Burst of simultaneous arrivals: board 0 is glacial (everything
+        // past the first item waits), so arrivals spill to board 1; sheds
+        // start only once both admission queues are exhausted.
+        let boards = vec![vec![vec![vec![100.0]]], vec![vec![vec![100.0]]]];
+        let cap = 3;
+        let burst: Vec<(f64, usize)> = (0..10).map(|_| (0.0, 0)).collect();
+        let outcomes = simulate_cluster_streams(
+            &boards,
+            &[1.0, 1.0],
+            &[true, true],
+            &burst,
+            DispatchPolicy::LeastOutstanding,
+            1,
+            cap,
+            7,
+        )
+        .unwrap();
+        // Per board: `cap` waiting items plus the one in service.
+        assert_eq!(outcomes[0].admitted, cap + 1);
+        assert_eq!(outcomes[1].admitted, cap + 1);
+        assert_eq!(outcomes.iter().map(|o| o.shed).sum::<usize>(), 10 - 2 * (cap + 1));
+    }
+
+    #[test]
+    fn down_boards_never_receive_work() {
+        let boards = vec![vec![vec![vec![0.01]]], vec![vec![vec![0.01]]]];
+        let arrivals: Vec<(f64, usize)> =
+            poisson_arrivals(50.0, 300, 3).into_iter().map(|a| (a, 0)).collect();
+        let outcomes = simulate_cluster_streams(
+            &boards,
+            &[100.0, 100.0],
+            &[false, true],
+            &arrivals,
+            DispatchPolicy::RoundRobin,
+            2,
+            8,
+            7,
+        )
+        .unwrap();
+        assert_eq!(outcomes[0].admitted + outcomes[0].offered + outcomes[0].shed, 0);
+        assert_eq!(outcomes[1].admitted + outcomes[1].shed, 300);
+    }
+
+    #[test]
+    fn apportion_is_exact_and_remainder_aware() {
+        assert_eq!(apportion(10, &[0.5, 0.5]), vec![5, 5]);
+        assert_eq!(apportion(10, &[0.55, 0.45]), vec![6, 4]);
+        assert_eq!(apportion(1, &[0.4, 0.6]), vec![0, 1]);
+        let parts = apportion(997, &[0.21, 0.33, 0.46]);
+        assert_eq!(parts.iter().sum::<usize>(), 997);
+    }
+
+    #[test]
+    fn merged_schedule_is_sorted_and_complete_regardless_of_disabling() {
+        use crate::cluster::spec::{BoardSpec, ClusterSpec};
+        use crate::config::Config;
+        use crate::tenancy::TenantSpec;
+
+        let spec = ClusterSpec::new(
+            vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+            vec![TenantSpec::new("alexnet", 40.0)],
+        );
+        let cp = ClusterPlan::compile(&spec, &Config::default()).unwrap();
+        let opts = ClusterServeOptions { images: 501, ..Default::default() };
+        let schedule = cluster_arrivals(&cp, &opts);
+        assert_eq!(schedule.len(), 501);
+        assert!(schedule.windows(2).all(|w| w[0].0 <= w[1].0), "unsorted schedule");
+        // Disabling is a router-side decision: offered traffic is identical.
+        let drilled = ClusterServeOptions {
+            disabled: vec![cp.boards[0].name.clone()],
+            ..opts
+        };
+        assert_eq!(schedule, cluster_arrivals(&cp, &drilled));
+    }
+}

@@ -1,0 +1,281 @@
+//! Wall-clock cluster serving: every up board runs its workload fleets as
+//! real [`crate::coordinator::run_fleet`] thread pipelines over synthetic
+//! sleep stages, all behind a *single* router thread that paces the merged
+//! arrival schedule and walks the same
+//! [`Router`](super::router::Router) preference order as the DES twin.
+//!
+//! Topology:
+//!
+//! ```text
+//! merged schedule ──▶ router thread ──try_send──▶ [board 0 · fleet q's] ─▶ run_fleet × W
+//!  (per-board Poisson    (policy order,           [board 1 · fleet q's] ─▶ run_fleet × W
+//!   components, sorted)   shed when all full)     ...
+//! ```
+//!
+//! Each (board, workload) fleet keeps its own bounded admission queue
+//! ([`crate::coordinator::queue::bounded`] with `admission_cap`); the
+//! router's view of per-board load is an atomic in-flight counter bumped on
+//! admission and dropped by the fleet's last stage — the live analogue of
+//! the DES completion heap. Latencies, throughputs, and the horizon are
+//! normalized back by `time_scale`, so a wall report compares directly
+//! with its DES twin.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::queue::{bounded, TrySendError};
+use crate::coordinator::{run_fleet, StageSpec};
+
+use super::cosim::{assemble_report, cluster_arrivals, BoardStats};
+use super::plan::ClusterPlan;
+use super::report::{ClusterServeMode, ClusterServeOptions, ClusterServeReport};
+use super::router::Router;
+
+/// Per-item completion record: (completion time since run start, admission
+/// → completion latency), both in scaled wall seconds.
+type Sink = Arc<Mutex<Vec<(f64, f64)>>>;
+
+/// Build one fleet's synthetic stages: each sleeps for its Eq. 10 service
+/// time scaled by `scale`; the last stage of each replica records the
+/// item's completion into `sink` and releases the board's in-flight slot.
+fn board_stages(
+    replica_times: &[Vec<f64>],
+    scale: f64,
+    sink: &Sink,
+    outstanding: &Arc<AtomicUsize>,
+    run_start: Instant,
+) -> Vec<Vec<StageSpec<(usize, Instant)>>> {
+    replica_times
+        .iter()
+        .enumerate()
+        .map(|(r, times)| {
+            let p = times.len();
+            times
+                .iter()
+                .enumerate()
+                .map(|(s, &t)| {
+                    let dt = Duration::from_secs_f64(t * scale);
+                    let last = s + 1 == p;
+                    let sink = sink.clone();
+                    let outstanding = outstanding.clone();
+                    StageSpec::new(
+                        &format!("r{r}s{s}"),
+                        Box::new(move || {
+                            Box::new(move |x: (usize, Instant)| {
+                                thread::sleep(dt);
+                                if last {
+                                    sink.lock().unwrap().push((
+                                        run_start.elapsed().as_secs_f64(),
+                                        x.1.elapsed().as_secs_f64(),
+                                    ));
+                                    outstanding.fetch_sub(1, Ordering::Relaxed);
+                                }
+                                x
+                            })
+                        }),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Deploy a [`ClusterPlan`] on real threads. See the module docs for the
+/// topology; shed/offered accounting matches the DES twin (first-choice
+/// board charged, shed only when every up board's queue refuses the item).
+pub fn deploy_cluster(
+    cp: &ClusterPlan,
+    opts: &ClusterServeOptions,
+) -> Result<ClusterServeReport> {
+    anyhow::ensure!(opts.images >= 1, "need at least one image per workload");
+    anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
+    anyhow::ensure!(opts.admission_cap >= 1, "admission capacity must be >= 1");
+    anyhow::ensure!(opts.time_scale > 0.0, "time_scale must be positive");
+    for d in &opts.disabled {
+        anyhow::ensure!(
+            cp.boards.iter().any(|b| &b.name == d),
+            "cannot disable unknown board {d:?}"
+        );
+    }
+    let up: Vec<bool> =
+        cp.boards.iter().map(|b| !opts.disabled.contains(&b.name)).collect();
+    anyhow::ensure!(up.iter().any(|&u| u), "every board is disabled");
+
+    let n = cp.boards.len();
+    let weights: Vec<f64> = cp.boards.iter().map(|b| b.plan.capacity()).collect();
+    let mut router = Router::new(opts.policy, weights, opts.seed)?;
+    let schedule = cluster_arrivals(cp, opts);
+
+    // Per-board plumbing: one (queue → run_fleet thread) pair per workload
+    // fleet, one in-flight counter and completion sink per board. Down
+    // boards get no threads — `None` queues the router can never pick.
+    let run_start = Instant::now();
+    let mut outstanding: Vec<Arc<AtomicUsize>> = Vec::with_capacity(n);
+    let mut sinks: Vec<Sink> = Vec::with_capacity(n);
+    let mut txs = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for (entry, &up) in cp.boards.iter().zip(&up) {
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let sink: Sink = Arc::new(Mutex::new(Vec::new()));
+        let mut board_txs = Vec::new();
+        let mut board_handles = Vec::new();
+        for times in entry.plan.fleet_stage_times() {
+            if !up {
+                board_txs.push(None);
+                continue;
+            }
+            let stages =
+                board_stages(&times, opts.time_scale, &sink, &inflight, run_start);
+            let (tx, rx) = bounded::<(usize, Instant)>(opts.admission_cap);
+            let queue_cap = opts.queue_cap;
+            board_txs.push(Some(tx));
+            board_handles.push(thread::spawn(move || {
+                run_fleet(stages, queue_cap, 1, std::iter::from_fn(move || rx.recv()))
+            }));
+        }
+        outstanding.push(inflight);
+        sinks.push(sink);
+        txs.push(board_txs);
+        handles.push(board_handles);
+    }
+
+    // The router thread: pace the merged schedule in scaled real time and
+    // walk the policy's preference order, shedding only when every up
+    // board's fleet queue refuses the item.
+    let mut offered = vec![0usize; n];
+    let mut shed = vec![0usize; n];
+    let mut load = vec![0.0f64; n];
+    for (seq, &(a, t)) in schedule.iter().enumerate() {
+        let at = a * opts.time_scale;
+        let now = run_start.elapsed().as_secs_f64();
+        if at > now {
+            thread::sleep(Duration::from_secs_f64(at - now));
+        }
+        for (l, o) in load.iter_mut().zip(&outstanding) {
+            *l = o.load(Ordering::Relaxed) as f64;
+        }
+        let prefs = router.preference(&load, &up);
+        let first = prefs[0];
+        offered[first] += 1;
+        let mut admitted = false;
+        for &b in &prefs {
+            let Some(tx) = &txs[b][t] else { continue };
+            match tx.try_send((seq, Instant::now())) {
+                Ok(()) => {
+                    outstanding[b].fetch_add(1, Ordering::Relaxed);
+                    admitted = true;
+                    break;
+                }
+                Err(TrySendError::Full(_)) => {}
+                Err(TrySendError::Closed(_)) => txs[b][t] = None, // fleet died
+            }
+        }
+        if !admitted {
+            shed[first] += 1;
+        }
+    }
+    drop(txs); // closes every fleet queue; fleets drain and finish
+
+    // Join the fleets and fold each board's tallies into model time.
+    let mut stats = Vec::with_capacity(n);
+    for (((board_handles, sink), &offered), &shed) in
+        handles.into_iter().zip(&sinks).zip(&offered).zip(&shed)
+    {
+        let mut admitted = 0usize;
+        let mut max_busy = 0.0f64;
+        for handle in board_handles {
+            let (_, fleet) = handle.join().expect("board fleet panicked");
+            admitted += fleet.images;
+            for rep in &fleet.replicas {
+                for stage in &rep.stages {
+                    max_busy = max_busy.max(stage.busy.as_secs_f64());
+                }
+            }
+        }
+        let completions = sink.lock().unwrap();
+        anyhow::ensure!(
+            completions.len() == admitted,
+            "board lost completions: {} recorded vs {admitted} served",
+            completions.len()
+        );
+        let horizon = completions.iter().map(|c| c.0).fold(0.0, f64::max);
+        stats.push(BoardStats {
+            offered,
+            admitted,
+            shed,
+            makespan: horizon / opts.time_scale,
+            latencies: completions.iter().map(|c| c.1 / opts.time_scale).collect(),
+            utilization: if horizon > 0.0 { max_busy / horizon } else { 0.0 },
+        });
+    }
+    let served: usize = stats.iter().map(|s| s.admitted).sum();
+    let lost: usize = stats.iter().map(|s| s.shed).sum();
+    anyhow::ensure!(
+        served + lost == schedule.len(),
+        "front door lost items: {served} served + {lost} shed != {} offered",
+        schedule.len()
+    );
+
+    Ok(assemble_report(
+        cp,
+        &up,
+        stats,
+        ClusterServeMode::Synthetic { time_scale: opts.time_scale },
+        opts.policy,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::{BoardSpec, ClusterSpec};
+    use crate::config::Config;
+    use crate::tenancy::TenantSpec;
+
+    fn small_plan() -> ClusterPlan {
+        let spec = ClusterSpec {
+            boards: vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+            workloads: vec![TenantSpec::new("alexnet", 30.0)],
+            max_replicas: 2,
+        };
+        ClusterPlan::compile(&spec, &Config::default()).unwrap()
+    }
+
+    #[test]
+    fn deploy_conserves_arrivals_across_the_cluster() {
+        let cp = small_plan();
+        let opts = ClusterServeOptions {
+            images: 16,
+            time_scale: 0.02,
+            ..Default::default()
+        };
+        let report = cp.deploy(&opts).unwrap();
+        assert_eq!(report.boards.len(), 2);
+        assert_eq!(report.images + report.shed, 16);
+        let offered: usize = report.boards.iter().map(|b| b.offered).sum();
+        assert_eq!(offered, 16);
+        assert!(report.wall_s > 0.0);
+        assert!(report.throughput > 0.0);
+    }
+
+    #[test]
+    fn disabling_a_board_routes_everything_to_the_survivor() {
+        let cp = small_plan();
+        let opts = ClusterServeOptions {
+            images: 12,
+            time_scale: 0.02,
+            admission_cap: 16,
+            disabled: vec![cp.boards[0].name.clone()],
+            ..Default::default()
+        };
+        let report = cp.deploy(&opts).unwrap();
+        let down = &report.boards[0];
+        assert!(!down.up);
+        assert_eq!(down.admitted + down.offered + down.shed, 0);
+        assert_eq!(report.boards[1].admitted + report.boards[1].shed, 12);
+    }
+}

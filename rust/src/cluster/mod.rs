@@ -1,0 +1,69 @@
+//! Cluster-scale serving (DESIGN.md §12): shard traffic across a fleet of
+//! heterogeneous big.LITTLE boards behind one front door.
+//!
+//! Pipe-it plans one board; the serving tier composes many. Per-board
+//! designs stay exactly what the existing layers produce — an ordinary
+//! [`Plan`](crate::api::Plan) (replicated-pipeline DSE) or
+//! [`MultiPlan`](crate::tenancy::MultiPlan) (joint co-serving DSE) — and
+//! the cluster layer adds the two decisions that only exist above a single
+//! board: *how much* traffic each board should plan for, and *where* each
+//! live request goes (PICO, arXiv 2206.08662; edge-intelligence
+//! distribution, arXiv 2107.05828):
+//!
+//! * [`BoardSpec`] / [`ClusterSpec`] — the fleet description: N boards with
+//!   mixed core configs (`cores=4+4`, `cores=2+6`), each with its own
+//!   platform file (TimeMatrix source) and optional pinned seed.
+//! * [`ClusterPlan`] — the schema-versioned serializable artifact from
+//!   [`ClusterPlan::compile`]: per-board embedded plans plus
+//!   capacity-proportional rate shares; save → load → simulate is lossless
+//!   and bit-identical.
+//! * [`Router`] / [`DispatchPolicy`] — the front door: round-robin
+//!   (baseline), least-outstanding-work, and capacity-weighted
+//!   power-of-two-choices, all over per-board bounded admission queues
+//!   with shed-on-full counted per board.
+//! * [`simulate_cluster`] / [`deploy_cluster`] — the execution twins: a
+//!   streaming deterministic DES built for ≥1M-arrival runs, and a
+//!   wall-clock deploy (one [`crate::coordinator::run_fleet`] per board
+//!   fleet behind a single router thread). Both return one
+//!   [`ClusterServeReport`], rendered by
+//!   [`crate::reports::render_cluster`].
+//!
+//! The CLI surface is `pipeit plan-cluster / serve-cluster /
+//! simulate-cluster`.
+//!
+//! # Example
+//!
+//! ```
+//! use pipeit::cluster::{BoardSpec, ClusterPlan, ClusterServeOptions, ClusterSpec};
+//! use pipeit::config::Config;
+//! use pipeit::tenancy::TenantSpec;
+//!
+//! let spec = ClusterSpec::new(
+//!     vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+//!     vec![TenantSpec::new("alexnet", 60.0)],
+//! );
+//! let cp = ClusterPlan::compile(&spec, &Config::default()).unwrap();
+//! let report = cp
+//!     .simulate(&ClusterServeOptions { images: 300, ..Default::default() })
+//!     .unwrap();
+//! assert_eq!(report.boards.len(), 2);
+//! assert_eq!(report.images + report.shed, 300);
+//! ```
+
+pub mod cosim;
+pub mod deploy;
+pub mod plan;
+pub mod report;
+pub mod router;
+pub mod spec;
+
+pub use cosim::{
+    cluster_arrivals, simulate_cluster, simulate_cluster_streams, BoardSimOutcome,
+};
+pub use deploy::deploy_cluster;
+pub use plan::{BoardEntry, BoardPlan, ClusterPlan, Workload, CLUSTER_PLAN_VERSION};
+pub use report::{
+    BoardServeReport, ClusterServeMode, ClusterServeOptions, ClusterServeReport,
+};
+pub use router::{DispatchPolicy, Router, DISPATCH_SALT};
+pub use spec::{BoardSpec, ClusterSpec};

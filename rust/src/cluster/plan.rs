@@ -1,0 +1,626 @@
+//! The cluster serving artifact: a schema-versioned, serializable
+//! [`ClusterPlan`] embedding one ordinary per-board plan — a single-network
+//! [`Plan`] or a co-serving [`MultiPlan`] — per board, plus the planner's
+//! traffic shares. Like its per-board constituents, a saved artifact
+//! reloads and behaves identically: save → load → simulate is lossless and
+//! bit-identical, and the DES / wall-clock twins
+//! ([`ClusterPlan::simulate`] / [`ClusterPlan::deploy`]) read only what the
+//! artifact carries.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::api::{Plan, PlanSpec, Strategy};
+use crate::config::Config;
+use crate::tenancy::{MultiPlan, TenantSpec};
+use crate::util::json::Json;
+
+use super::report::{ClusterServeOptions, ClusterServeReport};
+use super::spec::ClusterSpec;
+
+/// ClusterPlan schema version written by [`ClusterPlan::save`] and required
+/// by [`ClusterPlan::load`].
+pub const CLUSTER_PLAN_VERSION: usize = 1;
+
+/// One workload served by the cluster: a zoo network with its cluster-wide
+/// offered arrival rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub network: String,
+    /// Cluster-wide offered Poisson rate (images/s), split across boards by
+    /// each board's [`BoardEntry::rate_share`].
+    pub rate_hz: f64,
+}
+
+/// The per-board design inside a [`ClusterPlan`]: an ordinary single-network
+/// [`Plan`] when the cluster serves one workload, or a [`MultiPlan`] when
+/// every board co-serves several.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BoardPlan {
+    Single(Plan),
+    Multi(MultiPlan),
+}
+
+impl BoardPlan {
+    /// The board's planned Eq. 12 capacity (imgs/s, summed over fleets).
+    pub fn capacity(&self) -> f64 {
+        match self {
+            BoardPlan::Single(p) => p.throughput,
+            BoardPlan::Multi(mp) => mp.tenants.iter().map(|t| t.plan.throughput).sum(),
+        }
+    }
+
+    /// Platform name the board was compiled for.
+    pub fn platform(&self) -> &str {
+        match self {
+            BoardPlan::Single(p) => &p.platform,
+            BoardPlan::Multi(mp) => &mp.platform,
+        }
+    }
+
+    /// `4B+4s` display of the board's core budget.
+    pub fn budget_display(&self) -> String {
+        match self {
+            BoardPlan::Single(p) => format!("{}B+{}s", p.big, p.small),
+            BoardPlan::Multi(mp) => format!("{}B+{}s", mp.big, mp.small),
+        }
+    }
+
+    /// `B2-s1 | s3` display of the board's fleet(s), ` / `-joined for
+    /// multi-workload boards.
+    pub fn partition_display(&self) -> String {
+        match self {
+            BoardPlan::Single(p) => p.partition_display(),
+            BoardPlan::Multi(mp) => {
+                let parts: Vec<String> =
+                    mp.tenants.iter().map(|t| t.partition_display()).collect();
+                parts.join(" / ")
+            }
+        }
+    }
+
+    /// One fleet per workload (in workload order); each fleet is its
+    /// replicas' Eq. 10 stage-time vectors — everything the execution twins
+    /// need.
+    pub fn fleet_stage_times(&self) -> Vec<Vec<Vec<f64>>> {
+        let of_plan = |p: &Plan| -> Vec<Vec<f64>> {
+            p.replicas.iter().map(|r| r.stage_times.clone()).collect()
+        };
+        match self {
+            BoardPlan::Single(p) => vec![of_plan(p)],
+            BoardPlan::Multi(mp) => mp.tenants.iter().map(|t| of_plan(&t.plan)).collect(),
+        }
+    }
+
+    /// Every embedded single-network [`Plan`], in workload order.
+    fn plans(&self) -> Vec<&Plan> {
+        match self {
+            BoardPlan::Single(p) => vec![p],
+            BoardPlan::Multi(mp) => mp.tenants.iter().map(|t| &t.plan).collect(),
+        }
+    }
+
+    fn to_json(&self) -> (&'static str, Json) {
+        match self {
+            BoardPlan::Single(p) => ("plan", p.to_json()),
+            BoardPlan::Multi(mp) => ("multi", mp.to_json()),
+        }
+    }
+}
+
+/// One board's slot in a [`ClusterPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardEntry {
+    /// Unique board name (router, reports, `--disable-board`).
+    pub name: String,
+    /// Pinned base seed for this board's arrival streams, if any.
+    pub seed: Option<u64>,
+    /// The planner's traffic share for this board: its capacity over the
+    /// cluster capacity. Shares sum to 1 across boards.
+    pub rate_share: f64,
+    /// The board's compiled design.
+    pub plan: BoardPlan,
+}
+
+/// A compiled, serializable cluster serving plan: N heterogeneous boards,
+/// each with an ordinary per-board plan produced by the *per-board* search
+/// (`dse::explore_replicated` via [`PlanSpec`], or `tenancy::explore_joint`
+/// via [`MultiPlan::compile`]), plus capacity-proportional traffic shares —
+/// ready to [`simulate`](ClusterPlan::simulate) (DES) or
+/// [`deploy`](ClusterPlan::deploy) (wall-clock fleets behind one router
+/// thread).
+///
+/// # Example
+///
+/// ```
+/// use pipeit::cluster::{BoardSpec, ClusterPlan, ClusterSpec};
+/// use pipeit::config::Config;
+/// use pipeit::tenancy::TenantSpec;
+///
+/// let spec = ClusterSpec::new(
+///     vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+///     vec![TenantSpec::new("alexnet", 40.0)],
+/// );
+/// let cp = ClusterPlan::compile(&spec, &Config::default()).unwrap();
+/// assert_eq!(cp.boards.len(), 2);
+/// let path = std::env::temp_dir().join("pipeit_doc_clusterplan.json");
+/// cp.save(&path).unwrap();
+/// let loaded = ClusterPlan::load(&path).unwrap();
+/// assert_eq!(cp, loaded); // the artifact round-trips losslessly
+/// std::fs::remove_file(&path).ok();
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterPlan {
+    pub workloads: Vec<Workload>,
+    pub boards: Vec<BoardEntry>,
+}
+
+impl ClusterPlan {
+    /// Run the per-board searches over `spec` and compose the results.
+    ///
+    /// Two passes: pass 1 compiles each board unscaled and measures its
+    /// Eq. 12 capacity, fixing the capacity-proportional traffic shares;
+    /// pass 2 (multi-workload only) recompiles each board's joint plan
+    /// against its *share* of every workload's cluster-wide rate, so the
+    /// per-board SLA/served predictions describe the traffic the board will
+    /// actually see.
+    pub fn compile(spec: &ClusterSpec, base: &Config) -> Result<ClusterPlan> {
+        anyhow::ensure!(!spec.boards.is_empty(), "cluster needs at least one board");
+        anyhow::ensure!(!spec.workloads.is_empty(), "cluster needs at least one workload");
+        anyhow::ensure!(spec.max_replicas >= 1, "max_replicas must be >= 1");
+
+        // Pass 1: per-board capacity under the unscaled workload mix.
+        let mut configs = Vec::with_capacity(spec.boards.len());
+        let mut pass1 = Vec::with_capacity(spec.boards.len());
+        for b in &spec.boards {
+            let cfg = b.config(base)?;
+            let plan = compile_board(&spec.workloads, &cfg, spec.max_replicas)
+                .with_context(|| format!("board {:?}", b.name))?;
+            configs.push(cfg);
+            pass1.push(plan);
+        }
+        let total: f64 = pass1.iter().map(BoardPlan::capacity).sum();
+        anyhow::ensure!(total > 0.0, "cluster has zero planned capacity");
+
+        // Pass 2: fix shares; multi-workload boards recompile against their
+        // shared slice of the offered rates.
+        let mut boards = Vec::with_capacity(spec.boards.len());
+        for ((b, cfg), plan) in spec.boards.iter().zip(&configs).zip(pass1) {
+            let rate_share = plan.capacity() / total;
+            let plan = if spec.workloads.len() > 1 {
+                let scaled: Vec<TenantSpec> = spec
+                    .workloads
+                    .iter()
+                    .map(|w| TenantSpec { rate_hz: w.rate_hz * rate_share, ..w.clone() })
+                    .collect();
+                BoardPlan::Multi(
+                    MultiPlan::compile(&scaled, cfg, spec.max_replicas)
+                        .with_context(|| format!("board {:?} (rate-scaled pass)", b.name))?,
+                )
+            } else {
+                plan
+            };
+            boards.push(BoardEntry { name: b.name.clone(), seed: b.seed, rate_share, plan });
+        }
+
+        let cp = ClusterPlan {
+            workloads: spec
+                .workloads
+                .iter()
+                .map(|w| Workload {
+                    name: w.name.clone(),
+                    network: w.network.clone(),
+                    rate_hz: w.rate_hz,
+                })
+                .collect(),
+            boards,
+        };
+        cp.validate()?;
+        Ok(cp)
+    }
+
+    pub fn num_boards(&self) -> usize {
+        self.boards.len()
+    }
+
+    /// Σ of per-board planned Eq. 12 capacities (imgs/s).
+    pub fn capacity(&self) -> f64 {
+        self.boards.iter().map(|b| b.plan.capacity()).sum()
+    }
+
+    /// Structural invariants shared by [`ClusterPlan::compile`] results and
+    /// loaded artifacts: unique names, serializable seeds, shares that sum
+    /// to one, and per-board plans that match the workload list and are
+    /// simulable (stage-time profiles present, no artifact bindings).
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.boards.is_empty(), "cluster plan has no boards");
+        anyhow::ensure!(!self.workloads.is_empty(), "cluster plan has no workloads");
+        for (t, w) in self.workloads.iter().enumerate() {
+            anyhow::ensure!(
+                w.rate_hz.is_finite() && w.rate_hz > 0.0,
+                "workload {t} ({}): rate must be positive",
+                w.name
+            );
+            anyhow::ensure!(
+                self.workloads.iter().skip(t + 1).all(|o| o.name != w.name),
+                "duplicate workload name {:?}",
+                w.name
+            );
+        }
+        let mut share_sum = 0.0;
+        for (i, b) in self.boards.iter().enumerate() {
+            anyhow::ensure!(
+                self.boards.iter().skip(i + 1).all(|o| o.name != b.name),
+                "duplicate board name {:?}",
+                b.name
+            );
+            if let Some(seed) = b.seed {
+                anyhow::ensure!(
+                    seed < (1u64 << 53),
+                    "board {i} ({}): seed {seed} exceeds 2^53 and cannot \
+                     round-trip through the JSON artifact losslessly",
+                    b.name
+                );
+            }
+            anyhow::ensure!(
+                b.rate_share.is_finite() && b.rate_share > 0.0 && b.rate_share <= 1.0,
+                "board {i} ({}): rate share {} is not in (0, 1]",
+                b.name,
+                b.rate_share
+            );
+            share_sum += b.rate_share;
+            let plans = b.plan.plans();
+            anyhow::ensure!(
+                plans.len() == self.workloads.len(),
+                "board {i} ({}): {} fleets for {} workloads",
+                b.name,
+                plans.len(),
+                self.workloads.len()
+            );
+            for (w, p) in self.workloads.iter().zip(plans) {
+                anyhow::ensure!(
+                    p.network == w.network,
+                    "board {i} ({}): fleet serves {:?} but workload {:?} is {:?}",
+                    b.name,
+                    p.network,
+                    w.name,
+                    w.network
+                );
+                anyhow::ensure!(
+                    p.artifacts.is_none(),
+                    "board {i} ({}): artifact-bound plans cannot be cluster-served",
+                    b.name
+                );
+                for (r, rep) in p.replicas.iter().enumerate() {
+                    anyhow::ensure!(
+                        !rep.stage_times.is_empty(),
+                        "board {i} ({}): workload {:?} replica {r} carries no \
+                         stage-time profile",
+                        b.name,
+                        w.name
+                    );
+                }
+            }
+        }
+        anyhow::ensure!(
+            (share_sum - 1.0).abs() < 1e-6,
+            "board rate shares sum to {share_sum}, not 1"
+        );
+        Ok(())
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let workloads = Json::Arr(
+            self.workloads
+                .iter()
+                .map(|w| {
+                    Json::obj(vec![
+                        ("name", Json::str(&w.name)),
+                        ("network", Json::str(&w.network)),
+                        ("rate_hz", Json::num(w.rate_hz)),
+                    ])
+                })
+                .collect(),
+        );
+        let boards = Json::Arr(
+            self.boards
+                .iter()
+                .map(|b| {
+                    let (kind, plan) = b.plan.to_json();
+                    Json::obj(vec![
+                        ("name", Json::str(&b.name)),
+                        ("seed", b.seed.map_or(Json::Null, |s| Json::num(s as f64))),
+                        ("rate_share", Json::num(b.rate_share)),
+                        ("kind", Json::str(kind)),
+                        ("plan", plan),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("version", Json::num(CLUSTER_PLAN_VERSION as f64)),
+            ("workloads", workloads),
+            ("boards", boards),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterPlan> {
+        let version = j.req("version")?.as_usize().context("version")?;
+        anyhow::ensure!(
+            version == CLUSTER_PLAN_VERSION,
+            "cluster-plan schema version {version} is not supported (field \
+             \"version\"; this build reads version {CLUSTER_PLAN_VERSION})"
+        );
+        let mut workloads = Vec::new();
+        for (t, wj) in j.req("workloads")?.as_arr().context("workloads array")?.iter().enumerate()
+        {
+            workloads.push(Workload {
+                name: wj
+                    .req("name")?
+                    .as_str()
+                    .with_context(|| format!("workload {t} name"))?
+                    .to_string(),
+                network: wj
+                    .req("network")?
+                    .as_str()
+                    .with_context(|| format!("workload {t} network"))?
+                    .to_string(),
+                rate_hz: wj
+                    .req("rate_hz")?
+                    .as_f64()
+                    .with_context(|| format!("workload {t} rate_hz"))?,
+            });
+        }
+        let mut boards = Vec::new();
+        for (i, bj) in j.req("boards")?.as_arr().context("boards array")?.iter().enumerate() {
+            let seed = match bj.req("seed")? {
+                Json::Null => None,
+                v => Some(v.as_usize().with_context(|| format!("board {i} seed"))? as u64),
+            };
+            let kind = bj.req("kind")?.as_str().with_context(|| format!("board {i} kind"))?;
+            let pj = bj.req("plan")?;
+            let plan = match kind {
+                "plan" => BoardPlan::Single(
+                    Plan::from_json(pj).with_context(|| format!("board {i} embedded plan"))?,
+                ),
+                "multi" => BoardPlan::Multi(
+                    MultiPlan::from_json(pj)
+                        .with_context(|| format!("board {i} embedded multi-plan"))?,
+                ),
+                other => anyhow::bail!("board {i}: unknown plan kind {other:?} (plan|multi)"),
+            };
+            boards.push(BoardEntry {
+                name: bj
+                    .req("name")?
+                    .as_str()
+                    .with_context(|| format!("board {i} name"))?
+                    .to_string(),
+                seed,
+                rate_share: bj
+                    .req("rate_share")?
+                    .as_f64()
+                    .with_context(|| format!("board {i} rate_share"))?,
+                plan,
+            });
+        }
+        let cp = ClusterPlan { workloads, boards };
+        cp.validate()?;
+        Ok(cp)
+    }
+
+    /// Write the cluster plan as a JSON artifact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a cluster plan saved by [`ClusterPlan::save`].
+    pub fn load(path: &Path) -> Result<ClusterPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        ClusterPlan::from_json(&j)
+            .with_context(|| format!("parsing cluster plan {}", path.display()))
+    }
+
+    // ---- display ---------------------------------------------------------
+
+    /// Human-readable plan description (the `pipeit plan-cluster` output).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        let loads: Vec<String> = self
+            .workloads
+            .iter()
+            .map(|w| format!("{} @ {:.1}/s", w.name, w.rate_hz))
+            .collect();
+        s.push_str(&format!(
+            "cluster    : {} boards serving {}\n",
+            self.boards.len(),
+            loads.join(", ")
+        ));
+        for b in &self.boards {
+            let seed = match b.seed {
+                Some(n) => format!("  seed={n}"),
+                None => String::new(),
+            };
+            s.push_str(&format!(
+                "board {:<12} {} {:<6} {}  share={:.2}  cap {:.2}/s{seed}\n",
+                b.name,
+                b.plan.platform(),
+                b.plan.budget_display(),
+                b.plan.partition_display(),
+                b.rate_share,
+                b.plan.capacity(),
+            ));
+        }
+        s.push_str(&format!(
+            "capacity   : {:.2} imgs/s Σ eq12 across the fleet\n",
+            self.capacity()
+        ));
+        s
+    }
+
+    // ---- execution backends ---------------------------------------------
+
+    /// DES co-simulation of the whole cluster: seeded per-board arrival
+    /// streams merged at the front door, policy-routed over the per-board
+    /// bounded admission queues — the design-time twin of
+    /// [`ClusterPlan::deploy`].
+    pub fn simulate(&self, opts: &ClusterServeOptions) -> Result<ClusterServeReport> {
+        super::cosim::simulate_cluster(self, opts)
+    }
+
+    /// Wall-clock cluster serving: one thread fleet per (board, workload)
+    /// behind a single router thread pacing the merged arrival schedule.
+    pub fn deploy(&self, opts: &ClusterServeOptions) -> Result<ClusterServeReport> {
+        super::deploy::deploy_cluster(self, opts)
+    }
+}
+
+/// Pass-1 board compile: the ordinary per-board search for the workload
+/// mix — `dse::explore_replicated` (via the [`PlanSpec`] facade) for one
+/// workload, the joint DSE (via [`MultiPlan::compile`]) for several.
+fn compile_board(
+    workloads: &[TenantSpec],
+    cfg: &Config,
+    max_replicas: usize,
+) -> Result<BoardPlan> {
+    if workloads.len() == 1 {
+        let w = &workloads[0];
+        let plan = PlanSpec::new(&w.network)
+            .platform(cfg.clone())
+            .strategy(Strategy::Replicated { max_replicas, exact: false })
+            .time_source(w.time_source)
+            .compile()?;
+        Ok(BoardPlan::Single(plan))
+    } else {
+        Ok(BoardPlan::Multi(MultiPlan::compile(workloads, cfg, max_replicas)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::BoardSpec;
+
+    fn two_board_spec() -> ClusterSpec {
+        ClusterSpec::new(
+            vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+            vec![TenantSpec::new("alexnet", 40.0)],
+        )
+    }
+
+    fn roundtrip(cp: &ClusterPlan) -> ClusterPlan {
+        let text = cp.to_json().to_string();
+        let j = Json::parse(&text).expect("cluster-plan JSON reparses");
+        ClusterPlan::from_json(&j).expect("cluster-plan JSON deserializes")
+    }
+
+    #[test]
+    fn compiled_single_workload_plan_roundtrips_through_json() {
+        let cp = ClusterPlan::compile(&two_board_spec(), &Config::default()).unwrap();
+        assert_eq!(cp.boards.len(), 2);
+        assert!(cp.capacity() > 0.0);
+        let shares: f64 = cp.boards.iter().map(|b| b.rate_share).sum();
+        assert!((shares - 1.0).abs() < 1e-9, "shares sum to {shares}");
+        assert_eq!(cp, roundtrip(&cp));
+    }
+
+    #[test]
+    fn compiled_multi_workload_plan_roundtrips_through_json() {
+        let spec = ClusterSpec {
+            boards: vec![BoardSpec::new(4, 4), BoardSpec::new(4, 4)],
+            workloads: vec![
+                TenantSpec::new("alexnet", 20.0),
+                TenantSpec::new("squeezenet", 40.0),
+            ],
+            max_replicas: 2,
+        };
+        let cp = ClusterPlan::compile(&spec, &Config::default()).unwrap();
+        for b in &cp.boards {
+            assert!(matches!(b.plan, BoardPlan::Multi(_)));
+            assert_eq!(b.plan.fleet_stage_times().len(), 2);
+        }
+        assert_eq!(cp, roundtrip(&cp));
+    }
+
+    #[test]
+    fn heterogeneous_boards_get_capacity_proportional_shares() {
+        let cp = ClusterPlan::compile(&two_board_spec(), &Config::default()).unwrap();
+        let caps: Vec<f64> = cp.boards.iter().map(|b| b.plan.capacity()).collect();
+        for (b, cap) in cp.boards.iter().zip(&caps) {
+            let expect = cap / caps.iter().sum::<f64>();
+            assert!(
+                (b.rate_share - expect).abs() < 1e-9,
+                "{}: share {} vs capacity fraction {expect}",
+                b.name,
+                b.rate_share
+            );
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_schema_and_structure_violations() {
+        let cp = ClusterPlan::compile(&two_board_spec(), &Config::default()).unwrap();
+        let good = cp.to_json();
+
+        // Wrong version names the field.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".to_string(), Json::num(99.0));
+        }
+        let err = ClusterPlan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("\"version\"") && err.contains("99"), "{err}");
+
+        // An oversized seed cannot round-trip and is rejected at load.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(bs)) = m.get_mut("boards") {
+                if let Json::Obj(b0) = &mut bs[0] {
+                    b0.insert("seed".to_string(), Json::num((1u64 << 53) as f64));
+                }
+            }
+        }
+        let err = format!("{:?}", ClusterPlan::from_json(&j).unwrap_err());
+        assert!(err.contains("2^53"), "{err}");
+
+        // Duplicate board names are rejected.
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(bs)) = m.get_mut("boards") {
+                let name = bs[0].req("name").unwrap().as_str().unwrap().to_string();
+                if let Json::Obj(b1) = &mut bs[1] {
+                    b1.insert("name".to_string(), Json::str(&name));
+                }
+            }
+        }
+        let err = format!("{:?}", ClusterPlan::from_json(&j).unwrap_err());
+        assert!(err.contains("duplicate board name"), "{err}");
+
+        // Shares must still sum to 1.
+        let mut j = good;
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(bs)) = m.get_mut("boards") {
+                if let Json::Obj(b0) = &mut bs[0] {
+                    b0.insert("rate_share".to_string(), Json::num(0.9));
+                }
+            }
+        }
+        let err = format!("{:?}", ClusterPlan::from_json(&j).unwrap_err());
+        assert!(err.contains("sum to"), "{err}");
+    }
+
+    #[test]
+    fn summary_names_every_board_and_the_fleet_capacity() {
+        let cp = ClusterPlan::compile(&two_board_spec(), &Config::default()).unwrap();
+        let s = cp.summary();
+        assert!(s.contains("cluster    : 2 boards serving alexnet @ 40.0/s"), "{s}");
+        assert!(s.contains("board 4+4"), "{s}");
+        assert!(s.contains("board 2+6"), "{s}");
+        assert!(s.contains("capacity   :"), "{s}");
+    }
+}

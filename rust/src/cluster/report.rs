@@ -1,0 +1,241 @@
+//! The unified cluster serving report: one shape for the DES co-simulation
+//! ([`crate::cluster::simulate_cluster`]) and the wall-clock fleet deploy
+//! ([`crate::cluster::deploy_cluster`]), rendered by one path
+//! ([`crate::reports::render_cluster`]) and serialized for `--metrics-out`.
+
+use crate::api::LatencyReport;
+use crate::util::json::Json;
+
+use super::router::DispatchPolicy;
+
+/// Runtime knobs shared by both cluster execution backends; the
+/// [`ClusterPlan`](crate::cluster::ClusterPlan) itself fixes every design
+/// decision (board configs, per-board plans, rate shares).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterServeOptions {
+    /// Arrivals generated per workload across the whole cluster.
+    pub images: usize,
+    /// Inter-stage queue capacity inside each replica.
+    pub queue_cap: usize,
+    /// Admission queue capacity per (board, workload) fleet; arrivals that
+    /// find every up board's queue full are shed, counted against their
+    /// first-choice board.
+    pub admission_cap: usize,
+    /// Base run seed. Board `i` without a pinned seed draws its arrival
+    /// streams from `seed + 7919·i` (the same distinct-stream scheme as
+    /// tenant seeds); the router's p2c sampling uses
+    /// `seed ^ `[`DISPATCH_SALT`](crate::cluster::DISPATCH_SALT).
+    pub seed: u64,
+    /// Wall-clock deploys sleep for `stage_time * time_scale` per item
+    /// (ignored by the DES).
+    pub time_scale: f64,
+    /// Replace every Poisson component stream with a deterministic uniform
+    /// stream at the same rate.
+    pub uniform_arrivals: bool,
+    /// Front-door dispatch policy.
+    pub policy: DispatchPolicy,
+    /// Board names taken out of rotation (failure drill / graceful
+    /// degradation): their component arrival streams still arrive at the
+    /// front door, but the router never offers them work.
+    pub disabled: Vec<String>,
+}
+
+impl Default for ClusterServeOptions {
+    fn default() -> ClusterServeOptions {
+        ClusterServeOptions {
+            images: 600,
+            queue_cap: 2,
+            admission_cap: 8,
+            seed: 7,
+            time_scale: 0.05,
+            uniform_arrivals: false,
+            policy: DispatchPolicy::LeastOutstanding,
+            disabled: Vec::new(),
+        }
+    }
+}
+
+impl ClusterServeOptions {
+    /// Base arrival seed for board `idx`: its pinned seed, or a
+    /// deterministic derivation from the run seed that keeps per-board
+    /// streams distinct. Workload `t` on that board then uses
+    /// `board_seed + t` — collision-free across boards because the
+    /// workload count is far below the 7919 stride.
+    pub fn board_seed(&self, pinned: Option<u64>, idx: usize) -> u64 {
+        pinned.unwrap_or_else(|| self.seed.wrapping_add(7919 * idx as u64))
+    }
+}
+
+/// Which backend produced a [`ClusterServeReport`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClusterServeMode {
+    /// Discrete-event co-simulation.
+    Des,
+    /// Wall-clock thread fleets over synthetic sleep stages; latencies and
+    /// throughputs are normalized back by `time_scale` so they compare
+    /// directly with the DES twin.
+    Synthetic { time_scale: f64 },
+}
+
+/// One board's slice of a cluster serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardServeReport {
+    pub name: String,
+    /// Platform name of the board's config.
+    pub platform: String,
+    /// `4B+4s` display of the board's core budget.
+    pub budget: String,
+    /// `B2-s1 | s3` display of the board's fleet(s).
+    pub pipeline: String,
+    /// The board's planned Eq. 12 capacity (imgs/s, summed over fleets).
+    pub capacity: f64,
+    /// The planner's traffic share for this board (Σ over boards = 1).
+    pub rate_share: f64,
+    /// Whether the board was in rotation for this run.
+    pub up: bool,
+    /// Arrivals whose *first choice* was this board. Admission may land an
+    /// arrival elsewhere via fallback, so per-board `offered` does not
+    /// equal `admitted + shed`; the cluster-wide sums do.
+    pub offered: usize,
+    /// Arrivals served by this board (first-choice or fallback).
+    pub admitted: usize,
+    /// Sheds charged to this board (it was the first choice and every up
+    /// board was full).
+    pub shed: usize,
+    /// Served rate over the cluster horizon (imgs/s).
+    pub throughput: f64,
+    /// End-to-end latency percentiles of items served here; `None` when
+    /// nothing was admitted.
+    pub latency: Option<LatencyReport>,
+    /// Busiest stage's busy fraction over the board's busy horizon.
+    pub utilization: f64,
+}
+
+/// Unified result of serving a [`ClusterPlan`](crate::cluster::ClusterPlan)
+/// through either backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterServeReport {
+    pub mode: ClusterServeMode,
+    pub policy: DispatchPolicy,
+    /// Cluster horizon in (model) seconds: last completion anywhere.
+    pub wall_s: f64,
+    /// Items served across all boards.
+    pub images: usize,
+    /// Items shed across all boards.
+    pub shed: usize,
+    /// Aggregate served rate (imgs/s) over the cluster horizon — the
+    /// headline metric, compared against [`ClusterServeReport::capacity`].
+    pub throughput: f64,
+    /// Σ of per-board planned Eq. 12 capacities (imgs/s), down boards
+    /// included — degradation shows up as throughput/capacity, not as a
+    /// moving target.
+    pub capacity: f64,
+    /// Merged end-to-end latency percentiles across every served item.
+    pub latency: Option<LatencyReport>,
+    pub boards: Vec<BoardServeReport>,
+}
+
+impl ClusterServeReport {
+    /// JSON shape of the report — what `serve-cluster --metrics-out`
+    /// captures.
+    pub fn to_json(&self) -> Json {
+        let mode = match self.mode {
+            ClusterServeMode::Des => Json::obj(vec![("kind", Json::str("des"))]),
+            ClusterServeMode::Synthetic { time_scale } => Json::obj(vec![
+                ("kind", Json::str("synthetic")),
+                ("time_scale", Json::num(time_scale)),
+            ]),
+        };
+        let latency_json = |l: &Option<LatencyReport>| match l {
+            None => Json::Null,
+            Some(l) => Json::obj(vec![
+                ("p50", Json::num(l.p50)),
+                ("p95", Json::num(l.p95)),
+                ("p99", Json::num(l.p99)),
+            ]),
+        };
+        let boards = Json::Arr(
+            self.boards
+                .iter()
+                .map(|b| {
+                    Json::obj(vec![
+                        ("name", Json::str(&b.name)),
+                        ("platform", Json::str(&b.platform)),
+                        ("budget", Json::str(&b.budget)),
+                        ("pipeline", Json::str(&b.pipeline)),
+                        ("capacity", Json::num(b.capacity)),
+                        ("rate_share", Json::num(b.rate_share)),
+                        ("up", Json::Bool(b.up)),
+                        ("offered", Json::num(b.offered as f64)),
+                        ("admitted", Json::num(b.admitted as f64)),
+                        ("shed", Json::num(b.shed as f64)),
+                        ("throughput", Json::num(b.throughput)),
+                        ("latency", latency_json(&b.latency)),
+                        ("utilization", Json::num(b.utilization)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("mode", mode),
+            ("policy", Json::str(self.policy.name())),
+            ("wall_s", Json::num(self.wall_s)),
+            ("images", Json::num(self.images as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("capacity", Json::num(self.capacity)),
+            ("latency", latency_json(&self.latency)),
+            ("boards", boards),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_seed_derivation_matches_the_tenancy_scheme() {
+        let opts = ClusterServeOptions { seed: 100, ..Default::default() };
+        assert_eq!(opts.board_seed(None, 0), 100);
+        assert_eq!(opts.board_seed(None, 2), 100 + 2 * 7919);
+        assert_eq!(opts.board_seed(Some(5), 2), 5, "pinned seeds win");
+    }
+
+    #[test]
+    fn report_json_is_parseable() {
+        let report = ClusterServeReport {
+            mode: ClusterServeMode::Des,
+            policy: DispatchPolicy::PowerOfTwo,
+            wall_s: 12.0,
+            images: 900,
+            shed: 100,
+            throughput: 75.0,
+            capacity: 80.0,
+            latency: Some(LatencyReport { p50: 0.02, p95: 0.04, p99: 0.05 }),
+            boards: vec![BoardServeReport {
+                name: "4+4".into(),
+                platform: "hikey970".into(),
+                budget: "4B+4s".into(),
+                pipeline: "B2-s1 | B2-s3".into(),
+                capacity: 50.0,
+                rate_share: 0.625,
+                up: true,
+                offered: 600,
+                admitted: 580,
+                shed: 20,
+                throughput: 48.3,
+                latency: None,
+                utilization: 0.91,
+            }],
+        };
+        let text = report.to_json().to_string();
+        let j = Json::parse(&text).expect("cluster report JSON reparses");
+        assert_eq!(j.req("policy").unwrap().as_str(), Some("p2c"));
+        assert_eq!(j.req("mode").unwrap().req("kind").unwrap().as_str(), Some("des"));
+        let b = &j.req("boards").unwrap().as_arr().unwrap()[0];
+        assert_eq!(b.req("up").unwrap().as_bool(), Some(true));
+        assert_eq!(b.req("shed").unwrap().as_usize(), Some(20));
+        assert_eq!(b.req("latency").unwrap(), &Json::Null);
+    }
+}

@@ -1,0 +1,286 @@
+//! The front-door router: pluggable dispatch policies that pick, for every
+//! arrival, an ordered preference list of boards. Admission itself stays
+//! with the per-board bounded queues — the router only *orders* boards, so
+//! one shared fallback scan ("walk the preference list, admit at the first
+//! board with admission-queue space, shed only when every up board is
+//! full") gives every policy the same no-needless-shed guarantee, in both
+//! execution twins.
+//!
+//! All policies reason about *drain time* — outstanding items divided by
+//! the board's Eq. 12 capacity — rather than raw counts, so a 2+6 board
+//! half as fast as its 4+4 neighbour is treated as twice as loaded at the
+//! same queue depth. Only [`DispatchPolicy::PowerOfTwo`] is randomized; its
+//! stream comes from a dedicated SplitMix64 RNG seeded by the run seed
+//! XOR [`DISPATCH_SALT`], so it can never collide with (or perturb) the
+//! per-board arrival streams.
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+/// XORed into the run seed for the router's sampling stream, keeping
+/// dispatch randomness distinct from every `base + 7919·i` arrival seed.
+pub const DISPATCH_SALT: u64 = 0x636c_7573_7465_72; // "cluster"
+
+/// How the front door orders boards for each arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate the first choice across up boards; fallback continues the
+    /// rotation. The baseline the smarter policies are measured against.
+    RoundRobin,
+    /// Least outstanding *work*: ascending estimated drain time
+    /// (outstanding / capacity), ties to the lower board index.
+    LeastOutstanding,
+    /// Weighted power-of-two-choices: sample two distinct boards with
+    /// probability proportional to capacity, keep the one with less drain
+    /// time; the loser and the remaining boards (by drain) follow as
+    /// fallbacks.
+    PowerOfTwo,
+}
+
+impl DispatchPolicy {
+    /// Parse the CLI form: `round-robin`, `least-outstanding`, or `p2c`.
+    pub fn parse(s: &str) -> Result<DispatchPolicy> {
+        match s {
+            "round-robin" | "rr" => Ok(DispatchPolicy::RoundRobin),
+            "least-outstanding" | "low" => Ok(DispatchPolicy::LeastOutstanding),
+            "p2c" | "power-of-two" => Ok(DispatchPolicy::PowerOfTwo),
+            other => anyhow::bail!(
+                "unknown dispatch policy {other:?} (round-robin|least-outstanding|p2c)"
+            ),
+        }
+    }
+
+    /// Stable display key (also what reports serialize).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastOutstanding => "least-outstanding",
+            DispatchPolicy::PowerOfTwo => "p2c",
+        }
+    }
+}
+
+/// Per-run router state: the policy, each board's capacity weight, the
+/// round-robin cursor, and the dispatch RNG. Both execution twins drive an
+/// identical `Router` in arrival order, so the p2c sampling stream lines up
+/// between DES and wall-clock runs.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: DispatchPolicy,
+    /// Per-board Eq. 12 capacity (imgs/s); the drain-time denominator and
+    /// the p2c sampling weight.
+    weights: Vec<f64>,
+    rr_next: usize,
+    rng: Rng,
+}
+
+impl Router {
+    pub fn new(policy: DispatchPolicy, weights: Vec<f64>, run_seed: u64) -> Result<Router> {
+        anyhow::ensure!(!weights.is_empty(), "router needs at least one board");
+        anyhow::ensure!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "board capacity weights must be positive, got {weights:?}"
+        );
+        Ok(Router {
+            policy,
+            weights,
+            rr_next: 0,
+            rng: Rng::new(run_seed ^ DISPATCH_SALT),
+        })
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Estimated seconds of queued work at board `i`.
+    fn drain(&self, outstanding: &[f64], i: usize) -> f64 {
+        outstanding[i] / self.weights[i]
+    }
+
+    /// Sample one index from `pool` with probability proportional to its
+    /// capacity weight (pool is never empty).
+    fn weighted_pick(&mut self, pool: &[usize]) -> usize {
+        let total: f64 = pool.iter().map(|&i| self.weights[i]).sum();
+        let mut r = self.rng.uniform() * total;
+        for &i in pool {
+            r -= self.weights[i];
+            if r < 0.0 {
+                return i;
+            }
+        }
+        *pool.last().expect("nonempty pool")
+    }
+
+    /// The full preference order over up boards for one arrival: the
+    /// policy's primary choice first, then the fallback order the shared
+    /// admission scan walks. Down boards never appear. Returns an empty
+    /// order when no board is up (the caller decides what a dead cluster
+    /// means).
+    ///
+    /// `outstanding[i]` is board `i`'s in-flight item count (admitted but
+    /// not yet completed) at the arrival instant.
+    pub fn preference(&mut self, outstanding: &[f64], up: &[bool]) -> Vec<usize> {
+        let n = self.weights.len();
+        debug_assert_eq!(outstanding.len(), n);
+        debug_assert_eq!(up.len(), n);
+        let mut ups: Vec<usize> = (0..n).filter(|&i| up[i]).collect();
+        if ups.is_empty() {
+            return ups;
+        }
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let start = self.rr_next;
+                let order: Vec<usize> =
+                    (0..n).map(|k| (start + k) % n).filter(|&i| up[i]).collect();
+                self.rr_next = (order[0] + 1) % n;
+                order
+            }
+            DispatchPolicy::LeastOutstanding => {
+                ups.sort_by(|&a, &b| {
+                    self.drain(outstanding, a)
+                        .total_cmp(&self.drain(outstanding, b))
+                        .then(a.cmp(&b))
+                });
+                ups
+            }
+            DispatchPolicy::PowerOfTwo => {
+                if ups.len() < 2 {
+                    return ups;
+                }
+                let a = self.weighted_pick(&ups);
+                let rest: Vec<usize> = ups.iter().copied().filter(|&i| i != a).collect();
+                let b = self.weighted_pick(&rest);
+                let (win, lose) = if self
+                    .drain(outstanding, b)
+                    .total_cmp(&self.drain(outstanding, a))
+                    .then(b.cmp(&a))
+                    .is_lt()
+                {
+                    (b, a)
+                } else {
+                    (a, b)
+                };
+                let mut order = vec![win, lose];
+                let mut tail: Vec<usize> =
+                    ups.into_iter().filter(|&i| i != win && i != lose).collect();
+                tail.sort_by(|&x, &y| {
+                    self.drain(outstanding, x)
+                        .total_cmp(&self.drain(outstanding, y))
+                        .then(x.cmp(&y))
+                });
+                order.extend(tail);
+                order
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_order(r: &mut Router, outstanding: &[f64], up: &[bool]) -> Vec<usize> {
+        let o = r.preference(outstanding, up);
+        assert_eq!(o.len(), up.iter().filter(|&&u| u).count(), "order covers every up board");
+        let mut sorted = o.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), o.len(), "no duplicate boards in {o:?}");
+        o
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects_garbage() {
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastOutstanding,
+            DispatchPolicy::PowerOfTwo,
+        ] {
+            assert_eq!(DispatchPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(DispatchPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_down_boards() {
+        let mut r = Router::new(DispatchPolicy::RoundRobin, vec![1.0; 3], 7).unwrap();
+        let up = [true, true, true];
+        assert_eq!(full_order(&mut r, &[0.0; 3], &up), vec![0, 1, 2]);
+        assert_eq!(full_order(&mut r, &[0.0; 3], &up), vec![1, 2, 0]);
+        assert_eq!(full_order(&mut r, &[0.0; 3], &up), vec![2, 0, 1]);
+        // Board 0 down: the rotation continues over the survivors.
+        let up = [false, true, true];
+        assert_eq!(full_order(&mut r, &[0.0; 3], &up), vec![1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_normalizes_by_capacity() {
+        // Board 1 has half the queue but a tenth of the capacity: more
+        // drain time, so board 0 must come first.
+        let mut r =
+            Router::new(DispatchPolicy::LeastOutstanding, vec![100.0, 10.0], 7).unwrap();
+        assert_eq!(full_order(&mut r, &[10.0, 5.0], &[true, true]), vec![0, 1]);
+        // Ties break to the lower index.
+        assert_eq!(full_order(&mut r, &[10.0, 1.0], &[true, true]), vec![0, 1]);
+    }
+
+    #[test]
+    fn p2c_prefers_less_drained_of_its_two_samples() {
+        let mut r =
+            Router::new(DispatchPolicy::PowerOfTwo, vec![50.0, 50.0, 50.0], 7).unwrap();
+        // Board 2 is massively backlogged: whichever pair is sampled, it can
+        // only win against an even worse board — with the others empty it
+        // must never be the primary choice.
+        for _ in 0..200 {
+            let o = full_order(&mut r, &[0.0, 0.0, 1000.0], &[true, true, true]);
+            assert_ne!(o[0], 2, "backlogged board became primary: {o:?}");
+        }
+    }
+
+    #[test]
+    fn p2c_sampling_is_capacity_weighted() {
+        let mut r =
+            Router::new(DispatchPolicy::PowerOfTwo, vec![80.0, 10.0, 10.0], 7).unwrap();
+        // Equal drain everywhere: the drain tie breaks to the lower index,
+        // so board 0 leads exactly when it is in the sampled pair. Weighted
+        // sampling puts it there ~98% of the time; uniform sampling only
+        // ~67% — the threshold separates the two.
+        let mut lead0 = 0;
+        for _ in 0..1000 {
+            if full_order(&mut r, &[0.0; 3], &[true; 3])[0] == 0 {
+                lead0 += 1;
+            }
+        }
+        assert!(lead0 > 900, "big board led only {lead0}/1000");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_degenerate_inputs() {
+        let mut a = Router::new(DispatchPolicy::PowerOfTwo, vec![3.0, 2.0, 1.0], 42).unwrap();
+        let mut b = Router::new(DispatchPolicy::PowerOfTwo, vec![3.0, 2.0, 1.0], 42).unwrap();
+        for k in 0..100 {
+            let out = [k as f64, 2.0, 5.0];
+            assert_eq!(
+                a.preference(&out, &[true, true, true]),
+                b.preference(&out, &[true, true, true])
+            );
+        }
+        // One board up: every policy returns just that board.
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastOutstanding,
+            DispatchPolicy::PowerOfTwo,
+        ] {
+            let mut r = Router::new(p, vec![1.0, 1.0], 7).unwrap();
+            assert_eq!(r.preference(&[0.0, 0.0], &[false, true]), vec![1]);
+        }
+        // No board up: empty order, the caller's problem.
+        let mut r = Router::new(DispatchPolicy::RoundRobin, vec![1.0], 7).unwrap();
+        assert!(r.preference(&[0.0], &[false]).is_empty());
+        // Bad weights are rejected at construction.
+        assert!(Router::new(DispatchPolicy::RoundRobin, vec![], 7).is_err());
+        assert!(Router::new(DispatchPolicy::RoundRobin, vec![0.0], 7).is_err());
+    }
+}

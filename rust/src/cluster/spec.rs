@@ -1,0 +1,229 @@
+//! Board and cluster descriptions: which heterogeneous big.LITTLE boards
+//! make up the fleet, and which workloads it serves.
+//!
+//! A [`BoardSpec`] names one board's core configuration — inline
+//! (`cores=4+4`) or via a platform config file (`platform=configs/f.json`,
+//! whose TimeMatrix parameters then describe that board's silicon) — plus
+//! an optional pinned arrival-stream seed. The CLI form is a repeatable
+//! `--board key=value,...` option parsed by [`BoardSpec::parse`], mirroring
+//! `--tenant`.
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::tenancy::TenantSpec;
+
+/// One board of the cluster: a big.LITTLE core configuration with its own
+/// TimeMatrix source (via the platform config) and arrival-stream seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardSpec {
+    /// Display name; defaults to the `BIG+SMALL` core display
+    /// (auto-suffixed `#k` when several boards share a configuration).
+    pub name: String,
+    /// Big-cluster cores.
+    pub big: usize,
+    /// Small-cluster cores.
+    pub small: usize,
+    /// Optional platform config file: silicon parameters (frequencies,
+    /// MAC/memory costs, …) beyond the core counts.
+    pub platform: Option<String>,
+    /// Pinned base seed for this board's arrival streams; `None` derives
+    /// one from the run's `--seed` and the board index.
+    pub seed: Option<u64>,
+}
+
+impl BoardSpec {
+    /// A board on the default platform with the given core budget.
+    pub fn new(big: usize, small: usize) -> BoardSpec {
+        BoardSpec {
+            name: format!("{big}+{small}"),
+            big,
+            small,
+            platform: None,
+            seed: None,
+        }
+    }
+
+    fn default_name(&self) -> String {
+        format!("{}+{}", self.big, self.small)
+    }
+
+    /// Parse one `--board` value: comma-separated `key=value` pairs.
+    ///
+    /// Keys: `cores=BIG+SMALL` and/or `platform=FILE` (at least one; when
+    /// both are given, `cores=` overrides the file's core counts),
+    /// `seed=N`, `name=LABEL`.
+    pub fn parse(s: &str) -> Result<BoardSpec> {
+        let mut cores: Option<(usize, usize)> = None;
+        let mut platform: Option<String> = None;
+        let mut seed = None;
+        let mut name: Option<String> = None;
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("bad board field {part:?} (expected key=value)"))?;
+            match k {
+                "cores" => {
+                    let (b, sm) = v.split_once('+').with_context(|| {
+                        format!("bad board cores {v:?} (expected BIG+SMALL, e.g. 4+4)")
+                    })?;
+                    let big: usize =
+                        b.parse().map_err(|_| anyhow::anyhow!("bad big-core count {b:?}"))?;
+                    let small: usize = sm
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad small-core count {sm:?}"))?;
+                    anyhow::ensure!(
+                        big >= 1 && small >= 1,
+                        "board needs at least one core per cluster, got {v:?}"
+                    );
+                    cores = Some((big, small));
+                }
+                "platform" => platform = Some(v.to_string()),
+                "seed" => {
+                    let n: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad board seed {v:?}"))?;
+                    // ClusterPlan serializes seeds as JSON numbers (f64):
+                    // anything past 2^53 would round silently on save/load.
+                    anyhow::ensure!(
+                        n < (1u64 << 53),
+                        "board seed {n} exceeds 2^53 and would lose precision \
+                         in the plan artifact"
+                    );
+                    seed = Some(n);
+                }
+                "name" => name = Some(v.to_string()),
+                other => anyhow::bail!(
+                    "unknown board field {other:?} (cores|platform|seed|name)"
+                ),
+            }
+        }
+        let (big, small) = match (cores, &platform) {
+            (Some(c), _) => c,
+            (None, Some(p)) => {
+                let cfg = Config::load(std::path::Path::new(p))?;
+                (cfg.platform.big.cores, cfg.platform.small.cores)
+            }
+            (None, None) => anyhow::bail!(
+                "board spec {s:?} needs cores=BIG+SMALL or platform=FILE"
+            ),
+        };
+        let mut spec = BoardSpec { name: String::new(), big, small, platform, seed };
+        spec.name = name.unwrap_or_else(|| spec.default_name());
+        Ok(spec)
+    }
+
+    /// Parse every `--board` occurrence, de-duplicating default names
+    /// (`4+4`, `4+4#2`, …). Explicitly colliding `name=` labels are an
+    /// error.
+    pub fn parse_all(values: &[&str]) -> Result<Vec<BoardSpec>> {
+        anyhow::ensure!(!values.is_empty(), "need at least one --board spec");
+        let mut out: Vec<BoardSpec> = Vec::with_capacity(values.len());
+        for v in values {
+            let mut spec = BoardSpec::parse(v)?;
+            let explicit = spec.name != spec.default_name();
+            let mut k = 1;
+            while out.iter().any(|b| b.name == spec.name) {
+                anyhow::ensure!(
+                    !explicit,
+                    "duplicate board name {:?} (give each board a unique name=)",
+                    spec.name
+                );
+                k += 1;
+                spec.name = format!("{}#{k}", spec.default_name());
+            }
+            out.push(spec);
+        }
+        Ok(out)
+    }
+
+    /// The board's full [`Config`]: its platform file (or the run's base
+    /// config) with this board's core counts applied on top.
+    pub fn config(&self, base: &Config) -> Result<Config> {
+        let mut cfg = match &self.platform {
+            Some(p) => Config::load(std::path::Path::new(p))
+                .with_context(|| format!("board {:?} platform", self.name))?,
+            None => base.clone(),
+        };
+        cfg.platform.big.cores = self.big;
+        cfg.platform.small.cores = self.small;
+        Ok(cfg)
+    }
+}
+
+/// The whole fleet: N heterogeneous boards serving a common set of
+/// workloads. One workload per cluster is the PICO-style "shard one
+/// network's traffic" shape; several workloads co-serve on *every* board
+/// through per-board [`MultiPlan`](crate::tenancy::MultiPlan)s.
+///
+/// Workload `rate_hz` values are *cluster-wide* offered rates; the
+/// cluster DSE ([`ClusterPlan::compile`](crate::cluster::ClusterPlan::compile))
+/// splits them across boards by capacity share.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub boards: Vec<BoardSpec>,
+    pub workloads: Vec<TenantSpec>,
+    /// Per-fleet replica cap inside each board's search.
+    pub max_replicas: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(boards: Vec<BoardSpec>, workloads: Vec<TenantSpec>) -> ClusterSpec {
+        ClusterSpec { boards, workloads, max_replicas: 4 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_examples() {
+        let b = BoardSpec::parse("cores=4+4").unwrap();
+        assert_eq!((b.big, b.small), (4, 4));
+        assert_eq!(b.name, "4+4");
+        assert_eq!(b.seed, None);
+
+        let b = BoardSpec::parse("cores=2+6,seed=11,name=edge-east").unwrap();
+        assert_eq!((b.big, b.small), (2, 6));
+        assert_eq!(b.name, "edge-east");
+        assert_eq!(b.seed, Some(11));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(BoardSpec::parse("").is_err(), "no cores");
+        assert!(BoardSpec::parse("cores=4x4").is_err(), "bad separator");
+        assert!(BoardSpec::parse("cores=0+4").is_err(), "zero cores");
+        assert!(BoardSpec::parse("cores=4+4,turbo=1").is_err(), "unknown key");
+        assert!(BoardSpec::parse("seed=5").is_err(), "seed without cores/platform");
+        // The f64-JSON seed cap, enforced at parse time.
+        let err = BoardSpec::parse(&format!("cores=4+4,seed={}", 1u64 << 53)).unwrap_err();
+        assert!(err.to_string().contains("2^53"), "{err}");
+        assert!(BoardSpec::parse(&format!("cores=4+4,seed={}", (1u64 << 53) - 1)).is_ok());
+    }
+
+    #[test]
+    fn parse_all_suffixes_duplicate_default_names() {
+        let boards = BoardSpec::parse_all(&["cores=4+4", "cores=4+4", "cores=2+6"]).unwrap();
+        assert_eq!(boards[0].name, "4+4");
+        assert_eq!(boards[1].name, "4+4#2");
+        assert_eq!(boards[2].name, "2+6");
+        let err = BoardSpec::parse_all(&["cores=4+4,name=x", "cores=2+6,name=x"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate board name"), "{err}");
+    }
+
+    #[test]
+    fn config_overrides_core_counts_on_the_base_platform() {
+        let base = Config::default();
+        let cfg = BoardSpec::parse("cores=2+6").unwrap().config(&base).unwrap();
+        assert_eq!(cfg.platform.big.cores, 2);
+        assert_eq!(cfg.platform.small.cores, 6);
+        // Everything else inherits the base platform.
+        assert_eq!(cfg.platform.name, base.platform.name);
+        assert!(BoardSpec::parse("cores=4+4,platform=/nonexistent.json")
+            .unwrap()
+            .config(&base)
+            .is_err());
+    }
+}

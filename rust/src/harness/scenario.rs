@@ -19,6 +19,9 @@ use anyhow::{Context, Result};
 
 use crate::adapt::{self, AdaptOptions, ClusterThrottle};
 use crate::api::{DeployOptions, Plan, PlanSpec, Strategy};
+use crate::cluster::{
+    BoardSpec, ClusterPlan, ClusterServeOptions, ClusterSpec, DispatchPolicy,
+};
 use crate::cnn::zoo;
 use crate::config::Config;
 use crate::perfmodel::TimeMatrix;
@@ -57,6 +60,15 @@ enum Spec {
     /// Multi-tenant co-serving of seeded Poisson streams through the joint
     /// plan's per-tenant fleets; the metric is the weighted served rate.
     Multi { tenants: &'static [(&'static str, f64)], max_replicas: usize },
+    /// Cluster-scale serving: a fleet of heterogeneous boards behind one
+    /// front-door router, offered `saturation ×` the fleet's Σ Eq. 12
+    /// capacity; the metric is the aggregate served rate.
+    Cluster {
+        boards: &'static [(usize, usize)],
+        net: &'static str,
+        saturation: f64,
+        policy: DispatchPolicy,
+    },
 }
 
 /// One registry entry: a named workload runnable on either backend.
@@ -64,8 +76,8 @@ enum Spec {
 pub struct Scenario {
     /// Registry name (`mode/network[...]`), unique across the registry.
     pub name: String,
-    /// Serving mode: `serial`, `pipelined`, `replicated`, `adaptive`, or
-    /// `multi-tenant`.
+    /// Serving mode: `serial`, `pipelined`, `replicated`, `adaptive`,
+    /// `multi-tenant`, or `cluster`.
     pub mode: &'static str,
     /// Stream length (items per run; arrivals per tenant for multi-tenant).
     pub images: usize,
@@ -162,6 +174,22 @@ impl Scenario {
                 };
                 Ok(report.weighted_throughput)
             }
+            Spec::Cluster { boards, net, saturation, policy } => {
+                let cp = self.compile_cluster(boards, net, *saturation)?;
+                let opts = ClusterServeOptions {
+                    images: self.images,
+                    queue_cap: self.queue_cap,
+                    seed,
+                    time_scale: self.time_scale,
+                    policy: *policy,
+                    ..Default::default()
+                };
+                let report = match backend {
+                    Backend::Des => cp.simulate(&opts)?,
+                    Backend::Wall => cp.deploy(&opts)?,
+                };
+                Ok(report.throughput)
+            }
         }
     }
 
@@ -181,6 +209,9 @@ impl Scenario {
                 let mp = self.compile_multi(tenants, *max_replicas)?;
                 Ok(mp.tenants.iter().map(|t| t.weight * t.plan.throughput).sum())
             }
+            Spec::Cluster { boards, net, saturation, .. } => {
+                Ok(self.compile_cluster(boards, net, *saturation)?.capacity())
+            }
         }
     }
 
@@ -196,6 +227,26 @@ impl Scenario {
         let specs: Vec<TenantSpec> =
             tenants.iter().map(|(n, r)| TenantSpec::new(n, *r)).collect();
         MultiPlan::compile(&specs, &Config::default(), max_replicas)
+    }
+
+    /// Compile the fleet at a placeholder rate, then rescale the workload
+    /// to `saturation ×` the fleet's Σ Eq. 12 capacity. Rate shares (and
+    /// the single-workload per-board plans) are rate-independent, so the
+    /// rescale only changes the offered arrival stream.
+    fn compile_cluster(
+        &self,
+        boards: &[(usize, usize)],
+        net: &str,
+        saturation: f64,
+    ) -> Result<ClusterPlan> {
+        let spec = ClusterSpec {
+            boards: boards.iter().map(|&(b, s)| BoardSpec::new(b, s)).collect(),
+            workloads: vec![TenantSpec::new(net, 1.0)],
+            max_replicas: 2,
+        };
+        let mut cp = ClusterPlan::compile(&spec, &Config::default())?;
+        cp.workloads[0].rate_hz = saturation * cp.capacity();
+        Ok(cp)
     }
 
     fn deploy_opts(&self, seed: u64) -> DeployOptions {
@@ -231,8 +282,13 @@ fn scenario(
 /// allocations per entry.
 static MULTI_MIX: [(&str, f64); 2] = [("alexnet", 30.0), ("squeezenet", 60.0)];
 
+/// Cluster board mixes (big, small core counts per board), `&'static` for
+/// the same reason.
+static CLUSTER_TWIN_4P4: [(usize, usize); 2] = [(4, 4), (4, 4)];
+static CLUSTER_HETERO: [(usize, usize); 2] = [(4, 4), (2, 6)];
+
 /// Every benchmark scenario: one per (serving mode, network) pair worth
-/// tracking, spanning all five serving modes shipped so far. Names are
+/// tracking, spanning all six serving modes shipped so far. Names are
 /// unique; each runs on both backends.
 pub fn registry() -> Vec<Scenario> {
     vec![
@@ -305,6 +361,30 @@ pub fn registry() -> Vec<Scenario> {
             0.35,
             Spec::Multi { tenants: &MULTI_MIX, max_replicas: 2 },
         ),
+        scenario(
+            "cluster/alexnet-2x4+4",
+            "cluster",
+            200,
+            0.35,
+            Spec::Cluster {
+                boards: &CLUSTER_TWIN_4P4,
+                net: "alexnet",
+                saturation: 3.0,
+                policy: DispatchPolicy::LeastOutstanding,
+            },
+        ),
+        scenario(
+            "cluster/squeezenet-4+4,2+6-p2c",
+            "cluster",
+            200,
+            0.35,
+            Spec::Cluster {
+                boards: &CLUSTER_HETERO,
+                net: "squeezenet",
+                saturation: 3.0,
+                policy: DispatchPolicy::PowerOfTwo,
+            },
+        ),
     ]
 }
 
@@ -370,11 +450,12 @@ mod tests {
     #[test]
     fn registry_covers_the_issue_floor() {
         let reg = registry();
-        assert!(reg.len() >= 8, "only {} scenarios", reg.len());
+        assert!(reg.len() >= 11, "only {} scenarios", reg.len());
         let mut modes: Vec<&str> = reg.iter().map(|s| s.mode).collect();
         modes.sort_unstable();
         modes.dedup();
-        assert!(modes.len() >= 4, "only {} modes: {modes:?}", modes.len());
+        assert!(modes.len() >= 6, "only {} modes: {modes:?}", modes.len());
+        assert!(modes.contains(&"cluster"), "cluster mode missing: {modes:?}");
         let mut names: Vec<&String> = reg.iter().map(|s| &s.name).collect();
         names.sort();
         let n = names.len();
@@ -410,7 +491,11 @@ mod tests {
     fn des_run_is_deterministic_and_capacity_bounded() {
         // One representative per spec kind (full coverage lives in the
         // differential suite, which also runs the wall twin).
-        for name in ["pipelined/alexnet", "multi/alexnet30+squeezenet60"] {
+        for name in [
+            "pipelined/alexnet",
+            "multi/alexnet30+squeezenet60",
+            "cluster/alexnet-2x4+4",
+        ] {
             let s = registry().into_iter().find(|s| s.name == name).unwrap();
             let a = s.run(Backend::Des, 7).unwrap();
             let b = s.run(Backend::Des, 7).unwrap();

@@ -36,6 +36,16 @@
 //! door admits (or sheds) each tenant's Poisson arrivals
 //! (`pipeit plan-multi / serve-multi / simulate-multi`).
 //!
+//! The [`cluster`] subsystem scales past one board: a fleet of
+//! heterogeneous big.LITTLE boards (mixed core configs, each with its own
+//! TimeMatrix source) behind a single front-door router. The cluster DSE
+//! reuses the per-board searches and composes the results into a
+//! serializable [`cluster::ClusterPlan`]; pluggable dispatch policies
+//! (round-robin, least-outstanding-work, weighted power-of-two-choices)
+//! route live traffic over per-board bounded admission queues, in both a
+//! streaming deterministic DES and a wall-clock multi-fleet deploy
+//! (`pipeit plan-cluster / serve-cluster / simulate-cluster`).
+//!
 //! The [`harness`] subsystem keeps all of the above measurable: a scenario
 //! registry spanning every serving mode (each in its DES and wall-clock
 //! twin), robust statistics, and a schema-versioned `BENCH_<n>.json`
@@ -49,6 +59,7 @@
 pub mod adapt;
 pub mod api;
 pub mod baselines;
+pub mod cluster;
 pub mod cnn;
 pub mod config;
 pub mod coordinator;

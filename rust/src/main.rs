@@ -14,13 +14,17 @@ use anyhow::{Context, Result};
 
 use pipeit::adapt::{self, AdaptOptions, ClusterThrottle, DriftConfig};
 use pipeit::api::{DeployOptions, Plan, PlanSpec, Strategy, TimeSource};
+use pipeit::cluster::{
+    BoardSpec, ClusterPlan, ClusterServeOptions, ClusterSpec, DispatchPolicy,
+};
 use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::dse;
 use pipeit::harness::{self, BenchReport, RunnerOptions, Suite};
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
 use pipeit::reports::{
-    render_bench, render_bench_compare, render_multi_serve, render_serve, Reporter,
+    render_bench, render_bench_compare, render_cluster, render_multi_serve,
+    render_serve, Reporter,
 };
 use pipeit::simulator::arrivals::ArrivalSpec;
 use pipeit::simulator::platform::CoreType;
@@ -34,7 +38,7 @@ use pipeit::util::table::{f, Table};
 const USAGE: &str = "\
 pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
 
-USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|bench|explore|predict|count|tables> [options]
+USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cluster|serve-cluster|simulate-cluster|bench|explore|predict|count|tables> [options]
 
   plan       --net N [--predicted] [--platform F] [--out plan.json]
              [--strategy serial|pipeline|replicated|exhaustive|energy]
@@ -83,6 +87,22 @@ USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|bench|e
                                                fleets + shared shed-on-full front door
   simulate-multi --plan mp.json | --tenant ... [--images 2000] [--queue-cap 2]
              [--admission-cap 8] [--seed 7]    DES co-simulation of the same board
+  plan-cluster --board cores=4+4 --board cores=2+6,seed=11 --net alexnet --rate 200
+             [--tenant ... instead of --net/--rate] [--predicted] [--platform F]
+             [--max-replicas 4] [--out cp.json]  cluster DSE over N heterogeneous
+                                               boards: per-board search (replicated
+                                               or joint), capacity-proportional
+                                               traffic shares (board keys: cores,
+                                               platform, seed, name)
+  serve-cluster    --plan cp.json | --board ... [--images 240]
+             [--policy round-robin|least-outstanding|p2c] [--queue-cap 2]
+             [--admission-cap 8] [--time-scale 0.05] [--seed 7]
+             [--disable-board NAME]            wall-clock fleet-of-boards serving:
+                                               one run_fleet per board fleet behind
+                                               a single router thread
+  simulate-cluster --plan cp.json | --board ... [--images 2000] [--policy P]
+             [--disable-board NAME] [--seed 7]  deterministic cluster DES (seeded
+                                               per-board arrival/dispatch streams)
   bench      [--suite quick|full] [--seed 7] [--reps 5] [--warmup 1]
              [--out BENCH_0.json]              run the benchmark harness: every
                                                serving mode x execution twin,
@@ -183,6 +203,46 @@ fn main() -> Result<()> {
             let report = if deploy { mp.deploy(&opts)? } else { mp.simulate(&opts)? };
             println!();
             print!("{}", render_multi_serve(&report));
+            write_metrics(&args, &report.to_json())?;
+        }
+        "plan-cluster" => {
+            let spec = cluster_spec_from_args(&args)?;
+            let cp = ClusterPlan::compile(&spec, &cfg)?;
+            print!("{}", cp.summary());
+            if let Some(out) = args.get("out") {
+                cp.save(Path::new(out))?;
+                println!("plan saved : {out}");
+            }
+        }
+        "serve-cluster" | "simulate-cluster" => {
+            let cp = if let Some(path) = args.get("plan") {
+                anyhow::ensure!(
+                    args.get_all("board").is_empty(),
+                    "--board is a plan-compile option; the plan file fixes the \
+                     fleet (recompile with `pipeit plan-cluster --board ...`)"
+                );
+                for key in ["net", "rate", "tenant", "max-replicas"] {
+                    anyhow::ensure!(
+                        args.get(key).is_none(),
+                        "--{key} is a plan-compile option; the plan file fixes the \
+                         design (recompile with `pipeit plan-cluster --{key} ...`)"
+                    );
+                }
+                anyhow::ensure!(
+                    !args.has_flag("predicted"),
+                    "--predicted is a plan-compile option; the plan file fixes the \
+                     time source (recompile with `pipeit plan-cluster --predicted ...`)"
+                );
+                ClusterPlan::load(Path::new(path))?
+            } else {
+                ClusterPlan::compile(&cluster_spec_from_args(&args)?, &cfg)?
+            };
+            let deploy = cmd == "serve-cluster";
+            let opts = cluster_opts(&args, if deploy { 240 } else { 2000 })?;
+            print!("{}", cp.summary());
+            let report = if deploy { cp.deploy(&opts)? } else { cp.simulate(&opts)? };
+            println!();
+            print!("{}", render_cluster(&report));
             write_metrics(&args, &report.to_json())?;
         }
         "bench" => bench(&args)?,
@@ -442,6 +502,71 @@ fn tenant_specs_from_args(args: &Args) -> Result<Vec<TenantSpec>> {
         }
     }
     Ok(specs)
+}
+
+/// Parse the cluster fleet (`--board`, repeatable) and its workloads —
+/// either the single-network shorthand `--net N --rate HZ` or full
+/// `--tenant` specs; `--predicted` switches every workload to the fitted
+/// predictor.
+fn cluster_spec_from_args(args: &Args) -> Result<ClusterSpec> {
+    let board_vals = args.get_all("board");
+    anyhow::ensure!(
+        !board_vals.is_empty(),
+        "need at least one --board cores=BIG+SMALL[,platform=F][,seed=N][,name=L] \
+         spec (or --plan cp.json)\n\n{USAGE}"
+    );
+    let boards = BoardSpec::parse_all(&board_vals)?;
+    let tenant_vals = args.get_all("tenant");
+    let mut workloads = if tenant_vals.is_empty() {
+        let net = args
+            .get("net")
+            .context("cluster workloads: --net N --rate HZ, or --tenant specs")?;
+        anyhow::ensure!(
+            args.get("rate").is_some(),
+            "--rate HZ (cluster-wide offered images/s) is required with --net"
+        );
+        let rate = args.get_f64("rate", 0.0)?;
+        anyhow::ensure!(rate > 0.0, "--rate must be positive");
+        vec![TenantSpec::new(net, rate)]
+    } else {
+        anyhow::ensure!(
+            args.get("net").is_none() && args.get("rate").is_none(),
+            "--net/--rate and --tenant are alternative workload forms; use one"
+        );
+        TenantSpec::parse_all(&tenant_vals)?
+    };
+    if args.has_flag("predicted") {
+        for w in &mut workloads {
+            w.time_source = TimeSource::Predicted;
+        }
+    }
+    Ok(ClusterSpec {
+        boards,
+        workloads,
+        max_replicas: args.get_usize("max-replicas", 4)?,
+    })
+}
+
+/// Runtime knobs shared by `serve-cluster` and `simulate-cluster`.
+fn cluster_opts(args: &Args, default_images: usize) -> Result<ClusterServeOptions> {
+    let d = ClusterServeOptions::default();
+    Ok(ClusterServeOptions {
+        images: args.get_usize("images", default_images)?,
+        queue_cap: args.get_usize("queue-cap", d.queue_cap)?,
+        admission_cap: args.get_usize("admission-cap", d.admission_cap)?,
+        seed: args.get_usize("seed", d.seed as usize)? as u64,
+        time_scale: args.get_f64("time-scale", d.time_scale)?,
+        uniform_arrivals: false,
+        policy: match args.get("policy") {
+            Some(p) => DispatchPolicy::parse(p)?,
+            None => d.policy,
+        },
+        disabled: args
+            .get_all("disable-board")
+            .into_iter()
+            .map(String::from)
+            .collect(),
+    })
 }
 
 /// Runtime knobs shared by the multi-tenant serve/simulate forms and the

@@ -6,6 +6,7 @@
 
 use crate::api::{ServeMode, ServeReport};
 use crate::baselines;
+use crate::cluster::{ClusterServeMode, ClusterServeReport};
 use crate::harness::{BenchComparison, BenchReport, Verdict};
 use crate::tenancy::{MultiServeMode, MultiServeReport};
 use crate::cnn::layer::LayerKind;
@@ -154,6 +155,64 @@ pub fn render_multi_serve(r: &MultiServeReport) -> String {
             };
             s.push_str(&format!(
                 "  latency p50={:.1}ms p95={:.1}ms p99={:.1}ms{sla}\n",
+                l.p50 * 1e3,
+                l.p95 * 1e3,
+                l.p99 * 1e3
+            ));
+        }
+    }
+    s
+}
+
+/// Render the unified [`ClusterServeReport`] — the ONE print shape for
+/// cluster serving, shared by the DES co-simulation (`simulate-cluster`)
+/// and the wall-clock deploy (`serve-cluster`).
+pub fn render_cluster(r: &ClusterServeReport) -> String {
+    let mode = match r.mode {
+        ClusterServeMode::Des => "DES".to_string(),
+        ClusterServeMode::Synthetic { time_scale } => {
+            format!("wall-clock, time-scale {time_scale}, normalized")
+        }
+    };
+    let mut s = format!(
+        "cluster    : {} boards, served={} shed={} wall={:.3}s ({mode})\n",
+        r.boards.len(),
+        r.images,
+        r.shed,
+        r.wall_s
+    );
+    s.push_str(&format!("policy     : {}\n", r.policy.name()));
+    s.push_str(&format!(
+        "aggregate  : {:.2} imgs/s vs {:.2} Σ eq12 capacity ({:.0}%)\n",
+        r.throughput,
+        r.capacity,
+        if r.capacity > 0.0 { 100.0 * r.throughput / r.capacity } else { 0.0 }
+    ));
+    if let Some(l) = r.latency {
+        s.push_str(&format!(
+            "latency    : p50={:.1}ms p95={:.1}ms p99={:.1}ms (merged)\n",
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3
+        ));
+    }
+    for b in &r.boards {
+        let down = if b.up { "" } else { "  [down]" };
+        s.push_str(&format!(
+            "board {:<12} {:<6} {}  share={:.2}  cap {:.2}/s{down}\n",
+            b.name, b.budget, b.pipeline, b.rate_share, b.capacity
+        ));
+        s.push_str(&format!(
+            "  served {:.2}/s  offered={} admitted={} shed={} util={:.0}%\n",
+            b.throughput,
+            b.offered,
+            b.admitted,
+            b.shed,
+            100.0 * b.utilization
+        ));
+        if let Some(l) = b.latency {
+            s.push_str(&format!(
+                "  latency p50={:.1}ms p95={:.1}ms p99={:.1}ms\n",
                 l.p50 * 1e3,
                 l.p95 * 1e3,
                 l.p99 * 1e3
@@ -1041,6 +1100,42 @@ mod tests {
         assert!(s.contains("SLAs       : 1/1 met"), "{s}");
         assert!(s.contains("board util"), "{s}");
         assert!(s.contains("SLA p99<=10000ms: OK"), "{s}");
+    }
+
+    #[test]
+    fn render_cluster_unifies_both_backends_and_marks_down_boards() {
+        use crate::cluster::{
+            BoardSpec, ClusterPlan, ClusterServeOptions, ClusterSpec, DispatchPolicy,
+        };
+        use crate::tenancy::TenantSpec;
+        let spec = ClusterSpec::new(
+            vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+            vec![TenantSpec::new("alexnet", 30.0)],
+        );
+        let cp = ClusterPlan::compile(&spec, &Config::default()).unwrap();
+        let opts = ClusterServeOptions {
+            images: 120,
+            policy: DispatchPolicy::PowerOfTwo,
+            ..Default::default()
+        };
+        let s = render_cluster(&cp.simulate(&opts).unwrap());
+        assert!(s.contains("cluster    : 2 boards"), "{s}");
+        assert!(s.contains("(DES)"), "{s}");
+        assert!(s.contains("policy     : p2c"), "{s}");
+        assert!(s.contains("Σ eq12 capacity"), "{s}");
+        assert!(s.contains("board 4+4"), "{s}");
+        assert!(s.contains("board 2+6"), "{s}");
+        assert!(!s.contains("[down]"), "{s}");
+
+        // A failure drill renders through the SAME shape, with the down
+        // board marked and zero-admitted but still listed.
+        let drill = ClusterServeOptions {
+            disabled: vec!["2+6".into()],
+            ..opts
+        };
+        let s = render_cluster(&cp.simulate(&drill).unwrap());
+        assert!(s.contains("[down]"), "{s}");
+        assert!(s.contains("admitted=0"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Cluster-scale serving acceptance suite (ISSUE 7): the heterogeneous
+//! fleet behind one front door must be deterministic, lossless across the
+//! plan artifact, capacity-honest under saturation, and strictly better
+//! with load-aware dispatch than with blind round-robin.
+//!
+//! These tests exercise the public `pipeit::cluster` surface the way the
+//! CLI does (compile → save → load → simulate/deploy) plus the raw
+//! streaming DES engine at the ≥1M-arrival scale it was built for.
+
+use std::fs;
+
+use pipeit::cluster::{
+    cluster_arrivals, simulate_cluster_streams, BoardSpec, ClusterPlan,
+    ClusterServeOptions, ClusterSpec, DispatchPolicy,
+};
+use pipeit::config::Config;
+use pipeit::reports::render_cluster;
+use pipeit::simulator::arrivals::poisson_arrivals;
+use pipeit::tenancy::TenantSpec;
+
+fn compile(boards: Vec<BoardSpec>, net: &str, rate_hz: f64) -> ClusterPlan {
+    let spec = ClusterSpec {
+        boards,
+        workloads: vec![TenantSpec::new(net, rate_hz)],
+        max_replicas: 2,
+    };
+    ClusterPlan::compile(&spec, &Config::default()).unwrap()
+}
+
+fn p99(mut latencies: Vec<f64>) -> f64 {
+    assert!(!latencies.is_empty());
+    latencies.sort_by(f64::total_cmp);
+    latencies[(latencies.len() - 1) * 99 / 100]
+}
+
+#[test]
+fn same_seed_des_runs_are_bit_identical_on_a_compiled_plan() {
+    let cp = compile(
+        vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6)],
+        "alexnet",
+        90.0,
+    );
+    let opts = ClusterServeOptions {
+        images: 2000,
+        policy: DispatchPolicy::PowerOfTwo,
+        ..Default::default()
+    };
+    let a = cp.simulate(&opts).unwrap();
+    let b = cp.simulate(&opts).unwrap();
+    assert_eq!(a, b, "same plan, same seed, same options must be bit-identical");
+    assert_eq!(a.images + a.shed, 2000);
+}
+
+#[test]
+fn streaming_engine_digests_a_million_arrivals_deterministically() {
+    // Two synthetic single-stage boards, offered slightly above their
+    // joint capacity so the admission path (queues, shedding, fallback)
+    // stays hot for the whole run.
+    let board_fleets = vec![
+        vec![vec![vec![0.0004]]], // 2500 imgs/s
+        vec![vec![vec![0.0010]]], // 1000 imgs/s
+    ];
+    let weights = [2500.0, 1000.0];
+    let up = [true, true];
+    let arrivals: Vec<(f64, usize)> =
+        (0..1_000_000).map(|i| (i as f64 * 2.5e-4, 0)).collect(); // 4000/s
+    let run = || {
+        simulate_cluster_streams(
+            &board_fleets,
+            &weights,
+            &up,
+            &arrivals,
+            DispatchPolicy::PowerOfTwo,
+            2,
+            8,
+            99,
+        )
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "1M-arrival DES must be bit-identical run to run");
+    let admitted: usize = a.iter().map(|o| o.admitted).sum();
+    let shed: usize = a.iter().map(|o| o.shed).sum();
+    assert_eq!(admitted + shed, 1_000_000, "front door lost items");
+    assert!(shed > 0, "offered 4000/s over ~3500/s capacity must shed");
+}
+
+#[test]
+fn saturated_heterogeneous_fleet_serves_90pct_of_summed_eq12_capacity() {
+    let boards = vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6), BoardSpec::new(4, 2)];
+    let mut cp = compile(boards, "alexnet", 1.0);
+    let capacity = cp.capacity();
+    cp.workloads[0].rate_hz = 3.0 * capacity; // saturate the whole fleet
+    let opts = ClusterServeOptions {
+        images: 4000,
+        policy: DispatchPolicy::LeastOutstanding,
+        ..Default::default()
+    };
+    let report = cp.simulate(&opts).unwrap();
+    assert!(report.shed > 0, "3x overload must shed");
+    assert!(
+        report.throughput >= 0.90 * capacity,
+        "served {:.2} imgs/s < 90% of the fleet's Eq. 12 capacity {:.2}",
+        report.throughput,
+        capacity
+    );
+    assert!(
+        report.throughput <= capacity * 1.05,
+        "served {:.2} imgs/s exceeds Eq. 12 capacity {:.2}",
+        report.throughput,
+        capacity
+    );
+}
+
+#[test]
+fn p2c_beats_round_robin_p99_on_an_asymmetric_board_mix() {
+    // One fast board (100 imgs/s) next to one 8x slower (12.5 imgs/s),
+    // offered 60/s: blind round-robin drives half the traffic into the
+    // slow board's queue; capacity-weighted p2c mostly avoids it.
+    let board_fleets = vec![vec![vec![vec![0.01]]], vec![vec![vec![0.08]]]];
+    let weights = [100.0, 12.5];
+    let up = [true, true];
+    let arrivals: Vec<(f64, usize)> =
+        poisson_arrivals(60.0, 4000, 11).into_iter().map(|t| (t, 0)).collect();
+    let run = |policy| {
+        let outcomes = simulate_cluster_streams(
+            &board_fleets,
+            &weights,
+            &up,
+            &arrivals,
+            policy,
+            2,
+            8,
+            7,
+        )
+        .unwrap();
+        let admitted: usize = outcomes.iter().map(|o| o.admitted).sum();
+        let shed: usize = outcomes.iter().map(|o| o.shed).sum();
+        assert_eq!(admitted + shed, 4000);
+        p99(outcomes.into_iter().flat_map(|o| o.latencies).collect())
+    };
+    let rr = run(DispatchPolicy::RoundRobin);
+    let p2c = run(DispatchPolicy::PowerOfTwo);
+    assert!(
+        p2c < rr,
+        "p2c p99 {p2c:.3}s must beat round-robin p99 {rr:.3}s on an \
+         asymmetric mix"
+    );
+}
+
+#[test]
+fn low_and_p2c_never_shed_while_any_admission_queue_has_capacity() {
+    // Three glacial boards: nothing completes during the burst, so every
+    // admission after the first per board sits in that board's queue. A
+    // burst of exactly boards x admission_cap items must always fit.
+    let board_fleets = vec![
+        vec![vec![vec![100.0]]],
+        vec![vec![vec![100.0]]],
+        vec![vec![vec![100.0]]],
+    ];
+    let weights = [1.0, 1.0, 1.0];
+    let up = [true, true, true];
+    let admission_cap = 4;
+    let burst: Vec<(f64, usize)> = (0..3 * admission_cap).map(|_| (0.0, 0)).collect();
+    for policy in [DispatchPolicy::LeastOutstanding, DispatchPolicy::PowerOfTwo] {
+        let outcomes = simulate_cluster_streams(
+            &board_fleets,
+            &weights,
+            &up,
+            &burst,
+            policy,
+            2,
+            admission_cap,
+            5,
+        )
+        .unwrap();
+        let shed: usize = outcomes.iter().map(|o| o.shed).sum();
+        assert_eq!(
+            shed, 0,
+            "{policy:?} shed from a burst that fits the fleet's queues"
+        );
+    }
+    // And the complementary bound: each board admits at most
+    // admission_cap + 1 from a t=0 burst (the in-service item does not
+    // count against the queue), so 16 offered to 3 boards sheds exactly 1.
+    let over: Vec<(f64, usize)> = (0..16).map(|_| (0.0, 0)).collect();
+    let outcomes = simulate_cluster_streams(
+        &board_fleets,
+        &weights,
+        &up,
+        &over,
+        DispatchPolicy::LeastOutstanding,
+        2,
+        admission_cap,
+        5,
+    )
+    .unwrap();
+    let shed: usize = outcomes.iter().map(|o| o.shed).sum();
+    assert_eq!(shed, 1, "overflow past every queue must shed, and only then");
+    for o in &outcomes {
+        assert_eq!(o.admitted, admission_cap + 1);
+    }
+}
+
+#[test]
+fn disabling_a_board_degrades_gracefully() {
+    let boards = vec![BoardSpec::new(4, 4), BoardSpec::new(2, 6), BoardSpec::new(4, 2)];
+    let mut cp = compile(boards, "squeezenet", 1.0);
+    cp.workloads[0].rate_hz = 1.5 * cp.capacity();
+    let down = cp.boards[1].name.clone();
+    let opts = ClusterServeOptions {
+        images: 1500,
+        disabled: vec![down],
+        ..Default::default()
+    };
+    let report = cp.simulate(&opts).unwrap();
+    let dead = &report.boards[1];
+    assert!(!dead.up);
+    assert_eq!(dead.offered + dead.admitted + dead.shed, 0);
+    assert_eq!(report.images + report.shed, 1500, "conservation across the fleet");
+    for b in [&report.boards[0], &report.boards[2]] {
+        assert!(b.admitted > 0, "surviving board {} absorbed nothing", b.name);
+    }
+    let rendered = render_cluster(&report);
+    assert!(rendered.contains("[down]"), "report must mark the dead board");
+
+    // Killing the whole fleet is an error, not an empty report.
+    let all = cp.boards.iter().map(|b| b.name.clone()).collect();
+    let err = cp
+        .simulate(&ClusterServeOptions { disabled: all, ..Default::default() })
+        .unwrap_err();
+    assert!(err.to_string().contains("every board is disabled"));
+}
+
+#[test]
+fn cluster_plan_roundtrip_is_lossless_and_simulates_bit_identically() {
+    let boards = vec![
+        BoardSpec::new(4, 4),
+        BoardSpec { seed: Some(11), ..BoardSpec::new(2, 6) },
+    ];
+    let cp = compile(boards, "alexnet", 120.0);
+    let path = std::env::temp_dir()
+        .join(format!("pipeit-cluster-roundtrip-{}.json", std::process::id()));
+    cp.save(&path).unwrap();
+    let loaded = ClusterPlan::load(&path).unwrap();
+    fs::remove_file(&path).ok();
+    assert_eq!(loaded, cp, "save -> load must be lossless");
+    let opts = ClusterServeOptions { images: 1200, ..Default::default() };
+    assert_eq!(
+        loaded.simulate(&opts).unwrap(),
+        cp.simulate(&opts).unwrap(),
+        "a loaded plan must simulate bit-identically to the compiled one"
+    );
+}
+
+#[test]
+fn oversized_seeds_are_rejected_at_parse_and_at_load() {
+    // At the CLI parse boundary...
+    let err = BoardSpec::parse("cores=4+4,seed=9007199254740992").unwrap_err();
+    assert!(err.to_string().contains("2^53"), "parse error: {err:#}");
+    // ...and again at the artifact load boundary, in case the JSON was
+    // written by hand or by a future buggy tool.
+    let mut cp = compile(vec![BoardSpec::new(4, 4)], "alexnet", 30.0);
+    cp.boards[0].seed = Some(1u64 << 53);
+    let path = std::env::temp_dir()
+        .join(format!("pipeit-cluster-badseed-{}.json", std::process::id()));
+    cp.save(&path).unwrap();
+    let err = ClusterPlan::load(&path).unwrap_err();
+    fs::remove_file(&path).ok();
+    assert!(err.to_string().contains("2^53"), "load error: {err:#}");
+}
+
+#[test]
+fn default_board_seeds_give_each_board_its_own_arrival_stream() {
+    // Two identical boards, identical shares: with the base + 7919*i
+    // per-board seed derivation their Poisson components must differ, so
+    // the merged schedule is NOT made of duplicated timestamps.
+    let cp = compile(vec![BoardSpec::new(4, 4), BoardSpec::new(4, 4)], "alexnet", 60.0);
+    assert!((cp.boards[0].rate_share - cp.boards[1].rate_share).abs() < 1e-9);
+    let schedule =
+        cluster_arrivals(&cp, &ClusterServeOptions { images: 1000, ..Default::default() });
+    assert_eq!(schedule.len(), 1000);
+    let mut times: Vec<f64> = schedule.iter().map(|a| a.0).collect();
+    times.sort_by(f64::total_cmp);
+    times.dedup();
+    assert!(
+        times.len() > 900,
+        "identical per-board streams would collapse to duplicate pairs \
+         ({} unique of 1000)",
+        times.len()
+    );
+}

@@ -66,11 +66,13 @@ fn every_scenario_respects_eq12_capacity_on_both_twins() {
 #[test]
 fn registry_spans_the_required_modes_and_is_twin_complete() {
     let reg = registry();
-    assert!(reg.len() >= 8, "registry shrank to {} scenarios", reg.len());
+    assert!(reg.len() >= 11, "registry shrank to {} scenarios", reg.len());
     let mut modes: Vec<&str> = reg.iter().map(|s| s.mode).collect();
     modes.sort_unstable();
     modes.dedup();
-    for required in ["serial", "pipelined", "replicated", "adaptive", "multi-tenant"] {
+    for required in
+        ["serial", "pipelined", "replicated", "adaptive", "multi-tenant", "cluster"]
+    {
         assert!(modes.contains(&required), "mode {required:?} missing from {modes:?}");
     }
     // Twin-complete: every scenario declares a finite positive tolerance —
