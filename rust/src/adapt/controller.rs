@@ -304,6 +304,35 @@ pub fn simulate_adaptive(
     images: usize,
     queue_cap: usize,
 ) -> Result<AdaptiveServe> {
+    simulate_adaptive_recorded(
+        plan,
+        base,
+        power,
+        script,
+        opts,
+        images,
+        queue_cap,
+        &crate::obs::Recorder::off(),
+    )
+}
+
+/// [`simulate_adaptive`] with observability (DESIGN.md §13): each served
+/// item's admit/stage/depart chain lands in `rec` under group 0 with
+/// stream-global item ids (unique across control periods), per-stage
+/// service times feed `stage_service/g0r{r}s{s}` histograms, end-to-end
+/// latencies feed the `latency` histogram, and the final registry snapshot
+/// is embedded in the report.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_adaptive_recorded(
+    plan: &Plan,
+    base: &TimeMatrix,
+    power: &PowerModel,
+    script: &[ClusterThrottle],
+    opts: &AdaptOptions,
+    images: usize,
+    queue_cap: usize,
+    rec: &crate::obs::Recorder,
+) -> Result<AdaptiveServe> {
     anyhow::ensure!(images >= 1, "need at least one image");
     anyhow::ensure!(queue_cap >= 1, "queue capacity must be >= 1");
     anyhow::ensure!(opts.interval >= 1, "adapt interval must be >= 1");
@@ -324,12 +353,15 @@ pub fn simulate_adaptive(
         let n = opts.interval.min(images - done);
         let times = truth_times(&structures, base);
         let events = lower_script(script, &structures);
-        let sim = pipeline_sim::simulate_replicated_disturbed(
+        let sim = pipeline_sim::simulate_replicated_recorded(
             &times,
             n,
             queue_cap,
             &events,
             t_abs,
+            rec,
+            0,
+            done as u64,
             |r, s, dt| telemetry.record(r, s, dt),
         );
         let chunk_wall = sim.makespan;
@@ -376,6 +408,9 @@ pub fn simulate_adaptive(
     }
 
     let epoch_wall = t_abs - epoch.start_t;
+    // `latency` / `stage_service` histograms were fed chunk-wise by the
+    // recorded fleet sim; only the run-level gauge remains.
+    rec.gauge_set("wall_s", t_abs);
     let report = ServeReport {
         mode: ServeMode::Des,
         network: current.network.clone(),
@@ -386,6 +421,7 @@ pub fn simulate_adaptive(
         latency: latency_report(&all_latencies),
         replicas: epoch.replica_reports(&current, epoch_wall),
         adaptations,
+        metrics: rec.snapshot(),
     };
     Ok(AdaptiveServe {
         final_snapshot: telemetry.snapshot(),
@@ -493,6 +529,25 @@ pub fn deploy_adaptive(
     opts: &AdaptOptions,
     deploy: &DeployOptions,
 ) -> Result<AdaptiveServe> {
+    deploy_adaptive_recorded(plan, base, power, script, opts, deploy, &crate::obs::Recorder::off())
+}
+
+/// [`deploy_adaptive`] with observability: the per-period stage observer
+/// fans out ([`crate::coordinator::FanoutObserver`]) to both the drift
+/// telemetry (normalized service times) and the metrics registry (raw
+/// wall-second `stage_service/g0r{r}s{s}` histograms, matching the other
+/// wall paths), end-to-end wall latencies feed the `latency` histogram,
+/// and the final snapshot is embedded in the report. No spans are emitted
+/// on this path — the adaptive wall twin is metrics-only.
+pub fn deploy_adaptive_recorded(
+    plan: &Plan,
+    base: &TimeMatrix,
+    power: &PowerModel,
+    script: &[ClusterThrottle],
+    opts: &AdaptOptions,
+    deploy: &DeployOptions,
+    rec: &crate::obs::Recorder,
+) -> Result<AdaptiveServe> {
     anyhow::ensure!(deploy.images >= 1, "need at least one image");
     anyhow::ensure!(deploy.queue_cap >= 1, "queue capacity must be >= 1");
     anyhow::ensure!(deploy.time_scale > 0.0, "time_scale must be positive");
@@ -521,10 +576,18 @@ pub fn deploy_adaptive(
             .collect();
         let fleet =
             disturbed_synthetic_fleet(&times, &cores, deploy.time_scale, env.clone());
-        let observer: Arc<dyn StageObserver> = Arc::new(ScaledObserver {
+        let scaled: Arc<dyn StageObserver> = Arc::new(ScaledObserver {
             inner: telemetry.clone(),
             inv_scale: 1.0 / deploy.time_scale,
         });
+        let observer: Arc<dyn StageObserver> = if rec.enabled() {
+            Arc::new(crate::coordinator::FanoutObserver::new(vec![
+                scaled,
+                Arc::new(rec.clone()),
+            ]))
+        } else {
+            scaled
+        };
         let (_, rep) = run_fleet_observed(
             fleet,
             deploy.queue_cap,
@@ -571,6 +634,10 @@ pub fn deploy_adaptive(
     }
 
     let epoch_wall = wall_total - epoch.start_t;
+    if rec.enabled() {
+        rec.observe_hist("latency", &crate::obs::LogHist::of(&all_latencies));
+        rec.gauge_set("wall_s", wall_total);
+    }
     let report = ServeReport {
         mode: ServeMode::Synthetic { time_scale: deploy.time_scale },
         network: current.network.clone(),
@@ -581,6 +648,7 @@ pub fn deploy_adaptive(
         latency: latency_report(&all_latencies),
         replicas: epoch.replica_reports(&current, epoch_wall),
         adaptations,
+        metrics: rec.snapshot(),
     };
     Ok(AdaptiveServe {
         final_snapshot: telemetry.snapshot(),

@@ -63,7 +63,8 @@ pub mod telemetry;
 
 pub use calibrate::{Calibration, ConfigScale};
 pub use controller::{
-    deploy_adaptive, simulate_adaptive, AdaptOptions, AdaptiveServe, ClusterThrottle,
+    deploy_adaptive, deploy_adaptive_recorded, simulate_adaptive, simulate_adaptive_recorded,
+    AdaptOptions, AdaptiveServe, ClusterThrottle,
 };
 pub use drift::{Disturbance, DriftConfig, DriftDetector, DriftStatus};
 pub use telemetry::{StageWindow, Telemetry, TelemetrySnapshot};

@@ -10,6 +10,14 @@
 //! the drift detector ([`crate::adapt::DriftDetector`]) sees the same
 //! snapshot shape regardless of backend.
 //!
+//! The observability registry (DESIGN.md §13) taps the same hooks: a
+//! [`Recorder`](crate::obs::Recorder) is itself a `StageObserver` feeding
+//! `stage_service/*` histograms, and the adaptive controller fans one
+//! observation stream out to both sinks with
+//! [`FanoutObserver`](crate::coordinator::FanoutObserver) — telemetry
+//! keeps its windowed rings for drift decisions; the registry keeps
+//! whole-run mergeable histograms for reports and traces.
+//!
 //! Lock discipline: one mutex per `(replica, stage)` ring. Each ring is
 //! written by exactly one stage worker and read only by the (infrequent)
 //! control-loop snapshot, so the locks are effectively uncontended — no

@@ -15,7 +15,8 @@ use anyhow::{Context, Result};
 
 use crate::cnn::zoo;
 use crate::config::Config;
-use crate::coordinator::{self, run_fleet, synthetic_fleet, Job};
+use crate::coordinator::{self, run_fleet, synthetic_fleet_recorded, Job};
+use crate::obs::{LogHist, Recorder, WallClock};
 use crate::dse::{
     self, Allocation, CoreBudget, DsePoint, PipelineConfig, ReplicatedDesign, StageConfig,
 };
@@ -491,22 +492,67 @@ impl Plan {
     /// with per-replica queue capacity `queue_cap` — the design-time twin
     /// of [`Plan::deploy`].
     pub fn simulate(&self, images: usize, queue_cap: usize) -> Result<ServeReport> {
+        self.simulate_recorded(images, queue_cap, &Recorder::off())
+    }
+
+    /// [`Plan::simulate`] with span recording: every item leaves an
+    /// admit → stages → depart chain in `rec` (group 0, item id = arrival
+    /// index, sim-time stamps), and the report carries the frozen registry
+    /// snapshot — occupancy gauges per stage, pooled `latency` and
+    /// per-stage `stage_service` histograms (DESIGN.md §13). With
+    /// [`Recorder::off`] this is exactly [`Plan::simulate`] and the
+    /// report's `metrics` stays `None`.
+    pub fn simulate_recorded(
+        &self,
+        images: usize,
+        queue_cap: usize,
+        rec: &Recorder,
+    ) -> Result<ServeReport> {
         anyhow::ensure!(images >= 1, "need at least one image");
         anyhow::ensure!(queue_cap >= 1, "queue capacity must be >= 1");
         let times = self.stage_time_table()?;
-        let sim = pipeline_sim::simulate_replicated(&times, images, queue_cap);
-        Ok(ServeReport::from_des(self, &sim))
+        let sim = pipeline_sim::simulate_replicated_recorded(
+            &times,
+            images,
+            queue_cap,
+            &[],
+            0.0,
+            rec,
+            0,
+            0,
+            |_, _, _| {},
+        );
+        let mut report = ServeReport::from_des(self, &sim);
+        if rec.enabled() {
+            rec.gauge_set("wall_s", report.wall_s);
+            for (r, rr) in report.replicas.iter().enumerate() {
+                for (st, stage) in rr.stages.iter().enumerate() {
+                    rec.gauge_set(&format!("occupancy/g0r{r}s{st}"), stage.utilization);
+                }
+            }
+            report.metrics = rec.snapshot();
+        }
+        Ok(report)
     }
 
     /// Execute the plan: PJRT serving when the plan is bound to artifacts,
     /// otherwise the real thread fleet over synthetic sleep stages scaled
     /// by [`DeployOptions::time_scale`].
     pub fn deploy(&self, opts: &DeployOptions) -> Result<ServeReport> {
+        self.deploy_recorded(opts, &Recorder::off())
+    }
+
+    /// [`Plan::deploy`] with span recording. The synthetic backend traces
+    /// every item on the shared wall clock (see
+    /// [`crate::coordinator::synthetic_fleet_recorded`]); the PJRT
+    /// backends run untraced — real-artifact serving has no recorder
+    /// plumbing yet, so their reports keep `metrics: None`.
+    pub fn deploy_recorded(&self, opts: &DeployOptions, rec: &Recorder) -> Result<ServeReport> {
         if self.artifacts.is_some() {
             let (_, report) = self.deploy_collect(opts)?;
             Ok(report)
         } else {
-            self.deploy_synthetic(opts)
+            self.deploy_synthetic(opts, rec)
         }
     }
 
@@ -635,19 +681,31 @@ impl Plan {
         }
     }
 
-    fn deploy_synthetic(&self, opts: &DeployOptions) -> Result<ServeReport> {
+    fn deploy_synthetic(&self, opts: &DeployOptions, rec: &Recorder) -> Result<ServeReport> {
         anyhow::ensure!(opts.images >= 1, "need at least one image");
         anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
         anyhow::ensure!(opts.time_scale > 0.0, "time_scale must be positive");
         let times = self.stage_time_table()?;
-        let fleet = synthetic_fleet(&times, opts.time_scale);
+        let clock = WallClock::start();
+        let fleet = synthetic_fleet_recorded(&times, opts.time_scale, rec, &clock);
         let (_, report) =
             run_fleet(fleet, opts.queue_cap, 2 * times.len(), 0..opts.images);
-        Ok(ServeReport::from_fleet(
+        let mut serve = ServeReport::from_fleet(
             self,
             &report,
             ServeMode::Synthetic { time_scale: opts.time_scale },
-        ))
+        );
+        if rec.enabled() {
+            rec.observe_hist("latency", &LogHist::of(report.latencies.samples()));
+            rec.gauge_set("wall_s", serve.wall_s);
+            for (r, rr) in serve.replicas.iter().enumerate() {
+                for (st, stage) in rr.stages.iter().enumerate() {
+                    rec.gauge_set(&format!("occupancy/g0r{r}s{st}"), stage.utilization);
+                }
+            }
+            serve.metrics = rec.snapshot();
+        }
+        Ok(serve)
     }
 }
 

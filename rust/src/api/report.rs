@@ -8,6 +8,7 @@
 //! tests) free of per-backend match arms.
 
 use crate::coordinator::{FleetReport, RunReport};
+use crate::obs::MetricsSnapshot;
 use crate::simulator::pipeline_sim::FleetSimReport;
 use crate::util::json::Json;
 use crate::util::stats::{self, Summary};
@@ -192,6 +193,7 @@ impl ServeReport {
             latency: latency_from(&fleet.latencies),
             replicas,
             adaptations: Vec::new(),
+            metrics: None,
         }
     }
 
@@ -235,6 +237,7 @@ impl ServeReport {
             latency: latency_from(&report.latencies),
             replicas: vec![replica],
             adaptations: Vec::new(),
+            metrics: None,
         }
     }
 
@@ -278,6 +281,7 @@ impl ServeReport {
             latency,
             replicas,
             adaptations: Vec::new(),
+            metrics: None,
         }
     }
 
@@ -335,7 +339,7 @@ impl ServeReport {
                 })
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("mode", mode),
             ("network", Json::str(&self.network)),
             ("images", Json::num(self.images as f64)),
@@ -348,7 +352,11 @@ impl ServeReport {
                 "adaptations",
                 Json::Arr(self.adaptations.iter().map(AdaptationEvent::to_json).collect()),
             ),
-        ])
+        ];
+        if let Some(m) = &self.metrics {
+            fields.push(("metrics", m.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 

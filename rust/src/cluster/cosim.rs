@@ -18,6 +18,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use anyhow::Result;
 
 use crate::api::LatencyReport;
+use crate::obs::{pool_latencies, Recorder};
 use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
 
 use super::plan::ClusterPlan;
@@ -121,6 +122,7 @@ pub struct BoardSimOutcome {
 /// when every up board is full, and the shed is charged to the first-choice
 /// board. Exposed (not just an internal of [`simulate_cluster`]) so tests
 /// can drive synthetic service-time matrices directly.
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_cluster_streams(
     board_fleets: &[Vec<Vec<Vec<f64>>>],
     weights: &[f64],
@@ -130,6 +132,39 @@ pub fn simulate_cluster_streams(
     queue_cap: usize,
     admission_cap: usize,
     run_seed: u64,
+) -> Result<Vec<BoardSimOutcome>> {
+    simulate_cluster_streams_recorded(
+        board_fleets,
+        weights,
+        up,
+        arrivals,
+        policy,
+        queue_cap,
+        admission_cap,
+        run_seed,
+        &Recorder::off(),
+    )
+}
+
+/// [`simulate_cluster_streams`] with span recording: arrival `i` (its
+/// index in the merged schedule) traces under the board that settled it —
+/// group = board index, so a cluster trace renders as one timeline of
+/// boards → replicas → stages. Replica ids are flattened across a board's
+/// workload fleets (fleet 0's replicas first), keeping per-item stage
+/// chains consecutive for [`crate::obs::audit_chains`]. Sheds are charged
+/// to the first-choice board, mirroring the report. With
+/// [`Recorder::off`] this is exactly [`simulate_cluster_streams`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_cluster_streams_recorded(
+    board_fleets: &[Vec<Vec<Vec<f64>>>],
+    weights: &[f64],
+    up: &[bool],
+    arrivals: &[(f64, usize)],
+    policy: DispatchPolicy,
+    queue_cap: usize,
+    admission_cap: usize,
+    run_seed: u64,
+    rec: &Recorder,
 ) -> Result<Vec<BoardSimOutcome>> {
     let n = board_fleets.len();
     anyhow::ensure!(n >= 1, "cluster DES needs at least one board");
@@ -184,8 +219,23 @@ pub fn simulate_cluster_streams(
         })
         .collect();
     let mut outstanding = vec![0.0f64; n];
+    // Flattened replica ids per (board, fleet): fleet f's replica q traces
+    // as replica `rep_base[b][f] + q`.
+    let rep_base: Vec<Vec<u32>> = board_fleets
+        .iter()
+        .map(|bf| {
+            let mut off = 0u32;
+            bf.iter()
+                .map(|reps| {
+                    let base = off;
+                    off += reps.len() as u32;
+                    base
+                })
+                .collect()
+        })
+        .collect();
 
-    for &(a, t) in arrivals {
+    for (i, &(a, t)) in arrivals.iter().enumerate() {
         anyhow::ensure!(t < fleets, "arrival for workload {t}, cluster has {fleets}");
         for (b, heap) in completions.iter_mut().enumerate() {
             outstanding[b] = heap.live_after(a) as f64;
@@ -200,6 +250,7 @@ pub fn simulate_cluster_streams(
             .find(|&b| boards[b][t].waiting.live_after(a) < admission_cap);
         let Some(b) = admit else {
             out[first].shed += 1;
+            rec.shed(first as u32, i as u64, a);
             continue;
         };
 
@@ -207,6 +258,11 @@ pub fn simulate_cluster_streams(
         // exact blocking recurrence of `simulate_tenant_fleet` over the
         // bounded departure rings.
         let fleet = &mut boards[b][t];
+        if rec.enabled() {
+            rec.admit(b as u32, i as u64, a);
+            let depth = fleet.waiting.live_after(a) as f64;
+            rec.gauge_max(&format!("queue_depth_peak/g{b}"), depth);
+        }
         let q = (0..fleet.replicas.len())
             .min_by(|&x, &y| {
                 let ex = fleet.replicas[x].dep[0].back().copied().unwrap_or(0.0).max(a);
@@ -237,7 +293,12 @@ pub fn simulate_cluster_streams(
                 rep.dep[s].pop_front();
             }
             rep.dep[s].push_back(prev_stage_dep);
+            if rec.enabled() {
+                let rid = rep_base[b][t] + q as u32;
+                rec.stage(b as u32, i as u64, rid, s as u32, start, prev_stage_dep);
+            }
         }
+        rec.depart(b as u32, i as u64, rep_base[b][t] + q as u32, prev_stage_dep);
         rep.count = k + 1;
         out[b].dispatched[t][q] += 1;
         out[b].admitted += 1;
@@ -307,6 +368,19 @@ pub fn simulate_cluster(
     cp: &ClusterPlan,
     opts: &ClusterServeOptions,
 ) -> Result<ClusterServeReport> {
+    simulate_cluster_recorded(cp, opts, &Recorder::off())
+}
+
+/// [`simulate_cluster`] with span recording (see
+/// [`simulate_cluster_streams_recorded`] for the span model) plus the
+/// registry's metric vocabulary: per-stage `occupancy` gauges (busy time
+/// over the board's horizon — their per-board max equals the report's
+/// utilization column) and the pooled `latency` histogram.
+pub fn simulate_cluster_recorded(
+    cp: &ClusterPlan,
+    opts: &ClusterServeOptions,
+    rec: &Recorder,
+) -> Result<ClusterServeReport> {
     anyhow::ensure!(opts.images >= 1, "need at least one image per workload");
     for d in &opts.disabled {
         anyhow::ensure!(
@@ -322,7 +396,7 @@ pub fn simulate_cluster(
         cp.boards.iter().map(|b| b.plan.fleet_stage_times()).collect();
     let weights: Vec<f64> = cp.boards.iter().map(|b| b.plan.capacity()).collect();
     let arrivals = cluster_arrivals(cp, opts);
-    let outcomes = simulate_cluster_streams(
+    let outcomes = simulate_cluster_streams_recorded(
         &board_fleets,
         &weights,
         &up,
@@ -331,12 +405,14 @@ pub fn simulate_cluster(
         opts.queue_cap,
         opts.admission_cap,
         opts.seed,
+        rec,
     )?;
 
     let stats = outcomes
         .into_iter()
         .zip(&board_fleets)
-        .map(|(o, fleets)| {
+        .enumerate()
+        .map(|(b, (o, fleets))| {
             // Busiest stage's busy fraction over this board's horizon: each
             // stage's busy time is its dispatch count times its Eq. 10
             // service time.
@@ -353,6 +429,18 @@ pub fn simulate_cluster(
             } else {
                 0.0
             };
+            if rec.enabled() && o.makespan > 0.0 {
+                let mut rid = 0u32;
+                for (reps, counts) in fleets.iter().zip(&o.dispatched) {
+                    for (times, &count) in reps.iter().zip(counts) {
+                        for (s, t) in times.iter().enumerate() {
+                            let occ = t * count as f64 / o.makespan;
+                            rec.gauge_set(&format!("occupancy/g{b}r{rid}s{s}"), occ);
+                        }
+                        rid += 1;
+                    }
+                }
+            }
             BoardStats {
                 offered: o.offered,
                 admitted: o.admitted,
@@ -363,7 +451,7 @@ pub fn simulate_cluster(
             }
         })
         .collect();
-    Ok(assemble_report(cp, &up, stats, ClusterServeMode::Des, opts.policy))
+    Ok(assemble_report(cp, &up, stats, ClusterServeMode::Des, opts.policy, rec))
 }
 
 /// Backend-neutral per-board tallies, all in *model* seconds (the wall
@@ -378,24 +466,33 @@ pub(crate) struct BoardStats {
 }
 
 /// Shared report assembly for both execution twins: merge per-board
-/// tallies over the cluster horizon into one [`ClusterServeReport`].
+/// tallies over the cluster horizon into one [`ClusterServeReport`]. The
+/// cluster-wide latency pool is built by [`pool_latencies`] — one merge
+/// shared with fleet and tenancy assembly — and, when `rec` is enabled,
+/// its histogram lands in the registry under `"latency"` and the frozen
+/// snapshot in the report.
 pub(crate) fn assemble_report(
     cp: &ClusterPlan,
     up: &[bool],
     stats: Vec<BoardStats>,
     mode: ClusterServeMode,
     policy: DispatchPolicy,
+    rec: &Recorder,
 ) -> ClusterServeReport {
     let wall_s = stats.iter().map(|o| o.makespan).fold(0.0, f64::max);
     let rate = |count: usize| if wall_s > 0.0 { count as f64 / wall_s } else { 0.0 };
-    let mut all_latencies = Vec::new();
+    let (all_latencies, latency_hist) =
+        pool_latencies(stats.iter().map(|o| o.latencies.as_slice()));
+    if rec.enabled() {
+        rec.observe_hist("latency", &latency_hist);
+        rec.gauge_set("wall_s", wall_s);
+    }
     let boards: Vec<BoardServeReport> = cp
         .boards
         .iter()
         .zip(up)
         .zip(stats)
         .map(|((entry, &up), o)| {
-            all_latencies.extend_from_slice(&o.latencies);
             BoardServeReport {
                 name: entry.name.clone(),
                 platform: entry.plan.platform().to_string(),
@@ -426,6 +523,7 @@ pub(crate) fn assemble_report(
         capacity: cp.capacity(),
         latency: LatencyReport::from_latencies(&all_latencies),
         boards,
+        metrics: rec.snapshot(),
     }
 }
 

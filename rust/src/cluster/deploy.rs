@@ -29,6 +29,7 @@ use anyhow::Result;
 
 use crate::coordinator::queue::{bounded, TrySendError};
 use crate::coordinator::{run_fleet, StageSpec};
+use crate::obs::{Recorder, WallClock};
 
 use super::cosim::{assemble_report, cluster_arrivals, BoardStats};
 use super::plan::ClusterPlan;
@@ -42,12 +43,22 @@ type Sink = Arc<Mutex<Vec<(f64, f64)>>>;
 /// Build one fleet's synthetic stages: each sleeps for its Eq. 10 service
 /// time scaled by `scale`; the last stage of each replica records the
 /// item's completion into `sink` and releases the board's in-flight slot.
+/// When `rec` is enabled each stage also emits a service span on the
+/// shared [`WallClock`] (group = board, replica id offset by `rep_base`
+/// so ids stay flat across a board's workload fleets, matching the DES
+/// twin), and the last stage emits the departure span; when disabled the
+/// closures take the exact original path.
+#[allow(clippy::too_many_arguments)]
 fn board_stages(
     replica_times: &[Vec<f64>],
     scale: f64,
     sink: &Sink,
     outstanding: &Arc<AtomicUsize>,
     run_start: Instant,
+    rec: &Recorder,
+    clock: &WallClock,
+    group: u32,
+    rep_base: u32,
 ) -> Vec<Vec<StageSpec<(usize, Instant)>>> {
     replica_times
         .iter()
@@ -62,17 +73,37 @@ fn board_stages(
                     let last = s + 1 == p;
                     let sink = sink.clone();
                     let outstanding = outstanding.clone();
+                    let rec = rec.clone();
+                    let clock = clock.clone();
                     StageSpec::new(
                         &format!("r{r}s{s}"),
                         Box::new(move || {
+                            let rec = rec.clone();
+                            let clock = clock.clone();
                             Box::new(move |x: (usize, Instant)| {
-                                thread::sleep(dt);
-                                if last {
-                                    sink.lock().unwrap().push((
-                                        run_start.elapsed().as_secs_f64(),
-                                        x.1.elapsed().as_secs_f64(),
-                                    ));
-                                    outstanding.fetch_sub(1, Ordering::Relaxed);
+                                if rec.enabled() {
+                                    let t0 = clock.now_s();
+                                    thread::sleep(dt);
+                                    let t1 = clock.now_s();
+                                    let rid = rep_base + r as u32;
+                                    rec.stage(group, x.0 as u64, rid, s as u32, t0, t1);
+                                    if last {
+                                        sink.lock().unwrap().push((
+                                            run_start.elapsed().as_secs_f64(),
+                                            x.1.elapsed().as_secs_f64(),
+                                        ));
+                                        outstanding.fetch_sub(1, Ordering::Relaxed);
+                                        rec.depart(group, x.0 as u64, rid, t1);
+                                    }
+                                } else {
+                                    thread::sleep(dt);
+                                    if last {
+                                        sink.lock().unwrap().push((
+                                            run_start.elapsed().as_secs_f64(),
+                                            x.1.elapsed().as_secs_f64(),
+                                        ));
+                                        outstanding.fetch_sub(1, Ordering::Relaxed);
+                                    }
                                 }
                                 x
                             })
@@ -90,6 +121,18 @@ fn board_stages(
 pub fn deploy_cluster(
     cp: &ClusterPlan,
     opts: &ClusterServeOptions,
+) -> Result<ClusterServeReport> {
+    deploy_cluster_recorded(cp, opts, &Recorder::off())
+}
+
+/// [`deploy_cluster`] with span recording: board `b` traces under group
+/// `b` on the shared [`WallClock`] — the router emits admit/shed spans,
+/// stage threads emit service and departure spans — and the assembled
+/// report carries the frozen registry snapshot.
+pub fn deploy_cluster_recorded(
+    cp: &ClusterPlan,
+    opts: &ClusterServeOptions,
+    rec: &Recorder,
 ) -> Result<ClusterServeReport> {
     anyhow::ensure!(opts.images >= 1, "need at least one image per workload");
     anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
@@ -114,22 +157,36 @@ pub fn deploy_cluster(
     // fleet, one in-flight counter and completion sink per board. Down
     // boards get no threads — `None` queues the router can never pick.
     let run_start = Instant::now();
+    let clock = WallClock::start();
     let mut outstanding: Vec<Arc<AtomicUsize>> = Vec::with_capacity(n);
     let mut sinks: Vec<Sink> = Vec::with_capacity(n);
     let mut txs = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
-    for (entry, &up) in cp.boards.iter().zip(&up) {
+    for (b, (entry, &up)) in cp.boards.iter().zip(&up).enumerate() {
         let inflight = Arc::new(AtomicUsize::new(0));
         let sink: Sink = Arc::new(Mutex::new(Vec::new()));
         let mut board_txs = Vec::new();
         let mut board_handles = Vec::new();
+        let mut rep_base = 0u32;
         for times in entry.plan.fleet_stage_times() {
+            let fleet_reps = times.len() as u32;
             if !up {
                 board_txs.push(None);
+                rep_base += fleet_reps;
                 continue;
             }
-            let stages =
-                board_stages(&times, opts.time_scale, &sink, &inflight, run_start);
+            let stages = board_stages(
+                &times,
+                opts.time_scale,
+                &sink,
+                &inflight,
+                run_start,
+                rec,
+                &clock,
+                b as u32,
+                rep_base,
+            );
+            rep_base += fleet_reps;
             let (tx, rx) = bounded::<(usize, Instant)>(opts.admission_cap);
             let queue_cap = opts.queue_cap;
             board_txs.push(Some(tx));
@@ -161,12 +218,17 @@ pub fn deploy_cluster(
         let prefs = router.preference(&load, &up);
         let first = prefs[0];
         offered[first] += 1;
+        // Front-door timestamp taken BEFORE the enqueue: once the item is
+        // in a board's queue a stage thread may stamp its service span,
+        // and the admission must sort before it in the item's chain.
+        let at_s = if rec.enabled() { clock.now_s() } else { 0.0 };
         let mut admitted = false;
         for &b in &prefs {
             let Some(tx) = &txs[b][t] else { continue };
             match tx.try_send((seq, Instant::now())) {
                 Ok(()) => {
                     outstanding[b].fetch_add(1, Ordering::Relaxed);
+                    rec.admit(b as u32, seq as u64, at_s);
                     admitted = true;
                     break;
                 }
@@ -176,6 +238,7 @@ pub fn deploy_cluster(
         }
         if !admitted {
             shed[first] += 1;
+            rec.shed(first as u32, seq as u64, at_s);
         }
     }
     drop(txs); // closes every fleet queue; fleets drain and finish
@@ -226,6 +289,7 @@ pub fn deploy_cluster(
         stats,
         ClusterServeMode::Synthetic { time_scale: opts.time_scale },
         opts.policy,
+        rec,
     ))
 }
 

@@ -58,9 +58,10 @@ pub mod router;
 pub mod spec;
 
 pub use cosim::{
-    cluster_arrivals, simulate_cluster, simulate_cluster_streams, BoardSimOutcome,
+    cluster_arrivals, simulate_cluster, simulate_cluster_recorded,
+    simulate_cluster_streams, simulate_cluster_streams_recorded, BoardSimOutcome,
 };
-pub use deploy::deploy_cluster;
+pub use deploy::{deploy_cluster, deploy_cluster_recorded};
 pub use plan::{BoardEntry, BoardPlan, ClusterPlan, Workload, CLUSTER_PLAN_VERSION};
 pub use report::{
     BoardServeReport, ClusterServeMode, ClusterServeOptions, ClusterServeReport,

@@ -474,10 +474,29 @@ impl ClusterPlan {
         super::cosim::simulate_cluster(self, opts)
     }
 
+    /// [`ClusterPlan::simulate`] with observability: span chains and the
+    /// metrics registry land in `rec` (DESIGN.md §13).
+    pub fn simulate_recorded(
+        &self,
+        opts: &ClusterServeOptions,
+        rec: &crate::obs::Recorder,
+    ) -> Result<ClusterServeReport> {
+        super::cosim::simulate_cluster_recorded(self, opts, rec)
+    }
+
     /// Wall-clock cluster serving: one thread fleet per (board, workload)
     /// behind a single router thread pacing the merged arrival schedule.
     pub fn deploy(&self, opts: &ClusterServeOptions) -> Result<ClusterServeReport> {
         super::deploy::deploy_cluster(self, opts)
+    }
+
+    /// [`ClusterPlan::deploy`] with observability (wall-clock spans).
+    pub fn deploy_recorded(
+        &self,
+        opts: &ClusterServeOptions,
+        rec: &crate::obs::Recorder,
+    ) -> Result<ClusterServeReport> {
+        super::deploy::deploy_cluster_recorded(self, opts, rec)
     }
 }
 

@@ -3,7 +3,10 @@
 //! ([`crate::cluster::deploy_cluster`]), rendered by one path
 //! ([`crate::reports::render_cluster`]) and serialized for `--metrics-out`.
 
+use anyhow::{Context, Result};
+
 use crate::api::LatencyReport;
+use crate::obs::MetricsSnapshot;
 use crate::util::json::Json;
 
 use super::router::DispatchPolicy;
@@ -133,6 +136,10 @@ pub struct ClusterServeReport {
     /// Merged end-to-end latency percentiles across every served item.
     pub latency: Option<LatencyReport>,
     pub boards: Vec<BoardServeReport>,
+    /// Frozen observability registry (DESIGN.md §13) when the run was
+    /// recorded; `None` under a disabled [`crate::obs::Recorder`], keeping
+    /// unrecorded report bytes unchanged.
+    pub metrics: Option<MetricsSnapshot>,
 }
 
 impl ClusterServeReport {
@@ -176,7 +183,7 @@ impl ClusterServeReport {
                 })
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("mode", mode),
             ("policy", Json::str(self.policy.name())),
             ("wall_s", Json::num(self.wall_s)),
@@ -186,7 +193,92 @@ impl ClusterServeReport {
             ("capacity", Json::num(self.capacity)),
             ("latency", latency_json(&self.latency)),
             ("boards", boards),
-        ])
+        ];
+        if let Some(m) = &self.metrics {
+            fields.push(("metrics", m.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of [`ClusterServeReport::to_json`] — what makes
+    /// `--metrics-out` files load-backable like the other report shapes
+    /// flowing through [`crate::util::json`]. Round-trips every field,
+    /// including the optional `metrics` snapshot.
+    pub fn from_json(j: &Json) -> Result<ClusterServeReport> {
+        let mode_j = j.req("mode")?;
+        let mode = match mode_j.req("kind")?.as_str() {
+            Some("des") => ClusterServeMode::Des,
+            Some("synthetic") => ClusterServeMode::Synthetic {
+                time_scale: mode_j
+                    .req("time_scale")?
+                    .as_f64()
+                    .context("mode.time_scale must be a number")?,
+            },
+            other => anyhow::bail!("unknown cluster serve mode {other:?}"),
+        };
+        let policy = DispatchPolicy::parse(
+            j.req("policy")?.as_str().context("policy must be a string")?,
+        )?;
+        let boards = j
+            .req("boards")?
+            .as_arr()
+            .context("boards must be an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                BoardServeReport::from_json(b).with_context(|| format!("board {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let metrics = match j.get("metrics") {
+            None => None,
+            Some(m) => Some(MetricsSnapshot::from_json(m).context("metrics")?),
+        };
+        Ok(ClusterServeReport {
+            mode,
+            policy,
+            wall_s: j.req("wall_s")?.as_f64().context("wall_s")?,
+            images: j.req("images")?.as_usize().context("images")?,
+            shed: j.req("shed")?.as_usize().context("shed")?,
+            throughput: j.req("throughput")?.as_f64().context("throughput")?,
+            capacity: j.req("capacity")?.as_f64().context("capacity")?,
+            latency: latency_from_json(j.req("latency")?)?,
+            boards,
+            metrics,
+        })
+    }
+}
+
+/// Parse an optional `{p50, p95, p99}` object (the shape both report
+/// serializers emit for latency percentiles).
+fn latency_from_json(j: &Json) -> Result<Option<LatencyReport>> {
+    if j == &Json::Null {
+        return Ok(None);
+    }
+    Ok(Some(LatencyReport {
+        p50: j.req("p50")?.as_f64().context("latency.p50")?,
+        p95: j.req("p95")?.as_f64().context("latency.p95")?,
+        p99: j.req("p99")?.as_f64().context("latency.p99")?,
+    }))
+}
+
+impl BoardServeReport {
+    /// Inverse of the board entry in [`ClusterServeReport::to_json`].
+    pub fn from_json(j: &Json) -> Result<BoardServeReport> {
+        Ok(BoardServeReport {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            platform: j.req("platform")?.as_str().context("platform")?.to_string(),
+            budget: j.req("budget")?.as_str().context("budget")?.to_string(),
+            pipeline: j.req("pipeline")?.as_str().context("pipeline")?.to_string(),
+            capacity: j.req("capacity")?.as_f64().context("capacity")?,
+            rate_share: j.req("rate_share")?.as_f64().context("rate_share")?,
+            up: j.req("up")?.as_bool().context("up")?,
+            offered: j.req("offered")?.as_usize().context("offered")?,
+            admitted: j.req("admitted")?.as_usize().context("admitted")?,
+            shed: j.req("shed")?.as_usize().context("shed")?,
+            throughput: j.req("throughput")?.as_f64().context("throughput")?,
+            latency: latency_from_json(j.req("latency")?)?,
+            utilization: j.req("utilization")?.as_f64().context("utilization")?,
+        })
     }
 }
 
@@ -228,6 +320,7 @@ mod tests {
                 latency: None,
                 utilization: 0.91,
             }],
+            metrics: None,
         };
         let text = report.to_json().to_string();
         let j = Json::parse(&text).expect("cluster report JSON reparses");
@@ -237,5 +330,53 @@ mod tests {
         assert_eq!(b.req("up").unwrap().as_bool(), Some(true));
         assert_eq!(b.req("shed").unwrap().as_usize(), Some(20));
         assert_eq!(b.req("latency").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn report_json_loads_back_field_for_field() {
+        let mut report = ClusterServeReport {
+            mode: ClusterServeMode::Synthetic { time_scale: 0.05 },
+            policy: DispatchPolicy::LeastOutstanding,
+            wall_s: 9.5,
+            images: 450,
+            shed: 12,
+            throughput: 47.4,
+            capacity: 55.0,
+            latency: Some(LatencyReport { p50: 0.03, p95: 0.06, p99: 0.08 }),
+            boards: vec![BoardServeReport {
+                name: "2+6".into(),
+                platform: "hikey970".into(),
+                budget: "2B+6s".into(),
+                pipeline: "B1-s2 | s4".into(),
+                capacity: 30.0,
+                rate_share: 0.375,
+                up: false,
+                offered: 200,
+                admitted: 180,
+                shed: 20,
+                throughput: 18.9,
+                latency: Some(LatencyReport { p50: 0.04, p95: 0.07, p99: 0.09 }),
+                utilization: 0.66,
+            }],
+            metrics: None,
+        };
+        let back = ClusterServeReport::from_json(
+            &Json::parse(&report.to_json().to_string()).unwrap(),
+        )
+        .expect("round-trip without metrics");
+        assert_eq!(back, report);
+
+        // And with an embedded registry snapshot.
+        let rec = crate::obs::Recorder::on();
+        rec.admit(0, 0, 0.1);
+        rec.stage(0, 0, 0, 0, 0.1, 0.2);
+        rec.depart(0, 0, 0, 0.2);
+        rec.gauge_set("wall_s", 9.5);
+        report.metrics = rec.snapshot();
+        let back = ClusterServeReport::from_json(
+            &Json::parse(&report.to_json().to_string()).unwrap(),
+        )
+        .expect("round-trip with metrics");
+        assert_eq!(back, report);
     }
 }

@@ -56,6 +56,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::obs::{pool_latencies, Recorder, WallClock};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -196,20 +197,55 @@ fn instrument_completion<T: Send + 'static>(
 /// tests use to race wall-clock fleets against
 /// [`crate::simulator::pipeline_sim::simulate_replicated`].
 pub fn synthetic_fleet(times: &[Vec<f64>], scale: f64) -> Vec<Vec<StageSpec<usize>>> {
+    synthetic_fleet_recorded(times, scale, &Recorder::off(), &WallClock::start())
+}
+
+/// [`synthetic_fleet`] with span recording: each stage emits its service
+/// span on the shared [`WallClock`] (group 0, the item's stream index as
+/// its trace id), stage 0 additionally emits the admission span and the
+/// last stage the departure span — the wall-clock twin of the span chains
+/// [`crate::simulator::pipeline_sim::simulate_recorded`] produces. With
+/// [`Recorder::off`] the closures take the exact original path: one
+/// branch, no timestamp capture.
+pub fn synthetic_fleet_recorded(
+    times: &[Vec<f64>],
+    scale: f64,
+    rec: &Recorder,
+    clock: &WallClock,
+) -> Vec<Vec<StageSpec<usize>>> {
     times
         .iter()
         .enumerate()
         .map(|(r, stage_times)| {
+            let p = stage_times.len();
             stage_times
                 .iter()
                 .enumerate()
                 .map(|(s, &t)| {
                     let dt = Duration::from_secs_f64(t * scale);
+                    let last = s + 1 == p;
+                    let rec = rec.clone();
+                    let clock = clock.clone();
                     StageSpec::new(
                         &format!("r{r}s{s}"),
                         Box::new(move || {
+                            let rec = rec.clone();
+                            let clock = clock.clone();
                             Box::new(move |x: usize| {
-                                thread::sleep(dt);
+                                if rec.enabled() {
+                                    let t0 = clock.now_s();
+                                    thread::sleep(dt);
+                                    let t1 = clock.now_s();
+                                    if s == 0 {
+                                        rec.admit(0, x as u64, t0);
+                                    }
+                                    rec.stage(0, x as u64, r as u32, s as u32, t0, t1);
+                                    if last {
+                                        rec.depart(0, x as u64, r as u32, t1);
+                                    }
+                                } else {
+                                    thread::sleep(dt);
+                                }
                                 x
                             })
                         }),
@@ -390,13 +426,16 @@ where
     let dispatched = dispatcher.join().expect("dispatcher panicked");
     let mut outputs = Vec::new();
     let mut reports = Vec::with_capacity(r);
-    let mut latencies = Summary::new();
     for h in handles {
         let (out, rep) = h.join().expect("replica pipeline panicked");
-        latencies.merge(&rep.latencies);
         outputs.extend(out);
         reports.push(rep);
     }
+    // One latency-merge loop for every backend: the same pool the DES and
+    // cluster report assembly use ([`crate::obs::pool_latencies`]).
+    let (pooled, _) =
+        pool_latencies(reports.iter().map(|rep| rep.latencies.samples()));
+    let latencies = Summary::from_samples(pooled);
     let wall = start.elapsed();
     let images = reports.iter().map(|rep| rep.images).sum();
 

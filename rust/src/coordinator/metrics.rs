@@ -20,6 +20,42 @@ pub trait StageObserver: Send + Sync {
     fn on_item(&self, replica: usize, stage: usize, service_s: f64);
 }
 
+/// The observability registry (DESIGN.md §13) as a stage observer:
+/// per-item service times land in the `stage_service/g0r{replica}s{stage}`
+/// log-bucketed histogram — the same metric names the traced DES and
+/// synthetic paths emit, so registry consumers need not care which hook
+/// fed them. A disabled [`Recorder`](crate::obs::Recorder) makes this a
+/// one-branch no-op, keeping the stage hot path untouched.
+impl StageObserver for crate::obs::Recorder {
+    fn on_item(&self, replica: usize, stage: usize, service_s: f64) {
+        if self.enabled() {
+            self.observe(&format!("stage_service/g0r{replica}s{stage}"), service_s);
+        }
+    }
+}
+
+/// Fans one stream of stage observations out to several observers —
+/// [`crate::coordinator::run_fleet_observed`] takes a single observer
+/// slot, and the adaptive controller wants both its drift telemetry and
+/// the metrics registry fed from it.
+pub struct FanoutObserver {
+    observers: Vec<std::sync::Arc<dyn StageObserver>>,
+}
+
+impl FanoutObserver {
+    pub fn new(observers: Vec<std::sync::Arc<dyn StageObserver>>) -> FanoutObserver {
+        FanoutObserver { observers }
+    }
+}
+
+impl StageObserver for FanoutObserver {
+    fn on_item(&self, replica: usize, stage: usize, service_s: f64) {
+        for o in &self.observers {
+            o.on_item(replica, stage, service_s);
+        }
+    }
+}
+
 /// JSON shape for a latency [`Summary`]: `{count}` when empty, otherwise
 /// `{count, mean, p50, p95, p99, max}` (seconds).
 pub fn summary_to_json(s: &Summary) -> Json {
@@ -127,6 +163,23 @@ impl RunReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn recorder_observer_feeds_stage_service_hist() {
+        use std::sync::Arc;
+
+        let rec = crate::obs::Recorder::on();
+        let fan = FanoutObserver::new(vec![Arc::new(rec.clone()) as Arc<dyn StageObserver>]);
+        fan.on_item(1, 2, 0.25);
+        fan.on_item(1, 2, 0.26);
+        let snap = rec.snapshot().expect("enabled");
+        let h = snap.hist("stage_service/g0r1s2").expect("hist registered");
+        assert_eq!(h.count(), 2);
+        // The disabled recorder stays a no-op through the same hook.
+        let off = crate::obs::Recorder::off();
+        StageObserver::on_item(&off, 0, 0, 0.1);
+        assert!(off.snapshot().is_none());
+    }
 
     #[test]
     fn utilization_math() {

@@ -24,8 +24,10 @@ pub mod server;
 pub mod stream;
 
 pub use batcher::{Batcher, Job};
-pub use fleet::{run_fleet, run_fleet_observed, synthetic_fleet, FleetReport};
-pub use metrics::{summary_to_json, RunReport, StageMetrics, StageObserver};
+pub use fleet::{
+    run_fleet, run_fleet_observed, synthetic_fleet, synthetic_fleet_recorded, FleetReport,
+};
+pub use metrics::{summary_to_json, FanoutObserver, RunReport, StageMetrics, StageObserver};
 pub use pipeline::{
     run_pipeline, run_pipeline_observed, run_serial, PipelineObserver, StageFactory,
     StageSpec,

@@ -138,6 +138,7 @@ mod tests {
             samples: samples.to_vec(),
             stats: SampleStats::from_samples(samples, 3.5, 0.95, 150, 11),
             host_s: 0.0,
+            metrics: None,
         }
     }
 

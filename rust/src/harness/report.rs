@@ -110,6 +110,11 @@ pub struct ScenarioResult {
     /// Host seconds spent producing this entry (warmup + all repetitions).
     /// Informational only: never compared, and not deterministic.
     pub host_s: f64,
+    /// Observability registry snapshot from one recorded repetition
+    /// (DESIGN.md §13) — the runner records the last DES repetition so
+    /// perf artifacts carry per-stage occupancy and latency histograms.
+    /// `None` for wall/host entries and pre-observability artifacts.
+    pub metrics: Option<crate::obs::MetricsSnapshot>,
 }
 
 impl ScenarioResult {
@@ -119,7 +124,7 @@ impl ScenarioResult {
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("mode", Json::str(&self.mode)),
             ("backend", Json::str(&self.backend)),
@@ -128,7 +133,11 @@ impl ScenarioResult {
             ("samples", Json::Arr(self.samples.iter().map(|&x| Json::num(x)).collect())),
             ("stats", self.stats.to_json()),
             ("host_s", Json::num(self.host_s)),
-        ])
+        ];
+        if let Some(m) = &self.metrics {
+            fields.push(("metrics", m.to_json()));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<ScenarioResult> {
@@ -144,6 +153,12 @@ impl ScenarioResult {
             samples: j.req("samples")?.f64_arr().context("samples array")?,
             stats: SampleStats::from_json(j.req("stats")?)?,
             host_s: j.req("host_s")?.as_f64().context("host_s")?,
+            metrics: match j.get("metrics") {
+                None => None,
+                Some(m) => Some(
+                    crate::obs::MetricsSnapshot::from_json(m).context("scenario metrics")?,
+                ),
+            },
         })
     }
 }
@@ -254,6 +269,7 @@ mod tests {
                 samples: samples.clone(),
                 stats: SampleStats::from_samples(&samples, 3.5, 0.95, 200, 99),
                 host_s: 0.25,
+                metrics: None,
             }],
         }
     }

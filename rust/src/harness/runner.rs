@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::report::{BenchReport, SampleStats, ScenarioResult};
-use super::scenario::{suite_entries, Suite};
+use super::scenario::{suite_entries, Backend, Suite};
 
 /// Knobs for [`run_suite`]; the defaults are what `pipeit bench` uses.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -80,8 +80,21 @@ pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
             e.scenario.run(e.backend, opts.seed)?;
         }
         let mut samples = Vec::with_capacity(opts.reps);
+        // The last DES repetition runs recorded so the artifact carries a
+        // registry snapshot; recording never changes the DES metric (the
+        // conformance suite pins this), and wall entries stay unrecorded
+        // to keep the observer off their timed hot paths.
+        let mut metrics = None;
         for rep in 0..opts.reps {
-            samples.push(e.scenario.run(e.backend, opts.seed.wrapping_add(rep as u64))?);
+            let seed = opts.seed.wrapping_add(rep as u64);
+            if e.backend == Backend::Des && rep + 1 == opts.reps {
+                let rec = crate::obs::Recorder::on();
+                let (m, snap) = e.scenario.run_recorded(e.backend, seed, &rec)?;
+                samples.push(m);
+                metrics = snap;
+            } else {
+                samples.push(e.scenario.run(e.backend, seed)?);
+            }
         }
         let key = format!("{}/{}", e.backend.key(), e.scenario.name);
         let stats = SampleStats::from_samples(
@@ -100,6 +113,7 @@ pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
             samples,
             stats,
             host_s: started.elapsed().as_secs_f64(),
+            metrics,
         });
     }
     Ok(BenchReport {
@@ -212,6 +226,7 @@ impl HostBench {
             samples: Vec::new(),
             stats,
             host_s: started.elapsed().as_secs_f64(),
+            metrics: None,
         });
         self.results.last().expect("just pushed")
     }
@@ -323,6 +338,7 @@ mod tests {
                 stats: SampleStats::from_samples(&scaled, 3.5, 0.95, 100, 3),
                 samples: scaled,
                 host_s: 0.1,
+                metrics: None,
             }
         };
         let report = |scale: f64| BenchReport {

@@ -100,16 +100,32 @@ impl Scenario {
     /// stochastic inputs ignore it. DES runs are bit-deterministic given
     /// `seed`.
     pub fn run(&self, backend: Backend, seed: u64) -> Result<f64> {
+        self.run_recorded(backend, seed, &crate::obs::Recorder::off()).map(|(m, _)| m)
+    }
+
+    /// [`Scenario::run`] with observability: the run goes through the
+    /// backend's recorded entry point, so `rec` collects span chains and
+    /// the metrics registry (DESIGN.md §13), and the report's embedded
+    /// snapshot is returned alongside the metric. A disabled recorder
+    /// reproduces [`Scenario::run`] exactly — the conformance suite pins
+    /// that the metric is identical either way.
+    pub fn run_recorded(
+        &self,
+        backend: Backend,
+        seed: u64,
+        rec: &crate::obs::Recorder,
+    ) -> Result<(f64, Option<crate::obs::MetricsSnapshot>)> {
         match &self.spec {
             Spec::Plan { net, strategy } => {
                 let plan = self.compile_plan(net, *strategy)?;
                 match backend {
                     Backend::Des => {
-                        Ok(plan.simulate(self.images, self.queue_cap)?.throughput)
+                        let r = plan.simulate_recorded(self.images, self.queue_cap, rec)?;
+                        Ok((r.throughput, r.metrics))
                     }
                     Backend::Wall => {
-                        let report = plan.deploy(&self.deploy_opts(seed))?;
-                        Ok(report.throughput * self.time_scale)
+                        let report = plan.deploy_recorded(&self.deploy_opts(seed), rec)?;
+                        Ok((report.throughput * self.time_scale, report.metrics))
                     }
                 }
             }
@@ -127,7 +143,7 @@ impl Scenario {
                             core: CoreType::Big,
                             factor: *factor,
                         }];
-                        let out = adapt::simulate_adaptive(
+                        let out = adapt::simulate_adaptive_recorded(
                             &plan,
                             &tm,
                             &cfg.power,
@@ -135,8 +151,9 @@ impl Scenario {
                             &opts,
                             self.images,
                             self.queue_cap,
+                            rec,
                         )?;
-                        Ok(out.report.throughput)
+                        Ok((out.report.throughput, out.report.metrics))
                     }
                     Backend::Wall => {
                         // Throttle times are simulated seconds; the wall
@@ -146,15 +163,16 @@ impl Scenario {
                             core: CoreType::Big,
                             factor: *factor,
                         }];
-                        let out = adapt::deploy_adaptive(
+                        let out = adapt::deploy_adaptive_recorded(
                             &plan,
                             &tm,
                             &cfg.power,
                             &script,
                             &opts,
                             &self.deploy_opts(seed),
+                            rec,
                         )?;
-                        Ok(out.report.throughput * self.time_scale)
+                        Ok((out.report.throughput * self.time_scale, out.report.metrics))
                     }
                 }
             }
@@ -169,10 +187,10 @@ impl Scenario {
                     uniform_arrivals: false,
                 };
                 let report = match backend {
-                    Backend::Des => mp.simulate(&opts)?,
-                    Backend::Wall => mp.deploy(&opts)?,
+                    Backend::Des => mp.simulate_recorded(&opts, rec)?,
+                    Backend::Wall => mp.deploy_recorded(&opts, rec)?,
                 };
-                Ok(report.weighted_throughput)
+                Ok((report.weighted_throughput, report.metrics))
             }
             Spec::Cluster { boards, net, saturation, policy } => {
                 let cp = self.compile_cluster(boards, net, *saturation)?;
@@ -185,10 +203,10 @@ impl Scenario {
                     ..Default::default()
                 };
                 let report = match backend {
-                    Backend::Des => cp.simulate(&opts)?,
-                    Backend::Wall => cp.deploy(&opts)?,
+                    Backend::Des => cp.simulate_recorded(&opts, rec)?,
+                    Backend::Wall => cp.deploy_recorded(&opts, rec)?,
                 };
-                Ok(report.throughput)
+                Ok((report.throughput, report.metrics))
             }
         }
     }

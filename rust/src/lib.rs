@@ -51,6 +51,13 @@
 //! twin), robust statistics, and a schema-versioned `BENCH_<n>.json`
 //! artifact with a CI-overlap regression gate (`pipeit bench`).
 //!
+//! The [`obs`] subsystem is the instrument panel shared by every serving
+//! path: a [`obs::Recorder`] captures per-item spans (admit → stages →
+//! depart, or shed) on both execution twins, feeds a metrics registry of
+//! counters, gauges and mergeable log-bucketed latency histograms, and
+//! exports schema-versioned JSONL traces (`--trace-out`) convertible to
+//! Chrome-trace/Perfetto JSON (`pipeit trace convert`).
+//!
 //! Architecture details live in `DESIGN.md`; the quickstart and the
 //! paper-to-module map live in `README.md`.
 
@@ -65,6 +72,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dse;
 pub mod harness;
+pub mod obs;
 pub mod perfmodel;
 pub mod reports;
 pub mod runtime;

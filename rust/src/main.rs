@@ -21,10 +21,11 @@ use pipeit::cnn::zoo;
 use pipeit::config::Config;
 use pipeit::dse;
 use pipeit::harness::{self, BenchReport, RunnerOptions, Suite};
+use pipeit::obs::{self, Recorder};
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
 use pipeit::reports::{
-    render_bench, render_bench_compare, render_cluster, render_multi_serve,
-    render_serve, Reporter,
+    render_bench, render_bench_compare, render_cluster, render_metrics,
+    render_multi_serve, render_serve, Reporter,
 };
 use pipeit::simulator::arrivals::ArrivalSpec;
 use pipeit::simulator::platform::CoreType;
@@ -38,7 +39,7 @@ use pipeit::util::table::{f, Table};
 const USAGE: &str = "\
 pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
 
-USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cluster|serve-cluster|simulate-cluster|bench|explore|predict|count|tables> [options]
+USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cluster|serve-cluster|simulate-cluster|bench|trace|explore|predict|count|tables> [options]
 
   plan       --net N [--predicted] [--platform F] [--out plan.json]
              [--strategy serial|pipeline|replicated|exhaustive|energy]
@@ -115,9 +116,15 @@ USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cl
                                                classify each scenario improved/
                                                REGRESSED/unchanged by CI overlap;
                                                exits non-zero on any regression
+  trace      convert trace.jsonl trace.chrome.json
+                                               convert a --trace-out span dump to
+                                               Chrome-trace/Perfetto JSON (load in
+                                               chrome://tracing or ui.perfetto.dev)
   tables     [--platform F]                    regenerate every paper table & figure
 
-every serve/simulate form also takes --metrics-out metrics.json
+every serve/simulate form also takes --metrics-out metrics.json, and the six
+closed-loop serve/simulate forms take --trace-out trace.jsonl (record per-item
+spans + metrics registry; prints the observability footer)
 
 networks: alexnet googlenet mobilenet resnet50 squeezenet";
 
@@ -163,9 +170,11 @@ fn main() -> Result<()> {
                 run_open_loop(plan, &args, false)?;
             } else {
                 print!("{}", plan.summary());
-                let report = plan.simulate(images, cap)?;
+                let rec = trace_recorder(&args);
+                let report = plan.simulate_recorded(images, cap, &rec)?;
                 print!("{}", render_serve(&report));
                 write_metrics(&args, &report.to_json())?;
+                write_trace(&args, &rec, "sim")?;
             }
         }
         "plan-multi" => {
@@ -200,10 +209,16 @@ fn main() -> Result<()> {
             let deploy = cmd == "serve-multi";
             let opts = multi_opts(&args, if deploy { 300 } else { 2000 })?;
             print!("{}", mp.summary());
-            let report = if deploy { mp.deploy(&opts)? } else { mp.simulate(&opts)? };
+            let rec = trace_recorder(&args);
+            let report = if deploy {
+                mp.deploy_recorded(&opts, &rec)?
+            } else {
+                mp.simulate_recorded(&opts, &rec)?
+            };
             println!();
             print!("{}", render_multi_serve(&report));
             write_metrics(&args, &report.to_json())?;
+            write_trace(&args, &rec, if deploy { "wall" } else { "sim" })?;
         }
         "plan-cluster" => {
             let spec = cluster_spec_from_args(&args)?;
@@ -240,10 +255,16 @@ fn main() -> Result<()> {
             let deploy = cmd == "serve-cluster";
             let opts = cluster_opts(&args, if deploy { 240 } else { 2000 })?;
             print!("{}", cp.summary());
-            let report = if deploy { cp.deploy(&opts)? } else { cp.simulate(&opts)? };
+            let rec = trace_recorder(&args);
+            let report = if deploy {
+                cp.deploy_recorded(&opts, &rec)?
+            } else {
+                cp.simulate_recorded(&opts, &rec)?
+            };
             println!();
             print!("{}", render_cluster(&report));
             write_metrics(&args, &report.to_json())?;
+            write_trace(&args, &rec, if deploy { "wall" } else { "sim" })?;
         }
         "bench" => bench(&args)?,
         "count" => count(&args, &cfg)?,
@@ -264,10 +285,12 @@ fn main() -> Result<()> {
                     run_adaptive(plan, &cfg, &args)?;
                 } else {
                     print!("{}", plan.summary());
-                    let report = plan.deploy(&deploy_opts(&args)?)?;
+                    let rec = trace_recorder(&args);
+                    let report = plan.deploy_recorded(&deploy_opts(&args)?, &rec)?;
                     println!();
                     print!("{}", render_serve(&report));
                     write_metrics(&args, &report.to_json())?;
+                    write_trace(&args, &rec, "wall")?;
                 }
             } else if args.get("artifacts").is_some() {
                 serve_artifacts(&args, replicas)?;
@@ -296,6 +319,21 @@ fn main() -> Result<()> {
                      or --artifacts DIR (real PJRT serving)\n\n{USAGE}"
                 );
             }
+        }
+        "trace" => {
+            let sub = args.positional.get(1).map(|s| s.as_str());
+            anyhow::ensure!(
+                sub == Some("convert"),
+                "usage: pipeit trace convert trace.jsonl trace.chrome.json"
+            );
+            let input = args.positional.get(2).context(
+                "usage: pipeit trace convert trace.jsonl trace.chrome.json",
+            )?;
+            let output = args.positional.get(3).context(
+                "usage: pipeit trace convert trace.jsonl trace.chrome.json",
+            )?;
+            let n = obs::convert_trace(Path::new(input), Path::new(output))?;
+            println!("trace      : {input} -> {output} ({n} spans)");
         }
         other => {
             println!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -394,6 +432,32 @@ fn write_metrics(args: &Args, json: &Json) -> Result<()> {
     Ok(())
 }
 
+/// The run's recorder: enabled only when `--trace-out` was given, so the
+/// default path keeps the zero-cost disabled recorder on every hot path.
+fn trace_recorder(args: &Args) -> Recorder {
+    if args.get("trace-out").is_some() {
+        Recorder::on()
+    } else {
+        Recorder::off()
+    }
+}
+
+/// Write the schema-versioned JSONL span trace and print the observability
+/// footer when `--trace-out` was given. `clock` is `"sim"` for DES runs
+/// and `"wall"` for thread-fleet runs (trace timestamps are raw wall
+/// seconds there, not normalized model time).
+fn write_trace(args: &Args, rec: &Recorder, clock: &str) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        obs::write_trace(rec, clock, Path::new(path))?;
+        if let Some(snap) = rec.snapshot() {
+            println!();
+            print!("{}", render_metrics(&snap));
+        }
+        println!("trace      : {path} (pipeit trace convert {path} trace.chrome.json)");
+    }
+    Ok(())
+}
+
 /// `--throttle AT:FACTOR[:big|small][,...]` — scripted disturbances.
 fn parse_throttles(args: &Args) -> Result<Vec<ClusterThrottle>> {
     args.get_list("throttle")
@@ -465,7 +529,10 @@ fn run_adaptive(plan: Plan, cfg: &Config, args: &Args) -> Result<()> {
     if !adapt_enabled {
         println!("adaptation : disabled (baseline run; pass --adapt to close the loop)");
     }
-    let out = adapt::deploy_adaptive(&plan, &tm, &cfg.power, &script, &opts, &deploy)?;
+    let rec = trace_recorder(args);
+    let out = adapt::deploy_adaptive_recorded(
+        &plan, &tm, &cfg.power, &script, &opts, &deploy, &rec,
+    )?;
     println!();
     print!("{}", render_serve(&out.report));
     println!("adaptations: {}", out.report.adaptations.len());
@@ -483,7 +550,8 @@ fn run_adaptive(plan: Plan, cfg: &Config, args: &Args) -> Result<()> {
             ("serve", out.report.to_json()),
             ("telemetry", out.final_snapshot.to_json()),
         ]),
-    )
+    )?;
+    write_trace(args, &rec, "wall")
 }
 
 /// Parse every `--tenant` occurrence into [`TenantSpec`]s; `--predicted`
@@ -834,7 +902,8 @@ fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
     print!("{}", plan.design_summary());
 
     let sim = plan.simulate(opts.images, opts.queue_cap)?;
-    let report = plan.deploy(&opts)?;
+    let rec = trace_recorder(args);
+    let report = plan.deploy_recorded(&opts, &rec)?;
     println!();
     print!("{}", render_serve(&report));
     println!(
@@ -842,6 +911,7 @@ fn serve_simulated(args: &Args, cfg: &Config, replicas: usize) -> Result<()> {
         sim.throughput
     );
     write_metrics(args, &report.to_json())?;
+    write_trace(args, &rec, "wall")?;
     Ok(())
 }
 

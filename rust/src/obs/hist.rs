@@ -1,0 +1,332 @@
+//! Log-bucketed latency histograms: the mergeable aggregate the metrics
+//! registry stores latencies and service times in.
+//!
+//! A [`LogHist`] counts observations in geometric buckets of ratio
+//! `2^(1/8)` (eight buckets per octave, ~9% relative width), so quantile
+//! queries are exact *within one bucket width* while merging two
+//! histograms is a plain per-bucket count addition — no sample vectors
+//! cross replica/board boundaries. This is what lets fleet, multi-tenant
+//! and cluster reports pool per-replica latency populations without
+//! carrying every raw sample (DESIGN.md §13).
+//!
+//! Quantiles are **nearest-rank**: `quantile(q)` returns the geometric
+//! midpoint of the bucket containing the order statistic at rank
+//! `round(q/100 · (n-1))`. Merging is exact (the merged histogram equals
+//! the histogram of the pooled samples, bucket for bucket), so a merged
+//! quantile always lands in the same bucket as the pooled-vector
+//! nearest-rank percentile — the property test below pins this.
+//!
+//! Non-positive observations (a zero-width span, a degenerate latency)
+//! are counted in a dedicated zero bucket that sorts below every
+//! geometric bucket; `quantile` answers `0.0` while the rank is inside it.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Buckets per octave (factor-of-two span). Eight gives bucket edges at
+/// ratio `2^(1/8) ≈ 1.0905` — better than 10% latency resolution.
+pub const BUCKETS_PER_OCTAVE: i32 = 8;
+
+/// Bucket index clamp: `±360` covers `2^±45` (≈ 3e-14 .. 3.5e13), far
+/// beyond any latency in seconds this system can produce.
+const MIN_BUCKET: i32 = -360;
+const MAX_BUCKET: i32 = 360;
+
+/// Bucket index of a positive value: `floor(8 · log2(x))`, clamped.
+fn bucket_of(x: f64) -> i32 {
+    let b = (x.log2() * BUCKETS_PER_OCTAVE as f64).floor();
+    (b as i32).clamp(MIN_BUCKET, MAX_BUCKET)
+}
+
+/// Lower edge of bucket `b`.
+pub fn bucket_lo(b: i32) -> f64 {
+    2f64.powf(b as f64 / BUCKETS_PER_OCTAVE as f64)
+}
+
+/// Upper edge of bucket `b` (the lower edge of `b + 1`).
+pub fn bucket_hi(b: i32) -> f64 {
+    bucket_lo(b + 1)
+}
+
+/// Geometric midpoint of bucket `b` — the representative value quantile
+/// queries answer with.
+fn bucket_mid(b: i32) -> f64 {
+    2f64.powf((b as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64)
+}
+
+/// A mergeable log-bucketed histogram (see module docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LogHist {
+    /// Sparse bucket counts, keyed by bucket index (sorted — the JSON
+    /// form is deterministic by construction).
+    buckets: BTreeMap<i32, u64>,
+    /// Observations with `x <= 0`, ordered below every bucket.
+    zeros: u64,
+    /// Total observations, including zeros.
+    count: u64,
+    /// Exact running sum (busy-time accounting must not be bucketed).
+    sum: f64,
+    /// Largest observation seen.
+    max: f64,
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist::default()
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        if x <= 0.0 {
+            self.zeros += 1;
+            return;
+        }
+        *self.buckets.entry(bucket_of(x)).or_insert(0) += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    /// Record every sample of a slice.
+    pub fn record_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.record(x);
+        }
+    }
+
+    /// Build a histogram of a slice in one call.
+    pub fn of(xs: &[f64]) -> LogHist {
+        let mut h = LogHist::new();
+        h.record_all(xs);
+        h
+    }
+
+    /// Absorb another histogram: per-bucket count addition. Exact — the
+    /// result equals the histogram of the pooled samples.
+    pub fn merge(&mut self, other: &LogHist) {
+        for (&b, &c) in &other.buckets {
+            *self.buckets.entry(b).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of positive observations (total busy seconds when the
+    /// histogram holds service times).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile, `q` in [0, 100]: the geometric midpoint of
+    /// the bucket holding the order statistic at rank
+    /// `round(q/100 · (count-1))`. `0.0` for an empty histogram or while
+    /// the rank falls among non-positive observations.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * (self.count - 1) as f64).round() as u64;
+        if rank < self.zeros {
+            return 0.0;
+        }
+        let mut seen = self.zeros;
+        for (&b, &c) in &self.buckets {
+            seen += c;
+            if rank < seen {
+                return bucket_mid(b);
+            }
+        }
+        // Rank beyond the last bucket cannot happen (counts sum to
+        // `count`), but stay total: answer the largest observation.
+        self.max
+    }
+
+    /// JSON form: sorted `[bucket, count]` pairs plus the exact
+    /// aggregates. Deterministic byte-for-byte for equal histograms.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|(&b, &c)| {
+                            Json::Arr(vec![Json::num(b as f64), Json::num(c as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("zeros", Json::num(self.zeros as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("max", Json::num(self.max)),
+        ])
+    }
+
+    /// Inverse of [`LogHist::to_json`].
+    pub fn from_json(j: &Json) -> Result<LogHist> {
+        let mut buckets = BTreeMap::new();
+        for (i, pair) in j
+            .req("buckets")?
+            .as_arr()
+            .context("histogram buckets must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let pair = pair
+                .as_arr()
+                .with_context(|| format!("bucket {i} must be a [index, count] pair"))?;
+            ensure!(pair.len() == 2, "bucket {i} must have exactly two fields");
+            let b = pair[0].as_f64().context("bucket index")? as i32;
+            let c = pair[1].as_f64().context("bucket count")? as u64;
+            buckets.insert(b, c);
+        }
+        Ok(LogHist {
+            buckets,
+            zeros: j.req("zeros")?.as_usize().context("zeros")? as u64,
+            count: j.req("count")?.as_usize().context("count")? as u64,
+            sum: j.req("sum")?.as_f64().context("sum")?,
+            max: j.req("max")?.as_f64().context("max")?,
+        })
+    }
+}
+
+/// Pool per-replica latency populations: the one merge loop that fleet
+/// ([`crate::coordinator::FleetReport`]), multi-tenant co-simulation
+/// ([`crate::tenancy`]) and cluster assembly ([`crate::cluster`]) all
+/// share. Returns the pooled raw vector (reports keep exact interpolated
+/// percentiles — behavior unchanged) *and* the merged histogram the
+/// metrics snapshot carries.
+pub fn pool_latencies<'a, I>(parts: I) -> (Vec<f64>, LogHist)
+where
+    I: IntoIterator<Item = &'a [f64]>,
+{
+    let mut pooled = Vec::new();
+    let mut hist = LogHist::new();
+    for part in parts {
+        pooled.extend_from_slice(part);
+        hist.merge(&LogHist::of(part));
+    }
+    (pooled, hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn empty_hist_is_well_defined() {
+        let h = LogHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_lands_in_its_own_bucket() {
+        let h = LogHist::of(&[0.125]);
+        assert_eq!(h.count(), 1);
+        let q = h.quantile(50.0);
+        assert!(
+            q >= 0.125 / 1.0906 && q <= 0.125 * 1.0906,
+            "q={q} not within one bucket of 0.125"
+        );
+        assert_eq!(h.max(), 0.125);
+    }
+
+    #[test]
+    fn zeros_sort_below_every_bucket() {
+        let h = LogHist::of(&[0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert!(h.quantile(100.0) > 0.9);
+    }
+
+    #[test]
+    fn merge_equals_histogram_of_pooled_samples() {
+        let a = [0.01, 0.02, 0.5];
+        let b = [0.011, 3.0];
+        let mut m = LogHist::of(&a);
+        m.merge(&LogHist::of(&b));
+        let pooled: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(m, LogHist::of(&pooled));
+    }
+
+    #[test]
+    fn json_round_trips_losslessly() {
+        let h = LogHist::of(&[0.001, 0.002, 0.0, 0.5, 12.0]);
+        let j = h.to_json();
+        let back = LogHist::from_json(&j).expect("deserializes");
+        assert_eq!(h, back);
+        // And byte-identical re-serialization (determinism contract).
+        assert_eq!(j.to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn pool_latencies_matches_manual_extend() {
+        let parts: Vec<Vec<f64>> = vec![vec![0.1, 0.2], vec![], vec![0.3]];
+        let (pooled, hist) =
+            pool_latencies(parts.iter().map(|p| p.as_slice()));
+        assert_eq!(pooled, vec![0.1, 0.2, 0.3]);
+        assert_eq!(hist.count(), 3);
+        assert_eq!(hist, LogHist::of(&pooled));
+    }
+
+    /// The ISSUE 8 satellite property: merged-histogram quantiles equal
+    /// the pooled-vector nearest-rank percentiles within one bucket width,
+    /// for arbitrary samples split arbitrarily across replicas.
+    #[test]
+    fn property_merged_quantiles_within_one_bucket_of_pooled() {
+        check(200, |rng| {
+            let n = 1 + rng.index(120);
+            let samples: Vec<f64> =
+                (0..n).map(|_| rng.range_f64(1e-5, 50.0)).collect();
+            // Split into 1..=4 parts at random, merge per-part histograms.
+            let parts = 1 + rng.index(4);
+            let mut hists = vec![LogHist::new(); parts];
+            for (i, &x) in samples.iter().enumerate() {
+                hists[i % parts].record(x);
+            }
+            let mut merged = LogHist::new();
+            for h in &hists {
+                merged.merge(h);
+            }
+            crate::prop_assert!(
+                merged == LogHist::of(&samples),
+                "merge is not exact on {n} samples in {parts} parts"
+            );
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+                let rank = ((q / 100.0) * (n - 1) as f64).round() as usize;
+                let exact = sorted[rank];
+                let got = merged.quantile(q);
+                let ratio = got / exact;
+                crate::prop_assert!(
+                    ratio >= 1.0 / 1.0906 && ratio <= 1.0906,
+                    "q{q}: hist {got} vs exact {exact} differ by more \
+                     than one bucket width (ratio {ratio})"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,266 @@
+//! The metrics registry: named counters, gauges and log-bucketed
+//! histograms behind one lock, plus the immutable [`MetricsSnapshot`]
+//! that reports embed and `BENCH_*.json` artifacts carry.
+//!
+//! Naming convention (DESIGN.md §13): flat slash-separated keys, ordered
+//! lexicographically by the underlying `BTreeMap` so serialization is
+//! deterministic. The serving paths use:
+//!
+//! * counters — `admitted`, `shed`, `departed`
+//! * gauges — `occupancy/g{g}r{r}s{s}` (per-stage busy fraction),
+//!   `queue_depth_peak/g{g}` (front-door high-water mark), `wall_s`
+//! * histograms — `latency` (end-to-end, pooled across replicas),
+//!   `stage_service/g{g}r{r}s{s}` (per-stage service times)
+//!
+//! Where a dimension does not apply (single-plan serving has one group)
+//! the index is still written, so keys stay parseable and sortable.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::hist::LogHist;
+use crate::util::json::Json;
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LogHist>,
+}
+
+/// Thread-safe named-metric store. All methods take `&self`; cloning the
+/// owning [`super::Recorder`] shares one registry.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to counter `name` (creating it at zero).
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set gauge `name` to `v` unconditionally.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), v);
+    }
+
+    /// Raise gauge `name` to `v` if `v` is larger (high-water marks like
+    /// peak queue depth).
+    pub fn gauge_max(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.gauges.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if v > *e {
+            *e = v;
+        }
+    }
+
+    /// Record `v` into histogram `name`.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.hists.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Absorb a whole pre-built histogram into `name` (the bulk path the
+    /// latency-merge sites use — one lock round per replica, not per
+    /// sample).
+    pub fn observe_hist(&self, name: &str, h: &LogHist) {
+        let mut g = self.inner.lock().unwrap();
+        g.hists.entry(name.to_string()).or_default().merge(h);
+    }
+
+    /// Immutable copy of the current state.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: g.counters.clone(),
+            gauges: g.gauges.clone(),
+            hists: g.hists.clone(),
+        }
+    }
+}
+
+/// Frozen registry state: what reports embed under `"metrics"` and the
+/// bench artifact stores per scenario. Round-trips losslessly through
+/// [`MetricsSnapshot::to_json`] / [`MetricsSnapshot::from_json`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, LogHist>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram by name, if present.
+    pub fn hist(&self, name: &str) -> Option<&LogHist> {
+        self.hists.get(name)
+    }
+
+    /// Gauges whose key starts with `prefix`, in key order.
+    pub fn gauges_with_prefix(&self, prefix: &str) -> Vec<(&str, f64)> {
+        self.gauges
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &v)| (k.as_str(), v))
+            .collect()
+    }
+
+    /// Merge another snapshot: counters add, gauges take the max (they
+    /// are high-water marks or identical run constants), histograms merge.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, &v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, &v) in &other.gauges {
+            let e = self.gauges.entry(k.clone()).or_insert(f64::NEG_INFINITY);
+            if v > *e {
+                *e = v;
+            }
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::num(v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "hists",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot> {
+        let obj = |key: &str| -> Result<&BTreeMap<String, Json>> {
+            match j.req(key)? {
+                Json::Obj(m) => Ok(m),
+                _ => anyhow::bail!("metrics field {key} must be an object"),
+            }
+        };
+        let mut s = MetricsSnapshot::default();
+        for (k, v) in obj("counters")? {
+            s.counters.insert(
+                k.clone(),
+                v.as_usize().with_context(|| format!("counter {k}"))? as u64,
+            );
+        }
+        for (k, v) in obj("gauges")? {
+            s.gauges
+                .insert(k.clone(), v.as_f64().with_context(|| format!("gauge {k}"))?);
+        }
+        for (k, v) in obj("hists")? {
+            s.hists.insert(
+                k.clone(),
+                LogHist::from_json(v).with_context(|| format!("histogram {k}"))?,
+            );
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_hists_accumulate() {
+        let r = MetricsRegistry::new();
+        r.inc("admitted", 3);
+        r.inc("admitted", 2);
+        r.gauge_max("queue_depth_peak/g0", 2.0);
+        r.gauge_max("queue_depth_peak/g0", 1.0);
+        r.observe("latency", 0.02);
+        r.observe("latency", 0.04);
+        let s = r.snapshot();
+        assert_eq!(s.counter("admitted"), 5);
+        assert_eq!(s.counter("missing"), 0);
+        assert_eq!(s.gauge("queue_depth_peak/g0"), Some(2.0));
+        assert_eq!(s.hist("latency").map(|h| h.count()), Some(2));
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let r = MetricsRegistry::new();
+        r.inc("departed", 7);
+        r.gauge_set("wall_s", 1.25);
+        r.observe("stage_service/g0r0s0", 0.003);
+        let s = r.snapshot();
+        let j = s.to_json();
+        let back = MetricsSnapshot::from_json(&j).expect("deserializes");
+        assert_eq!(s, back);
+        assert_eq!(j.to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn snapshot_merge_adds_counters_and_merges_hists() {
+        let a = MetricsRegistry::new();
+        a.inc("admitted", 2);
+        a.observe("latency", 0.1);
+        let b = MetricsRegistry::new();
+        b.inc("admitted", 3);
+        b.observe("latency", 0.2);
+        b.gauge_max("queue_depth_peak/g0", 4.0);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.counter("admitted"), 5);
+        assert_eq!(s.hist("latency").map(|h| h.count()), Some(2));
+        assert_eq!(s.gauge("queue_depth_peak/g0"), Some(4.0));
+    }
+
+    #[test]
+    fn prefix_query_is_sorted_and_filtered() {
+        let r = MetricsRegistry::new();
+        r.gauge_set("occupancy/g0r0s1", 0.5);
+        r.gauge_set("occupancy/g0r0s0", 0.9);
+        r.gauge_set("wall_s", 3.0);
+        let s = r.snapshot();
+        let occ = s.gauges_with_prefix("occupancy/");
+        assert_eq!(
+            occ,
+            vec![("occupancy/g0r0s0", 0.9), ("occupancy/g0r0s1", 0.5)]
+        );
+    }
+}

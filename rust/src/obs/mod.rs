@@ -1,0 +1,46 @@
+//! Unified observability: per-item span tracing plus a metrics registry,
+//! shared by the DES twins and the wall-clock thread fleets.
+//!
+//! Until now the only visibility into *why* a run misses its Eq. 12
+//! prediction was the aggregate report tables: per-replica utilization
+//! and latency percentiles, with the per-item story discarded inside the
+//! recurrences and stage threads. This module is the instrument panel
+//! (DESIGN.md §13):
+//!
+//! * [`Recorder`] — one cheaply-clonable handle threaded through every
+//!   serving path. Disabled ([`Recorder::off`]) it is a single branch on
+//!   the hot path with no allocation; enabled ([`Recorder::on`]) it
+//!   buffers [`Span`]s and feeds a [`MetricsRegistry`].
+//! * [`Span`]/[`SpanKind`] — the per-item event model: admission, shed,
+//!   per-stage service, departure, stamped with sim-time in the DES and
+//!   the shared [`WallClock`] on the thread paths.
+//! * [`LogHist`] — mergeable log-bucketed histograms (8 buckets per
+//!   octave) with nearest-rank quantiles exact to one bucket width;
+//!   [`pool_latencies`] is the one latency-merge loop fleet, tenancy and
+//!   cluster report assembly now share.
+//! * [`MetricsSnapshot`] — the frozen counters/gauges/histograms embedded
+//!   in `ServeReport`/`MultiServeReport`/`ClusterServeReport` and in
+//!   `BENCH_*.json` scenario entries.
+//! * Exporters — schema-versioned JSONL ([`write_trace`], `--trace-out`)
+//!   and Chrome-trace/Perfetto JSON ([`convert_trace`], `pipeit trace
+//!   convert`); [`audit_chains`] checks span-chain conservation.
+//!
+//! Determinism contract: on the DES twins, recording adds no state the
+//! recurrence reads back, and the exporter sorts spans by the canonical
+//! key — same seed, same bytes. The `obs_tracing` suite pins both
+//! properties plus report-invariance under a disabled recorder.
+
+pub mod export;
+pub mod hist;
+pub mod metrics;
+pub mod recorder;
+pub mod span;
+
+pub use export::{
+    audit_chains, chrome_trace, convert_trace, load_trace, parse_trace, trace_to_jsonl,
+    write_trace, ChainAudit, TRACE_VERSION,
+};
+pub use hist::{pool_latencies, LogHist, BUCKETS_PER_OCTAVE};
+pub use metrics::{MetricsRegistry, MetricsSnapshot};
+pub use recorder::{Recorder, WallClock};
+pub use span::{Span, SpanKind};

@@ -1,0 +1,292 @@
+//! The [`Recorder`]: one cheaply-clonable handle that every serving path
+//! threads through — DES recurrences, wall-clock stage threads, front
+//! doors and routers — bundling the span buffer and the metrics registry.
+//!
+//! # Zero cost when off
+//!
+//! A disabled recorder ([`Recorder::off`]) holds no allocation at all:
+//! every recording method starts with `if self.inner.is_none() { return }`
+//! — one branch on the hot path, no span construction, no lock. The
+//! harness conformance suite pins that a disabled recorder changes no
+//! report field on any scenario.
+//!
+//! # Determinism
+//!
+//! The DES twins record spans in recurrence order, which is itself a
+//! function of the seed only; [`Recorder::spans_sorted`] additionally
+//! sorts by the canonical key ([`Span::sort_key`]) so the exported bytes
+//! do not depend on recording interleavings — this is what makes
+//! same-seed trace files byte-identical on the wall-clock-free paths.
+//!
+//! # Wall-clock stamps
+//!
+//! Wall paths stamp spans with [`WallClock`]: a shared epoch captured
+//! once at run start, read lock-free from every stage thread
+//! (`Instant::elapsed` on a shared immutable epoch — no synchronization
+//! beyond the `Arc`).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::hist::LogHist;
+use super::metrics::{MetricsRegistry, MetricsSnapshot};
+use super::span::{span_cmp, Span, SpanKind};
+
+#[derive(Debug)]
+struct RecorderInner {
+    spans: Mutex<Vec<Span>>,
+    metrics: MetricsRegistry,
+}
+
+/// See module docs. `Clone` shares the same buffer and registry.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<RecorderInner>>,
+}
+
+impl Recorder {
+    /// The disabled recorder: no allocation, every method a no-op after
+    /// one branch.
+    pub fn off() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// An enabled recorder with an empty span buffer and fresh registry.
+    pub fn on() -> Recorder {
+        Recorder {
+            inner: Some(Arc::new(RecorderInner {
+                spans: Mutex::new(Vec::new()),
+                metrics: MetricsRegistry::new(),
+            })),
+        }
+    }
+
+    /// Whether recording is on. Hot paths may branch on this once and
+    /// skip timestamp capture entirely.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Record a raw span.
+    pub fn span(&self, span: Span) {
+        if let Some(inner) = &self.inner {
+            inner.spans.lock().unwrap().push(span);
+        }
+    }
+
+    /// Zero-width admission span plus the `admitted` counter.
+    pub fn admit(&self, group: u32, item: u64, at_s: f64) {
+        if let Some(inner) = &self.inner {
+            inner.spans.lock().unwrap().push(Span {
+                group,
+                item,
+                replica: 0,
+                stage: 0,
+                kind: SpanKind::Admit,
+                t0: at_s,
+                t1: at_s,
+            });
+            inner.metrics.inc("admitted", 1);
+        }
+    }
+
+    /// Zero-width shed span plus the `shed` counter — the whole chain of
+    /// a turned-away item.
+    pub fn shed(&self, group: u32, item: u64, at_s: f64) {
+        if let Some(inner) = &self.inner {
+            inner.spans.lock().unwrap().push(Span {
+                group,
+                item,
+                replica: 0,
+                stage: 0,
+                kind: SpanKind::Shed,
+                t0: at_s,
+                t1: at_s,
+            });
+            inner.metrics.inc("shed", 1);
+        }
+    }
+
+    /// One stage's service interval, also recorded into the per-stage
+    /// service-time histogram.
+    pub fn stage(&self, group: u32, item: u64, replica: u32, stage: u32, t0: f64, t1: f64) {
+        if let Some(inner) = &self.inner {
+            inner.spans.lock().unwrap().push(Span {
+                group,
+                item,
+                replica,
+                stage,
+                kind: SpanKind::Stage,
+                t0,
+                t1,
+            });
+            inner
+                .metrics
+                .observe(&format!("stage_service/g{group}r{replica}s{stage}"), t1 - t0);
+        }
+    }
+
+    /// Zero-width departure span plus the `departed` counter. End-to-end
+    /// latency histograms are fed separately by the report-assembly merge
+    /// sites ([`super::hist::pool_latencies`] + [`Recorder::observe_hist`]
+    /// under `"latency"`), one bulk merge per replica instead of one lock
+    /// round per item.
+    pub fn depart(&self, group: u32, item: u64, replica: u32, at_s: f64) {
+        if let Some(inner) = &self.inner {
+            inner.spans.lock().unwrap().push(Span {
+                group,
+                item,
+                replica,
+                stage: 0,
+                kind: SpanKind::Depart,
+                t0: at_s,
+                t1: at_s,
+            });
+            inner.metrics.inc("departed", 1);
+        }
+    }
+
+    /// Counter increment (no-op when off).
+    pub fn inc(&self, name: &str, by: u64) {
+        if let Some(inner) = &self.inner {
+            inner.metrics.inc(name, by);
+        }
+    }
+
+    /// Gauge set (no-op when off).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        if let Some(inner) = &self.inner {
+            inner.metrics.gauge_set(name, v);
+        }
+    }
+
+    /// Gauge high-water mark (no-op when off).
+    pub fn gauge_max(&self, name: &str, v: f64) {
+        if let Some(inner) = &self.inner {
+            inner.metrics.gauge_max(name, v);
+        }
+    }
+
+    /// Single histogram observation (no-op when off). Prefer
+    /// [`Recorder::observe_hist`] where a whole sample vector is in hand.
+    pub fn observe(&self, name: &str, x: f64) {
+        if let Some(inner) = &self.inner {
+            inner.metrics.observe(name, x);
+        }
+    }
+
+    /// Bulk histogram absorb (no-op when off) — the latency-merge sites'
+    /// one-lock-per-replica path.
+    pub fn observe_hist(&self, name: &str, h: &LogHist) {
+        if let Some(inner) = &self.inner {
+            inner.metrics.observe_hist(name, h);
+        }
+    }
+
+    /// All recorded spans in canonical order (see module docs). Empty
+    /// when disabled.
+    pub fn spans_sorted(&self) -> Vec<Span> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => {
+                let mut spans = inner.spans.lock().unwrap().clone();
+                spans.sort_by(span_cmp);
+                spans
+            }
+        }
+    }
+
+    /// Frozen registry state, `None` when disabled.
+    pub fn snapshot(&self) -> Option<MetricsSnapshot> {
+        self.inner.as_ref().map(|i| i.metrics.snapshot())
+    }
+}
+
+/// Shared wall-clock epoch for the thread fleets: captured once before
+/// stage threads start, then read lock-free from every thread. All wall
+/// spans of one run share this basis, so cross-replica ordering on the
+/// exported timeline is meaningful.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    epoch: Arc<Instant>,
+}
+
+impl WallClock {
+    /// Capture the epoch now.
+    pub fn start() -> WallClock {
+        WallClock { epoch: Arc::new(Instant::now()) }
+    }
+
+    /// Seconds since the epoch.
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = Recorder::off();
+        assert!(!r.enabled());
+        r.admit(0, 1, 0.0);
+        r.stage(0, 1, 0, 0, 0.0, 0.5);
+        r.depart(0, 1, 0, 0.5);
+        r.inc("admitted", 10);
+        assert!(r.spans_sorted().is_empty());
+        assert!(r.snapshot().is_none());
+    }
+
+    #[test]
+    fn full_chain_counts_and_histograms() {
+        let r = Recorder::on();
+        r.admit(0, 0, 0.0);
+        r.stage(0, 0, 0, 0, 0.0, 0.1);
+        r.stage(0, 0, 0, 1, 0.1, 0.3);
+        r.depart(0, 0, 0, 0.3);
+        r.shed(0, 1, 0.05);
+        let spans = r.spans_sorted();
+        assert_eq!(spans.len(), 5);
+        let s = r.snapshot().expect("enabled");
+        assert_eq!(s.counter("admitted"), 1);
+        assert_eq!(s.counter("shed"), 1);
+        assert_eq!(s.counter("departed"), 1);
+        assert_eq!(s.hist("stage_service/g0r0s0").map(|h| h.count()), Some(1));
+        assert_eq!(s.hist("stage_service/g0r0s1").map(|h| h.count()), Some(1));
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let r = Recorder::on();
+        let r2 = r.clone();
+        r2.admit(0, 7, 1.0);
+        assert_eq!(r.spans_sorted().len(), 1);
+    }
+
+    #[test]
+    fn sorted_spans_do_not_depend_on_recording_order() {
+        let a = Recorder::on();
+        a.admit(0, 0, 0.0);
+        a.admit(0, 1, 1.0);
+        let b = Recorder::on();
+        b.admit(0, 1, 1.0);
+        b.admit(0, 0, 0.0);
+        assert_eq!(a.spans_sorted(), b.spans_sorted());
+    }
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::start();
+        let a = c.now_s();
+        let b = c.now_s();
+        assert!(b >= a && a >= 0.0);
+    }
+}

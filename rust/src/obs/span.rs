@@ -1,0 +1,139 @@
+//! The per-item span model: what one recorded event means.
+//!
+//! A span is a `Copy` struct of indices and two timestamps — no strings,
+//! no allocation — so recording one on the stage hot path is a bounds
+//! check and a `Vec::push` under a mutex when tracing is on, and a single
+//! branch when it is off (DESIGN.md §13).
+//!
+//! Item lifecycle, per (group, item):
+//!
+//! ```text
+//! Admit ──► Stage(0) ──► Stage(1) ──► … ──► Stage(P-1) ──► Depart
+//!   └──► (nothing else)                      when the item was Shed
+//! ```
+//!
+//! `group` is the board index on the cluster paths, the tenant index on
+//! the multi-tenant paths, and `0` for single-plan serving. `item` is
+//! unique within its group; the DES twins use the arrival index (so
+//! same-seed traces are bit-identical), the wall twins use
+//! `replica << 32 | sequence` (FIFO order through a replica's stages
+//! makes the per-stage sequence number a stable item identity).
+
+/// What a [`Span`] records. The discriminant order is the canonical sort
+/// order inside one item's chain: admission, then sheds, then stage
+/// service in pipeline order, then departure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Item arrived at the front door / dispatcher and was accepted.
+    Admit,
+    /// Item arrived and was turned away (admission queue full). A shed
+    /// item's chain is this single span.
+    Shed,
+    /// One stage's service on one replica (`replica`/`stage` are set).
+    Stage,
+    /// Item left the last stage — end-to-end latency is
+    /// `depart.t1 - admit.t0`.
+    Depart,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used by the JSONL exporter.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::Shed => "shed",
+            SpanKind::Stage => "stage",
+            SpanKind::Depart => "depart",
+        }
+    }
+
+    /// Inverse of [`SpanKind::name`].
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        match s {
+            "admit" => Some(SpanKind::Admit),
+            "shed" => Some(SpanKind::Shed),
+            "stage" => Some(SpanKind::Stage),
+            "depart" => Some(SpanKind::Depart),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event (see module docs for field semantics). Timestamps
+/// are seconds on the twin's own clock: simulated time in the DES,
+/// elapsed time on the shared wall clock in the thread fleets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// Board index (cluster), tenant index (multi-tenant), else 0.
+    pub group: u32,
+    /// Item identity, unique within `group`.
+    pub item: u64,
+    /// Replica that served the item (0 when unknown/not applicable).
+    pub replica: u32,
+    /// Stage index for [`SpanKind::Stage`] spans; 0 otherwise.
+    pub stage: u32,
+    pub kind: SpanKind,
+    /// Span start (s). Zero-width spans (Admit/Shed/Depart) set `t1 == t0`.
+    pub t0: f64,
+    /// Span end (s).
+    pub t1: f64,
+}
+
+impl Span {
+    /// Canonical ordering key: group, then item, then time, then kind —
+    /// this is the order the exporter writes, which makes same-seed DES
+    /// dumps byte-identical regardless of recording interleavings.
+    pub fn sort_key(&self) -> (u32, u64, f64, SpanKind, u32) {
+        (self.group, self.item, self.t0, self.kind, self.stage)
+    }
+}
+
+/// Total-order comparison of two span sort keys (`f64` compared with
+/// `total_cmp`, so the sort is deterministic even for equal timestamps).
+pub fn span_cmp(a: &Span, b: &Span) -> std::cmp::Ordering {
+    let (ag, ai, at, ak, asg) = a.sort_key();
+    let (bg, bi, bt, bk, bsg) = b.sort_key();
+    ag.cmp(&bg)
+        .then(ai.cmp(&bi))
+        .then(at.total_cmp(&bt))
+        .then(ak.cmp(&bk))
+        .then(asg.cmp(&bsg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in [SpanKind::Admit, SpanKind::Shed, SpanKind::Stage, SpanKind::Depart] {
+            assert_eq!(SpanKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sort_orders_one_item_chain_admit_stages_depart() {
+        let item = |kind, stage, t0: f64| Span {
+            group: 0,
+            item: 4,
+            replica: 1,
+            stage,
+            kind,
+            t0,
+            t1: t0,
+        };
+        let mut spans = vec![
+            item(SpanKind::Depart, 0, 3.0),
+            item(SpanKind::Stage, 1, 2.0),
+            item(SpanKind::Admit, 0, 0.0),
+            item(SpanKind::Stage, 0, 1.0),
+        ];
+        spans.sort_by(span_cmp);
+        let kinds: Vec<SpanKind> = spans.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![SpanKind::Admit, SpanKind::Stage, SpanKind::Stage, SpanKind::Depart]
+        );
+    }
+}

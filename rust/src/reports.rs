@@ -8,6 +8,7 @@ use crate::api::{ServeMode, ServeReport};
 use crate::baselines;
 use crate::cluster::{ClusterServeMode, ClusterServeReport};
 use crate::harness::{BenchComparison, BenchReport, Verdict};
+use crate::obs::MetricsSnapshot;
 use crate::tenancy::{MultiServeMode, MultiServeReport};
 use crate::cnn::layer::LayerKind;
 use crate::cnn::zoo;
@@ -306,6 +307,71 @@ pub fn render_bench_compare(c: &BenchComparison) -> String {
         c.count(Verdict::Regressed),
         c.count(Verdict::Unchanged),
     ));
+    s
+}
+
+/// Render a [`MetricsSnapshot`] — the observability footer the
+/// `serve`-family commands print when tracing is on (DESIGN.md §13): run
+/// counters, the pooled `latency` histogram's percentiles (exact within
+/// one ~9% bucket), front-door queue-depth peaks, and the hottest stages
+/// by occupancy with their service-time histograms (top 8, occupancy
+/// descending, key-ordered ties).
+pub fn render_metrics(m: &MetricsSnapshot) -> String {
+    let mut s = format!(
+        "observability: admitted={} shed={} departed={}",
+        m.counter("admitted"),
+        m.counter("shed"),
+        m.counter("departed"),
+    );
+    if let Some(w) = m.gauge("wall_s") {
+        s.push_str(&format!(" wall={w:.3}s"));
+    }
+    s.push('\n');
+    if let Some(h) = m.hist("latency") {
+        s.push_str(&format!(
+            "latency    : n={} p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n",
+            h.count(),
+            h.quantile(50.0) * 1e3,
+            h.quantile(95.0) * 1e3,
+            h.quantile(99.0) * 1e3,
+            h.max() * 1e3,
+        ));
+    }
+    let peaks = m.gauges_with_prefix("queue_depth_peak/");
+    if !peaks.is_empty() {
+        s.push_str("queue peak :");
+        for (k, v) in &peaks {
+            s.push_str(&format!(" {}={v:.0}", &k["queue_depth_peak/".len()..]));
+        }
+        s.push('\n');
+    }
+    let mut occ = m.gauges_with_prefix("occupancy/");
+    occ.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(b.0)));
+    if !occ.is_empty() {
+        const TOP: usize = 8;
+        let mut t = Table::new(
+            &format!(
+                "Hottest stages by occupancy (top {} of {})",
+                occ.len().min(TOP),
+                occ.len()
+            ),
+            &["stage", "occupancy", "items", "p50 ms", "p95 ms", "busy s"],
+        );
+        for (k, v) in occ.iter().take(TOP) {
+            let key = &k["occupancy/".len()..];
+            let h = m.hist(&format!("stage_service/{key}"));
+            let cell = |x: Option<String>| x.unwrap_or_else(|| "-".to_string());
+            t.row(vec![
+                key.to_string(),
+                format!("{:.1}%", 100.0 * v),
+                cell(h.map(|h| h.count().to_string())),
+                cell(h.map(|h| format!("{:.1}", h.quantile(50.0) * 1e3))),
+                cell(h.map(|h| format!("{:.1}", h.quantile(95.0) * 1e3))),
+                cell(h.map(|h| format!("{:.3}", h.sum()))),
+            ]);
+        }
+        s.push_str(&t.render());
+    }
     s
 }
 
@@ -1139,6 +1205,29 @@ mod tests {
     }
 
     #[test]
+    fn render_metrics_caps_the_stage_table_at_top_8() {
+        let rec = crate::obs::Recorder::on();
+        for r in 0..5 {
+            for st in 0..2 {
+                rec.gauge_set(
+                    &format!("occupancy/g0r{r}s{st}"),
+                    0.05 * (1 + r * 2 + st) as f64,
+                );
+                rec.observe(&format!("stage_service/g0r{r}s{st}"), 0.01);
+            }
+        }
+        let snap = rec.snapshot().unwrap();
+        let s = render_metrics(&snap);
+        assert!(s.contains("top 8 of 10"), "{s}");
+        // Hottest first; the two coldest stages (r0) fall off the table.
+        assert!(s.contains("g0r4s1"), "{s}");
+        assert!(!s.contains("g0r0s0 "), "{s}");
+        // No latency hist, no queue peaks: those lines are absent.
+        assert!(!s.contains("latency"), "{s}");
+        assert!(!s.contains("queue peak"), "{s}");
+    }
+
+    #[test]
     fn render_bench_and_compare_shapes() {
         use crate::harness::{compare, BenchReport, SampleStats, ScenarioResult};
         let entry = |median: f64, unit: &str, higher: bool| ScenarioResult {
@@ -1150,6 +1239,7 @@ mod tests {
             samples: vec![median; 3],
             stats: SampleStats::from_samples(&[median; 3], 3.5, 0.95, 50, 1),
             host_s: 0.0,
+            metrics: None,
         };
         let report = |m: f64| BenchReport {
             suite: "quick".into(),

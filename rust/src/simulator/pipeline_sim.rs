@@ -16,6 +16,16 @@
 //! — e.g. a thermal throttle scaling one cluster's stages by 2× at time `t`
 //! — so the online-adaptation control loop ([`crate::adapt`]) is testable
 //! deterministically in the DES before it ever touches wall-clock threads.
+//!
+//! The *recorded* variants ([`simulate_recorded`],
+//! [`simulate_replicated_recorded`], [`simulate_disturbed_recorded`])
+//! additionally emit per-item spans — admit, per-stage service, depart,
+//! stamped with simulation time — into an [`crate::obs::Recorder`]. The
+//! recurrence never reads recorder state back, so a disabled recorder is
+//! bit-identical to the plain variants and same-seed traced runs produce
+//! byte-identical span streams (DESIGN.md §13).
+
+use crate::obs::Recorder;
 
 /// Result of simulating a stream through a pipeline.
 #[derive(Debug, Clone)]
@@ -108,6 +118,62 @@ pub fn simulate_disturbed(
     events: &[ThrottleEvent],
     t0: f64,
     replica: usize,
+    on_service: impl FnMut(usize, f64),
+) -> SimReport {
+    simulate_disturbed_recorded(
+        stage_times,
+        images,
+        queue_cap,
+        events,
+        t0,
+        replica,
+        &Recorder::off(),
+        0,
+        None,
+        on_service,
+    )
+}
+
+/// [`simulate`] with span recording: admit/stage/depart spans for every
+/// item land in `rec` under `group`, stamped with simulation time.
+pub fn simulate_recorded(
+    stage_times: &[f64],
+    images: usize,
+    queue_cap: usize,
+    rec: &Recorder,
+    group: u32,
+) -> SimReport {
+    simulate_disturbed_recorded(
+        stage_times,
+        images,
+        queue_cap,
+        &[],
+        0.0,
+        0,
+        rec,
+        group,
+        None,
+        |_, _| {},
+    )
+}
+
+/// [`simulate_disturbed`] with span recording (the recurrence both
+/// variants share). `ids` maps the local item index to a trace item id —
+/// fleet dispatch passes global arrival indices so cross-replica traces
+/// stay disjoint; `None` uses the local index. The recorder is write-only
+/// for the recurrence: with `Recorder::off()` this is exactly
+/// [`simulate_disturbed`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_disturbed_recorded(
+    stage_times: &[f64],
+    images: usize,
+    queue_cap: usize,
+    events: &[ThrottleEvent],
+    t0: f64,
+    replica: usize,
+    rec: &Recorder,
+    group: u32,
+    ids: Option<&[u64]>,
     mut on_service: impl FnMut(usize, f64),
 ) -> SimReport {
     assert!(!stage_times.is_empty());
@@ -147,6 +213,10 @@ pub fn simulate_disturbed(
             busy[s] += service;
             on_service(s, service);
             dep[s][i] = start + service;
+            if rec.enabled() {
+                let id = ids.map_or(i as u64, |m| m[i]);
+                rec.stage(group, id, replica as u32, s as u32, t0 + start, t0 + dep[s][i]);
+            }
         }
     }
 
@@ -157,6 +227,15 @@ pub fn simulate_disturbed(
             dep[p - 1][i] - enter.max(0.0)
         })
         .collect();
+    if rec.enabled() {
+        for i in 0..images {
+            let id = ids.map_or(i as u64, |m| m[i]);
+            let out = dep[p - 1][i];
+            rec.admit(group, id, t0 + out - latencies[i]);
+            rec.depart(group, id, replica as u32, t0 + out);
+        }
+        rec.observe_hist("latency", &crate::obs::LogHist::of(&latencies));
+    }
     let utilization: Vec<f64> = busy.iter().map(|b| b / makespan).collect();
     let (bottleneck, bt) = stage_times
         .iter()
@@ -270,6 +349,36 @@ pub fn simulate_replicated_disturbed(
     queue_cap: usize,
     events: &[ThrottleEvent],
     t0: f64,
+    on_service: impl FnMut(usize, usize, f64),
+) -> FleetSimReport {
+    simulate_replicated_recorded(
+        replica_stage_times,
+        images,
+        queue_cap,
+        events,
+        t0,
+        &Recorder::off(),
+        0,
+        0,
+        on_service,
+    )
+}
+
+/// [`simulate_replicated_disturbed`] with span recording: each item's
+/// trace id is its global dispatch index offset by `id_base` (chunked
+/// adaptive runs pass the number of images already served, so ids stay
+/// unique across chunks), and every item's admit/stage/depart chain lands
+/// in `rec` under `group`.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_replicated_recorded(
+    replica_stage_times: &[Vec<f64>],
+    images: usize,
+    queue_cap: usize,
+    events: &[ThrottleEvent],
+    t0: f64,
+    rec: &Recorder,
+    group: u32,
+    id_base: u64,
     mut on_service: impl FnMut(usize, usize, f64),
 ) -> FleetSimReport {
     assert!(!replica_stage_times.is_empty());
@@ -283,12 +392,14 @@ pub fn simulate_replicated_disturbed(
 
     let mut work = vec![0.0f64; r];
     let mut dispatched = vec![0usize; r];
-    for _ in 0..images {
+    let mut ids: Vec<Vec<u64>> = vec![Vec::new(); r];
+    for g in 0..images {
         let pick = (0..r)
             .min_by(|&a, &b| (work[a] + cycles[a]).total_cmp(&(work[b] + cycles[b])))
             .expect("nonempty fleet");
         work[pick] += cycles[pick];
         dispatched[pick] += 1;
+        ids[pick].push(id_base + g as u64);
     }
 
     let per_replica: Vec<SimReport> = replica_stage_times
@@ -299,9 +410,18 @@ pub fn simulate_replicated_disturbed(
             if n == 0 {
                 idle_sim_report(times)
             } else {
-                simulate_disturbed(times, n, queue_cap, events, t0, i, |s, dt| {
-                    on_service(i, s, dt)
-                })
+                simulate_disturbed_recorded(
+                    times,
+                    n,
+                    queue_cap,
+                    events,
+                    t0,
+                    i,
+                    rec,
+                    group,
+                    Some(&ids[i]),
+                    |s, dt| on_service(i, s, dt),
+                )
             }
         })
         .collect();
@@ -457,6 +577,46 @@ mod tests {
         assert!(
             (fleet / solo - 2.0).abs() < 0.05,
             "fleet {fleet:.2} vs solo {solo:.2}"
+        );
+    }
+
+    #[test]
+    fn recorded_run_conserves_chains_and_matches_plain() {
+        use crate::obs::{audit_chains, Recorder};
+        let times = vec![vec![0.02, 0.04], vec![0.03]];
+        let plain = simulate_replicated(&times, 120, 2);
+        let rec = Recorder::on();
+        let traced = simulate_replicated_recorded(
+            &times, 120, 2, &[], 0.0, &rec, 0, 0, |_, _, _| {},
+        );
+        // Recording must not perturb the simulation.
+        assert_eq!(plain.dispatched, traced.dispatched);
+        assert!((plain.makespan - traced.makespan).abs() < 1e-12);
+        // Every image has a complete admit -> stages -> depart chain.
+        let audit = audit_chains(&rec.spans_sorted()).expect("conserved");
+        assert_eq!(audit.complete, 120);
+        assert_eq!(audit.shed, 0);
+        assert_eq!(
+            audit.stage_spans,
+            traced.dispatched[0] * 2 + traced.dispatched[1]
+        );
+        // Busy time in the recorder's histograms equals the report's.
+        let snap = rec.snapshot().unwrap();
+        let hist_busy: f64 = (0..2)
+            .flat_map(|r| (0..2).map(move |s| (r, s)))
+            .filter_map(|(r, s)| snap.hist(&format!("stage_service/g0r{r}s{s}")))
+            .map(|h| h.sum())
+            .sum();
+        let report_busy: f64 = traced
+            .per_replica
+            .iter()
+            .map(|p| {
+                p.utilization.iter().sum::<f64>() * p.makespan
+            })
+            .sum();
+        assert!(
+            (hist_busy - report_busy).abs() < 1e-6 * report_busy.max(1.0),
+            "hist busy {hist_busy} vs report busy {report_busy}"
         );
     }
 

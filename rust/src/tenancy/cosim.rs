@@ -19,6 +19,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::obs::{LogHist, Recorder};
 use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
 
 use crate::api::LatencyReport;
@@ -71,6 +72,31 @@ pub fn simulate_tenant_fleet(
     queue_cap: usize,
     admission_cap: usize,
 ) -> TenantSimOutcome {
+    simulate_tenant_fleet_recorded(
+        replica_stage_times,
+        arrivals,
+        queue_cap,
+        admission_cap,
+        &Recorder::off(),
+        0,
+    )
+}
+
+/// [`simulate_tenant_fleet`] with span recording: every arrival leaves a
+/// chain in `rec` under `group` (the tenant index) — a lone shed span
+/// when the front door turns it away, otherwise admit → per-stage service
+/// → depart, all stamped with simulation time. The item id is the arrival
+/// index, so same-seed traces are byte-identical. The recorder is
+/// write-only: with [`Recorder::off`] this is exactly
+/// [`simulate_tenant_fleet`].
+pub fn simulate_tenant_fleet_recorded(
+    replica_stage_times: &[Vec<f64>],
+    arrivals: &[f64],
+    queue_cap: usize,
+    admission_cap: usize,
+    rec: &Recorder,
+    group: u32,
+) -> TenantSimOutcome {
     assert!(!replica_stage_times.is_empty(), "tenant needs at least one replica");
     assert!(replica_stage_times.iter().all(|t| !t.is_empty()));
     assert!(queue_cap >= 1);
@@ -88,13 +114,18 @@ pub fn simulate_tenant_fleet(
     let mut dispatched = vec![0usize; r];
     let mut shed = 0usize;
 
-    for &a in arrivals {
+    for (i, &a) in arrivals.iter().enumerate() {
         // Front door: count admitted items still waiting to start service.
         let waiting = start0_all.iter().filter(|&&t| t > a).count();
+        if rec.enabled() {
+            rec.gauge_max(&format!("queue_depth_peak/g{group}"), waiting as f64);
+        }
         if waiting >= admission_cap {
             shed += 1;
+            rec.shed(group, i as u64, a);
             continue;
         }
+        rec.admit(group, i as u64, a);
         // Join-earliest-start dispatch (estimate ignores downstream
         // blocking, which only delays starts further on loaded replicas).
         let pick = (0..r)
@@ -128,7 +159,11 @@ pub fn simulate_tenant_fleet(
             }
             prev_stage_dep = start + times[s];
             dep[pick][s].push(prev_stage_dep);
+            if rec.enabled() {
+                rec.stage(group, i as u64, pick as u32, s as u32, start, prev_stage_dep);
+            }
         }
+        rec.depart(group, i as u64, pick as u32, prev_stage_dep);
         latencies.push(prev_stage_dep - a);
         dispatched[pick] += 1;
     }
@@ -186,6 +221,18 @@ fn tenant_utilization(out: &TenantSimOutcome) -> f64 {
 /// Poisson stream, run the per-tenant fleet recurrence, and merge the
 /// outcome into one [`MultiServeReport`].
 pub fn simulate_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiServeReport> {
+    simulate_multi_recorded(mp, opts, &Recorder::off())
+}
+
+/// [`simulate_multi`] with span recording: tenant `i`'s items trace under
+/// group `i`, and the recorder's registry picks up the shared metric
+/// vocabulary (DESIGN.md §13) — `latency` pooled across tenants,
+/// per-stage `stage_service`/`occupancy`, front-door `queue_depth_peak`.
+pub fn simulate_multi_recorded(
+    mp: &MultiPlan,
+    opts: &MultiServeOptions,
+    rec: &Recorder,
+) -> Result<MultiServeReport> {
     anyhow::ensure!(opts.images >= 1, "need at least one arrival per tenant");
     anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
     anyhow::ensure!(opts.admission_cap >= 1, "admission capacity must be >= 1");
@@ -196,8 +243,17 @@ pub fn simulate_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiS
         let times: Vec<Vec<f64>> =
             t.plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
         let arrivals = tenant_arrivals(t.rate_hz, t.seed, i, opts);
-        let out =
-            simulate_tenant_fleet(&times, &arrivals, opts.queue_cap, opts.admission_cap);
+        let out = simulate_tenant_fleet_recorded(
+            &times,
+            &arrivals,
+            opts.queue_cap,
+            opts.admission_cap,
+            rec,
+            i as u32,
+        );
+        if rec.enabled() {
+            rec.observe_hist("latency", &LogHist::of(&out.latencies));
+        }
         let latency = LatencyReport::from_latencies(&out.latencies);
         let throughput =
             if out.makespan > 0.0 { out.admitted as f64 / out.makespan } else { 0.0 };
@@ -234,6 +290,17 @@ pub fn simulate_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiS
         if wall_s > 0.0 { busy_core_s / (total_cores * wall_s) } else { 0.0 };
     let weighted_throughput =
         tenants.iter().map(|t| t.weight * t.throughput).sum();
+    if rec.enabled() {
+        rec.gauge_set("wall_s", wall_s);
+        for (i, out) in outcomes.iter().enumerate() {
+            for (r, stages) in out.busy.iter().enumerate() {
+                for (s, b) in stages.iter().enumerate() {
+                    let occ = if wall_s > 0.0 { b / wall_s } else { 0.0 };
+                    rec.gauge_set(&format!("occupancy/g{i}r{r}s{s}"), occ);
+                }
+            }
+        }
+    }
 
     Ok(MultiServeReport {
         mode: MultiServeMode::Des,
@@ -243,6 +310,7 @@ pub fn simulate_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiS
         weighted_throughput,
         board_utilization,
         tenants,
+        metrics: rec.snapshot(),
     })
 }
 

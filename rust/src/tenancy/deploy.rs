@@ -31,6 +31,7 @@ use crate::coordinator::queue::{bounded, TrySendError};
 use crate::coordinator::{run_fleet, StageSpec};
 
 use crate::api::LatencyReport;
+use crate::obs::{LogHist, Recorder, WallClock};
 
 use super::multiplan::MultiPlan;
 use super::report::{
@@ -39,11 +40,19 @@ use super::report::{
 
 /// Build one tenant's synthetic fleet: every stage sleeps for its Eq. 10
 /// service time scaled by `scale`; the last stage of each replica records
-/// the item's arrival→completion latency into `sink`.
+/// the item's arrival→completion latency into `sink`. When `rec` is
+/// enabled each stage also emits a service span stamped with the shared
+/// [`WallClock`] (raw wall seconds — the trace header says
+/// `"clock":"wall"`), and the last stage emits the departure span; when
+/// disabled the closures take the exact original path (one branch, no
+/// timestamp capture).
 fn tenant_stages(
     replica_times: &[Vec<f64>],
     scale: f64,
     sink: &Arc<Mutex<Vec<f64>>>,
+    rec: &Recorder,
+    clock: &WallClock,
+    group: u32,
 ) -> Vec<Vec<StageSpec<(usize, Instant)>>> {
     replica_times
         .iter()
@@ -57,15 +66,32 @@ fn tenant_stages(
                     let dt = Duration::from_secs_f64(t * scale);
                     let last = s + 1 == p;
                     let sink = sink.clone();
+                    let rec = rec.clone();
+                    let clock = clock.clone();
                     StageSpec::new(
                         &format!("r{r}s{s}"),
                         Box::new(move || {
+                            let rec = rec.clone();
+                            let clock = clock.clone();
                             Box::new(move |x: (usize, Instant)| {
-                                thread::sleep(dt);
-                                if last {
-                                    sink.lock()
-                                        .unwrap()
-                                        .push(x.1.elapsed().as_secs_f64());
+                                if rec.enabled() {
+                                    let t0 = clock.now_s();
+                                    thread::sleep(dt);
+                                    let t1 = clock.now_s();
+                                    rec.stage(group, x.0 as u64, r as u32, s as u32, t0, t1);
+                                    if last {
+                                        sink.lock()
+                                            .unwrap()
+                                            .push(x.1.elapsed().as_secs_f64());
+                                        rec.depart(group, x.0 as u64, r as u32, t1);
+                                    }
+                                } else {
+                                    thread::sleep(dt);
+                                    if last {
+                                        sink.lock()
+                                            .unwrap()
+                                            .push(x.1.elapsed().as_secs_f64());
+                                    }
                                 }
                                 x
                             })
@@ -81,6 +107,19 @@ fn tenant_stages(
 /// shared admission front door. See the module docs for the topology and
 /// the normalization convention.
 pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiServeReport> {
+    deploy_multi_recorded(mp, opts, &Recorder::off())
+}
+
+/// [`deploy_multi`] with span recording: tenant `i` traces under group
+/// `i`, the front door emits admit/shed spans, stage threads emit service
+/// and departure spans on the shared [`WallClock`], and the registry gets
+/// the common metric vocabulary (DESIGN.md §13) with latencies normalized
+/// back by `time_scale` so snapshots compare with the DES twin.
+pub fn deploy_multi_recorded(
+    mp: &MultiPlan,
+    opts: &MultiServeOptions,
+    rec: &Recorder,
+) -> Result<MultiServeReport> {
     anyhow::ensure!(opts.images >= 1, "need at least one arrival per tenant");
     anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
     anyhow::ensure!(opts.admission_cap >= 1, "admission capacity must be >= 1");
@@ -99,14 +138,15 @@ pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiSer
     schedule.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
     // Per-tenant plumbing: shed queue -> fleet thread.
+    let clock = WallClock::start();
     let mut front_txs = Vec::with_capacity(n_tenants);
     let mut sinks = Vec::with_capacity(n_tenants);
     let mut handles = Vec::with_capacity(n_tenants);
-    for t in &mp.tenants {
+    for (i, t) in mp.tenants.iter().enumerate() {
         let times: Vec<Vec<f64>> =
             t.plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
         let sink = Arc::new(Mutex::new(Vec::new()));
-        let stages = tenant_stages(&times, opts.time_scale, &sink);
+        let stages = tenant_stages(&times, opts.time_scale, &sink, rec, &clock, i as u32);
         let (tx, rx) = bounded::<(usize, Instant)>(opts.admission_cap);
         let queue_cap = opts.queue_cap;
         let handle = thread::spawn(move || {
@@ -132,12 +172,20 @@ pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiSer
             shed[tenant] += 1;
             continue;
         }
+        // Front-door timestamp taken BEFORE the enqueue: once the item is
+        // in the queue a stage thread may stamp its service span, and the
+        // admission must sort before it in the item's chain.
+        let at_s = if rec.enabled() { clock.now_s() } else { 0.0 };
         match front_txs[tenant].try_send((seq, Instant::now())) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => shed[tenant] += 1,
+            Ok(()) => rec.admit(tenant as u32, seq as u64, at_s),
+            Err(TrySendError::Full(_)) => {
+                shed[tenant] += 1;
+                rec.shed(tenant as u32, seq as u64, at_s);
+            }
             Err(TrySendError::Closed(_)) => {
                 alive[tenant] = false;
                 shed[tenant] += 1;
+                rec.shed(tenant as u32, seq as u64, at_s);
             }
         }
     }
@@ -162,6 +210,9 @@ pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiSer
             .iter()
             .map(|l| l / opts.time_scale)
             .collect();
+        if rec.enabled() {
+            rec.observe_hist("latency", &LogHist::of(&latencies));
+        }
         let latency = LatencyReport::from_latencies(&latencies);
         let throughput = fleet.throughput() * opts.time_scale;
         let busy: Vec<Vec<f64>> = fleet
@@ -184,6 +235,14 @@ pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiSer
         } else {
             0.0
         };
+        if rec.enabled() {
+            for (r, stages) in busy.iter().enumerate() {
+                for (st, b) in stages.iter().enumerate() {
+                    let occ = if wall > 0.0 { b / wall } else { 0.0 };
+                    rec.gauge_set(&format!("occupancy/g{i}r{r}s{st}"), occ);
+                }
+            }
+        }
         tenants.push(TenantReport {
             name: t.name.clone(),
             network: t.plan.network.clone(),
@@ -210,6 +269,7 @@ pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiSer
         if wall_s > 0.0 { busy_core_s / (total_cores * wall_s) } else { 0.0 };
     let weighted_throughput: f64 =
         tenants.iter().map(|t| t.weight * t.throughput).sum();
+    rec.gauge_set("wall_s", wall_s);
 
     Ok(MultiServeReport {
         mode: MultiServeMode::Synthetic { time_scale: opts.time_scale },
@@ -219,6 +279,7 @@ pub fn deploy_multi(mp: &MultiPlan, opts: &MultiServeOptions) -> Result<MultiSer
         weighted_throughput,
         board_utilization,
         tenants,
+        metrics: rec.snapshot(),
     })
 }
 

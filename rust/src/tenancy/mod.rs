@@ -54,8 +54,11 @@ pub mod multiplan;
 pub mod report;
 pub mod spec;
 
-pub use cosim::{simulate_multi, simulate_tenant_fleet, TenantSimOutcome};
-pub use deploy::deploy_multi;
+pub use cosim::{
+    simulate_multi, simulate_multi_recorded, simulate_tenant_fleet,
+    simulate_tenant_fleet_recorded, TenantSimOutcome,
+};
+pub use deploy::{deploy_multi, deploy_multi_recorded};
 pub use joint::{explore_joint, predict_p99, JointDesign, TenantDesign};
 pub use multiplan::{MultiPlan, TenantPlan, MULTI_PLAN_VERSION};
 pub use report::{

@@ -359,11 +359,30 @@ impl MultiPlan {
         super::cosim::simulate_multi(self, opts)
     }
 
+    /// [`MultiPlan::simulate`] with observability: per-item span chains
+    /// and the metrics registry land in `rec` (DESIGN.md §13).
+    pub fn simulate_recorded(
+        &self,
+        opts: &MultiServeOptions,
+        rec: &crate::obs::Recorder,
+    ) -> Result<MultiServeReport> {
+        super::cosim::simulate_multi_recorded(self, opts, rec)
+    }
+
     /// Wall-clock co-serving: one real thread fleet per tenant plus a
     /// shared front door pacing the merged arrival streams with per-tenant
     /// shed-on-full admission.
     pub fn deploy(&self, opts: &MultiServeOptions) -> Result<MultiServeReport> {
         deploy_multi(self, opts)
+    }
+
+    /// [`MultiPlan::deploy`] with observability (wall-clock spans).
+    pub fn deploy_recorded(
+        &self,
+        opts: &MultiServeOptions,
+        rec: &crate::obs::Recorder,
+    ) -> Result<MultiServeReport> {
+        super::deploy::deploy_multi_recorded(self, opts, rec)
     }
 }
 

@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::api::{LatencyReport, Plan};
 use crate::dse::PipelineConfig;
+use crate::obs::MetricsSnapshot;
 use crate::util::json::Json;
 
 /// Runtime knobs shared by both multi-tenant execution backends; the
@@ -113,6 +114,10 @@ pub struct MultiServeReport {
     /// Busy core-seconds over available core-seconds for the whole board.
     pub board_utilization: f64,
     pub tenants: Vec<TenantReport>,
+    /// Frozen observability registry (DESIGN.md §13) when the run was
+    /// recorded; `None` under a disabled [`crate::obs::Recorder`], keeping
+    /// unrecorded report bytes unchanged.
+    pub metrics: Option<MetricsSnapshot>,
 }
 
 impl MultiServeReport {
@@ -168,7 +173,7 @@ impl MultiServeReport {
                 })
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("mode", mode),
             ("wall_s", Json::num(self.wall_s)),
             ("images", Json::num(self.images as f64)),
@@ -176,7 +181,11 @@ impl MultiServeReport {
             ("weighted_throughput", Json::num(self.weighted_throughput)),
             ("board_utilization", Json::num(self.board_utilization)),
             ("tenants", tenants),
-        ])
+        ];
+        if let Some(m) = &self.metrics {
+            fields.push(("metrics", m.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -245,6 +254,7 @@ mod tests {
                 sla_ok: Some(true),
                 utilization: 0.71,
             }],
+            metrics: None,
         };
         let text = report.to_json().to_string();
         let j = Json::parse(&text).expect("multi report JSON reparses");

@@ -203,6 +203,14 @@ impl Summary {
         self.samples.iter().copied().fold(0.0, f64::max)
     }
 
+    /// Wrap an already-pooled sample vector (what
+    /// [`crate::obs::pool_latencies`] returns) — the constructor fleet
+    /// report assembly uses now that the per-replica merge loop lives in
+    /// one place.
+    pub fn from_samples(samples: Vec<f64>) -> Summary {
+        Summary { samples }
+    }
+
     /// Absorb another summary's samples (fleet-level report merging: the
     /// percentile queries then answer over the union of all replicas).
     pub fn merge(&mut self, other: &Summary) {

@@ -17,8 +17,10 @@ use pipeit::api::{
 use pipeit::harness::{
     BenchComparison, BenchReport, SampleStats, ScenarioDiff, ScenarioResult, Verdict,
 };
+use pipeit::obs::{LogHist, MetricsSnapshot};
 use pipeit::reports::{
-    render_bench, render_bench_compare, render_multi_serve, render_serve,
+    render_bench, render_bench_compare, render_metrics, render_multi_serve,
+    render_serve,
 };
 use pipeit::tenancy::{MultiServeMode, MultiServeReport, TenantReport};
 
@@ -80,6 +82,7 @@ fn render_serve_matches_golden() {
             to: "B2-s4".into(),
             predicted_throughput: 12.5,
         }],
+        metrics: None,
     };
     assert_golden("render_serve.txt", &render_serve(&report));
 }
@@ -130,6 +133,7 @@ fn render_multi_serve_matches_golden() {
                 utilization: 0.0,
             },
         ],
+        metrics: None,
     };
     assert_golden("render_multi_serve.txt", &render_multi_serve(&report));
 }
@@ -158,6 +162,7 @@ fn bench_fixture() -> BenchReport {
                     ci_hi: 16.0,
                 },
                 host_s: 0.2,
+                metrics: None,
             },
             ScenarioResult {
                 name: "multi/alexnet30+squeezenet60".into(),
@@ -179,6 +184,7 @@ fn bench_fixture() -> BenchReport {
                     ci_hi: 12.6,
                 },
                 host_s: 1.5,
+                metrics: None,
             },
             ScenarioResult {
                 name: "explore_64_pipelines_alexnet".into(),
@@ -197,6 +203,7 @@ fn bench_fixture() -> BenchReport {
                     ci_hi: 0.0013,
                 },
                 host_s: 0.7,
+                metrics: None,
             },
         ],
     }
@@ -236,4 +243,27 @@ fn render_bench_compare_matches_golden() {
         removed: vec!["host/explore_64_pipelines_alexnet".into()],
     };
     assert_golden("render_bench_compare.txt", &render_bench_compare(&cmp));
+}
+
+#[test]
+fn render_metrics_matches_golden() {
+    let mut m = MetricsSnapshot::default();
+    m.counters.insert("admitted".into(), 210);
+    m.counters.insert("shed".into(), 10);
+    m.counters.insert("departed".into(), 200);
+    m.gauges.insert("wall_s".into(), 12.5);
+    m.gauges.insert("queue_depth_peak/g0".into(), 3.0);
+    m.gauges.insert("queue_depth_peak/g1".into(), 5.0);
+    m.gauges.insert("occupancy/g0r0s0".into(), 0.8);
+    m.gauges.insert("occupancy/g0r0s1".into(), 0.4);
+    m.gauges.insert("occupancy/g1r0s0".into(), 0.95);
+    m.hists
+        .insert("latency".into(), LogHist::of(&[0.12, 0.15, 0.18, 0.12, 0.13]));
+    m.hists
+        .insert("stage_service/g0r0s0".into(), LogHist::of(&[0.05; 4]));
+    m.hists
+        .insert("stage_service/g0r0s1".into(), LogHist::of(&[0.025; 4]));
+    m.hists
+        .insert("stage_service/g1r0s0".into(), LogHist::of(&[0.06; 4]));
+    assert_golden("render_metrics.txt", &render_metrics(&m));
 }
