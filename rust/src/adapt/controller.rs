@@ -411,6 +411,29 @@ pub fn simulate_adaptive_recorded(
     // `latency` / `stage_service` histograms were fed chunk-wise by the
     // recorded fleet sim; only the run-level gauge remains.
     rec.gauge_set("wall_s", t_abs);
+    // Attribution (DESIGN.md §14): residuals compare against the FINAL
+    // plan's Eq. 10 times — pre-swap epochs aggregate under it and show up
+    // as excess, which is exactly the drift the controller reacted to. The
+    // adaptation timeline rides along as annotations so the reader can tell
+    // calibration-lag excess from a genuinely mispredicted stage.
+    let annotations: Vec<String> = adaptations
+        .iter()
+        .map(|e| {
+            format!(
+                "t={:.2}s after {} imgs: {} {} -> {} (pred {:.2} imgs/s)",
+                e.at_s, e.after_images, e.disturbance, e.from, e.to, e.predicted_throughput
+            )
+        })
+        .collect();
+    let attrib = if rec.enabled() {
+        let mut pred = crate::obs::PredictedTimes::new();
+        let planned: Vec<Vec<f64>> =
+            current.replicas.iter().map(|r| r.stage_times.clone()).collect();
+        pred.insert_replicas(0, &planned);
+        crate::obs::attrib_for(rec, &pred, annotations)
+    } else {
+        None
+    };
     let report = ServeReport {
         mode: ServeMode::Des,
         network: current.network.clone(),
@@ -422,6 +445,7 @@ pub fn simulate_adaptive_recorded(
         replicas: epoch.replica_reports(&current, epoch_wall),
         adaptations,
         metrics: rec.snapshot(),
+        attrib,
     };
     Ok(AdaptiveServe {
         final_snapshot: telemetry.snapshot(),
@@ -649,6 +673,10 @@ pub fn deploy_adaptive_recorded(
         replicas: epoch.replica_reports(&current, epoch_wall),
         adaptations,
         metrics: rec.snapshot(),
+        // Wall-clock stage spans are on the sleep-scaled clock, so Eq. 10
+        // residuals would be off-scale; `pipeit attrib --trace` handles
+        // wall traces offline.
+        attrib: None,
     };
     Ok(AdaptiveServe {
         final_snapshot: telemetry.snapshot(),

@@ -531,6 +531,12 @@ impl Plan {
                 }
             }
             report.metrics = rec.snapshot();
+            // Attribution (DESIGN.md §14): the DES serves exactly the
+            // Eq. 10 times it was given, so residuals here are the
+            // conservation baseline every other backend is read against.
+            let mut pred = crate::obs::PredictedTimes::new();
+            pred.insert_replicas(0, &times);
+            report.attrib = crate::obs::attrib_for(rec, &pred, Vec::new());
         }
         Ok(report)
     }
@@ -704,6 +710,9 @@ impl Plan {
                 }
             }
             serve.metrics = rec.snapshot();
+            // `serve.attrib` stays `None`: wall spans tick in sleep-scaled
+            // seconds, so in-band Eq. 10 residuals would be off-scale.
+            // `pipeit attrib --trace` decomposes wall traces offline.
         }
         Ok(serve)
     }

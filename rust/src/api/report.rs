@@ -8,7 +8,7 @@
 //! tests) free of per-backend match arms.
 
 use crate::coordinator::{FleetReport, RunReport};
-use crate::obs::MetricsSnapshot;
+use crate::obs::{AttribReport, MetricsSnapshot};
 use crate::simulator::pipeline_sim::FleetSimReport;
 use crate::util::json::Json;
 use crate::util::stats::{self, Summary};
@@ -147,6 +147,14 @@ pub struct ServeReport {
     /// describes the final (post-swap) partition while `images`/`wall_s`/
     /// `throughput` cover the whole run.
     pub adaptations: Vec<AdaptationEvent>,
+    /// Frozen metrics-registry state when the run recorded one
+    /// (`--trace-out` / an enabled [`crate::obs::Recorder`]); `None`
+    /// otherwise.
+    pub metrics: Option<MetricsSnapshot>,
+    /// Latency attribution + Eq. 10 residual table
+    /// ([`crate::obs::attrib`], DESIGN.md §14), present on recorded runs
+    /// whose backend emits spans.
+    pub attrib: Option<AttribReport>,
 }
 
 fn latency_from(s: &Summary) -> Option<LatencyReport> {
@@ -194,6 +202,7 @@ impl ServeReport {
             replicas,
             adaptations: Vec::new(),
             metrics: None,
+            attrib: None,
         }
     }
 
@@ -238,6 +247,7 @@ impl ServeReport {
             replicas: vec![replica],
             adaptations: Vec::new(),
             metrics: None,
+            attrib: None,
         }
     }
 
@@ -282,6 +292,7 @@ impl ServeReport {
             replicas,
             adaptations: Vec::new(),
             metrics: None,
+            attrib: None,
         }
     }
 
@@ -355,6 +366,9 @@ impl ServeReport {
         ];
         if let Some(m) = &self.metrics {
             fields.push(("metrics", m.to_json()));
+        }
+        if let Some(a) = &self.attrib {
+            fields.push(("attrib", a.to_json()));
         }
         Json::obj(fields)
     }

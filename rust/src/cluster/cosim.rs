@@ -18,7 +18,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use anyhow::Result;
 
 use crate::api::LatencyReport;
-use crate::obs::{pool_latencies, Recorder};
+use crate::obs::{attrib_for, pool_latencies, EngineProf, PredictedTimes, Recorder};
 use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
 
 use super::plan::ClusterPlan;
@@ -46,25 +46,35 @@ impl Ord for F {
 }
 
 /// A min-heap of event times: push instants, then discard everything at or
-/// before "now" — the live count is what remains.
+/// before "now" — the live count is what remains. The `pushes`/`pops`/
+/// `peak` tallies are write-only profiler counters (DESIGN.md §14): the
+/// recurrence never reads them, so instrumentation cannot perturb results.
 #[derive(Debug, Default)]
-struct EventHeap(BinaryHeap<Reverse<F>>);
+struct EventHeap {
+    heap: BinaryHeap<Reverse<F>>,
+    pushes: u64,
+    pops: u64,
+    peak: u64,
+}
 
 impl EventHeap {
     fn push(&mut self, t: f64) {
-        self.0.push(Reverse(F(t)));
+        self.heap.push(Reverse(F(t)));
+        self.pushes += 1;
+        self.peak = self.peak.max(self.heap.len() as u64);
     }
 
     /// Drop every event at or before `now`, then return the live count.
     fn live_after(&mut self, now: f64) -> usize {
-        while let Some(&Reverse(F(t))) = self.0.peek() {
+        while let Some(&Reverse(F(t))) = self.heap.peek() {
             if t <= now {
-                self.0.pop();
+                self.heap.pop();
+                self.pops += 1;
             } else {
                 break;
             }
         }
-        self.0.len()
+        self.heap.len()
     }
 }
 
@@ -188,6 +198,7 @@ pub fn simulate_cluster_streams_recorded(
         }
     }
 
+    let mut prof = EngineProf::start("cluster", rec);
     let mut router = Router::new(policy, weights.to_vec(), run_seed)?;
     let mut boards: Vec<Vec<FleetState>> = board_fleets
         .iter()
@@ -312,6 +323,36 @@ pub fn simulate_cluster_streams_recorded(
         arrivals.len(),
         "cluster DES lost items"
     );
+    // Engine profile (DESIGN.md §14): one event per front-door decision
+    // plus one per (item, stage) executed; heap traffic comes from the
+    // write-only tallies on the admission/completion heaps, and ring
+    // occupancy from the bounded departure rings.
+    if prof.active() {
+        prof.events = arrivals.len() as u64;
+        for (b, bf) in board_fleets.iter().enumerate() {
+            for (t, reps) in bf.iter().enumerate() {
+                for (q, times) in reps.iter().enumerate() {
+                    prof.events += out[b].dispatched[t][q] as u64 * times.len() as u64;
+                }
+            }
+        }
+        for (fleets, comp) in boards.iter().zip(&completions) {
+            for fleet in fleets {
+                prof.heap_pushes += fleet.waiting.pushes;
+                prof.heap_pops += fleet.waiting.pops;
+                prof.heap_peak = prof.heap_peak.max(fleet.waiting.peak);
+                for rep in &fleet.replicas {
+                    for ring in &rep.dep {
+                        prof.ring_peak = prof.ring_peak.max(ring.len() as u64);
+                    }
+                }
+            }
+            prof.heap_pushes += comp.pushes;
+            prof.heap_pops += comp.pops;
+            prof.heap_peak = prof.heap_peak.max(comp.peak);
+        }
+        prof.flush(rec);
+    }
     Ok(out)
 }
 
@@ -513,6 +554,24 @@ pub(crate) fn assemble_report(
 
     let images: usize = boards.iter().map(|b| b.admitted).sum();
     let shed: usize = boards.iter().map(|b| b.shed).sum();
+    // Attribution (DESIGN.md §14) is a DES-twin feature: spans are in model
+    // seconds there, directly comparable to Eq. 10. Wall-twin traces carry
+    // scaled sleep times; `pipeit attrib --trace` decomposes them offline.
+    let attrib = if matches!(mode, ClusterServeMode::Des) && rec.enabled() {
+        let mut pred = PredictedTimes::new();
+        for (b, entry) in cp.boards.iter().enumerate() {
+            let mut rid = 0u32;
+            for reps in entry.plan.fleet_stage_times() {
+                for times in reps {
+                    pred.insert(b as u32, rid, times);
+                    rid += 1;
+                }
+            }
+        }
+        attrib_for(rec, &pred, Vec::new())
+    } else {
+        None
+    };
     ClusterServeReport {
         mode,
         policy,
@@ -524,6 +583,7 @@ pub(crate) fn assemble_report(
         latency: LatencyReport::from_latencies(&all_latencies),
         boards,
         metrics: rec.snapshot(),
+        attrib,
     }
 }
 

@@ -6,7 +6,7 @@
 use anyhow::{Context, Result};
 
 use crate::api::LatencyReport;
-use crate::obs::MetricsSnapshot;
+use crate::obs::{AttribReport, MetricsSnapshot};
 use crate::util::json::Json;
 
 use super::router::DispatchPolicy;
@@ -140,6 +140,11 @@ pub struct ClusterServeReport {
     /// recorded; `None` under a disabled [`crate::obs::Recorder`], keeping
     /// unrecorded report bytes unchanged.
     pub metrics: Option<MetricsSnapshot>,
+    /// Prediction-error attribution over the recorded spans (DESIGN.md
+    /// §14): where each admitted item's latency went, and how each stage's
+    /// observed service compares to its Eq. 10 prediction. `None` when the
+    /// run was not recorded (or used the wall-clock twin).
+    pub attrib: Option<AttribReport>,
 }
 
 impl ClusterServeReport {
@@ -197,6 +202,9 @@ impl ClusterServeReport {
         if let Some(m) = &self.metrics {
             fields.push(("metrics", m.to_json()));
         }
+        if let Some(a) = &self.attrib {
+            fields.push(("attrib", a.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -233,6 +241,10 @@ impl ClusterServeReport {
             None => None,
             Some(m) => Some(MetricsSnapshot::from_json(m).context("metrics")?),
         };
+        let attrib = match j.get("attrib") {
+            None => None,
+            Some(a) => Some(AttribReport::from_json(a).context("attrib")?),
+        };
         Ok(ClusterServeReport {
             mode,
             policy,
@@ -244,6 +256,7 @@ impl ClusterServeReport {
             latency: latency_from_json(j.req("latency")?)?,
             boards,
             metrics,
+            attrib,
         })
     }
 }
@@ -321,6 +334,7 @@ mod tests {
                 utilization: 0.91,
             }],
             metrics: None,
+            attrib: None,
         };
         let text = report.to_json().to_string();
         let j = Json::parse(&text).expect("cluster report JSON reparses");
@@ -359,6 +373,7 @@ mod tests {
                 utilization: 0.66,
             }],
             metrics: None,
+            attrib: None,
         };
         let back = ClusterServeReport::from_json(
             &Json::parse(&report.to_json().to_string()).unwrap(),

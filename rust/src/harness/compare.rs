@@ -143,7 +143,14 @@ mod tests {
     }
 
     fn report(entries: Vec<ScenarioResult>) -> BenchReport {
-        BenchReport { suite: "quick".into(), seed: 7, warmup: 0, reps: 3, scenarios: entries }
+        BenchReport {
+            suite: "quick".into(),
+            seed: 7,
+            warmup: 0,
+            reps: 3,
+            recorded_rep: None,
+            scenarios: entries,
+        }
     }
 
     #[test]

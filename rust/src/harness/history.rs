@@ -1,0 +1,260 @@
+//! Longitudinal bench trajectory: a directory of `BENCH_*.json`
+//! artifacts read as one time series instead of pairwise compares.
+//!
+//! `pipeit bench --compare` answers "did this change regress anything";
+//! this module answers "where has each scenario been heading" — the
+//! ROADMAP's perf-trajectory item. [`BenchHistory::load_dir`] scans a
+//! directory for `BENCH_*.json`, orders the artifacts (numeric stems
+//! ascending first — `BENCH_0`, `BENCH_1`, `BENCH_10` — then the rest
+//! lexicographically), and exposes the per-scenario median trajectory
+//! two ways (DESIGN.md §14):
+//!
+//! * a rendered table (`reports::render_history`): one row per scenario,
+//!   one column per artifact, plus the first→last relative delta;
+//! * [`BenchHistory::dat`]: whitespace-separated gnuplot data (one row
+//!   per artifact, one column per scenario, `nan` for scenarios an
+//!   artifact does not carry) — `plot "history.dat" using 0:2 with
+//!   lines` plots the first scenario's trajectory directly.
+//!
+//! Scenarios are keyed `backend/name` — the same identity
+//! `harness::compare` uses, so a row here matches a verdict line there.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::report::{BenchReport, ScenarioResult};
+
+/// One artifact in the trajectory: its label (file stem with the
+/// `BENCH_` prefix stripped) and the loaded report.
+#[derive(Debug, Clone)]
+pub struct HistoryEntry {
+    pub label: String,
+    pub report: BenchReport,
+}
+
+/// An ordered sequence of bench artifacts (module docs).
+#[derive(Debug, Clone)]
+pub struct BenchHistory {
+    pub entries: Vec<HistoryEntry>,
+}
+
+/// The scenario identity used across artifacts: `backend/name` (the
+/// same key `harness::compare` reports added/removed scenarios under).
+pub fn scenario_key(s: &ScenarioResult) -> String {
+    format!("{}/{}", s.backend, s.name)
+}
+
+/// Artifact ordering: fully-numeric labels ascending first (the
+/// `BENCH_0`, `BENCH_1`, … convention), then the rest lexicographically.
+fn label_key(label: &str) -> (u8, u64, String) {
+    match label.parse::<u64>() {
+        Ok(n) => (0, n, label.to_string()),
+        Err(_) => (1, 0, label.to_string()),
+    }
+}
+
+impl BenchHistory {
+    /// Wrap pre-loaded entries in the given order (tests, synthetic
+    /// trajectories).
+    pub fn from_entries(entries: Vec<HistoryEntry>) -> BenchHistory {
+        BenchHistory { entries }
+    }
+
+    /// Scan `dir` for `BENCH_*.json`, order the artifacts, load each.
+    pub fn load_dir(dir: &Path) -> Result<BenchHistory> {
+        let mut found = Vec::new();
+        let listing = std::fs::read_dir(dir)
+            .with_context(|| format!("reading bench-history dir {}", dir.display()))?;
+        for entry in listing {
+            let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(stem) =
+                name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json"))
+            {
+                found.push((stem.to_string(), entry.path()));
+            }
+        }
+        ensure!(
+            !found.is_empty(),
+            "no BENCH_*.json artifacts in {} (run `pipeit bench --out \
+             BENCH_0.json` to start a trajectory)",
+            dir.display()
+        );
+        found.sort_by(|a, b| label_key(&a.0).cmp(&label_key(&b.0)));
+        let entries = found
+            .into_iter()
+            .map(|(label, path)| {
+                let report = BenchReport::load(&path)
+                    .with_context(|| format!("loading {}", path.display()))?;
+                Ok(HistoryEntry { label, report })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchHistory { entries })
+    }
+
+    /// Scenario keys in first-seen order across the entries, so rows are
+    /// stable as scenarios come and go over the trajectory.
+    pub fn keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::new();
+        for e in &self.entries {
+            for s in &e.report.scenarios {
+                let k = scenario_key(s);
+                if !keys.contains(&k) {
+                    keys.push(k);
+                }
+            }
+        }
+        keys
+    }
+
+    /// The scenario row behind `key` in entry `idx`, if that artifact
+    /// carries it.
+    pub fn scenario(&self, idx: usize, key: &str) -> Option<&ScenarioResult> {
+        self.entries
+            .get(idx)?
+            .report
+            .scenarios
+            .iter()
+            .find(|s| scenario_key(s) == key)
+    }
+
+    /// `key`'s median in entry `idx`, if present.
+    pub fn median(&self, idx: usize, key: &str) -> Option<f64> {
+        self.scenario(idx, key).map(|s| s.stats.median)
+    }
+
+    /// Gnuplot data export (module docs): a `# label key…` header, then
+    /// one row per artifact with each scenario's median (`nan` when the
+    /// artifact lacks the scenario).
+    pub fn dat(&self) -> String {
+        let keys = self.keys();
+        let mut out = String::from("# label");
+        for k in &keys {
+            out.push(' ');
+            out.push_str(k);
+        }
+        out.push('\n');
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&e.label);
+            for k in &keys {
+                match self.median(i, k) {
+                    Some(m) => out.push_str(&format!(" {m}")),
+                    None => out.push_str(" nan"),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::report::SampleStats;
+
+    fn entry(name: &str, backend: &str, median: f64) -> ScenarioResult {
+        ScenarioResult {
+            name: name.into(),
+            mode: "pipelined".into(),
+            backend: backend.into(),
+            unit: "imgs/s".into(),
+            higher_is_better: true,
+            samples: vec![median; 3],
+            stats: SampleStats {
+                n: 3,
+                rejected: 0,
+                median,
+                mean: median,
+                mad: 0.0,
+                ci_lo: median,
+                ci_hi: median,
+            },
+            host_s: 0.1,
+            metrics: None,
+        }
+    }
+
+    fn report(entries: Vec<ScenarioResult>) -> BenchReport {
+        BenchReport {
+            suite: "quick".into(),
+            seed: 7,
+            warmup: 0,
+            reps: 3,
+            recorded_rep: None,
+            scenarios: entries,
+        }
+    }
+
+    fn two_point_history() -> BenchHistory {
+        BenchHistory::from_entries(vec![
+            HistoryEntry {
+                label: "0".into(),
+                report: report(vec![
+                    entry("pipelined/alexnet", "des", 16.0),
+                    entry("serial/alexnet", "des", 4.5),
+                ]),
+            },
+            HistoryEntry {
+                label: "1".into(),
+                report: report(vec![
+                    entry("pipelined/alexnet", "des", 17.6),
+                    // serial/alexnet dropped, a new scenario appears.
+                    entry("replicated/alexnet", "des", 21.0),
+                ]),
+            },
+        ])
+    }
+
+    #[test]
+    fn keys_are_first_seen_order_across_entries() {
+        assert_eq!(
+            two_point_history().keys(),
+            vec![
+                "des/pipelined/alexnet".to_string(),
+                "des/serial/alexnet".to_string(),
+                "des/replicated/alexnet".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn dat_rows_per_artifact_with_nan_holes() {
+        let expected = "\
+# label des/pipelined/alexnet des/serial/alexnet des/replicated/alexnet
+0 16 4.5 nan
+1 17.6 nan 21
+";
+        assert_eq!(two_point_history().dat(), expected);
+    }
+
+    #[test]
+    fn labels_order_numerically_then_lexicographically() {
+        let mut labels = vec!["10", "ci", "2", "0", "ci_rerun"];
+        labels.sort_by(|a, b| label_key(a).cmp(&label_key(b)));
+        assert_eq!(labels, vec!["0", "2", "10", "ci", "ci_rerun"]);
+    }
+
+    #[test]
+    fn load_dir_scans_orders_and_rejects_empty() {
+        let dir = std::env::temp_dir()
+            .join(format!("pipeit_history_scan_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let empty = BenchHistory::load_dir(&dir).unwrap_err().to_string();
+        assert!(empty.contains("no BENCH_*.json"), "unhelpful error: {empty}");
+        let h = two_point_history();
+        // Write out of order; names that don't match the pattern are skipped.
+        for (e, file) in h.entries.iter().zip(["BENCH_10.json", "BENCH_2.json"]) {
+            std::fs::write(dir.join(file), format!("{}\n", e.report.to_json()))
+                .expect("artifact written");
+        }
+        std::fs::write(dir.join("notes.txt"), "ignored").expect("written");
+        let loaded = BenchHistory::load_dir(&dir).expect("loads");
+        std::fs::remove_dir_all(&dir).ok();
+        let labels: Vec<&str> =
+            loaded.entries.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(labels, vec!["2", "10"]);
+        assert_eq!(loaded.median(1, "des/pipelined/alexnet"), Some(17.6));
+    }
+}

@@ -25,6 +25,10 @@
 //!   same-seed quick runs compare as all-unchanged.
 //! * [`HostBench`] — the same statistics for `cargo bench` micro-timings;
 //!   the `benches/*.rs` targets are thin wrappers over it.
+//! * [`BenchHistory`] — the longitudinal view (`pipeit bench history`):
+//!   a directory of `BENCH_*.json` artifacts read as one per-scenario
+//!   trajectory, rendered as a table ([`crate::reports::render_history`])
+//!   or exported as gnuplot `.dat` data.
 //!
 //! # Example
 //!
@@ -40,6 +44,7 @@
 //! ```
 
 pub mod compare;
+pub mod history;
 pub mod report;
 pub mod runner;
 pub mod scenario;
@@ -47,6 +52,7 @@ pub mod scenario;
 pub use compare::{
     compare, BenchComparison, ScenarioDiff, Verdict, DEFAULT_MIN_REL_DELTA,
 };
+pub use history::{scenario_key, BenchHistory, HistoryEntry};
 pub use report::{BenchReport, SampleStats, ScenarioResult, BENCH_VERSION};
 pub use runner::{black_box, run_suite, save_if_requested, HostBench, RunnerOptions};
 pub use scenario::{registry, suite_entries, Backend, Scenario, Suite, SuiteEntry};

@@ -176,6 +176,12 @@ pub struct BenchReport {
     pub warmup: usize,
     /// Measured repetitions per scenario.
     pub reps: usize,
+    /// Which 0-based repetition the scenario `metrics` snapshots describe
+    /// (the runner records the LAST DES repetition; DESIGN.md §13/§14).
+    /// `None` for runs that record nothing (host micro-bench reports,
+    /// pre-observability artifacts) — optional in the JSON, so version-1
+    /// artifacts from before this field still load.
+    pub recorded_rep: Option<usize>,
     pub scenarios: Vec<ScenarioResult>,
 }
 
@@ -197,7 +203,7 @@ impl BenchReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::num(BENCH_VERSION as f64)),
             ("suite", Json::str(&self.suite)),
             ("seed", Json::num(self.seed as f64)),
@@ -207,7 +213,11 @@ impl BenchReport {
                 "scenarios",
                 Json::Arr(self.scenarios.iter().map(ScenarioResult::to_json).collect()),
             ),
-        ])
+        ];
+        if let Some(r) = self.recorded_rep {
+            fields.push(("recorded_rep", Json::num(r as f64)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<BenchReport> {
@@ -229,6 +239,10 @@ impl BenchReport {
             seed: j.req("seed")?.as_f64().context("seed")?.max(0.0) as u64,
             warmup: j.req("warmup")?.as_usize().context("warmup")?,
             reps: j.req("reps")?.as_usize().context("reps")?,
+            recorded_rep: match j.get("recorded_rep") {
+                None => None,
+                Some(v) => Some(v.as_usize().context("recorded_rep")?),
+            },
             scenarios,
         })
     }
@@ -260,6 +274,7 @@ mod tests {
             seed: 7,
             warmup: 1,
             reps: 5,
+            recorded_rep: Some(4),
             scenarios: vec![ScenarioResult {
                 name: "pipelined/alexnet".into(),
                 mode: "pipelined".into(),
@@ -308,6 +323,24 @@ mod tests {
         let err = BenchReport::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("\"version\""), "{err}");
         assert!(err.contains("99"), "{err}");
+    }
+
+    /// ISSUE 9 satellite: `recorded_rep` is schema-compatible — absent
+    /// from pre-observability artifacts (loads back as `None`), present
+    /// and lossless when set.
+    #[test]
+    fn recorded_rep_is_optional_and_loads_back() {
+        let r = sample_report();
+        let j = r.to_json();
+        assert_eq!(j.req("recorded_rep").unwrap().as_usize(), Some(4));
+        assert_eq!(BenchReport::from_json(&j).unwrap().recorded_rep, Some(4));
+        // A version-1 artifact written before the field existed.
+        let mut old = j.clone();
+        if let Json::Obj(m) = &mut old {
+            m.remove("recorded_rep");
+        }
+        let loaded = BenchReport::from_json(&old).expect("old artifact loads");
+        assert_eq!(loaded.recorded_rep, None);
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub(crate) fn fnv1a(s: &str) -> u64 {
 pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
     anyhow::ensure!(opts.reps >= 1, "need at least one repetition");
     let mut scenarios = Vec::new();
+    let mut recorded_rep = None;
     for e in suite_entries(suite) {
         let started = Instant::now();
         for _ in 0..opts.warmup {
@@ -92,6 +93,7 @@ pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
                 let (m, snap) = e.scenario.run_recorded(e.backend, seed, &rec)?;
                 samples.push(m);
                 metrics = snap;
+                recorded_rep = Some(rep);
             } else {
                 samples.push(e.scenario.run(e.backend, seed)?);
             }
@@ -121,6 +123,7 @@ pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
         seed: opts.seed,
         warmup: opts.warmup,
         reps: opts.reps,
+        recorded_rep,
         scenarios,
     })
 }
@@ -239,6 +242,7 @@ impl HostBench {
             seed: 0,
             warmup: 0,
             reps: 0,
+            recorded_rep: None,
             scenarios: self.results,
         }
     }
@@ -346,6 +350,7 @@ mod tests {
             seed: 7,
             warmup: 0,
             reps: 3,
+            recorded_rep: None,
             scenarios: vec![entry(scale)],
         };
         let base = report(1.0);

@@ -49,14 +49,22 @@
 //! The [`harness`] subsystem keeps all of the above measurable: a scenario
 //! registry spanning every serving mode (each in its DES and wall-clock
 //! twin), robust statistics, and a schema-versioned `BENCH_<n>.json`
-//! artifact with a CI-overlap regression gate (`pipeit bench`).
+//! artifact with a CI-overlap regression gate (`pipeit bench`) — and,
+//! longitudinally, [`harness::BenchHistory`] reads a directory of those
+//! artifacts as one per-scenario trajectory (`pipeit bench history`).
 //!
 //! The [`obs`] subsystem is the instrument panel shared by every serving
 //! path: a [`obs::Recorder`] captures per-item spans (admit → stages →
 //! depart, or shed) on both execution twins, feeds a metrics registry of
 //! counters, gauges and mergeable log-bucketed latency histograms, and
 //! exports schema-versioned JSONL traces (`--trace-out`) convertible to
-//! Chrome-trace/Perfetto JSON (`pipeit trace convert`).
+//! Chrome-trace/Perfetto JSON (`pipeit trace convert`). On top of the
+//! spans sits the explanation layer ([`obs::attrib`]): every recorded DES
+//! run decomposes item latency into front-door wait + queue wait + stage
+//! service and ranks each stage's residual against its Eq. 10 prediction
+//! ([`obs::AttribReport`], `pipeit attrib`), while the DES engines
+//! self-profile (event counts, heap/ring peaks, events per wall-second)
+//! through [`obs::EngineProf`] into the same registry.
 //!
 //! Architecture details live in `DESIGN.md`; the quickstart and the
 //! paper-to-module map live in `README.md`.

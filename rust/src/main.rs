@@ -24,8 +24,8 @@ use pipeit::harness::{self, BenchReport, RunnerOptions, Suite};
 use pipeit::obs::{self, Recorder};
 use pipeit::perfmodel::{PerfModel, TimeMatrix};
 use pipeit::reports::{
-    render_bench, render_bench_compare, render_cluster, render_metrics,
-    render_multi_serve, render_serve, Reporter,
+    render_attrib, render_bench, render_bench_compare, render_cluster,
+    render_history, render_metrics, render_multi_serve, render_serve, Reporter,
 };
 use pipeit::simulator::arrivals::ArrivalSpec;
 use pipeit::simulator::platform::CoreType;
@@ -39,7 +39,7 @@ use pipeit::util::table::{f, Table};
 const USAGE: &str = "\
 pipeit — Pipe-it: high-throughput CNN inference on big.LITTLE (TCAD'19 reproduction)
 
-USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cluster|serve-cluster|simulate-cluster|bench|trace|explore|predict|count|tables> [options]
+USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cluster|serve-cluster|simulate-cluster|bench|attrib|trace|explore|predict|count|tables> [options]
 
   plan       --net N [--predicted] [--platform F] [--out plan.json]
              [--strategy serial|pipeline|replicated|exhaustive|energy]
@@ -116,6 +116,21 @@ USAGE: pipeit <plan|serve|simulate|plan-multi|serve-multi|simulate-multi|plan-cl
                                                classify each scenario improved/
                                                REGRESSED/unchanged by CI overlap;
                                                exits non-zero on any regression
+  bench      history [DIR] [--dat history.dat]
+                                               longitudinal trajectory over a
+                                               directory of BENCH_*.json
+                                               artifacts: per-scenario medians
+                                               per artifact, first->last drift;
+                                               --dat writes a gnuplot-ready
+                                               column file
+  attrib     --trace trace.jsonl [--json attrib.json]
+                                               explain the miss: decompose each
+                                               traced item's latency into front
+                                               wait + queue wait + stage service
+  attrib     --plan plan.json --simulate [--images 500] [--queue-cap 2]
+             [--json attrib.json]              DES a saved plan and attribute
+                                               observed stage service against
+                                               its Eq. 10 predictions
   trace      convert trace.jsonl trace.chrome.json
                                                convert a --trace-out span dump to
                                                Chrome-trace/Perfetto JSON (load in
@@ -131,7 +146,7 @@ networks: alexnet googlenet mobilenet resnet50 squeezenet";
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["predicted", "serial", "measured", "replicated", "profile", "adapt"],
+        &["predicted", "serial", "measured", "replicated", "profile", "adapt", "simulate"],
     )?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
@@ -335,6 +350,7 @@ fn main() -> Result<()> {
             let n = obs::convert_trace(Path::new(input), Path::new(output))?;
             println!("trace      : {input} -> {output} ({n} spans)");
         }
+        "attrib" => attrib(&args)?,
         other => {
             println!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);
@@ -348,6 +364,9 @@ fn main() -> Result<()> {
 /// scenario by confidence-interval overlap and exit non-zero on any
 /// regression (the CI perf gate).
 fn bench(args: &Args) -> Result<()> {
+    if args.positional.get(1).map(|s| s.as_str()) == Some("history") {
+        return bench_history(args);
+    }
     if let Some(old_path) = args.get("compare") {
         let new_path = args.positional.get(1).map(|s| s.as_str()).context(
             "bench --compare takes two artifacts: --compare old.json new.json",
@@ -394,6 +413,70 @@ fn bench(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         report.save(Path::new(out))?;
         println!("bench saved : {out}");
+    }
+    Ok(())
+}
+
+/// `bench history`: the longitudinal trajectory — load every
+/// `BENCH_*.json` in a directory (label = file stem, numeric stems first),
+/// render per-scenario medians per artifact, and optionally write a
+/// gnuplot-ready `.dat` column file.
+fn bench_history(args: &Args) -> Result<()> {
+    for key in ["suite", "out", "seed", "reps", "warmup", "compare", "min-delta"] {
+        anyhow::ensure!(
+            args.get(key).is_none(),
+            "--{key} does not apply to bench history (it reads existing artifacts)"
+        );
+    }
+    let dir = args.positional.get(2).map(|s| s.as_str()).unwrap_or(".");
+    let history = harness::BenchHistory::load_dir(Path::new(dir))?;
+    print!("{}", render_history(&history));
+    if let Some(out) = args.get("dat") {
+        std::fs::write(out, history.dat()).with_context(|| format!("writing {out}"))?;
+        println!("dat saved  : {out}");
+    }
+    Ok(())
+}
+
+/// `attrib`: prediction-error attribution (DESIGN.md §14) — decompose each
+/// item's end-to-end latency into front-door wait, inter-stage queue wait,
+/// and per-stage service, from either a recorded span trace or a fresh
+/// recorded DES run of a saved plan (where observed stage service is also
+/// read against the plan's Eq. 10 predictions).
+fn attrib(args: &Args) -> Result<()> {
+    let report = if let Some(path) = args.get("trace") {
+        anyhow::ensure!(
+            args.get("plan").is_none() && !args.has_flag("simulate"),
+            "attrib takes either --trace trace.jsonl or --plan plan.json --simulate"
+        );
+        let (clock, spans) = obs::load_trace(Path::new(path))?;
+        println!("attrib     : {path} ({} spans, {clock} clock)", spans.len());
+        // No plan to read predictions from: decomposition only, the
+        // predicted/residual columns render "-".
+        obs::attribute(&spans, &obs::PredictedTimes::new())?
+    } else if let Some(path) = args.get("plan") {
+        anyhow::ensure!(
+            args.has_flag("simulate"),
+            "attrib --plan needs --simulate (DES the plan, then attribute); to \
+             attribute a live run, serve with --trace-out and feed the trace back"
+        );
+        let plan = Plan::load(Path::new(path))?;
+        print!("{}", plan.summary());
+        let images = args.get_usize("images", 500)?;
+        let cap = args.get_usize("queue-cap", 2)?;
+        let rec = Recorder::on();
+        let serve = plan.simulate_recorded(images, cap, &rec)?;
+        serve.attrib.context("recorded DES run produced no attribution")?
+    } else {
+        anyhow::bail!(
+            "attrib needs --trace trace.jsonl or --plan plan.json --simulate\n\n{USAGE}"
+        );
+    };
+    print!("{}", render_attrib(&report));
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, format!("{}\n", report.to_json()))
+            .with_context(|| format!("writing {out}"))?;
+        println!("attrib json: {out}");
     }
     Ok(())
 }

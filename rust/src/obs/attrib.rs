@@ -1,0 +1,406 @@
+//! Prediction-error attribution: why a run missed its Eq. 10/12 numbers.
+//!
+//! PR 7's recorder says *what* happened (spans, counters, histograms);
+//! this module says *why* the end-to-end numbers look the way they do
+//! (DESIGN.md §14). It consumes the span chains of one run and
+//!
+//! 1. decomposes every admitted item's end-to-end latency into
+//!    **front-door wait** (admission to first stage start), **queue
+//!    wait** (inter-stage gaps, plus the departure gap on wall twins)
+//!    and **per-stage service** (Σ of stage span widths) — a telescoping
+//!    sum, so the three components reproduce the observed latency
+//!    *exactly* (the conservation invariant the `obs_tracing` suite pins
+//!    at 1e-9);
+//! 2. compares each `(group, replica, stage)`'s observed mean service
+//!    time against the plan's stored Eq. 10 prediction and reports the
+//!    **residual** (observed − predicted) and the **excess** (residual ×
+//!    items: the error budget in seconds that stage contributed to the
+//!    run), sorted so the biggest model miss reads first.
+//!
+//! Every attribution input is [`audit_chains`]-verified first: a report
+//! is only ever computed over conserved chains.
+//!
+//! [`AttribReport`] embeds in `ServeReport` / `MultiServeReport` /
+//! `ClusterServeReport` (rendered by `reports::render_attrib`) and is
+//! the payload of `pipeit attrib`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::export::audit_chains;
+use super::recorder::Recorder;
+use super::span::{span_cmp, Span, SpanKind};
+use crate::util::json::Json;
+
+/// The plan's Eq. 10 per-stage service predictions, keyed by
+/// `(group, replica)` — group is the board index (cluster), tenant
+/// index (multi-tenant), else 0, matching [`Span::group`].
+#[derive(Debug, Clone, Default)]
+pub struct PredictedTimes {
+    by_replica: BTreeMap<(u32, u32), Vec<f64>>,
+}
+
+impl PredictedTimes {
+    pub fn new() -> PredictedTimes {
+        PredictedTimes::default()
+    }
+
+    /// Store one replica's per-stage predicted service times (seconds).
+    pub fn insert(&mut self, group: u32, replica: u32, stage_times: Vec<f64>) {
+        self.by_replica.insert((group, replica), stage_times);
+    }
+
+    /// Store a whole group's replica list in replica-index order.
+    pub fn insert_replicas(&mut self, group: u32, replicas: &[Vec<f64>]) {
+        for (r, times) in replicas.iter().enumerate() {
+            self.insert(group, r as u32, times.clone());
+        }
+    }
+
+    /// Predicted service time for one stage, if the plan carries it.
+    pub fn get(&self, group: u32, replica: u32, stage: u32) -> Option<f64> {
+        self.by_replica.get(&(group, replica))?.get(stage as usize).copied()
+    }
+
+    /// True when no predictions were loaded (trace-only attribution:
+    /// the decomposition still runs, residual columns render as `-`).
+    pub fn is_empty(&self) -> bool {
+        self.by_replica.is_empty()
+    }
+}
+
+/// One `(group, replica, stage)` row of the residual table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageAttrib {
+    pub group: u32,
+    pub replica: u32,
+    pub stage: u32,
+    /// Items served by this stage.
+    pub items: u64,
+    /// Mean observed service time (s).
+    pub observed_s: f64,
+    /// Eq. 10 prediction (s), when the plan carries one.
+    pub predicted_s: Option<f64>,
+    /// `observed_s - predicted_s` (0 when there is no prediction).
+    pub residual_s: f64,
+    /// `residual_s * items`: the seconds of run time this stage's model
+    /// miss cost (negative = faster than predicted).
+    pub excess_s: f64,
+}
+
+impl StageAttrib {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("excess_s", Json::num(self.excess_s)),
+            ("group", Json::num(self.group as f64)),
+            ("items", Json::num(self.items as f64)),
+            ("observed_s", Json::num(self.observed_s)),
+            ("replica", Json::num(self.replica as f64)),
+            ("residual_s", Json::num(self.residual_s)),
+            ("stage", Json::num(self.stage as f64)),
+        ];
+        if let Some(p) = self.predicted_s {
+            fields.push(("predicted_s", Json::num(p)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<StageAttrib> {
+        Ok(StageAttrib {
+            group: j.req("group")?.as_usize().context("group")? as u32,
+            replica: j.req("replica")?.as_usize().context("replica")? as u32,
+            stage: j.req("stage")?.as_usize().context("stage")? as u32,
+            items: j.req("items")?.as_usize().context("items")? as u64,
+            observed_s: j.req("observed_s")?.as_f64().context("observed_s")?,
+            predicted_s: match j.get("predicted_s") {
+                None => None,
+                Some(v) => Some(v.as_f64().context("predicted_s")?),
+            },
+            residual_s: j.req("residual_s")?.as_f64().context("residual_s")?,
+            excess_s: j.req("excess_s")?.as_f64().context("excess_s")?,
+        })
+    }
+}
+
+/// Where the latency went, and where the prediction was wrong — the
+/// explanation layer's artifact (module docs; DESIGN.md §14). Wait and
+/// service fields are means over admitted items, in seconds.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AttribReport {
+    /// Admitted items with a complete chain.
+    pub items: u64,
+    /// Shed items (single-span chains; they carry no latency).
+    pub shed: u64,
+    /// Mean admission → first-stage-start wait (s).
+    pub front_wait_s: f64,
+    /// Mean inter-stage queue wait (s), incl. the stage-end → departure
+    /// gap on wall twins (zero in the DES by construction).
+    pub queue_wait_s: f64,
+    /// Mean total stage service (s).
+    pub service_s: f64,
+    /// Mean observed end-to-end latency (s).
+    pub latency_s: f64,
+    /// Conservation check: max over chains of
+    /// `|front + queue + service - latency|` — the decomposition
+    /// telescopes, so this is floating-point noise (≤ 1e-9).
+    pub max_abs_err_s: f64,
+    /// Per-stage residual rows, biggest |excess| first.
+    pub stages: Vec<StageAttrib>,
+    /// Run events that reframe the residuals (e.g. adaptation swaps:
+    /// service observed under more than one partition).
+    pub annotations: Vec<String>,
+}
+
+impl AttribReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "annotations",
+                Json::Arr(self.annotations.iter().map(|s| Json::str(s)).collect()),
+            ),
+            ("front_wait_s", Json::num(self.front_wait_s)),
+            ("items", Json::num(self.items as f64)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("max_abs_err_s", Json::num(self.max_abs_err_s)),
+            ("queue_wait_s", Json::num(self.queue_wait_s)),
+            ("service_s", Json::num(self.service_s)),
+            ("shed", Json::num(self.shed as f64)),
+            ("stages", Json::Arr(self.stages.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AttribReport> {
+        let stages = j
+            .req("stages")?
+            .as_arr()
+            .context("stages must be an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StageAttrib::from_json(s).with_context(|| format!("stage {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        let annotations = j
+            .req("annotations")?
+            .as_arr()
+            .context("annotations must be an array")?
+            .iter()
+            .map(|a| Ok(a.as_str().context("annotation must be a string")?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttribReport {
+            items: j.req("items")?.as_usize().context("items")? as u64,
+            shed: j.req("shed")?.as_usize().context("shed")? as u64,
+            front_wait_s: j.req("front_wait_s")?.as_f64().context("front_wait_s")?,
+            queue_wait_s: j.req("queue_wait_s")?.as_f64().context("queue_wait_s")?,
+            service_s: j.req("service_s")?.as_f64().context("service_s")?,
+            latency_s: j.req("latency_s")?.as_f64().context("latency_s")?,
+            max_abs_err_s: j.req("max_abs_err_s")?.as_f64().context("max_abs_err_s")?,
+            stages,
+            annotations,
+        })
+    }
+}
+
+/// Decompose every chain in `spans` (any order; a sorted copy is made)
+/// and build the residual table against `pred`. The input is
+/// [`audit_chains`]-verified first — attribution never runs over
+/// unconserved chains.
+pub fn attribute(spans: &[Span], pred: &PredictedTimes) -> Result<AttribReport> {
+    let mut sorted = spans.to_vec();
+    sorted.sort_by(span_cmp);
+    audit_chains(&sorted).context("attribution input failed the span-chain audit")?;
+
+    let mut by_item: BTreeMap<(u32, u64), Vec<&Span>> = BTreeMap::new();
+    for s in &sorted {
+        by_item.entry((s.group, s.item)).or_default().push(s);
+    }
+
+    let mut report = AttribReport::default();
+    // (group, replica, stage) -> (items, Σ service).
+    let mut per_stage: BTreeMap<(u32, u32, u32), (u64, f64)> = BTreeMap::new();
+    let (mut front_sum, mut queue_sum, mut service_sum, mut latency_sum) =
+        (0.0, 0.0, 0.0, 0.0);
+    for chain in by_item.values() {
+        if chain[0].kind == SpanKind::Shed {
+            report.shed += 1;
+            continue;
+        }
+        // Audited shape: Admit, Stage(0..P-1), Depart.
+        let admit = chain[0];
+        let depart = chain[chain.len() - 1];
+        let stages = &chain[1..chain.len() - 1];
+        let front = stages[0].t0 - admit.t0;
+        let mut queue = depart.t1 - stages[stages.len() - 1].t1;
+        let mut service = 0.0;
+        for (k, s) in stages.iter().enumerate() {
+            if k > 0 {
+                queue += s.t0 - stages[k - 1].t1;
+            }
+            service += s.t1 - s.t0;
+            let e = per_stage.entry((s.group, s.replica, s.stage)).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.t1 - s.t0;
+        }
+        let latency = depart.t1 - admit.t0;
+        let err = ((front + queue + service) - latency).abs();
+        report.max_abs_err_s = report.max_abs_err_s.max(err);
+        report.items += 1;
+        front_sum += front;
+        queue_sum += queue;
+        service_sum += service;
+        latency_sum += latency;
+    }
+    if report.items > 0 {
+        let n = report.items as f64;
+        report.front_wait_s = front_sum / n;
+        report.queue_wait_s = queue_sum / n;
+        report.service_s = service_sum / n;
+        report.latency_s = latency_sum / n;
+    }
+    report.stages = per_stage
+        .into_iter()
+        .map(|((g, r, s), (items, sum))| {
+            let observed = sum / items as f64;
+            let predicted = pred.get(g, r, s);
+            let residual = predicted.map_or(0.0, |p| observed - p);
+            StageAttrib {
+                group: g,
+                replica: r,
+                stage: s,
+                items,
+                observed_s: observed,
+                predicted_s: predicted,
+                residual_s: residual,
+                excess_s: residual * items as f64,
+            }
+        })
+        .collect();
+    // Biggest model miss first; key order breaks ties deterministically.
+    report.stages.sort_by(|a, b| {
+        b.excess_s
+            .abs()
+            .total_cmp(&a.excess_s.abs())
+            .then((a.group, a.replica, a.stage).cmp(&(b.group, b.replica, b.stage)))
+    });
+    Ok(report)
+}
+
+/// Report-embedding wrapper used by the serving paths: `None` when the
+/// recorder is off or recorded nothing (attribution is opt-in evidence,
+/// not a run requirement). An audit failure here would mean a serving
+/// path emitted unconserved chains — loud in debug builds, never fatal
+/// to the run that was being served.
+pub fn attrib_for(
+    rec: &Recorder,
+    pred: &PredictedTimes,
+    annotations: Vec<String>,
+) -> Option<AttribReport> {
+    if !rec.enabled() {
+        return None;
+    }
+    let spans = rec.spans_sorted();
+    if spans.is_empty() {
+        return None;
+    }
+    match attribute(&spans, pred) {
+        Ok(mut report) => {
+            report.annotations = annotations;
+            Some(report)
+        }
+        Err(e) => {
+            debug_assert!(false, "serving path produced unconserved chains: {e:#}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two items through a 2-stage pipeline, one shed; hand-checkable.
+    fn demo_recorder() -> Recorder {
+        let r = Recorder::on();
+        r.admit(0, 0, 0.0);
+        r.stage(0, 0, 0, 0, 0.1, 0.3); // front wait 0.1
+        r.stage(0, 0, 0, 1, 0.5, 0.6); // queue gap 0.2
+        r.depart(0, 0, 0, 0.6);
+        r.admit(0, 1, 1.0);
+        r.stage(0, 1, 0, 0, 1.0, 1.2);
+        r.stage(0, 1, 0, 1, 1.2, 1.3);
+        r.depart(0, 1, 0, 1.3);
+        r.shed(0, 2, 1.05);
+        r
+    }
+
+    #[test]
+    fn decomposition_matches_hand_computation() {
+        let a = attribute(&demo_recorder().spans_sorted(), &PredictedTimes::new())
+            .expect("conserved");
+        assert_eq!((a.items, a.shed), (2, 1));
+        assert!((a.front_wait_s - 0.05).abs() < 1e-12, "{}", a.front_wait_s);
+        assert!((a.queue_wait_s - 0.1).abs() < 1e-12, "{}", a.queue_wait_s);
+        assert!((a.service_s - 0.3).abs() < 1e-12, "{}", a.service_s);
+        assert!((a.latency_s - 0.45).abs() < 1e-12, "{}", a.latency_s);
+        assert!(a.max_abs_err_s <= 1e-9, "{}", a.max_abs_err_s);
+        // No predictions: rows exist, residuals are zero, predicted None.
+        assert_eq!(a.stages.len(), 2);
+        assert!(a.stages.iter().all(|s| s.predicted_s.is_none() && s.residual_s == 0.0));
+    }
+
+    #[test]
+    fn residuals_rank_biggest_miss_first() {
+        let mut pred = PredictedTimes::new();
+        // Stage 0 predicted 0.15 (observed mean 0.2), stage 1 spot-on.
+        pred.insert(0, 0, vec![0.15, 0.1]);
+        let a = attribute(&demo_recorder().spans_sorted(), &pred).expect("conserved");
+        assert_eq!(a.stages[0].stage, 0);
+        assert!((a.stages[0].residual_s - 0.05).abs() < 1e-12);
+        assert!((a.stages[0].excess_s - 0.1).abs() < 1e-12, "2 items x 0.05s");
+        assert!((a.stages[1].residual_s - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depart_gap_folds_into_queue_wait() {
+        // Wall-twin shape: departure recorded after the last stage ends.
+        let r = Recorder::on();
+        r.admit(0, 0, 0.0);
+        r.stage(0, 0, 0, 0, 0.0, 0.2);
+        r.depart(0, 0, 0, 0.25);
+        let a = attribute(&r.spans_sorted(), &PredictedTimes::new()).expect("conserved");
+        assert!((a.queue_wait_s - 0.05).abs() < 1e-12);
+        assert!(a.max_abs_err_s <= 1e-9);
+    }
+
+    #[test]
+    fn unconserved_input_is_rejected() {
+        let r = Recorder::on();
+        r.admit(0, 0, 0.0);
+        r.stage(0, 0, 0, 0, 0.0, 0.1);
+        // No departure: audit must veto attribution.
+        let err = attribute(&r.spans_sorted(), &PredictedTimes::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("span-chain audit"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn attrib_for_is_none_when_off_or_empty() {
+        let pred = PredictedTimes::new();
+        assert!(attrib_for(&Recorder::off(), &pred, Vec::new()).is_none());
+        assert!(attrib_for(&Recorder::on(), &pred, Vec::new()).is_none());
+        let r = demo_recorder();
+        let a = attrib_for(&r, &pred, vec!["note".into()]).expect("some");
+        assert_eq!(a.annotations, vec!["note".to_string()]);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let mut pred = PredictedTimes::new();
+        pred.insert_replicas(0, &[vec![0.15, 0.1]]);
+        let mut a = attribute(&demo_recorder().spans_sorted(), &pred).expect("conserved");
+        a.annotations.push("t=1.00s after 1 imgs: swap".into());
+        let back = AttribReport::from_json(&a.to_json()).expect("parses");
+        assert_eq!(a, back);
+        assert_eq!(a.to_json().to_string(), back.to_json().to_string());
+    }
+}

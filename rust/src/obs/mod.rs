@@ -24,23 +24,36 @@
 //! * Exporters — schema-versioned JSONL ([`write_trace`], `--trace-out`)
 //!   and Chrome-trace/Perfetto JSON ([`convert_trace`], `pipeit trace
 //!   convert`); [`audit_chains`] checks span-chain conservation.
+//! * [`attribute`]/[`AttribReport`] — the explanation layer (DESIGN.md
+//!   §14): decompose each chain's end-to-end latency into front-door
+//!   wait + queue wait + per-stage service (conserving exactly) and
+//!   report per-stage residuals against the plan's Eq. 10 predictions;
+//!   [`attrib_for`] embeds the result in the serving reports.
+//! * [`EngineProf`] — DES engine self-profiling (events processed, heap
+//!   pushes/pops/peak, ring occupancy, events per wall-second) under the
+//!   `prof/{engine}/` metric namespace, the measured baseline the
+//!   planned event-engine rewrite gates against.
 //!
 //! Determinism contract: on the DES twins, recording adds no state the
 //! recurrence reads back, and the exporter sorts spans by the canonical
 //! key — same seed, same bytes. The `obs_tracing` suite pins both
 //! properties plus report-invariance under a disabled recorder.
 
+pub mod attrib;
 pub mod export;
 pub mod hist;
 pub mod metrics;
+pub mod prof;
 pub mod recorder;
 pub mod span;
 
+pub use attrib::{attrib_for, attribute, AttribReport, PredictedTimes, StageAttrib};
 pub use export::{
     audit_chains, chrome_trace, convert_trace, load_trace, parse_trace, trace_to_jsonl,
     write_trace, ChainAudit, TRACE_VERSION,
 };
 pub use hist::{pool_latencies, LogHist, BUCKETS_PER_OCTAVE};
 pub use metrics::{MetricsRegistry, MetricsSnapshot};
+pub use prof::EngineProf;
 pub use recorder::{Recorder, WallClock};
 pub use span::{Span, SpanKind};

@@ -1,0 +1,155 @@
+//! DES engine self-profiling: how much machinery one simulated run cost.
+//!
+//! The ROADMAP's event-engine rewrite (10–100× target) needs a measured
+//! baseline before it can gate against regressions. [`EngineProf`] is
+//! that baseline's instrument: each DES twin accumulates its own cheap
+//! counters — events processed, event-heap pushes/pops and peak size,
+//! departure-ring peak occupancy, front-door scan iterations — and
+//! flushes them into the run's metrics registry under the
+//! `prof/{engine}/` namespace, next to the serving metrics the registry
+//! already carries. The bench runner's recorded rep then lands them in
+//! `BENCH_*.json`, so `pipeit bench history` can plot engine cost over
+//! time (DESIGN.md §14).
+//!
+//! Counter catalog, per engine (`pipeline` / `tenancy` / `cluster`):
+//!
+//! * counters — `prof/{engine}/events` (simulation events processed),
+//!   `prof/{engine}/heap_pushes`, `prof/{engine}/heap_pops`,
+//!   `prof/{engine}/scan_iters` (front-door linear-scan iterations),
+//!   `prof/{engine}/wall_ns` (host wall time; a counter so repeated
+//!   flushes add, matching [`MetricsSnapshot::merge`] semantics)
+//! * gauges — `prof/{engine}/heap_peak`, `prof/{engine}/ring_peak`
+//!   (high-water marks; `gauge_max` so merges keep the max),
+//!   `prof/{engine}/events_per_s` (simulation events per host
+//!   wall-second — the headline number the rewrite must beat)
+//!
+//! Engines without a heap (the recurrence-based pipeline twin) report
+//! zero pushes and a zero peak: an honest "no heap to speed up".
+//!
+//! Profiling costs nothing when the recorder is off: `start` captures no
+//! timestamp and `flush` is a no-op, preserving the disabled-recorder
+//! invariance the harness conformance suite pins.
+//!
+//! [`MetricsSnapshot::merge`]: super::metrics::MetricsSnapshot::merge
+
+use std::time::Instant;
+
+use super::recorder::Recorder;
+
+/// One engine run's profile accumulator (module docs). Counters are
+/// plain fields the engine bumps inline or computes post-hoc; [`flush`]
+/// publishes them. Inactive (recorder off) instances never read the
+/// clock.
+///
+/// [`flush`]: EngineProf::flush
+#[derive(Debug)]
+pub struct EngineProf {
+    engine: &'static str,
+    start: Option<Instant>,
+    /// Simulation events processed (arrivals + per-stage completions).
+    pub events: u64,
+    pub heap_pushes: u64,
+    pub heap_pops: u64,
+    /// Event-heap high-water mark.
+    pub heap_peak: u64,
+    /// Departure-ring high-water mark.
+    pub ring_peak: u64,
+    /// Front-door linear-scan iterations (the O(n²) the rewrite targets).
+    pub scan_iters: u64,
+}
+
+impl EngineProf {
+    /// Start profiling `engine` — active (clock captured) only when the
+    /// recorder is on.
+    pub fn start(engine: &'static str, rec: &Recorder) -> EngineProf {
+        EngineProf {
+            engine,
+            start: rec.enabled().then(Instant::now),
+            events: 0,
+            heap_pushes: 0,
+            heap_pops: 0,
+            heap_peak: 0,
+            ring_peak: 0,
+            scan_iters: 0,
+        }
+    }
+
+    /// Whether this run is being profiled. Engines may branch on this
+    /// once to skip accumulation entirely.
+    pub fn active(&self) -> bool {
+        self.start.is_some()
+    }
+
+    /// Publish the accumulated counters into the registry (no-op when
+    /// inactive).
+    pub fn flush(&self, rec: &Recorder) {
+        let Some(start) = self.start else { return };
+        let e = self.engine;
+        rec.inc(&format!("prof/{e}/events"), self.events);
+        rec.inc(&format!("prof/{e}/heap_pushes"), self.heap_pushes);
+        rec.inc(&format!("prof/{e}/heap_pops"), self.heap_pops);
+        rec.inc(&format!("prof/{e}/scan_iters"), self.scan_iters);
+        let elapsed = start.elapsed().as_secs_f64();
+        rec.inc(&format!("prof/{e}/wall_ns"), (elapsed * 1e9) as u64);
+        rec.gauge_max(&format!("prof/{e}/heap_peak"), self.heap_peak as f64);
+        rec.gauge_max(&format!("prof/{e}/ring_peak"), self.ring_peak as f64);
+        // Clamp away a zero-resolution clock so the headline gauge is
+        // always present on profiled runs.
+        rec.gauge_max(
+            &format!("prof/{e}/events_per_s"),
+            self.events as f64 / elapsed.max(1e-9),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_when_recorder_off_and_flush_is_noop() {
+        let rec = Recorder::off();
+        let mut p = EngineProf::start("pipeline", &rec);
+        assert!(!p.active());
+        p.events = 100;
+        p.flush(&rec);
+        assert!(rec.snapshot().is_none());
+    }
+
+    #[test]
+    fn flush_publishes_the_counter_catalog() {
+        let rec = Recorder::on();
+        let mut p = EngineProf::start("cluster", &rec);
+        assert!(p.active());
+        p.events = 1000;
+        p.heap_pushes = 400;
+        p.heap_pops = 390;
+        p.heap_peak = 12;
+        p.ring_peak = 3;
+        p.scan_iters = 50;
+        p.flush(&rec);
+        let s = rec.snapshot().expect("enabled");
+        assert_eq!(s.counter("prof/cluster/events"), 1000);
+        assert_eq!(s.counter("prof/cluster/heap_pushes"), 400);
+        assert_eq!(s.counter("prof/cluster/heap_pops"), 390);
+        assert_eq!(s.counter("prof/cluster/scan_iters"), 50);
+        assert_eq!(s.gauge("prof/cluster/heap_peak"), Some(12.0));
+        assert_eq!(s.gauge("prof/cluster/ring_peak"), Some(3.0));
+        assert!(s.gauge("prof/cluster/events_per_s").expect("present") > 0.0);
+        assert!(s.counters.contains_key("prof/cluster/wall_ns"));
+    }
+
+    #[test]
+    fn repeated_flushes_accumulate_counters_and_max_gauges() {
+        let rec = Recorder::on();
+        for peak in [5u64, 3] {
+            let mut p = EngineProf::start("tenancy", &rec);
+            p.events = 10;
+            p.heap_peak = peak;
+            p.flush(&rec);
+        }
+        let s = rec.snapshot().expect("enabled");
+        assert_eq!(s.counter("prof/tenancy/events"), 20);
+        assert_eq!(s.gauge("prof/tenancy/heap_peak"), Some(5.0));
+    }
+}

@@ -7,8 +7,8 @@
 use crate::api::{ServeMode, ServeReport};
 use crate::baselines;
 use crate::cluster::{ClusterServeMode, ClusterServeReport};
-use crate::harness::{BenchComparison, BenchReport, Verdict};
-use crate::obs::MetricsSnapshot;
+use crate::harness::{BenchComparison, BenchHistory, BenchReport, Verdict};
+use crate::obs::{AttribReport, MetricsSnapshot};
 use crate::tenancy::{MultiServeMode, MultiServeReport};
 use crate::cnn::layer::LayerKind;
 use crate::cnn::zoo;
@@ -99,6 +99,9 @@ pub fn render_serve(r: &ServeReport) -> String {
             ));
         }
     }
+    if let Some(a) = &r.attrib {
+        s.push_str(&render_attrib(a));
+    }
     s
 }
 
@@ -162,6 +165,9 @@ pub fn render_multi_serve(r: &MultiServeReport) -> String {
             ));
         }
     }
+    if let Some(a) = &r.attrib {
+        s.push_str(&render_attrib(a));
+    }
     s
 }
 
@@ -220,6 +226,105 @@ pub fn render_cluster(r: &ClusterServeReport) -> String {
             ));
         }
     }
+    if let Some(a) = &r.attrib {
+        s.push_str(&render_attrib(a));
+    }
+    s
+}
+
+/// Render an [`AttribReport`] — the explanation footer the serve-family
+/// renderers append when a DES run carried attribution, and the body of
+/// `pipeit attrib` (DESIGN.md §14). The first line decomposes the mean
+/// end-to-end latency; the conservation line pins the telescoping
+/// invariant the `obs_tracing` suite asserts at 1e-9; the table ranks
+/// `(group, replica, stage)` rows by the seconds of run time their
+/// Eq. 10 miss cost (residual x items), biggest miss first.
+pub fn render_attrib(a: &AttribReport) -> String {
+    let mut s = format!(
+        "attribution: items={} shed={}  latency {:.1}ms = front {:.1}ms + queue {:.1}ms + service {:.1}ms (means)\n",
+        a.items,
+        a.shed,
+        a.latency_s * 1e3,
+        a.front_wait_s * 1e3,
+        a.queue_wait_s * 1e3,
+        a.service_s * 1e3,
+    );
+    s.push_str(&format!(
+        "conserved  : max |front+queue+service - latency| = {:.1e}s\n",
+        a.max_abs_err_s
+    ));
+    for note in &a.annotations {
+        s.push_str(&format!("note       : {note}\n"));
+    }
+    if !a.stages.is_empty() {
+        let mut t = Table::new(
+            "Observed stage service vs Eq. 10 prediction (biggest |excess| first)",
+            &["stage", "items", "obs ms", "pred ms", "resid ms", "excess s"],
+        );
+        for st in &a.stages {
+            let (pred, resid) = match st.predicted_s {
+                Some(p) => (
+                    format!("{:.2}", p * 1e3),
+                    format!("{:+.2}", st.residual_s * 1e3),
+                ),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            t.row(vec![
+                format!("g{}r{}s{}", st.group, st.replica, st.stage),
+                st.items.to_string(),
+                format!("{:.2}", st.observed_s * 1e3),
+                pred,
+                resid,
+                format!("{:+.3}", st.excess_s),
+            ]);
+        }
+        s.push_str(&t.render());
+    }
+    s
+}
+
+/// Render a [`BenchHistory`] — the `pipeit bench history` table: one row
+/// per scenario (`backend/name`, first-seen order), one column per
+/// artifact (medians in the scenario's unit), and the first->last
+/// relative delta. `-` marks artifacts that do not carry the scenario;
+/// the delta needs at least two carrying artifacts.
+pub fn render_history(h: &BenchHistory) -> String {
+    let keys = h.keys();
+    let mut s = format!(
+        "bench history: {} artifacts, {} scenarios\n",
+        h.entries.len(),
+        keys.len()
+    );
+    let mut header = vec!["scenario".to_string(), "unit".to_string()];
+    header.extend(h.entries.iter().map(|e| e.label.clone()));
+    header.push("first->last".to_string());
+    let mut t = Table::new(
+        "Bench trajectory (median per artifact)",
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for k in &keys {
+        let unit = (0..h.entries.len())
+            .find_map(|i| h.scenario(i, k))
+            .map(|sc| sc.unit.clone())
+            .unwrap_or_default();
+        let medians: Vec<Option<f64>> =
+            (0..h.entries.len()).map(|i| h.median(i, k)).collect();
+        let mut row = vec![k.clone(), unit.clone()];
+        row.extend(
+            medians
+                .iter()
+                .map(|m| m.map_or_else(|| "-".to_string(), |x| fmt_metric(x, &unit))),
+        );
+        let present: Vec<f64> = medians.iter().flatten().copied().collect();
+        row.push(match (present.first(), present.last()) {
+            (Some(&first), Some(&last)) if present.len() >= 2 && first != 0.0 => {
+                format!("{:+.1}%", 100.0 * (last / first - 1.0))
+            }
+            _ => "-".to_string(),
+        });
+        t.row(row);
+    }
+    s.push_str(&t.render());
     s
 }
 
@@ -1228,6 +1333,124 @@ mod tests {
     }
 
     #[test]
+    fn render_metrics_footer_with_fewer_than_8_stages() {
+        // The top-8 cap is a cap, not a pad: two stages render "top 2 of 2".
+        let rec = crate::obs::Recorder::on();
+        for st in 0..2 {
+            rec.gauge_set(&format!("occupancy/g0r0s{st}"), 0.4 + 0.1 * st as f64);
+            rec.observe(&format!("stage_service/g0r0s{st}"), 0.02);
+        }
+        let s = render_metrics(&rec.snapshot().unwrap());
+        assert!(s.contains("top 2 of 2"), "{s}");
+        assert!(s.contains("g0r0s0"), "{s}");
+        assert!(s.contains("g0r0s1"), "{s}");
+    }
+
+    #[test]
+    fn render_metrics_empty_registry_is_one_line() {
+        // A fresh registry renders the counter line only: no latency
+        // line, no queue peaks, no stage table.
+        let s = render_metrics(&MetricsSnapshot::default());
+        assert_eq!(s, "observability: admitted=0 shed=0 departed=0\n");
+    }
+
+    #[test]
+    fn render_attrib_decomposition_table_and_notes() {
+        use crate::obs::{attribute, PredictedTimes, Recorder};
+        let rec = Recorder::on();
+        rec.admit(0, 0, 0.0);
+        rec.stage(0, 0, 0, 0, 0.1, 0.3);
+        rec.stage(0, 0, 0, 1, 0.5, 0.6);
+        rec.depart(0, 0, 0, 0.6);
+        rec.shed(0, 1, 0.2);
+        let mut pred = PredictedTimes::new();
+        pred.insert(0, 0, vec![0.15]); // stage 1 has no prediction
+        let mut a = attribute(&rec.spans_sorted(), &pred).expect("conserved");
+        a.annotations.push("calibration run".into());
+        let s = render_attrib(&a);
+        assert!(
+            s.contains(
+                "attribution: items=1 shed=1  latency 600.0ms = front 100.0ms \
+                 + queue 200.0ms + service 300.0ms (means)"
+            ),
+            "{s}"
+        );
+        assert!(s.contains("conserved  : max |front+queue+service - latency| = "), "{s}");
+        assert!(s.contains("note       : calibration run"), "{s}");
+        assert!(s.contains("Eq. 10 prediction"), "{s}");
+        // Predicted stage: residual +50ms over 1 item = +0.050s excess.
+        assert!(s.contains("g0r0s0"), "{s}");
+        assert!(s.contains("+50.00"), "{s}");
+        assert!(s.contains("+0.050"), "{s}");
+        // Unpredicted stage renders dashes, not zeros.
+        assert!(s.contains("g0r0s1"), "{s}");
+        assert!(s.contains(" - "), "{s}");
+    }
+
+    #[test]
+    fn render_serve_appends_attrib_footer_when_recorded() {
+        use crate::api::PlanSpec;
+        use crate::obs::Recorder;
+        let plan = PlanSpec::new("alexnet").compile().unwrap();
+        let rec = Recorder::on();
+        let r = plan.simulate_recorded(100, 2, &rec).unwrap();
+        assert!(r.attrib.is_some(), "recorded DES run must attribute");
+        let s = render_serve(&r);
+        assert!(s.contains("attribution: items=100"), "{s}");
+        assert!(s.contains("conserved  :"), "{s}");
+        // The unrecorded path stays footer-free.
+        let s = render_serve(&plan.simulate(100, 2).unwrap());
+        assert!(!s.contains("attribution:"), "{s}");
+    }
+
+    #[test]
+    fn render_history_rows_columns_and_deltas() {
+        use crate::harness::{BenchHistory, BenchReport, HistoryEntry, SampleStats, ScenarioResult};
+        let entry = |name: &str, median: f64| ScenarioResult {
+            name: name.into(),
+            mode: "pipelined".into(),
+            backend: "des".into(),
+            unit: "imgs/s".into(),
+            higher_is_better: true,
+            samples: vec![median; 3],
+            stats: SampleStats::from_samples(&[median; 3], 3.5, 0.95, 50, 1),
+            host_s: 0.0,
+            metrics: None,
+        };
+        let report = |scenarios: Vec<ScenarioResult>| BenchReport {
+            suite: "quick".into(),
+            seed: 7,
+            warmup: 1,
+            reps: 3,
+            recorded_rep: None,
+            scenarios,
+        };
+        let h = BenchHistory::from_entries(vec![
+            HistoryEntry {
+                label: "0".into(),
+                report: report(vec![entry("pipelined/alexnet", 16.0), entry("serial/alexnet", 4.5)]),
+            },
+            HistoryEntry {
+                label: "1".into(),
+                report: report(vec![entry("pipelined/alexnet", 17.6)]),
+            },
+        ]);
+        let s = render_history(&h);
+        assert!(s.contains("bench history: 2 artifacts, 2 scenarios"), "{s}");
+        assert!(s.contains("Bench trajectory"), "{s}");
+        assert!(s.contains("first->last"), "{s}");
+        assert!(s.contains("des/pipelined/alexnet"), "{s}");
+        assert!(s.contains("+10.0%"), "{s}");
+        // serial/alexnet only appears once: hole and no delta.
+        let serial = s
+            .lines()
+            .find(|l| l.contains("des/serial/alexnet"))
+            .expect("serial row");
+        assert!(serial.contains("4.50"), "{serial}");
+        assert!(serial.matches(" - ").count() >= 2, "hole + no delta: {serial}");
+    }
+
+    #[test]
     fn render_bench_and_compare_shapes() {
         use crate::harness::{compare, BenchReport, SampleStats, ScenarioResult};
         let entry = |median: f64, unit: &str, higher: bool| ScenarioResult {
@@ -1246,6 +1469,7 @@ mod tests {
             seed: 7,
             warmup: 1,
             reps: 3,
+            recorded_rep: None,
             scenarios: vec![entry(m, "imgs/s", true), entry(0.00125, "s", false)],
         };
         let s = render_bench(&report(16.0));

@@ -383,6 +383,7 @@ pub fn simulate_replicated_recorded(
 ) -> FleetSimReport {
     assert!(!replica_stage_times.is_empty());
     assert!(images >= 1);
+    let mut prof = crate::obs::EngineProf::start("pipeline", rec);
     let r = replica_stage_times.len();
     let cycles: Vec<f64> = replica_stage_times
         .iter()
@@ -425,6 +426,18 @@ pub fn simulate_replicated_recorded(
             }
         })
         .collect();
+
+    // Engine profile (DESIGN.md §14): the recurrence twin processes one
+    // event per (item, stage) and keeps no event heap — an honest zero
+    // for the heap counters the planned rewrite would introduce.
+    if prof.active() {
+        prof.events = replica_stage_times
+            .iter()
+            .zip(&dispatched)
+            .map(|(times, &n)| n as u64 * times.len() as u64)
+            .sum();
+        prof.flush(rec);
+    }
 
     let makespan = per_replica.iter().map(|s| s.makespan).fold(0.0, f64::max);
     FleetSimReport {

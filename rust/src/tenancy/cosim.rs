@@ -19,7 +19,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::obs::{LogHist, Recorder};
+use crate::obs::{attrib_for, EngineProf, LogHist, PredictedTimes, Recorder};
 use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
 
 use crate::api::LatencyReport;
@@ -46,6 +46,9 @@ pub struct TenantSimOutcome {
     pub dispatched: Vec<usize>,
     /// Per-replica per-stage busy seconds.
     pub busy: Vec<Vec<f64>>,
+    /// Front-door scan work: admitted-start entries inspected across all
+    /// arrivals (the engine's dominant non-recurrence cost, DESIGN.md §14).
+    pub scan_iters: u64,
 }
 
 /// Simulate one tenant's replicated fleet under timed arrivals with a
@@ -113,9 +116,11 @@ pub fn simulate_tenant_fleet_recorded(
     let mut latencies = Vec::new();
     let mut dispatched = vec![0usize; r];
     let mut shed = 0usize;
+    let mut scan_iters = 0u64;
 
     for (i, &a) in arrivals.iter().enumerate() {
         // Front door: count admitted items still waiting to start service.
+        scan_iters += start0_all.len() as u64;
         let waiting = start0_all.iter().filter(|&&t| t > a).count();
         if rec.enabled() {
             rec.gauge_max(&format!("queue_depth_peak/g{group}"), waiting as f64);
@@ -186,6 +191,7 @@ pub fn simulate_tenant_fleet_recorded(
         latencies,
         dispatched,
         busy,
+        scan_iters,
     }
 }
 
@@ -237,6 +243,7 @@ pub fn simulate_multi_recorded(
     anyhow::ensure!(opts.queue_cap >= 1, "queue capacity must be >= 1");
     anyhow::ensure!(opts.admission_cap >= 1, "admission capacity must be >= 1");
 
+    let mut prof = EngineProf::start("tenancy", rec);
     let mut tenants = Vec::with_capacity(mp.tenants.len());
     let mut outcomes = Vec::with_capacity(mp.tenants.len());
     for (i, t) in mp.tenants.iter().enumerate() {
@@ -302,6 +309,31 @@ pub fn simulate_multi_recorded(
         }
     }
 
+    // Engine profile (DESIGN.md §14): one event per front-door decision
+    // plus one per (item, stage) executed; the factorized co-simulation
+    // keeps no event heap, so the heap counters stay an honest zero.
+    if prof.active() {
+        for (t, out) in mp.tenants.iter().zip(&outcomes) {
+            prof.events += out.offered as u64;
+            for (r, rep) in t.plan.replicas.iter().enumerate() {
+                prof.events += out.dispatched[r] as u64 * rep.stage_times.len() as u64;
+            }
+            prof.scan_iters += out.scan_iters;
+        }
+        prof.flush(rec);
+    }
+    let attrib = if rec.enabled() {
+        let mut pred = PredictedTimes::new();
+        for (i, t) in mp.tenants.iter().enumerate() {
+            let times: Vec<Vec<f64>> =
+                t.plan.replicas.iter().map(|r| r.stage_times.clone()).collect();
+            pred.insert_replicas(i as u32, &times);
+        }
+        attrib_for(rec, &pred, Vec::new())
+    } else {
+        None
+    };
+
     Ok(MultiServeReport {
         mode: MultiServeMode::Des,
         wall_s,
@@ -311,6 +343,7 @@ pub fn simulate_multi_recorded(
         board_utilization,
         tenants,
         metrics: rec.snapshot(),
+        attrib,
     })
 }
 

@@ -280,6 +280,10 @@ pub fn deploy_multi_recorded(
         board_utilization,
         tenants,
         metrics: rec.snapshot(),
+        // In-band attribution is a DES-twin feature: wall-clock spans carry
+        // scaled sleep times, so residuals against Eq. 10 would be
+        // off-scale. `pipeit attrib --trace` decomposes wall traces offline.
+        attrib: None,
     })
 }
 

@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::api::{LatencyReport, Plan};
 use crate::dse::PipelineConfig;
-use crate::obs::MetricsSnapshot;
+use crate::obs::{AttribReport, MetricsSnapshot};
 use crate::util::json::Json;
 
 /// Runtime knobs shared by both multi-tenant execution backends; the
@@ -118,6 +118,11 @@ pub struct MultiServeReport {
     /// recorded; `None` under a disabled [`crate::obs::Recorder`], keeping
     /// unrecorded report bytes unchanged.
     pub metrics: Option<MetricsSnapshot>,
+    /// Prediction-error attribution over the recorded spans (DESIGN.md
+    /// §14): where each admitted item's latency went, and how each stage's
+    /// observed service compares to its Eq. 10 prediction. `None` when the
+    /// run was not recorded.
+    pub attrib: Option<AttribReport>,
 }
 
 impl MultiServeReport {
@@ -184,6 +189,9 @@ impl MultiServeReport {
         ];
         if let Some(m) = &self.metrics {
             fields.push(("metrics", m.to_json()));
+        }
+        if let Some(a) = &self.attrib {
+            fields.push(("attrib", a.to_json()));
         }
         Json::obj(fields)
     }
@@ -255,6 +263,7 @@ mod tests {
                 utilization: 0.71,
             }],
             metrics: None,
+            attrib: None,
         };
         let text = report.to_json().to_string();
         let j = Json::parse(&text).expect("multi report JSON reparses");

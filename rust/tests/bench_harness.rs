@@ -78,6 +78,36 @@ fn injected_slowdown_is_flagged_and_isolated() {
     );
 }
 
+/// ISSUE 9: the recorded DES repetition must land the engine
+/// self-profile in the artifact — the quick suite is DES-only, so every
+/// scenario's snapshot carries a `prof/{engine}/` catalog entry, which
+/// is what makes `pipeit bench history` a trajectory of engine cost too.
+#[test]
+fn recorded_rep_lands_prof_counters_in_every_scenario() {
+    let report = run_suite(Suite::Quick, &quick_opts()).expect("bench run");
+    assert_eq!(report.recorded_rep, Some(1), "last of 2 reps is recorded");
+    for s in &report.scenarios {
+        let m = s
+            .metrics
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: no recorded snapshot", s.key()));
+        assert!(
+            m.counters
+                .keys()
+                .any(|k| k.starts_with("prof/") && k.ends_with("/events")),
+            "{}: no prof/*/events counter in the snapshot",
+            s.key()
+        );
+        assert!(
+            m.gauges
+                .keys()
+                .any(|k| k.starts_with("prof/") && k.ends_with("/events_per_s")),
+            "{}: no prof/*/events_per_s gauge in the snapshot",
+            s.key()
+        );
+    }
+}
+
 #[test]
 fn bench_report_roundtrips_through_the_artifact_file() {
     let report = run_suite(Suite::Quick, &quick_opts()).expect("bench run");
@@ -142,6 +172,48 @@ fn cli_bench_twice_same_seed_compares_all_unchanged_and_gates_a_slowdown() {
     for f in [&f1, &f2, &f3] {
         std::fs::remove_file(f).ok();
     }
+}
+
+/// `bench history` end to end (ISSUE 9): two artifacts in a directory
+/// render as a two-column trajectory, `--dat` writes the gnuplot form,
+/// run-only knobs are rejected, and an artifact-free directory gets the
+/// getting-started error instead of an empty table.
+#[test]
+fn cli_bench_history_renders_table_and_dat() {
+    let dir = std::env::temp_dir()
+        .join(format!("pipeit_bench_history_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let report = run_suite(Suite::Quick, &quick_opts()).expect("bench run");
+    report.save(&dir.join("BENCH_0.json")).expect("artifact written");
+    report.save(&dir.join("BENCH_1.json")).expect("artifact written");
+
+    let dat = dir.join("history.dat");
+    let (status, text) = pipeit(&[
+        "bench", "history", dir.to_str().unwrap(), "--dat", dat.to_str().unwrap(),
+    ]);
+    assert!(status.success(), "{text}");
+    assert!(text.contains("bench history: 2 artifacts"), "{text}");
+    assert!(text.contains("Bench trajectory"), "{text}");
+    assert!(text.contains("first->last"), "{text}");
+    assert!(text.contains("dat saved"), "{text}");
+    let dat_text = std::fs::read_to_string(&dat).expect("dat written");
+    assert!(dat_text.starts_with("# label "), "{dat_text}");
+    assert_eq!(dat_text.lines().count(), 3, "header + one row per artifact");
+    assert!(!dat_text.contains("nan"), "identical artifacts leave no holes");
+
+    // Run-only knobs must not be silently dropped on the history form.
+    let (status, text) =
+        pipeit(&["bench", "history", dir.to_str().unwrap(), "--reps", "9"]);
+    assert!(!status.success());
+    assert!(text.contains("--reps"), "{text}");
+
+    let empty = dir.join("empty");
+    std::fs::create_dir_all(&empty).expect("temp dir");
+    let (status, text) = pipeit(&["bench", "history", empty.to_str().unwrap()]);
+    assert!(!status.success());
+    assert!(text.contains("no BENCH_*.json"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

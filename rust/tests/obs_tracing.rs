@@ -13,7 +13,10 @@ use pipeit::cluster::{
 };
 use pipeit::config::Config;
 use pipeit::harness::{registry, Backend};
-use pipeit::obs::{audit_chains, chrome_trace, parse_trace, trace_to_jsonl, Recorder};
+use pipeit::obs::{
+    attribute, audit_chains, chrome_trace, parse_trace, trace_to_jsonl,
+    PredictedTimes, Recorder,
+};
 use pipeit::tenancy::TenantSpec;
 
 /// Chain conservation on the DES twin, for every registry scenario:
@@ -74,6 +77,70 @@ fn des_span_chains_conserve_every_item_in_every_registry_scenario() {
             "{}: latency observations vs departures",
             s.name
         );
+    }
+}
+
+/// Attribution acceptance (ISSUE 9): on every registry DES scenario the
+/// latency decomposition must conserve — each item's front-door wait +
+/// queue wait + stage service reproduces its end-to-end latency within
+/// 1e-9 (the sum telescopes; anything bigger is a decomposition bug, not
+/// float noise) — the chain tallies must match the registry counters,
+/// and the engine that ran must have self-profiled into the
+/// `prof/{engine}/` namespace (full catalog: counters, high-water
+/// gauges, and the events-per-wall-second headline).
+#[test]
+fn attribution_conserves_and_engines_self_profile_in_every_des_scenario() {
+    for s in registry() {
+        let rec = Recorder::on();
+        let (_, snap) = s.run_recorded(Backend::Des, 13, &rec).unwrap();
+        let snap = snap.unwrap_or_else(|| panic!("{}: no snapshot", s.name));
+
+        let a = attribute(&rec.spans_sorted(), &PredictedTimes::new())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", s.name));
+        assert_eq!(a.items, snap.counter("departed"), "{}: attributed items", s.name);
+        assert_eq!(a.shed, snap.counter("shed"), "{}: attributed sheds", s.name);
+        assert!(
+            a.max_abs_err_s <= 1e-9,
+            "{}: decomposition leaks {}s",
+            s.name,
+            a.max_abs_err_s
+        );
+        let recomposed = a.front_wait_s + a.queue_wait_s + a.service_s;
+        assert!(
+            (recomposed - a.latency_s).abs() <= 1e-9,
+            "{}: mean decomposition {recomposed} vs latency {}",
+            s.name,
+            a.latency_s
+        );
+        assert!(!a.stages.is_empty(), "{}: no per-stage rows", s.name);
+
+        let engines: Vec<String> = snap
+            .counters
+            .keys()
+            .filter_map(|k| k.strip_prefix("prof/")?.strip_suffix("/events"))
+            .map(str::to_string)
+            .collect();
+        assert!(!engines.is_empty(), "{}: engine did not self-profile", s.name);
+        for e in &engines {
+            for c in ["heap_pushes", "heap_pops", "scan_iters", "wall_ns"] {
+                assert!(
+                    snap.counters.contains_key(&format!("prof/{e}/{c}")),
+                    "{}: missing prof/{e}/{c}",
+                    s.name
+                );
+            }
+            for g in ["heap_peak", "ring_peak"] {
+                assert!(
+                    snap.gauge(&format!("prof/{e}/{g}")).is_some(),
+                    "{}: missing prof/{e}/{g}",
+                    s.name
+                );
+            }
+            let eps = snap
+                .gauge(&format!("prof/{e}/events_per_s"))
+                .unwrap_or_else(|| panic!("{}: missing prof/{e}/events_per_s", s.name));
+            assert!(eps > 0.0, "{}: prof/{e}/events_per_s = {eps}", s.name);
+        }
     }
 }
 

@@ -15,12 +15,13 @@ use pipeit::api::{
     AdaptationEvent, LatencyReport, ReplicaReport, ServeMode, ServeReport, StageReport,
 };
 use pipeit::harness::{
-    BenchComparison, BenchReport, SampleStats, ScenarioDiff, ScenarioResult, Verdict,
+    BenchComparison, BenchHistory, BenchReport, HistoryEntry, SampleStats,
+    ScenarioDiff, ScenarioResult, Verdict,
 };
-use pipeit::obs::{LogHist, MetricsSnapshot};
+use pipeit::obs::{AttribReport, LogHist, MetricsSnapshot, StageAttrib};
 use pipeit::reports::{
-    render_bench, render_bench_compare, render_metrics, render_multi_serve,
-    render_serve,
+    render_attrib, render_bench, render_bench_compare, render_history,
+    render_metrics, render_multi_serve, render_serve,
 };
 use pipeit::tenancy::{MultiServeMode, MultiServeReport, TenantReport};
 
@@ -83,6 +84,7 @@ fn render_serve_matches_golden() {
             predicted_throughput: 12.5,
         }],
         metrics: None,
+        attrib: None,
     };
     assert_golden("render_serve.txt", &render_serve(&report));
 }
@@ -134,6 +136,7 @@ fn render_multi_serve_matches_golden() {
             },
         ],
         metrics: None,
+        attrib: None,
     };
     assert_golden("render_multi_serve.txt", &render_multi_serve(&report));
 }
@@ -144,6 +147,7 @@ fn bench_fixture() -> BenchReport {
         seed: 7,
         warmup: 1,
         reps: 5,
+        recorded_rep: Some(4),
         scenarios: vec![
             ScenarioResult {
                 name: "pipelined/alexnet".into(),
@@ -266,4 +270,110 @@ fn render_metrics_matches_golden() {
     m.hists
         .insert("stage_service/g1r0s0".into(), LogHist::of(&[0.06; 4]));
     assert_golden("render_metrics.txt", &render_metrics(&m));
+}
+
+#[test]
+fn render_attrib_matches_golden() {
+    let report = AttribReport {
+        items: 200,
+        shed: 10,
+        front_wait_s: 0.0125,
+        queue_wait_s: 0.003,
+        service_s: 0.105,
+        latency_s: 0.1205,
+        max_abs_err_s: 2.2e-16,
+        stages: vec![
+            StageAttrib {
+                group: 0,
+                replica: 0,
+                stage: 0,
+                items: 200,
+                observed_s: 0.0625,
+                predicted_s: Some(0.061),
+                residual_s: 0.0015,
+                excess_s: 0.3,
+            },
+            StageAttrib {
+                group: 0,
+                replica: 0,
+                stage: 1,
+                items: 200,
+                observed_s: 0.0425,
+                predicted_s: Some(0.043),
+                residual_s: -0.0005,
+                excess_s: -0.1,
+            },
+            // Trace-only row: the plan carried no prediction here.
+            StageAttrib {
+                group: 1,
+                replica: 0,
+                stage: 0,
+                items: 100,
+                observed_s: 0.02,
+                predicted_s: None,
+                residual_s: 0.0,
+                excess_s: 0.0,
+            },
+        ],
+        annotations: vec![
+            "t=3.25s after 80 imgs: big-cluster slowdown x2.00 B4-s4 -> B2-s4 \
+             (pred 12.50 imgs/s)"
+                .into(),
+        ],
+    };
+    assert_golden("render_attrib.txt", &render_attrib(&report));
+}
+
+#[test]
+fn render_history_matches_golden() {
+    let scenario = |name: &str, backend: &str, unit: &str, median: f64| ScenarioResult {
+        name: name.into(),
+        mode: "pipelined".into(),
+        backend: backend.into(),
+        unit: unit.into(),
+        higher_is_better: unit != "s",
+        samples: vec![median; 3],
+        stats: SampleStats {
+            n: 3,
+            rejected: 0,
+            median,
+            mean: median,
+            mad: 0.0,
+            ci_lo: median,
+            ci_hi: median,
+        },
+        host_s: 0.1,
+        metrics: None,
+    };
+    let report = |scenarios: Vec<ScenarioResult>| BenchReport {
+        suite: "quick".into(),
+        seed: 7,
+        warmup: 1,
+        reps: 3,
+        recorded_rep: None,
+        scenarios,
+    };
+    let history = BenchHistory::from_entries(vec![
+        HistoryEntry {
+            label: "0".into(),
+            report: report(vec![
+                scenario("pipelined/alexnet", "des", "imgs/s", 16.0),
+                scenario("explore_64_pipelines_alexnet", "host", "s", 0.00125),
+            ]),
+        },
+        HistoryEntry {
+            label: "1".into(),
+            report: report(vec![scenario("pipelined/alexnet", "des", "imgs/s", 17.6)]),
+        },
+        HistoryEntry {
+            label: "ci".into(),
+            report: report(vec![scenario(
+                "explore_64_pipelines_alexnet",
+                "host",
+                "s",
+                0.0011,
+            )]),
+        },
+    ]);
+    assert_golden("render_history.txt", &render_history(&history));
 }
