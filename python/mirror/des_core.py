@@ -1,0 +1,564 @@
+"""Python mirror of the Rust DES event core (rust/src/simulator/engine.rs).
+
+The build container carries no Rust toolchain, so this mirror is the
+in-container validation for the event-core rewrite (DESIGN.md §15): it
+reimplements, operation for operation, the SplitMix64 arrival streams,
+the historical O(n²) full-history tenancy engine, the bounded-ring +
+binary-heap fast engine, the per-stage disturbance-factor timeline, the
+stationary-segment fast path, and the joint-split counting DP — then
+checks the same differential properties the Rust test suite pins:
+
+  1. fast tenancy engine ≡ reference engine, bit for bit, on hundreds of
+     randomized fleets and arrival streams (outcome fields AND per-stage
+     event traces);
+  2. factor-timeline lookups ≡ the O(events) product scan, bit for bit,
+     and the disturbed pipeline engine ≡ its full-history reference;
+  3. the stationary closed form ≡ exact stepping (bitwise on dyadic
+     service times, ≤1e-9 relative otherwise);
+  4. count_splits DP ≡ brute-force enumeration on small grids, and the
+     documented 8-core/8-core/8-tenant blowup exceeds the budget;
+  5. front-door complexity at 1M arrivals: the fast engine's heap pops
+     stay ≤ admitted while the reference's scan count is quadratic —
+     the measured operation ratio is the speedup floor.
+
+Both engines here share Python's float (IEEE-754 binary64) and the same
+libm, so bit-identity within the mirror is exact, mirroring how the Rust
+fast/reference pair shares one binary.
+
+Run:  python3 python/mirror/des_core.py
+"""
+
+import heapq
+import math
+import struct
+import time
+from collections import deque
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+class Rng:
+    """SplitMix64, matching rust/src/util/rng.rs exactly."""
+
+    def __init__(self, seed):
+        self.state = (seed + GOLDEN) & MASK
+
+    def next_u64(self):
+        self.state = (self.state + GOLDEN) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def index(self, n):
+        return self.next_u64() % n
+
+
+def poisson_arrivals(rate_hz, count, seed):
+    rng = Rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(count):
+        t += -math.log(max(rng.uniform(), 1e-12)) / rate_hz
+        out.append(t)
+    return out
+
+
+def bits(x):
+    return struct.pack("<d", x)
+
+
+# ---------------------------------------------------------------------------
+# Tenancy engines: reference (full history, O(n²) door) vs fast (event core)
+# ---------------------------------------------------------------------------
+
+
+def tenant_reference(replica_stage_times, arrivals, queue_cap, admission_cap):
+    """Mirror of simulate_tenant_fleet_reference (+ a trace for diffing)."""
+    r = len(replica_stage_times)
+    dep = [[[] for _ in ts] for ts in replica_stage_times]
+    start0_all = []
+    latencies, dispatched, shed, scan_iters = [], [0] * r, 0, 0
+    trace = []
+    for i, a in enumerate(arrivals):
+        scan_iters += len(start0_all)
+        waiting = sum(1 for t in start0_all if t > a)
+        if waiting >= admission_cap:
+            shed += 1
+            trace.append(("shed", i, a))
+            continue
+        pick = min(
+            range(r),
+            key=lambda x: (max(dep[x][0][-1] if dep[x][0] else 0.0, a), x),
+        )
+        times = replica_stage_times[pick]
+        p = len(times)
+        k = len(dep[pick][0])
+        prev_stage_dep = 0.0
+        for s in range(p):
+            prev = dep[pick][s][k - 1] if k else 0.0
+            arrive = max(a, prev) if s == 0 else max(prev_stage_dep, prev)
+            unblock = (
+                dep[pick][s + 1][k - queue_cap - 1]
+                if s + 1 < p and k > queue_cap
+                else 0.0
+            )
+            start = max(arrive, unblock)
+            if s == 0:
+                start0_all.append(start)
+            prev_stage_dep = start + times[s]
+            dep[pick][s].append(prev_stage_dep)
+            trace.append(("stage", i, pick, s, start, prev_stage_dep))
+        latencies.append(prev_stage_dep - a)
+        dispatched[pick] += 1
+    makespan = max(
+        (stages[-1][-1] if stages[-1] else 0.0 for stages in dep), default=0.0
+    )
+    makespan = max(makespan, 0.0)
+    return dict(
+        offered=len(arrivals),
+        admitted=len(latencies),
+        shed=shed,
+        makespan=makespan,
+        latencies=latencies,
+        dispatched=dispatched,
+        scan_iters=scan_iters,
+        trace=trace,
+    )
+
+
+def tenant_fast(replica_stage_times, arrivals, queue_cap, admission_cap):
+    """Mirror of the event-core engine: bounded rings + admission heap."""
+    r = len(replica_stage_times)
+    rings = [
+        [deque(maxlen=queue_cap + 1) for _ in ts] for ts in replica_stage_times
+    ]
+    door = []  # heap of stage-0 starts of admitted items
+    pops = 0
+    latencies, dispatched, shed = [], [0] * r, 0
+    last_final = [0.0] * r
+    trace = []
+    for i, a in enumerate(arrivals):
+        while door and door[0] <= a:  # live_after(a)
+            heapq.heappop(door)
+            pops += 1
+        waiting = len(door)
+        if waiting >= admission_cap:
+            shed += 1
+            trace.append(("shed", i, a))
+            continue
+        pick = min(
+            range(r),
+            key=lambda x: (max(rings[x][0][-1] if rings[x][0] else 0.0, a), x),
+        )
+        times = replica_stage_times[pick]
+        p = len(times)
+        prev_dep = 0.0
+        for s in range(p):
+            ring = rings[pick][s]
+            prev_same = ring[-1] if ring else 0.0
+            arrive = max(a, prev_same) if s == 0 else max(prev_dep, prev_same)
+            nxt = rings[pick][s + 1] if s + 1 < p else None
+            unblock = nxt[0] if nxt is not None and len(nxt) == nxt.maxlen else 0.0
+            start = max(arrive, unblock)
+            if s == 0:
+                heapq.heappush(door, start)
+            prev_dep = start + times[s]
+            ring.append(start + times[s])
+            trace.append(("stage", i, pick, s, start, prev_dep))
+        last_final[pick] = prev_dep
+        latencies.append(prev_dep - a)
+        dispatched[pick] += 1
+    return dict(
+        offered=len(arrivals),
+        admitted=len(latencies),
+        shed=shed,
+        makespan=max(last_final + [0.0]),
+        latencies=latencies,
+        dispatched=dispatched,
+        scan_iters=pops,
+        trace=trace,
+    )
+
+
+def check_tenancy_differential():
+    rng = Rng(2026)
+    for case in range(300):
+        r = 1 + rng.index(3)
+        p = 1 + rng.index(4)
+        fleets = [
+            [0.002 + rng.uniform() * 0.03 for _ in range(p)] for _ in range(r)
+        ]
+        rate = 20.0 + rng.uniform() * 400.0
+        n = 50 + rng.index(200)
+        arrivals = poisson_arrivals(rate, n, rng.next_u64())
+        qc = 1 + rng.index(3)
+        ac = 1 + rng.index(8)
+        fast = tenant_fast(fleets, arrivals, qc, ac)
+        ref = tenant_reference(fleets, arrivals, qc, ac)
+        for key in ("offered", "admitted", "shed", "dispatched"):
+            assert fast[key] == ref[key], (case, key, fast[key], ref[key])
+        assert bits(fast["makespan"]) == bits(ref["makespan"]), case
+        assert len(fast["latencies"]) == len(ref["latencies"]), case
+        for x, y in zip(fast["latencies"], ref["latencies"]):
+            assert bits(x) == bits(y), case
+        # Trace identity: same events at the same times, byte for byte.
+        assert len(fast["trace"]) == len(ref["trace"]), case
+        for ef, er in zip(fast["trace"], ref["trace"]):
+            assert ef[:4] == er[:4] and all(
+                bits(a) == bits(b)
+                for a, b in zip(ef[4:], er[4:])
+                if isinstance(a, float)
+            ), (case, ef, er)
+        # Complexity: the fix itself.
+        assert fast["scan_iters"] <= fast["admitted"], case
+        assert ref["scan_iters"] >= fast["scan_iters"], case
+    print("PASS tenancy fast engine ≡ reference, bit for bit (300 cases)")
+
+
+# ---------------------------------------------------------------------------
+# Pipeline engine: factor timeline + ring engine vs full-history reference
+# ---------------------------------------------------------------------------
+
+
+def disturbance_factor(events, replica, stage, t):
+    f = 1.0
+    for at, factor, scope in events:
+        if at <= t and (not scope or (replica, stage) in scope):
+            f *= factor
+    return f
+
+
+class FactorTimeline:
+    """Mirror of pipeline_sim's step-function timeline (monotone cursor)."""
+
+    def __init__(self, events, replica, stage):
+        ts = sorted(
+            {
+                at
+                for at, _, scope in events
+                if not math.isnan(at) and (not scope or (replica, stage) in scope)
+            }
+        )
+        self.thresholds = ts
+        self.products = [
+            disturbance_factor(events, replica, stage, t) for t in ts
+        ]
+        self.idx = 0
+
+    def factor_at(self, t):
+        while self.idx < len(self.thresholds) and self.thresholds[self.idx] <= t:
+            self.idx += 1
+        return 1.0 if self.idx == 0 else self.products[self.idx - 1]
+
+
+def pipeline_reference(stage_times, images, queue_cap, events, t0, replica):
+    """Mirror of simulate_disturbed_reference: full history, O(events)
+    factor scan per service, latency from the previous item's stage-0
+    start (`dep[0][i-1] - svc0[i-1]`)."""
+    p = len(stage_times)
+    dep = [[0.0] * images for _ in range(p)]
+    svc0 = [0.0] * images
+    for i in range(images):
+        for s in range(p):
+            if s == 0:
+                arrive = 0.0 if i == 0 else dep[0][i - 1]
+            else:
+                prev_here = dep[s][i - 1] if i else 0.0
+                arrive = max(dep[s - 1][i], prev_here)
+            unblock = (
+                dep[s + 1][i - queue_cap - 1]
+                if s + 1 < p and i > queue_cap
+                else 0.0
+            )
+            start = max(arrive, unblock)
+            svc = stage_times[s] * disturbance_factor(
+                events, replica, s, t0 + start
+            )
+            if s == 0:
+                svc0[i] = svc
+            dep[s][i] = start + svc
+    lat = []
+    for i in range(images):
+        enter = 0.0 if i == 0 else dep[0][i - 1] - svc0[i - 1]
+        lat.append(dep[p - 1][i] - max(enter, 0.0))
+    return dep[p - 1][images - 1], lat
+
+
+def pipeline_fast(stage_times, images, queue_cap, events, t0, replica):
+    p = len(stage_times)
+    rings = [deque(maxlen=queue_cap + 1) for _ in range(p)]
+    timelines = [FactorTimeline(events, replica, s) for s in range(p)]
+    latencies = []
+    prev_dep0 = prev_svc0 = 0.0
+    out = 0.0
+    for i in range(images):
+        dep0 = svc0 = 0.0
+        prev_dep = 0.0
+        for s in range(p):
+            ring = rings[s]
+            prev_same = ring[-1] if ring else 0.0
+            arrive = max(0.0, prev_same) if s == 0 else max(prev_dep, prev_same)
+            nxt = rings[s + 1] if s + 1 < p else None
+            unblock = nxt[0] if nxt is not None and len(nxt) == nxt.maxlen else 0.0
+            start = max(arrive, unblock)
+            svc = stage_times[s] * timelines[s].factor_at(t0 + start)
+            prev_dep = start + svc
+            ring.append(prev_dep)
+            if s == 0:
+                svc0, dep0 = svc, prev_dep
+        out = prev_dep
+        enter = 0.0 if i == 0 else prev_dep0 - prev_svc0
+        latencies.append(out - max(enter, 0.0))
+        prev_dep0, prev_svc0 = dep0, svc0
+    return out, latencies
+
+
+def check_pipeline_differential():
+    rng = Rng(4096)
+    for case in range(200):
+        p = 1 + rng.index(4)
+        times = [0.004 + rng.uniform() * 0.05 for _ in range(p)]
+        events = []
+        for _ in range(rng.index(4)):
+            scope = (
+                [] if rng.index(2) == 0 else [(0, rng.index(p))]
+            )
+            events.append(
+                (rng.uniform() * 3.0, 0.5 + rng.uniform() * 2.0, scope)
+            )
+        images = 30 + rng.index(150)
+        qc = 1 + rng.index(3)
+        t0 = rng.uniform() * 2.0
+        # Timeline vs direct product scan at monotone query times.
+        probes = sorted(rng.uniform() * 5.0 for _ in range(40))
+        for s in range(p):
+            cursor = FactorTimeline(events, 0, s)
+            for q in probes:
+                assert bits(cursor.factor_at(q)) == bits(
+                    disturbance_factor(events, 0, s, q)
+                ), (case, s, q)
+        mk_f, lat_f = pipeline_fast(times, images, qc, events, t0, 0)
+        mk_r, lat_r = pipeline_reference(times, images, qc, events, t0, 0)
+        assert bits(mk_f) == bits(mk_r), (case, mk_f, mk_r)
+        for x, y in zip(lat_f, lat_r):
+            assert bits(x) == bits(y), case
+    print("PASS pipeline ring engine + factor timeline ≡ reference (200 cases)")
+
+
+# ---------------------------------------------------------------------------
+# Stationary fast path
+# ---------------------------------------------------------------------------
+
+
+def simulate_plain(stage_times, images, queue_cap):
+    mk, lat = pipeline_fast(stage_times, images, queue_cap, [], 0.0, 0)
+    return mk, lat
+
+
+def simulate_stationary(stage_times, images, queue_cap):
+    """Mirror of simulate_stationary: step until the per-stage departure
+    increments repeat bitwise for queue_cap+2 consecutive items with one
+    uniform Δ, then continue in closed form."""
+    p = len(stage_times)
+    need = queue_cap + 2
+    rings = [deque(maxlen=queue_cap + 1) for _ in range(p)]
+    prev = [0.0] * p
+    delta = [0.0] * p
+    streak = 0
+    primed = False
+    latencies = []
+    prev_dep0 = 0.0
+    out = 0.0
+    i = 0
+    while i < images:
+        prev_dep = 0.0
+        deps_now = [0.0] * p
+        for s in range(p):
+            ring = rings[s]
+            prev_same = ring[-1] if ring else 0.0
+            arrive = max(0.0, prev_same) if s == 0 else max(prev_dep, prev_same)
+            nxt = rings[s + 1] if s + 1 < p else None
+            unblock = nxt[0] if nxt is not None and len(nxt) == nxt.maxlen else 0.0
+            start = max(arrive, unblock)
+            prev_dep = start + stage_times[s]
+            ring.append(prev_dep)
+            deps_now[s] = prev_dep
+        out = prev_dep
+        enter = 0.0 if i == 0 else prev_dep0 - stage_times[0]
+        latencies.append(out - max(enter, 0.0))
+        prev_dep0 = deps_now[0]
+        i += 1
+        # PeriodDetector.observe, then uniform_delta.
+        if not primed:
+            prev = list(deps_now)
+            primed = True
+            continue
+        same = True
+        for s in range(p):
+            d = deps_now[s] - prev[s]
+            if bits(d) != bits(delta[s]):
+                same = False
+                delta[s] = d
+        prev = list(deps_now)
+        streak = streak + 1 if same else 1
+        if i < images and streak >= need:
+            if all(bits(d) == bits(delta[0]) for d in delta):
+                dv = delta[0]
+                if math.isfinite(dv) and dv > 0.0:
+                    remaining = images - i
+                    makespan = out + remaining * dv
+                    lat = (out + dv) - max(deps_now[0] - stage_times[0], 0.0)
+                    latencies.extend([lat] * remaining)
+                    return makespan, latencies, i
+    return out, latencies, None
+
+
+def check_stationary():
+    # Dyadic times: closed form must be bitwise identical to stepping.
+    rng = Rng(777)
+    for case in range(50):
+        p = 1 + rng.index(4)
+        times = [(1 + rng.index(16)) * 0.0078125 for _ in range(p)]
+        qc = 1 + rng.index(3)
+        images = 200 + rng.index(800)
+        mk_s, lat_s = simulate_plain(times, images, qc)
+        mk_a, lat_a, engaged = simulate_stationary(times, images, qc)
+        assert engaged is not None, case
+        assert bits(mk_s) == bits(mk_a), (case, mk_s, mk_a)
+        assert len(lat_s) == len(lat_a)
+        for x, y in zip(lat_s, lat_a):
+            assert bits(x) == bits(y), case
+    # General times: ≤ 1e-9 relative.
+    for case in range(50):
+        p = 1 + rng.index(4)
+        times = [0.003 + rng.uniform() * 0.02 for _ in range(p)]
+        qc = 1 + rng.index(3)
+        images = 200 + rng.index(800)
+        mk_s, _ = simulate_plain(times, images, qc)
+        mk_a, _, _ = simulate_stationary(times, images, qc)
+        assert abs(mk_a - mk_s) <= 1e-9 * mk_s, (case, mk_s, mk_a)
+    print("PASS stationary closed form ≡ stepping (bitwise dyadic, 1e-9 general)")
+
+
+# ---------------------------------------------------------------------------
+# Joint-split budget DP
+# ---------------------------------------------------------------------------
+
+
+def count_splits(hb, hs, tenants):
+    """Mirror of tenancy::joint::count_splits: ordered assignments of the
+    FULL (hb, hs) budget to `tenants` slices, each slice ≥ 1 core (the
+    enumeration's last slice absorbs the remainder, so the budget is
+    always exhausted)."""
+    if tenants == 0 or hb + hs < tenants:
+        return 0
+    ways = [[0] * (hs + 1) for _ in range(hb + 1)]
+    ways[0][0] = 1
+    for _ in range(tenants):
+        nxt = [[0] * (hs + 1) for _ in range(hb + 1)]
+        for b in range(hb + 1):
+            for s in range(hs + 1):
+                if not ways[b][s]:
+                    continue
+                for db in range(hb - b + 1):
+                    for ds in range(hs - s + 1):
+                        if db + ds >= 1:
+                            nxt[b + db][s + ds] += ways[b][s]
+        ways = nxt
+    return ways[hb][hs]
+
+
+def brute_splits(hb, hs, tenants):
+    """Direct mirror of the recursive `splits` enumeration's count: first
+    tenants−1 slices free (≥ 1 core each), last slice = the remainder."""
+
+    def rec(b, s, left):
+        if left == 1:
+            return 1 if b + s >= 1 else 0
+        total = 0
+        for db in range(b + 1):
+            for ds in range(s + 1):
+                if db + ds == 0 or (b - db) + (s - ds) < left - 1:
+                    continue
+                total += rec(b - db, s - ds, left - 1)
+        return total
+
+    if tenants == 0 or hb + hs < tenants:
+        return 0
+    return rec(hb, hs, tenants)
+
+
+def check_split_budget():
+    for hb in range(5):
+        for hs in range(5):
+            for t in range(1, 5):
+                assert count_splits(hb, hs, t) == brute_splits(hb, hs, t), (
+                    hb,
+                    hs,
+                    t,
+                )
+    assert count_splits(1, 1, 2) == 2
+    assert count_splits(1, 1, 3) == 0
+    assert count_splits(4, 4, 8) == 70  # one core each: C(8,4)
+    blowup = count_splits(8, 8, 8)
+    assert blowup == 3716695 and blowup > 200000, blowup
+    print(
+        "PASS count_splits DP ≡ splits enumeration; "
+        "8/8/8 = {:,} splits exceeds the 200k budget".format(blowup)
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1M-arrival complexity measurement
+# ---------------------------------------------------------------------------
+
+
+def check_million():
+    fleets = [[0.010, 0.014, 0.008], [0.012, 0.012, 0.012]]
+    arrivals = poisson_arrivals(220.0, 1_000_000, 7)
+    start = time.perf_counter()
+    fast = tenant_fast(fleets, arrivals, 2, 8)
+    elapsed = time.perf_counter() - start
+    events = fast["offered"] + sum(fast["dispatched"]) * len(fleets[0])
+    # The reference's scan count at this stream, computed exactly without
+    # paying for the O(n²) run: it scans every prior admitted start at
+    # every arrival. Replay admission decisions from the fast trace
+    # (bit-identical, so the reference admits exactly the same items).
+    ref_scans = 0
+    admitted_so_far = 0
+    for ev in fast["trace"]:
+        if ev[0] == "shed":
+            ref_scans += admitted_so_far
+        elif ev[0] == "stage" and ev[3] == 0:
+            ref_scans += admitted_so_far
+            admitted_so_far += 1
+    assert fast["scan_iters"] <= fast["admitted"] <= events
+    ratio = ref_scans / max(fast["scan_iters"], 1)
+    print(
+        "PASS 1M arrivals: admitted={:,} shed={:,} events={:,} "
+        "fast scans={:,} ref scans={:,} (op ratio {:.0f}×) "
+        "mirror rate {:,.0f} events/s".format(
+            fast["admitted"],
+            fast["shed"],
+            events,
+            fast["scan_iters"],
+            ref_scans,
+            ratio,
+            events / elapsed,
+        )
+    )
+    assert ratio >= 10.0, "front-door op ratio below the 10× target"
+
+
+if __name__ == "__main__":
+    check_tenancy_differential()
+    check_pipeline_differential()
+    check_stationary()
+    check_split_budget()
+    check_million()
+    print("OK: event-core mirror checks all passed")

@@ -4,22 +4,23 @@
 //! queues, each board running the exact blocking tandem-queue recurrence of
 //! [`crate::tenancy::simulate_tenant_fleet`].
 //!
-//! The per-board engine is re-implemented in *streaming* form — bounded
+//! The per-board engine runs in *streaming* form on the shared event core
+//! ([`crate::simulator::engine`], DESIGN.md §15) — arena-allocated bounded
 //! departure rings plus admission/completion heaps instead of full
 //! per-item history — so state is O(boards · stages · queue_cap) and a run
 //! costs O(arrivals · log) time. That is what makes ≥1M-arrival cluster
-//! runs practical where the tenancy reference engine's O(n²) front-door
-//! scan is not; a unit test pins the two engines to bit-identical results
-//! on a single board.
-
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+//! runs practical where a full-history engine's O(n²) front-door scan is
+//! not; a unit test pins this engine to bit-identical results against the
+//! tenancy engine on a single board, and the differential suite
+//! (`tests/engine_core.rs`) pins both against the retained reference
+//! recurrences.
 
 use anyhow::Result;
 
 use crate::api::LatencyReport;
 use crate::obs::{attrib_for, pool_latencies, EngineProf, PredictedTimes, Recorder};
 use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
+use crate::simulator::engine::{tandem_step, EventHeap, RingArena, RingId};
 
 use super::plan::ClusterPlan;
 use super::report::{
@@ -27,73 +28,21 @@ use super::report::{
 };
 use super::router::{DispatchPolicy, Router};
 
-/// Total-order f64 wrapper so event times can live in a [`BinaryHeap`].
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct F(f64);
+/// Per-workload seed stride for a board's component arrival streams:
+/// `7919²`, the square of the per-board stride
+/// ([`ClusterServeOptions::board_seed`]), so `run_seed + r` (harness
+/// reps), `+ 7919·b` (boards) and `+ 7919²·t` (workloads) form a
+/// mixed-radix encoding — pairwise distinct for `r, b < 7919` and any
+/// workload count below `2⁶⁴/7919²` (a unit test pins this scheme).
+pub(crate) const WORKLOAD_SEED_STRIDE: u64 = 7919 * 7919;
 
-impl Eq for F {}
-
-impl PartialOrd for F {
-    fn partial_cmp(&self, other: &F) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for F {
-    fn cmp(&self, other: &F) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
-    }
-}
-
-/// A min-heap of event times: push instants, then discard everything at or
-/// before "now" — the live count is what remains. The `pushes`/`pops`/
-/// `peak` tallies are write-only profiler counters (DESIGN.md §14): the
-/// recurrence never reads them, so instrumentation cannot perturb results.
-#[derive(Debug, Default)]
-struct EventHeap {
-    heap: BinaryHeap<Reverse<F>>,
-    pushes: u64,
-    pops: u64,
-    peak: u64,
-}
-
-impl EventHeap {
-    fn push(&mut self, t: f64) {
-        self.heap.push(Reverse(F(t)));
-        self.pushes += 1;
-        self.peak = self.peak.max(self.heap.len() as u64);
-    }
-
-    /// Drop every event at or before `now`, then return the live count.
-    fn live_after(&mut self, now: f64) -> usize {
-        while let Some(&Reverse(F(t))) = self.heap.peek() {
-            if t <= now {
-                self.heap.pop();
-                self.pops += 1;
-            } else {
-                break;
-            }
-        }
-        self.heap.len()
-    }
-}
-
-/// One replica's tail of departure history: per stage, the last
-/// `queue_cap + 1` departure times — exactly the window the blocking
-/// recurrence reads (`dep[s][k-1]` at the back, `dep[s+1][k-queue_cap-1]`
-/// at the front once the ring is full).
-#[derive(Debug)]
-struct ReplicaState {
-    dep: Vec<VecDeque<f64>>,
-    /// Items dispatched to this replica so far (the recurrence's `k`).
-    count: usize,
-}
-
-/// One (board, workload) fleet: its replicas plus the fleet's bounded
-/// front-door admission queue (stage-0 start times of admitted items).
+/// One (board, workload) fleet: per-replica departure rings (one
+/// [`RingId`] per stage into the run's shared arena) plus the fleet's
+/// bounded front-door admission queue (stage-0 start times of admitted
+/// items).
 #[derive(Debug)]
 struct FleetState {
-    replicas: Vec<ReplicaState>,
+    replicas: Vec<Vec<RingId>>,
     waiting: EventHeap,
 }
 
@@ -200,6 +149,8 @@ pub fn simulate_cluster_streams_recorded(
 
     let mut prof = EngineProf::start("cluster", rec);
     let mut router = Router::new(policy, weights.to_vec(), run_seed)?;
+    // One arena backs every departure ring of the run (DESIGN.md §15).
+    let mut arena = RingArena::new();
     let mut boards: Vec<Vec<FleetState>> = board_fleets
         .iter()
         .map(|bf| {
@@ -207,10 +158,7 @@ pub fn simulate_cluster_streams_recorded(
                 .map(|reps| FleetState {
                     replicas: reps
                         .iter()
-                        .map(|t| ReplicaState {
-                            dep: vec![VecDeque::with_capacity(queue_cap + 1); t.len()],
-                            count: 0,
-                        })
+                        .map(|t| t.iter().map(|_| arena.alloc(queue_cap + 1)).collect())
                         .collect(),
                     waiting: EventHeap::default(),
                 })
@@ -268,54 +216,40 @@ pub fn simulate_cluster_streams_recorded(
         // Join-earliest-start dispatch within the chosen fleet, then the
         // exact blocking recurrence of `simulate_tenant_fleet` over the
         // bounded departure rings.
-        let fleet = &mut boards[b][t];
+        let FleetState { replicas, waiting } = &mut boards[b][t];
         if rec.enabled() {
             rec.admit(b as u32, i as u64, a);
-            let depth = fleet.waiting.live_after(a) as f64;
+            let depth = waiting.live_after(a) as f64;
             rec.gauge_max(&format!("queue_depth_peak/g{b}"), depth);
         }
-        let q = (0..fleet.replicas.len())
+        let q = (0..replicas.len())
             .min_by(|&x, &y| {
-                let ex = fleet.replicas[x].dep[0].back().copied().unwrap_or(0.0).max(a);
-                let ey = fleet.replicas[y].dep[0].back().copied().unwrap_or(0.0).max(a);
+                let ex = arena.back(replicas[x][0]).unwrap_or(0.0).max(a);
+                let ey = arena.back(replicas[y][0]).unwrap_or(0.0).max(a);
                 ex.total_cmp(&ey)
             })
             .expect("nonempty fleet");
-        let times = &board_fleets[b][t][q];
-        let p = times.len();
-        let rep = &mut fleet.replicas[q];
-        let k = rep.count;
-        let mut prev_stage_dep = 0.0;
-        for s in 0..p {
-            let prev_same = rep.dep[s].back().copied().unwrap_or(0.0);
-            let arrive =
-                if s == 0 { a.max(prev_same) } else { prev_stage_dep.max(prev_same) };
-            let unblock = if s + 1 < p && rep.dep[s + 1].len() == queue_cap + 1 {
-                *rep.dep[s + 1].front().expect("full ring")
-            } else {
-                0.0
-            };
-            let start = arrive.max(unblock);
-            if s == 0 {
-                fleet.waiting.push(start);
-            }
-            prev_stage_dep = start + times[s];
-            if rep.dep[s].len() == queue_cap + 1 {
-                rep.dep[s].pop_front();
-            }
-            rep.dep[s].push_back(prev_stage_dep);
-            if rec.enabled() {
-                let rid = rep_base[b][t] + q as u32;
-                rec.stage(b as u32, i as u64, rid, s as u32, start, prev_stage_dep);
-            }
-        }
-        rec.depart(b as u32, i as u64, rep_base[b][t] + q as u32, prev_stage_dep);
-        rep.count = k + 1;
+        let dep = tandem_step(
+            &mut arena,
+            &replicas[q],
+            &board_fleets[b][t][q],
+            a,
+            |s, start, _svc, dep| {
+                if s == 0 {
+                    waiting.push(start);
+                }
+                if rec.enabled() {
+                    let rid = rep_base[b][t] + q as u32;
+                    rec.stage(b as u32, i as u64, rid, s as u32, start, dep);
+                }
+            },
+        );
+        rec.depart(b as u32, i as u64, rep_base[b][t] + q as u32, dep);
         out[b].dispatched[t][q] += 1;
         out[b].admitted += 1;
-        out[b].latencies.push(prev_stage_dep - a);
-        out[b].makespan = out[b].makespan.max(prev_stage_dep);
-        completions[b].push(prev_stage_dep);
+        out[b].latencies.push(dep - a);
+        out[b].makespan = out[b].makespan.max(dep);
+        completions[b].push(dep);
     }
 
     debug_assert_eq!(
@@ -326,7 +260,7 @@ pub fn simulate_cluster_streams_recorded(
     // Engine profile (DESIGN.md §14): one event per front-door decision
     // plus one per (item, stage) executed; heap traffic comes from the
     // write-only tallies on the admission/completion heaps, and ring
-    // occupancy from the bounded departure rings.
+    // occupancy from the arena's high-water mark.
     if prof.active() {
         prof.events = arrivals.len() as u64;
         for (b, bf) in board_fleets.iter().enumerate() {
@@ -341,16 +275,12 @@ pub fn simulate_cluster_streams_recorded(
                 prof.heap_pushes += fleet.waiting.pushes;
                 prof.heap_pops += fleet.waiting.pops;
                 prof.heap_peak = prof.heap_peak.max(fleet.waiting.peak);
-                for rep in &fleet.replicas {
-                    for ring in &rep.dep {
-                        prof.ring_peak = prof.ring_peak.max(ring.len() as u64);
-                    }
-                }
             }
             prof.heap_pushes += comp.pushes;
             prof.heap_pops += comp.pops;
             prof.heap_peak = prof.heap_peak.max(comp.peak);
         }
+        prof.ring_peak = arena.peak();
         prof.flush(rec);
     }
     Ok(out)
@@ -376,10 +306,13 @@ fn apportion(total: usize, shares: &[f64]) -> Vec<usize> {
 /// The cluster's merged front-door schedule: per workload, one seeded
 /// Poisson component stream per board at `rate · share_b` (their
 /// superposition is again Poisson at the full rate), merged and sorted.
-/// Board `b`'s components draw from `board_seed(b) + t` — the same
-/// distinct-stream scheme as tenant seeds. Disabled boards still
-/// contribute their components: taking a board out of rotation must not
-/// change the offered traffic.
+/// Board `b`'s workload-`t` component draws from
+/// `board_seed(b) + 7919²·t` (`WORKLOAD_SEED_STRIDE`) — a mixed-radix
+/// extension of the tenant/board scheme, collision-free against both the
+/// per-board `7919·b` stride and the harness's per-rep `+r` offsets for
+/// all in-range indices (the old `+t` offset collided with rep `r = t`).
+/// Disabled boards still contribute their components: taking a board out
+/// of rotation must not change the offered traffic.
 pub fn cluster_arrivals(cp: &ClusterPlan, opts: &ClusterServeOptions) -> Vec<(f64, usize)> {
     let shares: Vec<f64> = cp.boards.iter().map(|b| b.rate_share).collect();
     let mut merged: Vec<(f64, usize)> = Vec::with_capacity(opts.images * cp.workloads.len());
@@ -393,7 +326,9 @@ pub fn cluster_arrivals(cp: &ClusterPlan, opts: &ClusterServeOptions) -> Vec<(f6
             let stream = if opts.uniform_arrivals {
                 uniform_arrivals(rate, count)
             } else {
-                let seed = opts.board_seed(entry.seed, b).wrapping_add(t as u64);
+                let seed = opts
+                    .board_seed(entry.seed, b)
+                    .wrapping_add(WORKLOAD_SEED_STRIDE.wrapping_mul(t as u64));
                 poisson_arrivals(rate, count, seed)
             };
             merged.extend(stream.into_iter().map(|a| (a, t)));

@@ -62,8 +62,12 @@ impl ClusterServeOptions {
     /// Base arrival seed for board `idx`: its pinned seed, or a
     /// deterministic derivation from the run seed that keeps per-board
     /// streams distinct. Workload `t` on that board then uses
-    /// `board_seed + t` — collision-free across boards because the
-    /// workload count is far below the 7919 stride.
+    /// `board_seed + 7919²·t` (`cosim::WORKLOAD_SEED_STRIDE`): harness
+    /// reps add `+rep`, boards add `+7919·idx`, workloads add `+7919²·t`,
+    /// so for `rep, idx < 7919` the three offsets are mixed-radix digits
+    /// and every (rep, board, workload) triple gets a distinct SplitMix64
+    /// stream (the old `+t` workload offset collided with rep `r = t`;
+    /// seed-stream audit, DESIGN.md §15).
     pub fn board_seed(&self, pinned: Option<u64>, idx: usize) -> u64 {
         pinned.unwrap_or_else(|| self.seed.wrapping_add(7919 * idx as u64))
     }

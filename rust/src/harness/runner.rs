@@ -73,6 +73,15 @@ pub(crate) fn fnv1a(s: &str) -> u64 {
 /// their own thread fleets; overlapping them would contaminate timings).
 pub fn run_suite(suite: Suite, opts: &RunnerOptions) -> Result<BenchReport> {
     anyhow::ensure!(opts.reps >= 1, "need at least one repetition");
+    // Rep seeds are `base + rep`; boards/tenants derive theirs at strides
+    // of 7919 and 7919² from the same base, so reps must stay below the
+    // first stride for the mixed-radix disjointness argument to hold
+    // (seed-stream audit, DESIGN.md §15).
+    anyhow::ensure!(
+        opts.reps < 7919,
+        "reps must stay below the 7919 seed stride (got {})",
+        opts.reps
+    );
     let mut scenarios = Vec::new();
     let mut recorded_rep = None;
     for e in suite_entries(suite) {

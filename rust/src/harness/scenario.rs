@@ -88,6 +88,12 @@ pub struct Scenario {
     /// Declared relative tolerance for DES-vs-wall agreement — the bound
     /// the differential conformance suite enforces per scenario.
     pub tolerance: f64,
+    /// DES-twin-only scenario: excluded from wall-clock suites and the
+    /// DES-vs-wall conformance sweep. Used by throughput-stress entries
+    /// (e.g. `multi/hot-2x500k`, 1M arrivals) whose wall twin would sleep
+    /// for hours; `tolerance` is still declared for uniformity but nothing
+    /// enforces it.
+    pub des_only: bool,
     spec: Spec,
 }
 
@@ -292,6 +298,7 @@ fn scenario(
         queue_cap: 2,
         time_scale: 0.05,
         tolerance,
+        des_only: false,
         spec,
     }
 }
@@ -379,6 +386,23 @@ pub fn registry() -> Vec<Scenario> {
             0.35,
             Spec::Multi { tenants: &MULTI_MIX, max_replicas: 2 },
         ),
+        // The event-core throughput stress (DESIGN.md §15): 2 tenants ×
+        // 500k arrivals = 1M front-door admissions through the tenancy
+        // engine. Runs in seconds on the O(log n) front door — the O(n²)
+        // reference scan would make this scenario the whole bench run —
+        // and its recorded EngineProf (events/s, scan_iters) is what CI's
+        // superlinearity gate reads. DES-only: the wall twin would
+        // time-scale-sleep through a seven-figure stream.
+        Scenario {
+            des_only: true,
+            ..scenario(
+                "multi/hot-2x500k",
+                "multi-tenant",
+                500_000,
+                0.35,
+                Spec::Multi { tenants: &MULTI_MIX, max_replicas: 2 },
+            )
+        },
         scenario(
             "cluster/alexnet-2x4+4",
             "cluster",
@@ -414,7 +438,8 @@ pub enum Suite {
     /// determinism gate runs this.
     Quick,
     /// The quick suite plus every wall-clock twin (real threads, real
-    /// sleeps; the robust statistics exist for these).
+    /// sleeps; the robust statistics exist for these). Scenarios marked
+    /// [`Scenario::des_only`] contribute no wall entry.
     Full,
 }
 
@@ -447,6 +472,7 @@ pub fn suite_entries(suite: Suite) -> Vec<SuiteEntry> {
     let reg = registry();
     let wall: Vec<SuiteEntry> = if suite == Suite::Full {
         reg.iter()
+            .filter(|s| !s.des_only)
             .cloned()
             .map(|scenario| SuiteEntry { scenario, backend: Backend::Wall })
             .collect()
@@ -468,7 +494,7 @@ mod tests {
     #[test]
     fn registry_covers_the_issue_floor() {
         let reg = registry();
-        assert!(reg.len() >= 11, "only {} scenarios", reg.len());
+        assert!(reg.len() >= 12, "only {} scenarios", reg.len());
         let mut modes: Vec<&str> = reg.iter().map(|s| s.mode).collect();
         modes.sort_unstable();
         modes.dedup();
@@ -491,10 +517,28 @@ mod tests {
         assert!(quick.iter().all(|e| e.backend == Backend::Des));
         assert_eq!(quick.len(), registry().len());
         let full = suite_entries(Suite::Full);
-        assert_eq!(full.len(), 2 * quick.len());
+        let wall_eligible = registry().iter().filter(|s| !s.des_only).count();
+        assert!(wall_eligible < quick.len(), "a des_only stress scenario exists");
+        assert_eq!(full.len(), quick.len() + wall_eligible);
         for (q, f) in quick.iter().zip(&full) {
             assert_eq!(q.scenario.name, f.scenario.name, "full must extend quick");
         }
+        assert!(
+            full.iter().all(|e| e.backend != Backend::Wall || !e.scenario.des_only),
+            "des_only scenarios must never get a wall entry"
+        );
+    }
+
+    #[test]
+    fn hot_scenario_offers_a_seven_figure_event_stream() {
+        let reg = registry();
+        let hot = reg.iter().find(|s| s.name == "multi/hot-2x500k").unwrap();
+        assert!(hot.des_only, "the wall twin would sleep through 1M items");
+        assert!(
+            hot.images >= 500_000,
+            "the regression gate needs >= 1M arrivals across 2 tenants"
+        );
+        assert_eq!(hot.mode, "multi-tenant");
     }
 
     #[test]

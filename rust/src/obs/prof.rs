@@ -54,7 +54,11 @@ pub struct EngineProf {
     pub heap_peak: u64,
     /// Departure-ring high-water mark.
     pub ring_peak: u64,
-    /// Front-door linear-scan iterations (the O(n²) the rewrite targets).
+    /// Front-door waiting-count work. Since the event-core rewrite
+    /// (DESIGN.md §15) this counts heap pops — at most one per admitted
+    /// item, so it is linear in events; CI's bench-smoke gate asserts
+    /// `scan_iters <= 2 * events` on the 1M-arrival stress scenario to
+    /// keep the historical O(n²) linear scan from regressing back in.
     pub scan_iters: u64,
 }
 

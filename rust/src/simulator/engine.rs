@@ -1,0 +1,457 @@
+//! The shared DES event core (DESIGN.md §15): the data structures and the
+//! one tandem-recurrence step that all three event engines —
+//! [`pipeline_sim`](crate::simulator::pipeline_sim),
+//! [`tenancy::cosim`](crate::tenancy), [`cluster::cosim`](crate::cluster)
+//! — are built on.
+//!
+//! * [`EventHeap`] — a binary min-heap of event times with write-only
+//!   profiler tallies. Its [`live_after`](EventHeap::live_after) query is
+//!   the O(log n) front door: because arrival times are non-decreasing,
+//!   an event popped at one arrival can never be live at a later one, so
+//!   counting "admitted items still waiting" costs amortized O(log n) per
+//!   arrival instead of the reference engine's O(n) linear scan.
+//! * [`RingArena`] — arena-allocated bounded departure rings: every ring
+//!   of a run lives in ONE contiguous `Vec<f64>`, each a fixed-capacity
+//!   circular window of the last `queue_cap + 1` departures per stage —
+//!   exactly the window the blocking recurrence reads. State is
+//!   O(stages · queue_cap), independent of stream length.
+//! * [`tandem_step`] / [`tandem_step_with`] — one admitted item moved
+//!   through the blocking tandem-queue recurrence
+//!   `d[i][s] = max(d[i][s-1], d[i-1][s], d[i-cap-1][s+1]) + T_s`
+//!   over the rings. Float-operation order is identical to the historical
+//!   full-history engines, so results are bit-identical (the differential
+//!   suite in `tests/engine_core.rs` enforces this).
+//! * [`stationary`] — detection of bitwise-periodic steady-state segments,
+//!   powering the closed-form fast path
+//!   ([`simulate_stationary`](crate::simulator::pipeline_sim::simulate_stationary)).
+//!
+//! All counters here are write-only for the recurrence: instrumentation
+//! cannot perturb simulation results.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Total-order f64 wrapper so event times can live in a [`BinaryHeap`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F(pub f64);
+
+impl Eq for F {}
+
+impl PartialOrd for F {
+    fn partial_cmp(&self, other: &F) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F {
+    fn cmp(&self, other: &F) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// A min-heap of event times: push instants, then discard everything at or
+/// before "now" — the live count is what remains. The `pushes`/`pops`/
+/// `peak` tallies are write-only profiler counters (DESIGN.md §14): the
+/// recurrence never reads them, so instrumentation cannot perturb results.
+///
+/// [`live_after`](EventHeap::live_after) is only a valid waiting-count when
+/// queried at non-decreasing `now` values (events dropped at one query can
+/// never be live at a later one) — exactly the arrival-time discipline of
+/// every engine here.
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<F>>,
+    /// Write-only tally of pushes.
+    pub pushes: u64,
+    /// Write-only tally of pops (events retired by `live_after`).
+    pub pops: u64,
+    /// Write-only high-water mark of heap size.
+    pub peak: u64,
+}
+
+impl EventHeap {
+    /// Push an event time.
+    pub fn push(&mut self, t: f64) {
+        self.heap.push(Reverse(F(t)));
+        self.pushes += 1;
+        self.peak = self.peak.max(self.heap.len() as u64);
+    }
+
+    /// Drop every event at or before `now`, then return the live count.
+    pub fn live_after(&mut self, now: f64) -> usize {
+        while let Some(&Reverse(F(t))) = self.heap.peek() {
+            if t <= now {
+                self.heap.pop();
+                self.pops += 1;
+            } else {
+                break;
+            }
+        }
+        self.heap.len()
+    }
+
+    /// Live events currently in the heap.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether the heap holds no live events.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Handle to one ring inside a [`RingArena`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingId(usize);
+
+#[derive(Debug)]
+struct RingMeta {
+    base: usize,
+    cap: usize,
+    head: usize,
+    len: usize,
+}
+
+/// Arena of fixed-capacity circular f64 rings: one contiguous buffer backs
+/// every departure ring of a run, so per-stage state allocation is a slice
+/// extension, not a per-ring heap allocation. `peak` is the write-only
+/// high-water mark of any ring's occupancy (the profiler's `ring_peak`).
+#[derive(Debug, Default)]
+pub struct RingArena {
+    buf: Vec<f64>,
+    rings: Vec<RingMeta>,
+    peak: u64,
+}
+
+impl RingArena {
+    pub fn new() -> RingArena {
+        RingArena::default()
+    }
+
+    /// Allocate a ring holding at most `cap` values (`cap >= 1`).
+    pub fn alloc(&mut self, cap: usize) -> RingId {
+        assert!(cap >= 1, "ring capacity must be >= 1");
+        let base = self.buf.len();
+        self.buf.resize(base + cap, 0.0);
+        self.rings.push(RingMeta { base, cap, head: 0, len: 0 });
+        RingId(self.rings.len() - 1)
+    }
+
+    /// Newest value in the ring, if any.
+    pub fn back(&self, id: RingId) -> Option<f64> {
+        let r = &self.rings[id.0];
+        if r.len == 0 {
+            return None;
+        }
+        Some(self.buf[r.base + (r.head + r.len - 1) % r.cap])
+    }
+
+    /// Oldest value in the ring, if any.
+    pub fn front(&self, id: RingId) -> Option<f64> {
+        let r = &self.rings[id.0];
+        if r.len == 0 {
+            return None;
+        }
+        Some(self.buf[r.base + r.head])
+    }
+
+    /// Current occupancy.
+    pub fn len(&self, id: RingId) -> usize {
+        self.rings[id.0].len
+    }
+
+    /// Whether the ring holds no values.
+    pub fn is_empty(&self, id: RingId) -> bool {
+        self.rings[id.0].len == 0
+    }
+
+    /// Whether the ring is at capacity (the recurrence's "downstream buffer
+    /// is full, blocking applies" test).
+    pub fn is_full(&self, id: RingId) -> bool {
+        let r = &self.rings[id.0];
+        r.len == r.cap
+    }
+
+    /// Push `v` at the back, evicting the oldest value when full — the
+    /// bounded window the recurrence needs (`dep[k-1]` at the back,
+    /// `dep[k-cap]` at the front once full).
+    pub fn push_bounded(&mut self, id: RingId, v: f64) {
+        let r = &mut self.rings[id.0];
+        if r.len == r.cap {
+            self.buf[r.base + r.head] = v;
+            r.head = (r.head + 1) % r.cap;
+        } else {
+            self.buf[r.base + (r.head + r.len) % r.cap] = v;
+            r.len += 1;
+            self.peak = self.peak.max(r.len as u64);
+        }
+    }
+
+    /// High-water mark of any ring's occupancy (profiler's `ring_peak`).
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
+/// Write-only event-core tallies an engine run accumulates for
+/// [`EngineProf`](crate::obs::EngineProf).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoreCounters {
+    pub heap_pushes: u64,
+    pub heap_pops: u64,
+    pub heap_peak: u64,
+    pub ring_peak: u64,
+}
+
+/// Advance one item through the blocking tandem recurrence over
+/// `stage_rings` (one ring per stage, capacity `queue_cap + 1`), with a
+/// per-stage service-time source: `service(stage, start)` returns the
+/// (possibly disturbed) service time for this item at this stage.
+///
+/// `a` is the item's availability at stage 0 — an arrival time for timed
+/// sources, `0.0` for a saturated source (the `max` against the previous
+/// departure then reproduces the saturated recurrence bit-for-bit, since
+/// departure times are never negative).
+///
+/// `on_stage(stage, start, service, departure)` fires once per stage after
+/// the ring update, in stage order — the hook engines use for span
+/// recording, front-door bookkeeping and busy-time accounting. Returns the
+/// item's final-stage departure time.
+pub fn tandem_step_with(
+    arena: &mut RingArena,
+    stage_rings: &[RingId],
+    a: f64,
+    mut service: impl FnMut(usize, f64) -> f64,
+    mut on_stage: impl FnMut(usize, f64, f64, f64),
+) -> f64 {
+    let p = stage_rings.len();
+    debug_assert!(p >= 1);
+    let mut prev_stage_dep = 0.0;
+    for s in 0..p {
+        let prev_same = arena.back(stage_rings[s]).unwrap_or(0.0);
+        let arrive =
+            if s == 0 { a.max(prev_same) } else { prev_stage_dep.max(prev_same) };
+        // Blocking: stage s cannot release until the downstream buffer has
+        // space, i.e. the item `queue_cap + 1` back has left stage s+1.
+        let unblock = if s + 1 < p && arena.is_full(stage_rings[s + 1]) {
+            arena.front(stage_rings[s + 1]).expect("full ring")
+        } else {
+            0.0
+        };
+        let start = arrive.max(unblock);
+        let svc = service(s, start);
+        prev_stage_dep = start + svc;
+        arena.push_bounded(stage_rings[s], prev_stage_dep);
+        on_stage(s, start, svc, prev_stage_dep);
+    }
+    prev_stage_dep
+}
+
+/// [`tandem_step_with`] for fixed per-stage service times.
+pub fn tandem_step(
+    arena: &mut RingArena,
+    stage_rings: &[RingId],
+    times: &[f64],
+    a: f64,
+    mut on_stage: impl FnMut(usize, f64, f64, f64),
+) -> f64 {
+    tandem_step_with(arena, stage_rings, a, |s, _| times[s], &mut on_stage)
+}
+
+/// Stationary-segment detection (DESIGN.md §15): once the per-stage
+/// departure increments of a disturbance-free run repeat *bitwise* for a
+/// full dependence window, the float recurrence has entered a periodic
+/// orbit and remaining items can be advanced analytically.
+pub mod stationary {
+    /// Watches per-item departure vectors for bitwise-identical per-stage
+    /// increments over `need` consecutive items. The dependence depth of
+    /// the blocking recurrence is `queue_cap + 1` items (the downstream
+    /// unblock term reaches that far back), so callers use
+    /// `need = queue_cap + 2` to cover the whole window.
+    #[derive(Debug)]
+    pub struct PeriodDetector {
+        prev: Vec<f64>,
+        delta: Vec<f64>,
+        streak: usize,
+        need: usize,
+        primed: bool,
+    }
+
+    impl PeriodDetector {
+        pub fn new(stages: usize, need: usize) -> PeriodDetector {
+            PeriodDetector {
+                prev: vec![0.0; stages],
+                delta: vec![0.0; stages],
+                streak: 0,
+                need: need.max(1),
+                primed: false,
+            }
+        }
+
+        /// Feed the departure vector of the item just stepped; returns
+        /// true when the increments have been bitwise-stable for `need`
+        /// consecutive items.
+        pub fn observe(&mut self, deps: &[f64]) -> bool {
+            debug_assert_eq!(deps.len(), self.prev.len());
+            if !self.primed {
+                self.prev.copy_from_slice(deps);
+                self.primed = true;
+                return false;
+            }
+            let mut same = true;
+            for s in 0..deps.len() {
+                let d = deps[s] - self.prev[s];
+                if d.to_bits() != self.delta[s].to_bits() {
+                    same = false;
+                    self.delta[s] = d;
+                }
+            }
+            self.prev.copy_from_slice(deps);
+            self.streak = if same { self.streak + 1 } else { 1 };
+            self.streak >= self.need
+        }
+
+        /// The common per-item increment, when every stage advances by the
+        /// same (bitwise) delta — the steady-state cycle time. `None` when
+        /// stages still drift relative to each other.
+        pub fn uniform_delta(&self) -> Option<f64> {
+            let first = self.delta.first()?;
+            self.delta
+                .iter()
+                .all(|d| d.to_bits() == first.to_bits())
+                .then_some(*first)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_heap_counts_live_events_like_a_linear_scan() {
+        // The heap's live_after must equal the reference linear scan
+        // `count(t > now)` for any non-decreasing query sequence.
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..50 {
+            let n = 1 + rng.index(80);
+            let mut times: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let mut heap = EventHeap::default();
+            let mut all: Vec<f64> = Vec::new();
+            let mut now = 0.0;
+            times.sort_by(f64::total_cmp);
+            for t in times {
+                now = now.max(t * 0.7); // non-decreasing query points
+                for _ in 0..rng.index(3) {
+                    let ev = now + rng.range_f64(0.0, 5.0);
+                    heap.push(ev);
+                    all.push(ev);
+                }
+                let reference = all.iter().filter(|&&e| e > now).count();
+                assert_eq!(heap.live_after(now), reference);
+            }
+            assert_eq!(heap.pushes, all.len() as u64);
+            assert!(heap.pops <= heap.pushes);
+        }
+    }
+
+    #[test]
+    fn ring_arena_is_a_bounded_fifo_window() {
+        let mut arena = RingArena::new();
+        let r = arena.alloc(3);
+        assert!(arena.is_empty(r));
+        assert_eq!(arena.back(r), None);
+        for i in 1..=7 {
+            arena.push_bounded(r, i as f64);
+            assert_eq!(arena.back(r), Some(i as f64));
+            assert_eq!(arena.len(r), i.min(3));
+            // The front is always the oldest retained value.
+            let expected_front = if i <= 3 { 1.0 } else { (i - 2) as f64 };
+            assert_eq!(arena.front(r), Some(expected_front));
+        }
+        assert!(arena.is_full(r));
+        assert_eq!(arena.peak(), 3);
+        // A second ring shares the buffer but not the window.
+        let r2 = arena.alloc(2);
+        arena.push_bounded(r2, 42.0);
+        assert_eq!(arena.front(r2), Some(42.0));
+        assert_eq!(arena.front(r), Some(5.0));
+    }
+
+    #[test]
+    fn tandem_step_matches_the_full_history_recurrence() {
+        // Bit-identity against a direct transcription of the historical
+        // full-history recurrence, over random tandem workloads.
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..40 {
+            let p = 1 + rng.index(4);
+            let times: Vec<f64> = (0..p).map(|_| rng.range_f64(0.001, 0.05)).collect();
+            let cap = 1 + rng.index(3);
+            let n = 5 + rng.index(60);
+            let mut t = 0.0;
+            let arrivals: Vec<f64> = (0..n)
+                .map(|_| {
+                    t += rng.range_f64(0.0, 0.03);
+                    t
+                })
+                .collect();
+
+            // Reference: full history.
+            let mut dep = vec![Vec::<f64>::new(); p];
+            let mut ref_finals = Vec::new();
+            for (k, &a) in arrivals.iter().enumerate() {
+                let mut prev_stage_dep = 0.0;
+                for s in 0..p {
+                    let prev = if k == 0 { 0.0 } else { dep[s][k - 1] };
+                    let arrive =
+                        if s == 0 { a.max(prev) } else { prev_stage_dep.max(prev) };
+                    let unblock =
+                        if s + 1 < p && k > cap { dep[s + 1][k - cap - 1] } else { 0.0 };
+                    prev_stage_dep = arrive.max(unblock) + times[s];
+                    dep[s].push(prev_stage_dep);
+                }
+                ref_finals.push(prev_stage_dep);
+            }
+
+            // Event core: bounded rings.
+            let mut arena = RingArena::new();
+            let rings: Vec<RingId> = (0..p).map(|_| arena.alloc(cap + 1)).collect();
+            for (k, &a) in arrivals.iter().enumerate() {
+                let got = tandem_step(&mut arena, &rings, &times, a, |_, _, _, _| {});
+                assert_eq!(
+                    got.to_bits(),
+                    ref_finals[k].to_bits(),
+                    "item {k} diverged: {got} vs {}",
+                    ref_finals[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn period_detector_fires_on_dyadic_steady_state_only_after_the_window() {
+        let mut d = stationary::PeriodDetector::new(2, 3);
+        // Increments stabilize at (0.25, 0.25) from the second item on.
+        let seq = [
+            [0.5, 0.75],
+            [0.75, 1.0],
+            [1.0, 1.25],
+            [1.25, 1.5],
+            [1.5, 1.75],
+        ];
+        let fired: Vec<bool> = seq.iter().map(|v| d.observe(v)).collect();
+        assert_eq!(fired, vec![false, false, false, true, true]);
+        assert_eq!(d.uniform_delta(), Some(0.25));
+    }
+
+    #[test]
+    fn period_detector_rejects_drifting_stages() {
+        let mut d = stationary::PeriodDetector::new(2, 2);
+        assert!(!d.observe(&[1.0, 2.0]));
+        assert!(!d.observe(&[2.0, 3.5])); // deltas 1.0 / 1.5
+        assert!(!d.observe(&[3.0, 5.0]));
+        assert!(d.observe(&[4.0, 6.5]));
+        assert_eq!(d.uniform_delta(), None, "stages advance by different deltas");
+    }
+}

@@ -5,6 +5,7 @@
 //! against "measurements" taken from here.
 
 pub mod arrivals;
+pub mod engine;
 pub mod gemm;
 pub mod pipeline_sim;
 pub mod platform;
@@ -18,7 +19,8 @@ pub use gemm::{
     mean_layer_time, network_time, network_time_hmp, throughput,
 };
 pub use pipeline_sim::{
-    simulate, simulate_replicated, steady_state_throughput, FleetSimReport, SimReport,
+    simulate, simulate_replicated, simulate_stationary, steady_state_throughput, FleetSimReport,
+    SimReport,
 };
 pub use platform::{ClusterSpec, CoreType, Platform};
 pub use power::{ClusterActivity, PowerModel};

@@ -6,6 +6,21 @@
 //! reports fill/drain transients, per-stage utilization and per-image
 //! latency, which the closed form does not give.
 //!
+//! The recurrence runs on the shared event core
+//! ([`crate::simulator::engine`], DESIGN.md §15): bounded departure rings
+//! replace the historical full per-item history, so recurrence state is
+//! O(stages · queue_cap) regardless of stream length, and scripted
+//! disturbances are resolved through precomputed per-stage
+//! `FactorTimeline`s (a monotone cursor instead of an O(events) product
+//! per item per stage). The historical engine is retained as
+//! `simulate_disturbed_reference` — the oracle the differential suite
+//! holds this engine bit-identical against.
+//!
+//! [`simulate_stationary`] adds the opt-in closed-form fast path: step
+//! exactly until the departure increments repeat bitwise over a full
+//! dependence window, then advance the remaining items analytically from
+//! the tandem recurrence's steady-state cycle time.
+//!
 //! [`simulate_replicated`] extends the same model to a *fleet* of
 //! replicated pipelines behind a shared least-outstanding-work dispatcher,
 //! mirroring [`crate::coordinator::run_fleet`] so that design-time
@@ -26,6 +41,7 @@
 //! byte-identical span streams (DESIGN.md §13).
 
 use crate::obs::Recorder;
+use crate::simulator::engine::{stationary, tandem_step, tandem_step_with, RingArena, RingId};
 
 /// Result of simulating a stream through a pipeline.
 #[derive(Debug, Clone)]
@@ -98,6 +114,63 @@ fn disturbance_factor(events: &[ThrottleEvent], replica: usize, stage: usize, t:
         .product()
 }
 
+/// One stage's disturbance factor as a step function of time, precomputed
+/// from the event script (DESIGN.md §15): at each distinct activation
+/// threshold the full slice-order product of the then-active events, so a
+/// lookup is a cursor advance instead of an O(events) scan — and, because
+/// the product at each threshold is recomputed over the events slice in
+/// its original order, bit-identical to [`disturbance_factor`].
+///
+/// Queries must come at non-decreasing times; per-stage start times are
+/// non-decreasing in item index (an item's start is at least its
+/// predecessor's departure from the same stage), so the recurrence
+/// satisfies this by construction.
+struct FactorTimeline {
+    /// Distinct activation times, ascending. Events with a NaN `at` never
+    /// activate under `at <= t` and are dropped at build time.
+    thresholds: Vec<f64>,
+    /// `products[j]`: slice-order factor product of events with
+    /// `at <= thresholds[j]`.
+    products: Vec<f64>,
+    /// Cursor: thresholds `< idx` have activated.
+    idx: usize,
+}
+
+impl FactorTimeline {
+    fn new(events: &[ThrottleEvent], replica: usize, stage: usize) -> FactorTimeline {
+        let mut thresholds: Vec<f64> = events
+            .iter()
+            .filter(|e| e.applies(replica, stage) && !e.at.is_nan())
+            .map(|e| e.at)
+            .collect();
+        thresholds.sort_by(f64::total_cmp);
+        thresholds.dedup_by(|a, b| a == b);
+        let products = thresholds
+            .iter()
+            .map(|&at| {
+                events
+                    .iter()
+                    .filter(|e| e.at <= at && e.applies(replica, stage))
+                    .map(|e| e.factor)
+                    .product()
+            })
+            .collect();
+        FactorTimeline { thresholds, products, idx: 0 }
+    }
+
+    /// Factor active at time `t` (`t` non-decreasing across calls).
+    fn factor_at(&mut self, t: f64) -> f64 {
+        while self.idx < self.thresholds.len() && self.thresholds[self.idx] <= t {
+            self.idx += 1;
+        }
+        if self.idx == 0 {
+            1.0
+        } else {
+            self.products[self.idx - 1]
+        }
+    }
+}
+
 /// [`simulate`] with scripted disturbances: the pipeline starts at absolute
 /// simulation time `t0` (events carry absolute times, so chunked callers
 /// can resume mid-script) and item service times are scaled by the events
@@ -163,6 +236,12 @@ pub fn simulate_recorded(
 /// stay disjoint; `None` uses the local index. The recorder is write-only
 /// for the recurrence: with `Recorder::off()` this is exactly
 /// [`simulate_disturbed`].
+///
+/// Runs on the event core's bounded rings: a saturated source is the
+/// timed recurrence at availability `0.0` (departures are never negative,
+/// so the `max` is the identity on the previous departure), and per-stage
+/// `FactorTimeline` cursors resolve disturbances — float-for-float the
+/// recurrence of `simulate_disturbed_reference`.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_disturbed_recorded(
     stage_times: &[f64],
@@ -181,9 +260,102 @@ pub fn simulate_disturbed_recorded(
     assert!(images >= 1);
     let p = stage_times.len();
 
-    // dep[s] holds departure times per stage; full history kept for
-    // latency/utilization accounting (images are small in every
-    // experiment: 50-10k).
+    let mut arena = RingArena::new();
+    let rings: Vec<RingId> = (0..p).map(|_| arena.alloc(queue_cap + 1)).collect();
+    let mut timelines: Vec<FactorTimeline> =
+        (0..p).map(|s| FactorTimeline::new(events, replica, s)).collect();
+    let mut busy = vec![0.0f64; p];
+    // Final-stage departures are kept per item: the latency vector and the
+    // post-run admit/depart span emission (in the reference's order) need
+    // them. Everything else is O(stages · queue_cap) ring state.
+    let mut final_deps = Vec::with_capacity(images);
+    let mut latencies = Vec::with_capacity(images);
+    // Stage-0 departure/service of the previous item (latency entry point).
+    let mut prev_dep0 = 0.0f64;
+    let mut prev_svc0 = 0.0f64;
+    for i in 0..images {
+        let mut dep0 = 0.0f64;
+        let mut svc0 = 0.0f64;
+        let out = tandem_step_with(
+            &mut arena,
+            &rings,
+            0.0,
+            |s, start| stage_times[s] * timelines[s].factor_at(t0 + start),
+            |s, start, service, dep| {
+                if s == 0 {
+                    svc0 = service;
+                    dep0 = dep;
+                }
+                busy[s] += service;
+                on_service(s, service);
+                if rec.enabled() {
+                    let id = ids.map_or(i as u64, |m| m[i]);
+                    rec.stage(group, id, replica as u32, s as u32, t0 + start, t0 + dep);
+                }
+            },
+        );
+        // Entry into the pipe: when the previous item started stage 0 (its
+        // departure minus its service), clamped to the stream start.
+        let enter = if i == 0 { 0.0 } else { prev_dep0 - prev_svc0 };
+        latencies.push(out - enter.max(0.0));
+        final_deps.push(out);
+        prev_dep0 = dep0;
+        prev_svc0 = svc0;
+    }
+
+    let makespan = final_deps[images - 1];
+    if rec.enabled() {
+        for i in 0..images {
+            let id = ids.map_or(i as u64, |m| m[i]);
+            let out = final_deps[i];
+            rec.admit(group, id, t0 + out - latencies[i]);
+            rec.depart(group, id, replica as u32, t0 + out);
+        }
+        rec.observe_hist("latency", &crate::obs::LogHist::of(&latencies));
+    }
+    let utilization: Vec<f64> = busy.iter().map(|b| b / makespan).collect();
+    let (bottleneck, bt) = stage_times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, t)| (i, *t))
+        .unwrap();
+
+    SimReport {
+        makespan,
+        throughput: images as f64 / makespan,
+        steady_state_throughput: 1.0 / bt,
+        bottleneck,
+        utilization,
+        latencies,
+    }
+}
+
+/// The historical full-history recurrence, retained verbatim as the
+/// differential oracle for the event core (DESIGN.md §15): O(images)
+/// state per stage, O(events) disturbance scan per (item, stage), but the
+/// exact float-operation order [`simulate_disturbed_recorded`] must
+/// reproduce bit-for-bit. Not for production use.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_disturbed_reference(
+    stage_times: &[f64],
+    images: usize,
+    queue_cap: usize,
+    events: &[ThrottleEvent],
+    t0: f64,
+    replica: usize,
+    rec: &Recorder,
+    group: u32,
+    ids: Option<&[u64]>,
+    mut on_service: impl FnMut(usize, f64),
+) -> SimReport {
+    assert!(!stage_times.is_empty());
+    assert!(queue_cap >= 1);
+    assert!(images >= 1);
+    let p = stage_times.len();
+
+    // dep[s] holds departure times per stage; full history kept.
     let mut dep = vec![vec![0.0f64; images]; p];
     let mut svc0 = vec![0.0f64; images];
     let mut busy = vec![0.0f64; p];
@@ -252,6 +424,90 @@ pub fn simulate_disturbed_recorded(
         utilization,
         latencies,
     }
+}
+
+/// The closed-form stationary fast path (DESIGN.md §15): step the exact
+/// recurrence only until the per-stage departure increments repeat
+/// *bitwise* for a full dependence window (`queue_cap + 2` consecutive
+/// items) with one common increment Δ — the steady-state cycle time — then
+/// advance the remaining items analytically: final departures grow by Δ
+/// per item, every remaining latency equals the current steady-state
+/// latency, and busy time accrues one service per stage per item.
+///
+/// Returns the report plus `Some(items_stepped)` when the analytic path
+/// engaged (`None` means the run never stabilized and was stepped
+/// exactly — the always-correct fallback). Disturbance-free runs only;
+/// with stage times exactly representable as small dyadic multiples the
+/// result is bit-identical to [`simulate`] (a property test pins this),
+/// otherwise it agrees to float-rounding accuracy (≲1e-9 relative) since
+/// float addition is not exactly translation-invariant across binades.
+/// The default engines therefore never call this: it is an opt-in
+/// accelerator for long stationary sweeps.
+pub fn simulate_stationary(
+    stage_times: &[f64],
+    images: usize,
+    queue_cap: usize,
+) -> (SimReport, Option<usize>) {
+    assert!(!stage_times.is_empty());
+    assert!(queue_cap >= 1);
+    assert!(images >= 1);
+    let p = stage_times.len();
+    let mut arena = RingArena::new();
+    let rings: Vec<RingId> = (0..p).map(|_| arena.alloc(queue_cap + 1)).collect();
+    let mut detector = stationary::PeriodDetector::new(p, queue_cap + 2);
+    let mut busy = vec![0.0f64; p];
+    let mut latencies = Vec::with_capacity(images);
+    let mut deps_now = vec![0.0f64; p];
+    let mut prev_dep0 = 0.0f64;
+    let mut makespan = 0.0f64;
+    let mut engaged = None;
+    let mut i = 0usize;
+    while i < images {
+        let out = tandem_step(&mut arena, &rings, stage_times, 0.0, |s, _start, svc, dep| {
+            deps_now[s] = dep;
+            busy[s] += svc;
+        });
+        let enter = if i == 0 { 0.0 } else { prev_dep0 - stage_times[0] };
+        latencies.push(out - enter.max(0.0));
+        prev_dep0 = deps_now[0];
+        makespan = out;
+        i += 1;
+        if i < images && detector.observe(&deps_now) {
+            if let Some(delta) = detector.uniform_delta() {
+                if delta.is_finite() && delta > 0.0 {
+                    // Stationary segment: close the remaining stream in
+                    // O(1). Item i..images-1 departures are out + k·Δ.
+                    let remaining = (images - i) as f64;
+                    makespan = out + remaining * delta;
+                    let lat = (out + delta) - (deps_now[0] - stage_times[0]).max(0.0);
+                    latencies.resize(images, lat);
+                    for (s, b) in busy.iter_mut().enumerate() {
+                        *b += remaining * stage_times[s];
+                    }
+                    engaged = Some(i);
+                    break;
+                }
+            }
+        }
+    }
+    let utilization: Vec<f64> = busy.iter().map(|b| b / makespan).collect();
+    let (bottleneck, bt) = stage_times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, t)| (i, *t))
+        .unwrap();
+    (
+        SimReport {
+            makespan,
+            throughput: images as f64 / makespan,
+            steady_state_throughput: 1.0 / bt,
+            bottleneck,
+            utilization,
+            latencies,
+        },
+        engaged,
+    )
 }
 
 /// Result of simulating a stream through a *replicated* fleet of pipelines
@@ -428,8 +684,8 @@ pub fn simulate_replicated_recorded(
         .collect();
 
     // Engine profile (DESIGN.md §14): the recurrence twin processes one
-    // event per (item, stage) and keeps no event heap — an honest zero
-    // for the heap counters the planned rewrite would introduce.
+    // event per (item, stage) over bounded rings and keeps no event heap —
+    // an honest zero for the heap counters.
     if prof.active() {
         prof.events = replica_stage_times
             .iter()
@@ -543,6 +799,144 @@ mod tests {
                 (large - ss).abs() <= (small - ss).abs() + 1e-9,
                 "longer run should be closer to steady state"
             );
+            Ok(())
+        });
+    }
+
+    /// The event-core contract (DESIGN.md §15): the ring engine is
+    /// bit-identical to the retained full-history reference — makespan,
+    /// every latency, every utilization — including under scripted
+    /// throttles (scoped and machine-wide) and nonzero `t0`.
+    #[test]
+    fn property_ring_engine_is_bit_identical_to_reference() {
+        check(60, |rng| {
+            let p = 1 + rng.index(5);
+            let times: Vec<f64> = (0..p).map(|_| rng.range_f64(0.001, 0.1)).collect();
+            let images = 10 + rng.index(300);
+            let cap = 1 + rng.index(4);
+            let n_events = rng.index(4);
+            let horizon = times.iter().sum::<f64>() * images as f64;
+            let events: Vec<ThrottleEvent> = (0..n_events)
+                .map(|_| ThrottleEvent {
+                    at: rng.range_f64(0.0, horizon.max(0.01)),
+                    factor: rng.range_f64(0.5, 3.0),
+                    scope: if rng.index(2) == 0 {
+                        Vec::new()
+                    } else {
+                        vec![(0, rng.index(p))]
+                    },
+                })
+                .collect();
+            let t0 = if rng.index(2) == 0 { 0.0 } else { rng.range_f64(0.0, 5.0) };
+            let fast =
+                simulate_disturbed(&times, images, cap, &events, t0, 0, |_, _| {});
+            let slow = simulate_disturbed_reference(
+                &times,
+                images,
+                cap,
+                &events,
+                t0,
+                0,
+                &Recorder::off(),
+                0,
+                None,
+                |_, _| {},
+            );
+            crate::prop_assert!(
+                fast.makespan.to_bits() == slow.makespan.to_bits(),
+                "makespan diverged: {} vs {}",
+                fast.makespan,
+                slow.makespan
+            );
+            for (i, (f, s)) in fast.latencies.iter().zip(&slow.latencies).enumerate() {
+                crate::prop_assert!(
+                    f.to_bits() == s.to_bits(),
+                    "latency {i} diverged: {f} vs {s}"
+                );
+            }
+            for (f, s) in fast.utilization.iter().zip(&slow.utilization) {
+                crate::prop_assert!(
+                    f.to_bits() == s.to_bits(),
+                    "utilization diverged: {f} vs {s}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Stationary fast path, exact domain: with stage times that are small
+    /// dyadic multiples every float op is exact, so the analytic
+    /// continuation must equal exact stepping bit-for-bit — and it must
+    /// actually engage.
+    #[test]
+    fn stationary_path_is_bitwise_exact_on_dyadic_times() {
+        check(40, |rng| {
+            let p = 1 + rng.index(4);
+            // Dyadic stage times: k·2⁻⁷ for small integer k.
+            let times: Vec<f64> =
+                (0..p).map(|_| (1 + rng.index(16)) as f64 * 0.0078125).collect();
+            let images = 200 + rng.index(400);
+            let cap = 1 + rng.index(3);
+            let exact = simulate(&times, images, cap);
+            let (fast, engaged) = simulate_stationary(&times, images, cap);
+            crate::prop_assert!(
+                engaged.is_some(),
+                "stationary path must engage on constant times"
+            );
+            crate::prop_assert!(
+                fast.makespan.to_bits() == exact.makespan.to_bits(),
+                "makespan diverged: {} vs {}",
+                fast.makespan,
+                exact.makespan
+            );
+            crate::prop_assert!(fast.latencies.len() == exact.latencies.len());
+            for (i, (f, e)) in fast.latencies.iter().zip(&exact.latencies).enumerate() {
+                crate::prop_assert!(
+                    f.to_bits() == e.to_bits(),
+                    "latency {i} diverged: {f} vs {e}"
+                );
+            }
+            for (f, e) in fast.utilization.iter().zip(&exact.utilization) {
+                crate::prop_assert!(
+                    f.to_bits() == e.to_bits(),
+                    "utilization diverged: {f} vs {e}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Stationary fast path, general domain: arbitrary stage times agree
+    /// with exact stepping to float-rounding accuracy, and the fast path
+    /// steps only a prefix.
+    #[test]
+    fn stationary_path_matches_stepping_on_general_times() {
+        check(40, |rng| {
+            let p = 1 + rng.index(4);
+            let times: Vec<f64> = (0..p).map(|_| rng.range_f64(0.001, 0.1)).collect();
+            let images = 500 + rng.index(500);
+            let cap = 1 + rng.index(3);
+            let exact = simulate(&times, images, cap);
+            let (fast, engaged) = simulate_stationary(&times, images, cap);
+            if let Some(stepped) = engaged {
+                crate::prop_assert!(
+                    stepped < images,
+                    "engaging must save work ({stepped}/{images})"
+                );
+            }
+            let rel = (fast.makespan - exact.makespan).abs() / exact.makespan;
+            crate::prop_assert!(
+                rel < 1e-9,
+                "makespan off by {rel:e}: {} vs {}",
+                fast.makespan,
+                exact.makespan
+            );
+            for (f, e) in fast.latencies.iter().zip(&exact.latencies) {
+                crate::prop_assert!(
+                    (f - e).abs() <= 1e-9 * e.max(1.0),
+                    "latency diverged: {f} vs {e}"
+                );
+            }
             Ok(())
         });
     }

@@ -10,17 +10,27 @@
 //! shared is the accounting: one clock, one report, one board-utilization
 //! figure ([`MultiServeReport`]).
 //!
-//! The per-tenant engine ([`simulate_tenant_fleet`]) extends the tandem
-//! recurrence of [`crate::simulator::pipeline_sim`] with arrival times,
-//! join-earliest-start dispatch across replicas, and front-door admission:
-//! an arrival finding `admission_cap` admitted-but-unstarted items ahead of
-//! it is shed (counted), exactly mirroring the wall-clock front door's
-//! `try_send` ([`crate::tenancy::deploy_multi`]).
+//! The per-tenant engine ([`simulate_tenant_fleet`]) runs on the shared
+//! event core ([`crate::simulator::engine`], DESIGN.md §15): bounded
+//! departure rings carry the blocking tandem recurrence of
+//! [`crate::simulator::pipeline_sim`] in O(stages · queue_cap) state, and
+//! the front door counts waiting admissions with an [`EventHeap`] in
+//! amortized O(log n) per arrival — replacing the historical O(n²)
+//! linear scan over every admitted start time. That historical engine is
+//! retained verbatim as `simulate_tenant_fleet_reference`, the oracle
+//! the differential suite (`tests/engine_core.rs`) holds the fast engine
+//! bit-identical against.
+//!
+//! Front-door semantics are unchanged: an arrival finding `admission_cap`
+//! admitted-but-unstarted items ahead of it is shed (counted), exactly
+//! mirroring the wall-clock front door's `try_send`
+//! ([`crate::tenancy::deploy_multi`]).
 
 use anyhow::{Context, Result};
 
 use crate::obs::{attrib_for, EngineProf, LogHist, PredictedTimes, Recorder};
 use crate::simulator::arrivals::{poisson_arrivals, uniform_arrivals};
+use crate::simulator::engine::{tandem_step, CoreCounters, EventHeap, RingArena, RingId};
 
 use crate::api::LatencyReport;
 
@@ -46,9 +56,14 @@ pub struct TenantSimOutcome {
     pub dispatched: Vec<usize>,
     /// Per-replica per-stage busy seconds.
     pub busy: Vec<Vec<f64>>,
-    /// Front-door scan work: admitted-start entries inspected across all
-    /// arrivals (the engine's dominant non-recurrence cost, DESIGN.md §14).
+    /// Front-door scan work. The event-core engine retires each admitted
+    /// start with one heap pop, so this is bounded by `admitted` — linear
+    /// in events, the bound CI asserts (DESIGN.md §15). (The reference
+    /// engine reports its historical O(n²) linear-scan count here.)
     pub scan_iters: u64,
+    /// Event-core tallies (heap pushes/pops/peak, ring peak) for
+    /// [`EngineProf`](crate::obs::EngineProf). Zero from the reference engine.
+    pub core: CoreCounters,
 }
 
 /// Simulate one tenant's replicated fleet under timed arrivals with a
@@ -104,6 +119,137 @@ pub fn simulate_tenant_fleet_recorded(
     assert!(replica_stage_times.iter().all(|t| !t.is_empty()));
     assert!(queue_cap >= 1);
     assert!(admission_cap >= 1);
+    debug_assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "front door requires non-decreasing arrivals"
+    );
+    let r = replica_stage_times.len();
+
+    // Bounded state (DESIGN.md §15): one ring of the last `queue_cap + 1`
+    // departures per (replica, stage) — exactly the window the blocking
+    // recurrence reads — all arena-allocated in one buffer.
+    let mut arena = RingArena::new();
+    let rings: Vec<Vec<RingId>> = replica_stage_times
+        .iter()
+        .map(|t| t.iter().map(|_| arena.alloc(queue_cap + 1)).collect())
+        .collect();
+    // Front door: stage-0 start times of admitted items, in an event heap.
+    // `live_after(a)` retires starts ≤ a (each popped at most once, so the
+    // total scan work is ≤ admitted) and returns the waiting count — equal
+    // to the reference engine's linear scan because arrivals never
+    // decrease: a start retired at one arrival can be "> a" at no later
+    // arrival.
+    let mut door = EventHeap::default();
+    let mut latencies = Vec::new();
+    let mut dispatched = vec![0usize; r];
+    // Per-replica final-stage departure of the newest item (for makespan,
+    // folded in replica order to match the reference engine bit-for-bit).
+    let mut last_final = vec![0.0f64; r];
+    let mut shed = 0usize;
+
+    for (i, &a) in arrivals.iter().enumerate() {
+        // Front door: count admitted items still waiting to start service.
+        let waiting = door.live_after(a);
+        if rec.enabled() {
+            rec.gauge_max(&format!("queue_depth_peak/g{group}"), waiting as f64);
+        }
+        if waiting >= admission_cap {
+            shed += 1;
+            rec.shed(group, i as u64, a);
+            continue;
+        }
+        rec.admit(group, i as u64, a);
+        // Join-earliest-start dispatch (estimate ignores downstream
+        // blocking, which only delays starts further on loaded replicas).
+        let pick = (0..r)
+            .min_by(|&x, &y| {
+                let ex = arena.back(rings[x][0]).unwrap_or(0.0).max(a);
+                let ey = arena.back(rings[y][0]).unwrap_or(0.0).max(a);
+                ex.total_cmp(&ey)
+            })
+            .expect("nonempty fleet");
+
+        let out = tandem_step(
+            &mut arena,
+            &rings[pick],
+            &replica_stage_times[pick],
+            a,
+            |s, start, _svc, dep| {
+                if s == 0 {
+                    door.push(start);
+                }
+                if rec.enabled() {
+                    rec.stage(group, i as u64, pick as u32, s as u32, start, dep);
+                }
+            },
+        );
+        rec.depart(group, i as u64, pick as u32, out);
+        last_final[pick] = out;
+        latencies.push(out - a);
+        dispatched[pick] += 1;
+    }
+
+    let makespan = last_final.iter().copied().fold(0.0, f64::max);
+    let busy: Vec<Vec<f64>> = replica_stage_times
+        .iter()
+        .zip(&dispatched)
+        .map(|(times, &n)| times.iter().map(|t| t * n as f64).collect())
+        .collect();
+
+    TenantSimOutcome {
+        offered: arrivals.len(),
+        admitted: latencies.len(),
+        shed,
+        makespan,
+        latencies,
+        dispatched,
+        busy,
+        scan_iters: door.pops,
+        core: CoreCounters {
+            heap_pushes: door.pushes,
+            heap_pops: door.pops,
+            heap_peak: door.peak,
+            ring_peak: arena.peak(),
+        },
+    }
+}
+
+/// The historical full-history engine, retained verbatim as the
+/// differential oracle for the event core (DESIGN.md §15): O(n) state and
+/// an O(n²) front-door scan, but the exact float-operation order the fast
+/// engine must reproduce bit-for-bit. Not for production use.
+#[doc(hidden)]
+pub fn simulate_tenant_fleet_reference(
+    replica_stage_times: &[Vec<f64>],
+    arrivals: &[f64],
+    queue_cap: usize,
+    admission_cap: usize,
+) -> TenantSimOutcome {
+    simulate_tenant_fleet_reference_recorded(
+        replica_stage_times,
+        arrivals,
+        queue_cap,
+        admission_cap,
+        &Recorder::off(),
+        0,
+    )
+}
+
+/// Recorded form of `simulate_tenant_fleet_reference` (same span
+/// vocabulary as the fast engine, for trace-level differential tests).
+#[doc(hidden)]
+pub fn simulate_tenant_fleet_reference_recorded(
+    replica_stage_times: &[Vec<f64>],
+    arrivals: &[f64],
+    queue_cap: usize,
+    admission_cap: usize,
+    rec: &Recorder,
+    group: u32,
+) -> TenantSimOutcome {
+    assert!(!replica_stage_times.is_empty(), "tenant needs at least one replica");
+    assert!(replica_stage_times.iter().all(|t| !t.is_empty()));
+    assert!(queue_cap >= 1);
+    assert!(admission_cap >= 1);
     let r = replica_stage_times.len();
 
     // dep[q][s][k]: departure time of replica q's k-th item from stage s.
@@ -119,7 +265,7 @@ pub fn simulate_tenant_fleet_recorded(
     let mut scan_iters = 0u64;
 
     for (i, &a) in arrivals.iter().enumerate() {
-        // Front door: count admitted items still waiting to start service.
+        // Front door: the O(n²) linear scan the event core replaced.
         scan_iters += start0_all.len() as u64;
         let waiting = start0_all.iter().filter(|&&t| t > a).count();
         if rec.enabled() {
@@ -131,8 +277,6 @@ pub fn simulate_tenant_fleet_recorded(
             continue;
         }
         rec.admit(group, i as u64, a);
-        // Join-earliest-start dispatch (estimate ignores downstream
-        // blocking, which only delays starts further on loaded replicas).
         let pick = (0..r)
             .min_by(|&x, &y| {
                 let ex = dep[x][0].last().copied().unwrap_or(0.0).max(a);
@@ -192,6 +336,7 @@ pub fn simulate_tenant_fleet_recorded(
         dispatched,
         busy,
         scan_iters,
+        core: CoreCounters::default(),
     }
 }
 
@@ -309,9 +454,11 @@ pub fn simulate_multi_recorded(
         }
     }
 
-    // Engine profile (DESIGN.md §14): one event per front-door decision
-    // plus one per (item, stage) executed; the factorized co-simulation
-    // keeps no event heap, so the heap counters stay an honest zero.
+    // Engine profile (DESIGN.md §14/§15): one event per front-door decision
+    // plus one per (item, stage) executed. The event-core engine's heap
+    // carries the front door, so the heap counters are live — and
+    // `scan_iters` (now heap pops) stays ≤ events, the linear bound the
+    // bench-smoke CI job asserts.
     if prof.active() {
         for (t, out) in mp.tenants.iter().zip(&outcomes) {
             prof.events += out.offered as u64;
@@ -319,6 +466,10 @@ pub fn simulate_multi_recorded(
                 prof.events += out.dispatched[r] as u64 * rep.stage_times.len() as u64;
             }
             prof.scan_iters += out.scan_iters;
+            prof.heap_pushes += out.core.heap_pushes;
+            prof.heap_pops += out.core.heap_pops;
+            prof.heap_peak = prof.heap_peak.max(out.core.heap_peak);
+            prof.ring_peak = prof.ring_peak.max(out.core.ring_peak);
         }
         prof.flush(rec);
     }
@@ -477,6 +628,74 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The event-core contract (DESIGN.md §15): the fast engine is
+    /// bit-identical to the retained reference engine on randomized
+    /// workloads — every latency, the makespan, shed/dispatch counts.
+    #[test]
+    fn property_fast_engine_is_bit_identical_to_reference() {
+        check(40, |rng| {
+            let r = 1 + rng.index(3);
+            let replicas: Vec<Vec<f64>> = (0..r)
+                .map(|_| {
+                    let p = 1 + rng.index(4);
+                    (0..p).map(|_| rng.range_f64(0.002, 0.03)).collect()
+                })
+                .collect();
+            let rate = rng.range_f64(5.0, 400.0);
+            let n = 50 + rng.index(400);
+            let arr = poisson_arrivals(rate, n, rng.next_u64());
+            let cap = 1 + rng.index(3);
+            let adm = 1 + rng.index(8);
+            let fast = simulate_tenant_fleet(&replicas, &arr, cap, adm);
+            let slow = simulate_tenant_fleet_reference(&replicas, &arr, cap, adm);
+            crate::prop_assert!(fast.shed == slow.shed, "shed diverged");
+            crate::prop_assert!(fast.dispatched == slow.dispatched, "dispatch diverged");
+            crate::prop_assert!(
+                fast.makespan.to_bits() == slow.makespan.to_bits(),
+                "makespan diverged: {} vs {}",
+                fast.makespan,
+                slow.makespan
+            );
+            crate::prop_assert!(
+                fast.latencies.len() == slow.latencies.len(),
+                "admitted diverged"
+            );
+            for (i, (f, s)) in fast.latencies.iter().zip(&slow.latencies).enumerate() {
+                crate::prop_assert!(
+                    f.to_bits() == s.to_bits(),
+                    "latency {i} diverged: {f} vs {s}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The O(log n) front door retires each admitted start exactly once:
+    /// scan work is linear in arrivals, not quadratic (the fixed bug).
+    #[test]
+    fn front_door_scan_work_is_linear_in_arrivals() {
+        let replicas = vec![vec![0.01, 0.02]];
+        let arr = uniform_arrivals(300.0, 4000);
+        let out = simulate_tenant_fleet(&replicas, &arr, 2, 4);
+        assert!(
+            out.scan_iters <= out.offered as u64,
+            "scan_iters {} must be ≤ offered {} (heap pops, each start once)",
+            out.scan_iters,
+            out.offered
+        );
+        assert_eq!(out.core.heap_pushes, out.admitted as u64);
+        assert!(out.core.heap_pops <= out.core.heap_pushes);
+        // The reference engine on the same stream really is quadratic-ish:
+        // its scan count dwarfs the fast engine's.
+        let slow = simulate_tenant_fleet_reference(&replicas, &arr, 2, 4);
+        assert!(
+            slow.scan_iters > 10 * out.scan_iters.max(1),
+            "reference scanned {} vs fast {}",
+            slow.scan_iters,
+            out.scan_iters
+        );
     }
 
     /// Regression (ISSUE 5 satellite): a tenant that admits nothing — the

@@ -39,6 +39,98 @@ use super::spec::TenantSpec;
 /// predicted.
 pub const MAX_UTILIZATION: f64 = 0.95;
 
+/// Hard ceiling on the number of ordered core splits the joint search will
+/// enumerate. The split count grows combinatorially in cores × tenants
+/// (ordered compositions of two core pools), so past this bound the outer
+/// search would silently hang or exhaust memory materializing [`splits`];
+/// [`splits_checked`] (and hence [`explore_joint`]) refuses with a named
+/// error instead. 200k splits × a memoized inner search is comfortably a
+/// sub-second design pass on the boards this targets.
+pub const MAX_JOINT_SPLITS: u64 = 200_000;
+
+/// The joint design space is too large to enumerate (see
+/// [`MAX_JOINT_SPLITS`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SplitBudgetExceeded {
+    /// Ordered splits the requested search would enumerate (saturating).
+    pub splits: u64,
+    /// The enforced ceiling ([`MAX_JOINT_SPLITS`]).
+    pub limit: u64,
+    pub big: usize,
+    pub small: usize,
+    pub tenants: usize,
+}
+
+impl std::fmt::Display for SplitBudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "joint design space of {}B+{}s across {} tenants has {} ordered \
+             core splits, over the {}-split enumeration budget; reduce the \
+             tenant count or search a smaller core budget",
+            self.big, self.small, self.tenants, self.splits, self.limit
+        )
+    }
+}
+
+impl std::error::Error for SplitBudgetExceeded {}
+
+/// Number of ordered splits [`splits`] would return, without materializing
+/// them: a saturating counting DP over (slices, big, small) — every slice
+/// non-empty, every core assigned — so the budget check in
+/// [`splits_checked`] is O(tenants · hb² · hs²) arithmetic even when the
+/// space itself is astronomically large.
+pub fn count_splits(hb: usize, hs: usize, tenants: usize) -> u64 {
+    if tenants == 0 || hb + hs < tenants {
+        return 0;
+    }
+    // ways[b][s]: splits of exactly (b, s) cores into the slices so far.
+    let mut ways = vec![vec![0u64; hs + 1]; hb + 1];
+    ways[0][0] = 1;
+    for _ in 0..tenants {
+        let mut next = vec![vec![0u64; hs + 1]; hb + 1];
+        for b in 0..=hb {
+            for s in 0..=hs {
+                if ways[b][s] == 0 {
+                    continue;
+                }
+                for db in 0..=(hb - b) {
+                    for ds in 0..=(hs - s) {
+                        if db + ds == 0 {
+                            continue;
+                        }
+                        next[b + db][s + ds] =
+                            next[b + db][s + ds].saturating_add(ways[b][s]);
+                    }
+                }
+            }
+        }
+        ways = next;
+    }
+    ways[hb][hs]
+}
+
+/// [`splits`] behind the enumeration budget: returns
+/// [`SplitBudgetExceeded`] instead of hanging or exhausting memory when
+/// the ordered-split count passes [`MAX_JOINT_SPLITS`].
+pub fn splits_checked(
+    hb: usize,
+    hs: usize,
+    tenants: usize,
+) -> Result<Vec<Vec<CoreBudget>>, SplitBudgetExceeded> {
+    let n = count_splits(hb, hs, tenants);
+    if n > MAX_JOINT_SPLITS {
+        return Err(SplitBudgetExceeded {
+            splits: n,
+            limit: MAX_JOINT_SPLITS,
+            big: hb,
+            small: hs,
+            tenants,
+        });
+    }
+    Ok(splits(hb, hs, tenants))
+}
+
 /// All ordered assignments of the full `(hb, hs)` budget to `tenants`
 /// slices, every slice getting at least one core and every core being
 /// assigned (more cores never hurt under the monotone Eq. 12 model).
@@ -194,6 +286,11 @@ pub fn explore_joint(
         hb,
         hs
     );
+    // Budget-check the outer enumeration before any expensive work: the
+    // split count is combinatorial in cores × tenants and past the budget
+    // the search would hang rather than finish (satellite guard, DESIGN.md
+    // §10).
+    let all_splits = splits_checked(hb, hs, specs.len())?;
     let tms: Vec<TimeMatrix> =
         specs.iter().map(|s| s.time_matrix(cfg)).collect::<Result<_>>()?;
     let sla_declared = specs.iter().filter(|s| s.p99_sla_s.is_some()).count();
@@ -214,7 +311,7 @@ pub fn explore_joint(
 
     let mut memo: HashMap<(usize, CoreBudget), ReplicatedDesign> = HashMap::new();
     let mut best: Option<JointDesign> = None;
-    for split in splits(hb, hs, specs.len()) {
+    for split in all_splits {
         let tenants: Vec<TenantDesign> = specs
             .iter()
             .zip(&split)
@@ -276,6 +373,55 @@ mod tests {
         assert_eq!(two.len(), 2);
         // More tenants than cores: no split.
         assert!(splits(1, 1, 3).is_empty());
+    }
+
+    #[test]
+    fn count_splits_agrees_with_the_enumeration() {
+        for hb in 0..=4usize {
+            for hs in 0..=4usize {
+                for t in 1..=4usize {
+                    assert_eq!(
+                        count_splits(hb, hs, t),
+                        splits(hb, hs, t).len() as u64,
+                        "({hb},{hs},{t})"
+                    );
+                }
+            }
+        }
+        assert_eq!(count_splits(1, 1, 2), 2);
+        assert_eq!(count_splits(1, 1, 3), 0);
+        assert_eq!(count_splits(4, 4, 8), 70, "one core each: C(8,4)");
+    }
+
+    #[test]
+    fn oversized_design_spaces_fail_with_a_named_error_not_a_hang() {
+        // 8B+8s across 8 tenants is ~41M ordered splits: counting it is
+        // instant, enumerating it would hang the planner. The guard must
+        // refuse by name.
+        let err = splits_checked(8, 8, 8).unwrap_err();
+        assert!(err.splits > MAX_JOINT_SPLITS, "{err}");
+        assert_eq!(err.limit, MAX_JOINT_SPLITS);
+        assert_eq!((err.big, err.small, err.tenants), (8, 8, 8));
+        assert!(err.to_string().contains("enumeration budget"), "{err}");
+        // In-budget spaces pass through unchanged.
+        let ok = splits_checked(4, 4, 2).unwrap();
+        assert_eq!(ok, splits(4, 4, 2));
+    }
+
+    #[test]
+    fn explore_joint_surfaces_the_split_budget_error() {
+        // Blow up the platform so the 6-tenant outer enumeration passes the
+        // budget; the search must fail fast with the named guard error.
+        let mut cfg = Config::default();
+        cfg.platform.big.cores = 24;
+        cfg.platform.small.cores = 24;
+        let specs: Vec<TenantSpec> =
+            (0..6).map(|_| TenantSpec::new("alexnet", 1.0)).collect();
+        let err = explore_joint(&specs, &cfg, 2).unwrap_err();
+        assert!(
+            err.downcast_ref::<SplitBudgetExceeded>().is_some(),
+            "expected SplitBudgetExceeded, got: {err:#}"
+        );
     }
 
     #[test]

@@ -24,7 +24,11 @@ pub struct MultiServeOptions {
     /// are shed (counted per tenant), never queued unboundedly.
     pub admission_cap: usize,
     /// Base arrival seed; tenant `i` without a pinned seed draws its
-    /// Poisson stream from `seed + 7919·i`.
+    /// Poisson stream from `seed + 7919·i`. The seed-stream audit
+    /// (DESIGN.md §15) pins the scheme: harness repetitions perturb the
+    /// base by `+rep` with `rep < 7919`, so rep and tenant offsets occupy
+    /// disjoint residues (mixed-radix digits) and no two (rep, tenant)
+    /// pairs in range share a SplitMix64 stream.
     pub seed: u64,
     /// Wall-clock deploys sleep for `stage_time * time_scale` per item
     /// (ignored by the DES).
